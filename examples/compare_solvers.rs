@@ -1,0 +1,75 @@
+//! Explicit vs implicit, head to head on one workload — the paper's §5
+//! comparison in miniature: LibSVM (SMO, single core), LibSVM+OpenMP
+//! (SMO, hand-threaded), GTSVM (WSS-16), SP-SVM (implicit dense-linalg),
+//! and the exact implicit baselines (MU, primal Newton) that hit the
+//! memory/convergence wall.
+//!
+//! Run: `cargo run --release --example compare_solvers -- [dataset] [scale]`
+
+use std::time::Duration;
+
+use wu_svm::coordinator::{run, EngineChoice, Solver, TrainJob};
+use wu_svm::pool;
+use wu_svm::report::{fill_speedups, render_table, Row};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().cloned().unwrap_or_else(|| "covertype".into());
+    let scale: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(0.02);
+    let threads = pool::default_threads();
+
+    let cases: Vec<(&str, &str, Solver, EngineChoice)> = vec![
+        ("SC", "LibSVM", Solver::Smo, EngineChoice::CpuSeq),
+        ("MC", "LibSVM", Solver::Smo, EngineChoice::CpuPar(threads)),
+        ("MC", "GTSVM", Solver::Wss, EngineChoice::CpuPar(threads)),
+        ("MC", "MU", Solver::Mu, EngineChoice::CpuPar(threads)),
+        ("MC", "Primal", Solver::Primal, EngineChoice::CpuPar(threads)),
+        ("MC", "SP-SVM", Solver::SpSvm, EngineChoice::CpuPar(threads)),
+        ("XLA", "SP-SVM", Solver::SpSvm, EngineChoice::Xla),
+    ];
+
+    let mut rows = Vec::new();
+    for (arch, name, solver, engine) in cases {
+        let job = TrainJob {
+            dataset: dataset.clone(),
+            scale,
+            solver,
+            engine,
+            max_basis: 255,
+            ..Default::default()
+        };
+        eprint!("{arch}/{name} ... ");
+        match run(&job) {
+            Ok(rec) => {
+                eprintln!("{:.2}% in {:?}", rec.test_metric * 100.0, rec.train_time);
+                rows.push(Row {
+                    dataset: dataset.clone(),
+                    arch: arch.into(),
+                    method: name.into(),
+                    metric_name: rec.metric_name,
+                    test_metric: rec.test_metric,
+                    train_time: rec.train_time,
+                    speedup: 1.0,
+                    notes: format!("m={}", rec.expansion_size),
+                });
+            }
+            Err(e) => {
+                eprintln!("failed: {e}");
+                rows.push(Row {
+                    dataset: dataset.clone(),
+                    arch: arch.into(),
+                    method: name.into(),
+                    metric_name: "-".into(),
+                    test_metric: f64::NAN,
+                    train_time: Duration::ZERO,
+                    speedup: f64::NAN,
+                    notes: format!("{e}").chars().take(48).collect(),
+                });
+            }
+        }
+    }
+    fill_speedups(&mut rows, "LibSVM", "SC");
+    println!("\n{}", render_table(&rows));
+    println!("(speedups are vs single-core LibSVM on the same rows — the paper's convention)");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! End-to-end driver (the repository's E2E validation): regenerate a
+//! Table-1 row on a real small workload, exercising every layer —
+//! synthetic dataset substrate -> solvers (explicit SMO family + implicit
+//! SP-SVM) -> ComputeEngines (cpu-seq / cpu-par / AOT-XLA artifacts) ->
+//! metrics -> paper-style report — then serve the trained model through
+//! the batched prediction service and report latency/throughput.
+//!
+//! Run: `cargo run --release --example end_to_end_table1 -- [dataset] [scale]`
+//! The recorded run lives in EXPERIMENTS.md.
+
+use wu_svm::coordinator::{self, serve, EngineChoice, Solver, TrainJob};
+use wu_svm::data::paper;
+use wu_svm::experiments;
+use wu_svm::metrics::fmt_duration;
+use wu_svm::pool;
+use wu_svm::report;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().cloned().unwrap_or_else(|| "adult".into());
+    let scale: f64 = args
+        .get(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or_else(|| experiments::default_scale(&dataset));
+
+    println!("=== end-to-end Table-1 row: {dataset} (scale {scale}) ===\n");
+
+    // Phase 1: the full six-method Table-1 row.
+    let rows = experiments::run_table1_dataset(&dataset, scale, 255, &[])?;
+    println!("{}", report::render_table(&rows));
+    let spec = paper::spec(&dataset).unwrap();
+    println!(
+        "paper reference: LibSVM err {:.1}%, C = {}, gamma = {} (paper n = {})\n",
+        spec.paper_error * 100.0,
+        spec.c,
+        spec.gamma,
+        spec.paper_n
+    );
+
+    // Phase 2: serve the winning model (SP-SVM) as a prediction service.
+    println!("--- serving phase ---");
+    let job = TrainJob {
+        dataset: dataset.clone(),
+        scale,
+        solver: Solver::SpSvm,
+        engine: EngineChoice::CpuPar(pool::default_threads()),
+        max_basis: 255,
+        ..Default::default()
+    };
+    let (train, test, spec) = coordinator::load_data(&job)?;
+    if train.is_multiclass() {
+        println!("(multiclass dataset: serving phase covered by binary rows)");
+        return Ok(());
+    }
+    let engine = coordinator::build_engine(job.engine)?;
+    let model = wu_svm::solvers::spsvm::train(
+        &train,
+        &wu_svm::solvers::spsvm::SpSvmParams {
+            c: spec.c,
+            gamma: spec.gamma,
+            max_basis: 255,
+            ..Default::default()
+        },
+        &engine,
+    )?
+    .model;
+    let server = serve::Server::start(model, engine, serve::ServeConfig::default());
+    let client = server.client();
+    let n_req = 2000.min(test.n * 4);
+    let t0 = std::time::Instant::now();
+    let mut lat = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let t1 = std::time::Instant::now();
+        client.predict(test.row(i % test.n).to_vec())?;
+        lat.push(t1.elapsed());
+    }
+    let total = t0.elapsed();
+    lat.sort();
+    let stats = server.stop();
+    println!(
+        "served {n_req} requests in {} — {:.0} req/s, p50 {:?}, p99 {:?}, {} batches (max {})",
+        fmt_duration(total),
+        n_req as f64 / total.as_secs_f64(),
+        lat[n_req / 2],
+        lat[n_req * 99 / 100],
+        stats.batches,
+        stats.max_batch
+    );
+    println!("\nE2E OK: all layers composed (data -> solvers -> engines -> report -> serving)");
+    Ok(())
+}

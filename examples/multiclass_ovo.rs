@@ -1,0 +1,67 @@
+//! One-vs-one multiclass on the MNIST8M-like workload (paper Table 1,
+//! last row): 10 classes, 45 pairwise SP-SVM models, voting prediction,
+//! accumulated per-pair training time.
+//!
+//! Run: `cargo run --release --example multiclass_ovo -- [scale]`
+
+use wu_svm::coordinator;
+use wu_svm::data::paper;
+use wu_svm::engine::Engine;
+use wu_svm::metrics::{fmt_duration, multiclass_error};
+use wu_svm::multiclass::OvoModel;
+use wu_svm::pool;
+use wu_svm::solvers::spsvm::{self, SpSvmParams};
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0.02);
+    let spec = paper::spec("mnist8m").expect("known dataset");
+    let (train, test) = spec.generate(scale, 7);
+    println!(
+        "mnist8m-like: {} train / {} test rows, d = {}, {} classes",
+        train.n,
+        test.n,
+        train.d,
+        train.num_classes()
+    );
+
+    let engine = match coordinator::shared_runtime() {
+        Ok(rt) => Engine::xla(rt),
+        Err(_) => Engine::cpu_par(pool::default_threads()),
+    };
+    println!("engine: {}", engine.name());
+
+    let t0 = std::time::Instant::now();
+    let mut pair_count = 0;
+    let ovo = OvoModel::train(&train, |view, a, b| {
+        pair_count += 1;
+        eprint!("\r  pair {pair_count}/45 ({a} vs {b}): n = {}    ", view.n);
+        Ok(spsvm::train(
+            view,
+            &SpSvmParams {
+                c: spec.c,
+                gamma: spec.gamma,
+                max_basis: 127,
+                ..Default::default()
+            },
+            &engine,
+        )?
+        .model)
+    })?;
+    eprintln!();
+    let train_time = t0.elapsed();
+
+    let pred = ovo.predict(&test, pool::default_threads());
+    let err = multiclass_error(&pred, &test.class_ids);
+    println!(
+        "{} pair models ({} total vectors) in {} — test error {:.2}% (paper SP-SVM: 1.4%)",
+        ovo.models.len(),
+        ovo.total_vectors(),
+        fmt_duration(train_time),
+        err * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: train SP-SVM (the paper's headline method) on the
+//! adult-like workload and evaluate it.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (use `make artifacts` first to enable the xla engine; this example
+//! falls back to the hand-threaded cpu engine when artifacts are absent.)
+
+use wu_svm::coordinator;
+use wu_svm::data::paper;
+use wu_svm::engine::Engine;
+use wu_svm::metrics::{error_rate, fmt_duration};
+use wu_svm::pool;
+use wu_svm::solvers::spsvm::{self, SpSvmParams};
+
+fn main() -> anyhow::Result<()> {
+    // 1. workload: the Table-1 adult analog at a laptop-friendly scale
+    let spec = paper::spec("adult").expect("known dataset");
+    let (train, test) = spec.generate(0.2, 42);
+    println!(
+        "adult-like: {} train / {} test rows, d = {} (paper: n = {})",
+        train.n, test.n, train.d, spec.paper_n
+    );
+
+    // 2. engine: implicit (XLA artifacts) if built, explicit threads if not
+    let engine = match coordinator::shared_runtime() {
+        Ok(rt) => {
+            println!("engine: xla ({} ops AOT-compiled)", rt.manifest().by_op.len());
+            Engine::xla(rt)
+        }
+        Err(_) => {
+            let t = pool::default_threads();
+            println!("engine: cpu-par({t}) — run `make artifacts` for the xla engine");
+            Engine::cpu_par(t)
+        }
+    };
+
+    // 3. train with the paper's published hyperparameters
+    let t0 = std::time::Instant::now();
+    let result = spsvm::train(
+        &train,
+        &SpSvmParams {
+            c: spec.c,
+            gamma: spec.gamma,
+            max_basis: 255,
+            ..Default::default()
+        },
+        &engine,
+    )?;
+    let train_time = t0.elapsed();
+
+    // 4. evaluate
+    let margins = result.model.decision_batch(&test, pool::default_threads());
+    let err = error_rate(&margins, &test.y);
+    println!(
+        "trained in {} — {} basis vectors, test error {:.2}% (paper LibSVM: {:.1}%)",
+        fmt_duration(train_time),
+        result.model.num_vectors(),
+        err * 100.0,
+        spec.paper_error * 100.0
+    );
+    for (k, v) in &result.notes {
+        println!("  {k} = {v}");
+    }
+    Ok(())
+}

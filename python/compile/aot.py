@@ -1,0 +1,110 @@
+"""AOT: lower every L2 op x shape bucket to HLO text + manifest.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts`. Output:
+  artifacts/<op>_t<T>_d<D>_b<B>_s<S>.hlo.txt
+  artifacts/manifest.txt   lines: "<op> <t> <d> <b> <s> <relative-path>"
+
+The Rust ArtifactStore (rust/src/runtime/manifest.rs) reads the manifest,
+picks the smallest bucket that fits a request, and lazily compiles.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape buckets (DESIGN.md §5). T is the row-tile size used everywhere in
+# the Rust coordinator; d buckets cover the Table-1 datasets; b buckets are
+# basis capacities; s is the candidate batch for basis selection.
+TILE_T = 1024
+D_BUCKETS = (64, 128, 512, 1024, 2048)
+B_BUCKETS = (64, 128, 256, 512)
+S_CAND = 64
+
+# Reduced set for --quick (python tests, CI smoke).
+QUICK_D = (64,)
+QUICK_B = (64, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_op(op_name, t, d, b, s):
+    fn, specs = model.op_specs(t, d, b, s)[op_name]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def artifact_name(op, t, d, b, s):
+    return f"{op}_t{t}_d{d}_b{b}_s{s}.hlo.txt"
+
+
+def plan(d_buckets, b_buckets):
+    """(op, t, d, b, s) tuples to emit. d/b/s = 0 where the op ignores it."""
+    out = []
+    for d in d_buckets:
+        for b in b_buckets:
+            out.append(("kernel_block", TILE_T, d, b, 0))
+    for b in b_buckets:
+        out.append(("tile_stats", TILE_T, 0, b, 0))
+        out.append(("cg_solve", 0, 0, b, 0))
+        out.append(("predict_block", TILE_T, 0, b, 0))
+    out.append(("score_tile", TILE_T, 0, 0, S_CAND))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quick", action="store_true", help="reduced bucket set")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+
+    d_buckets = QUICK_D if args.quick else D_BUCKETS
+    b_buckets = QUICK_B if args.quick else B_BUCKETS
+
+    entries = []
+    t0 = time.time()
+    for op, t, d, b, s in plan(d_buckets, b_buckets):
+        # ops take their shapes from whichever of t/d/b/s they use; fill
+        # placeholders with the smallest real bucket for lowering.
+        name = artifact_name(op, t, d, b, s)
+        path = os.path.join(out_dir, name)
+        text = lower_op(op, t or TILE_T, d or d_buckets[0], b or b_buckets[0],
+                        s or S_CAND)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(f"{op} {t} {d} {b} {s} {name}")
+        print(f"  {name}: {len(text)} chars", flush=True)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write(f"# wu-svm artifact manifest; tile_t={TILE_T} s_cand={S_CAND}\n")
+        f.write("\n".join(entries) + "\n")
+
+    print(f"wrote {len(entries)} artifacts to {out_dir} "
+          f"in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: fused squared-hinge tile statistics.
+
+For the SP-SVM / primal-Newton re-optimization step (paper eq. 4), each
+row tile contributes, given its kernel block K[T, B] and the current
+coefficients beta[B] (bias folded in as slot 0):
+
+  f_i   = K_i . beta                       (margin)
+  h_i   = max(0, 1 - y_i f_i)              (hinge residual)
+  a_i   = 1[h_i > 0] * m_i                 (active-row mask, m = validity)
+  g    += -2C * sum_i a_i y_i h_i K_i      (data-term gradient w.r.t. beta)
+  H    +=  2C * K_A^T K_A                  (Gauss-Newton Gram block)
+  loss +=   C * sum_i a_i h_i^2
+  nerr += sum_i m_i * 1[y_i f_i <= 0]
+
+Fusing margin + residual + gradient + Gram into one kernel keeps the K tile
+resident in VMEM for all four reductions — the paper's "few iterations of
+large dense ops" credo applied at tile granularity. The Gram term K_A^T K_A
+is the second MXU-shaped matmul of the pipeline.
+
+Grid: row blocks of the tile; outputs are accumulated across grid steps in
+the output refs (revisited blocks), which Pallas guarantees for sequential
+grids.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 128
+
+
+def _hinge_stats_body(k_ref, y_ref, m_ref, beta_ref, c_ref,
+                      g_ref, h_ref, loss_ref, nerr_ref):
+    step = pl.program_id(0)
+
+    ks = k_ref[...]  # [RB, B]
+    ys = y_ref[...]  # [RB]
+    ms = m_ref[...]  # [RB]
+    beta = beta_ref[...]  # [B]
+    c = c_ref[0]
+
+    f = jnp.dot(ks, beta, preferred_element_type=jnp.float32)  # [RB]
+    hinge = jnp.maximum(0.0, 1.0 - ys * f)
+    active = jnp.where(hinge > 0.0, 1.0, 0.0) * ms
+
+    # gradient: -2C sum_i a_i y_i h_i K_i
+    w = active * ys * hinge  # [RB]
+    g_blk = -2.0 * c * jnp.dot(w, ks, preferred_element_type=jnp.float32)
+
+    # Gauss-Newton: 2C K_A^T K_A (mask rows, then MXU matmul)
+    ka = ks * active[:, None]
+    h_blk = 2.0 * c * jnp.dot(ka.T, ka, preferred_element_type=jnp.float32)
+
+    loss_blk = c * jnp.sum(active * hinge * hinge)
+    nerr_blk = jnp.sum(ms * jnp.where(ys * f <= 0.0, 1.0, 0.0))
+
+    @pl.when(step == 0)
+    def _init():
+        g_ref[...] = g_blk
+        h_ref[...] = h_blk
+        loss_ref[...] = jnp.reshape(loss_blk, (1,))
+        nerr_ref[...] = jnp.reshape(nerr_blk, (1,))
+
+    @pl.when(step != 0)
+    def _acc():
+        g_ref[...] += g_blk
+        h_ref[...] += h_blk
+        loss_ref[...] += jnp.reshape(loss_blk, (1,))
+        nerr_ref[...] += jnp.reshape(nerr_blk, (1,))
+
+
+def hinge_stats(k, y, m, beta, c):
+    """Fused squared-hinge statistics for one row tile.
+
+    Args:
+      k: [T, B] kernel block (column 0 is the constant bias column).
+      y: [T] labels in {-1, +1}.
+      m: [T] row validity mask in {0, 1} (tile padding).
+      beta: [B] coefficients (slot 0 = bias).
+      c: [1] loss weight C.
+
+    Returns:
+      (g[B], H[B, B], loss[1], nerr[1]) — data-term pieces only; the caller
+      adds the K_JJ regularizer (DESIGN.md §7).
+    """
+    t, b = k.shape
+    assert t % ROW_BLOCK == 0
+    grid = (t // ROW_BLOCK,)
+    return pl.pallas_call(
+        _hinge_stats_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, b), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((ROW_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, b), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(k, y, m, beta, c)

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: tiled RBF (Gaussian) kernel block.
+
+Computes K[i, j] = exp(-gamma * ||x_i - b_j||^2) for a tile of rows X[T, d]
+against a basis block Xb[B, d].
+
+This is the compute hot spot of every solver in the paper (Tyree et al.
+2014): SMO spends its time on kernel rows, SP-SVM on kernel columns for
+candidate scoring and basis re-optimization. The paper offloads it to
+CUBLAS/MKL; here it is a Pallas kernel AOT-lowered into the same HLO module
+as the surrounding JAX graph.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * the squared distance is expanded as ||x||^2 + ||b||^2 - 2 x.b^T so the
+    dominant term is a single MXU-shaped matmul (jnp.dot with
+    preferred_element_type=f32);
+  * the grid tiles rows of X so each step's working set (X tile, full Xb,
+    K tile) fits in a VMEM-sized budget;
+  * lowered with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+    custom-calls, so the kernel lowers to plain HLO (while-loop over grid)
+    and runs anywhere. Real-TPU numbers are estimated in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of X processed per grid step. 128 keeps the MXU-shaped dot at a
+# systolic-array-friendly (128 x d) x (d x B) and the VMEM working set small.
+ROW_BLOCK = 128
+
+
+def _rbf_kernel_body(x_ref, xb_ref, g_ref, o_ref):
+    """One grid step: K tile for ROW_BLOCK rows of X against all of Xb."""
+    xs = x_ref[...]  # [ROW_BLOCK, d]
+    bs = xb_ref[...]  # [B, d]
+    # ||x||^2 + ||b||^2 - 2 x.b^T  (the dot is the MXU term)
+    xsq = jnp.sum(xs * xs, axis=1, keepdims=True)  # [ROW_BLOCK, 1]
+    bsq = jnp.sum(bs * bs, axis=1)[None, :]  # [1, B]
+    cross = jnp.dot(xs, bs.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(xsq + bsq - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.exp(-g_ref[0] * d2)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rbf_block(x, xb, gamma):
+    """K[T, B] = exp(-gamma ||x_i - b_j||^2).
+
+    Args:
+      x: [T, d] row tile (T a multiple of ROW_BLOCK).
+      xb: [B, d] basis block.
+      gamma: [1] inverse kernel width.
+    """
+    t, d = x.shape
+    b = xb.shape[0]
+    assert t % ROW_BLOCK == 0, f"T={t} must be a multiple of {ROW_BLOCK}"
+    grid = (t // ROW_BLOCK,)
+    return pl.pallas_call(
+        _rbf_kernel_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, b), jnp.float32),
+        interpret=True,
+    )(x, xb, gamma)
+
+
+def vmem_bytes(t_block: int, d: int, b: int) -> int:
+    """Estimated VMEM working set of one grid step (f32)."""
+    return 4 * (t_block * d + b * d + t_block * b + 1)
+
+
+def mxu_flops(t: int, d: int, b: int) -> int:
+    """MXU-eligible flops of the cross-term matmul for a [T,d]x[d,B] tile."""
+    return 2 * t * d * b

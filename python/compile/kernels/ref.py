@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the L1 Pallas kernels and L2 graphs.
+
+Every artifact op has a reference here; pytest asserts allclose between the
+Pallas/graph implementation and these. These are also the ground truth the
+Rust CPU engines are tested against (mirrored in rust/src/engine.rs tests).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def rbf_block(x, xb, gamma):
+    """K[T, B] = exp(-gamma ||x_i - b_j||^2)."""
+    d2 = (
+        jnp.sum(x * x, axis=1, keepdims=True)
+        + jnp.sum(xb * xb, axis=1)[None, :]
+        - 2.0 * x @ xb.T
+    )
+    return jnp.exp(-gamma[0] * jnp.maximum(d2, 0.0))
+
+
+def hinge_stats(k, y, m, beta, c):
+    """Squared-hinge tile statistics (see kernels/hinge.py)."""
+    f = k @ beta
+    hinge = jnp.maximum(0.0, 1.0 - y * f)
+    active = jnp.where(hinge > 0.0, 1.0, 0.0) * m
+    w = active * y * hinge
+    g = -2.0 * c[0] * (w @ k)
+    ka = k * active[:, None]
+    h = 2.0 * c[0] * ka.T @ ka
+    loss = c[0] * jnp.sum(active * hinge * hinge)
+    nerr = jnp.sum(m * jnp.where(y * f <= 0.0, 1.0, 0.0))
+    return g, h, jnp.reshape(loss, (1,)), jnp.reshape(nerr, (1,))
+
+
+def cg_solve(h, g, bmask, reg, iters=64):
+    """Masked damped CG solve: (H_mm + reg I) delta = g, delta on mask."""
+    bm = np.asarray(bmask)
+    hm = np.asarray(h) * np.outer(bm, bm)
+    hm = hm + np.diag(np.asarray(reg)[0] * bm + (1.0 - bm))
+    b = np.asarray(g) * bm
+    x = np.zeros_like(b)
+    r = b.copy()
+    p = r.copy()
+    rs = float(r @ r)
+    for _ in range(iters):
+        ap = hm @ p
+        alpha = rs / max(float(p @ ap), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = float(r @ r)
+        if rs_new < 1e-20:
+            break
+        p = r + (rs_new / max(rs, 1e-30)) * p
+        rs = rs_new
+    return x * bm
+
+
+def score_tile(kc, r, a):
+    """Basis-candidate scoring accumulators.
+
+    gc[j] = sum_i r_i Kc[i, j]      (r = a_i * y_i * hinge_i residuals)
+    hc[j] = sum_i a_i Kc[i, j]^2
+    """
+    gc = r @ kc
+    hc = a @ (kc * kc)
+    return gc, hc
+
+
+def predict_block(k, beta):
+    """Margins f[T] = K beta (bias folded into beta[0] / ones column)."""
+    return k @ beta

@@ -1,0 +1,124 @@
+"""L2: JAX compute graphs for the SP-SVM tile pipeline.
+
+Five ops (DESIGN.md §2), each AOT-lowered by aot.py into one HLO-text
+artifact per shape bucket. The Rust coordinator (L3) loads the artifacts
+via PJRT and drives the training outer loop; Python never runs at
+training/serving time.
+
+Ops:
+  kernel_block  — L1 Pallas RBF block (kernels/rbf.py)
+  tile_stats    — L1 Pallas fused squared-hinge statistics (kernels/hinge.py)
+  cg_solve      — masked damped conjugate-gradient Newton solve
+  score_tile    — Keerthi basis-candidate scoring accumulators
+  predict_block — margins for a tile
+
+cg_solve is pure jnp with a lax.while_loop so the whole Newton solve is a
+single executable call (no host round-trips, no LAPACK custom-calls —
+xla_extension 0.5.1 cannot run jax 0.8's LAPACK FFI custom-calls).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import rbf, hinge
+
+# Fixed CG iteration cap; the loop early-exits on the residual. B<=512 and
+# Levenberg damping keep the effective condition number small enough that
+# 96 iterations is far past convergence in practice.
+CG_MAX_ITERS = 96
+CG_TOL = 1e-10
+
+
+def kernel_block(x, xb, gamma):
+    """K[T, B] via the L1 Pallas RBF kernel."""
+    return (rbf.rbf_block(x, xb, gamma),)
+
+
+def tile_stats(k, y, m, beta, c):
+    """(g[B], H[B,B], loss[1], nerr[1]) via the L1 Pallas hinge kernel."""
+    return tuple(hinge.hinge_stats(k, y, m, beta, c))
+
+
+def cg_solve(h, g, bmask, reg):
+    """delta[B]: (M (H + reg I) M + (I - M)) delta = M g, M = diag(bmask).
+
+    Masking lets one artifact serve any basis occupancy <= B: padded slots
+    get an identity row/column and a zero rhs, so they stay exactly zero
+    and do not pollute the Krylov space.
+    """
+    hm = h * (bmask[:, None] * bmask[None, :])
+    diag_fix = reg[0] * bmask + (1.0 - bmask)
+    hm = hm + jnp.diag(diag_fix)
+    b = g * bmask
+
+    def body(state):
+        i, x, r, p, rs = state
+        ap = hm @ p
+        alpha = rs / jnp.maximum(p @ ap, 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = r @ r
+        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+        return (i + 1, x, r, p, rs_new)
+
+    def cond(state):
+        i, _, _, _, rs = state
+        return jnp.logical_and(i < CG_MAX_ITERS, rs > CG_TOL)
+
+    x0 = jnp.zeros_like(b)
+    state = (jnp.int32(0), x0, b, b, b @ b)
+    _, x, _, _, _ = jax.lax.while_loop(cond, body, state)
+    return (x * bmask,)
+
+
+def score_tile(kc, r, a):
+    """(gc[S], hc[S]) candidate-scoring accumulators for one tile.
+
+    r_i = a_i y_i hinge_i residuals, a_i = active*valid mask; the Rust
+    coordinator turns the accumulated (gc, hc) into Keerthi scores
+    g^2 / (lambda + h) and greedily picks the argmax (DESIGN.md §7).
+    """
+    gc = r @ kc
+    hc = a @ (kc * kc)
+    return (gc, hc)
+
+
+def predict_block(k, beta):
+    """Margins f[T] = K beta (bias folded into beta[0])."""
+    return (k @ beta,)
+
+
+def op_specs(t, d, b, s):
+    """Abstract input specs per op for the given shape bucket."""
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    return {
+        "kernel_block": (
+            kernel_block,
+            (sds((t, d), f32), sds((b, d), f32), sds((1,), f32)),
+        ),
+        "tile_stats": (
+            tile_stats,
+            (
+                sds((t, b), f32),
+                sds((t,), f32),
+                sds((t,), f32),
+                sds((b,), f32),
+                sds((1,), f32),
+            ),
+        ),
+        "cg_solve": (
+            cg_solve,
+            (sds((b, b), f32), sds((b,), f32), sds((b,), f32), sds((1,), f32)),
+        ),
+        "score_tile": (
+            score_tile,
+            (sds((t, s), f32), sds((t,), f32), sds((t,), f32)),
+        ),
+        "predict_block": (
+            predict_block,
+            (sds((t, b), f32), sds((b,), f32)),
+        ),
+    }

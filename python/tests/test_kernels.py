@@ -1,0 +1,141 @@
+"""L1 Pallas kernels vs pure-jnp oracles (the core correctness signal)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rbf, hinge, ref
+
+RNG = np.random.default_rng(0)
+
+
+def randn(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+class TestRbfBlock:
+    @pytest.mark.parametrize("t,d,b", [(128, 8, 16), (256, 64, 64),
+                                       (128, 123, 37), (384, 54, 128)])
+    def test_matches_ref(self, t, d, b):
+        x, xb, g = randn(t, d), randn(b, d), np.array([0.5], np.float32)
+        out = rbf.rbf_block(x, xb, g)
+        expect = ref.rbf_block(x, xb, g)
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+    def test_self_kernel_diag_is_one(self):
+        x = randn(128, 10)
+        k = rbf.rbf_block(x, x[:64], np.array([1.3], np.float32))
+        np.testing.assert_allclose(np.diag(np.asarray(k)[:64]), 1.0, atol=1e-5)
+
+    def test_gamma_zero_gives_ones(self):
+        k = rbf.rbf_block(randn(128, 4), randn(8, 4), np.zeros(1, np.float32))
+        np.testing.assert_allclose(k, 1.0, atol=1e-6)
+
+    def test_values_in_unit_interval(self):
+        k = np.asarray(rbf.rbf_block(randn(256, 33), randn(65, 33),
+                                     np.array([2.0], np.float32)))
+        assert k.min() >= 0.0 and k.max() <= 1.0 + 1e-6
+
+    def test_symmetry_under_swap(self):
+        x = randn(128, 12)
+        g = np.array([0.7], np.float32)
+        k1 = np.asarray(rbf.rbf_block(x, x, g))
+        np.testing.assert_allclose(k1, k1.T, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        t_blocks=st.integers(1, 3),
+        d=st.integers(1, 96),
+        b=st.integers(1, 96),
+        gamma=st.floats(0.0, 4.0),
+    )
+    def test_hypothesis_shape_sweep(self, t_blocks, d, b, gamma):
+        t = 128 * t_blocks
+        rng = np.random.default_rng(d * 1000 + b)
+        x = rng.standard_normal((t, d)).astype(np.float32)
+        xb = rng.standard_normal((b, d)).astype(np.float32)
+        g = np.array([gamma], np.float32)
+        np.testing.assert_allclose(
+            rbf.rbf_block(x, xb, g), ref.rbf_block(x, xb, g),
+            rtol=1e-4, atol=1e-5)
+
+    def test_vmem_budget_worst_bucket(self):
+        # DESIGN.md §Hardware-Adaptation: worst bucket fits a 16MB VMEM.
+        assert rbf.vmem_bytes(rbf.ROW_BLOCK, 2048, 512) < 16 * 2 ** 20
+
+
+class TestHingeStats:
+    def _case(self, t, b, seed=1):
+        rng = np.random.default_rng(seed)
+        k = rng.uniform(0, 1, (t, b)).astype(np.float32)
+        k[:, 0] = 1.0  # bias column
+        y = rng.choice([-1.0, 1.0], t).astype(np.float32)
+        m = (rng.uniform(0, 1, t) > 0.2).astype(np.float32)
+        beta = rng.standard_normal(b).astype(np.float32) * 0.1
+        c = np.array([3.0], np.float32)
+        return k, y, m, beta, c
+
+    @pytest.mark.parametrize("t,b", [(128, 16), (256, 64), (384, 128)])
+    def test_matches_ref(self, t, b):
+        args = self._case(t, b)
+        g, h, loss, nerr = hinge.hinge_stats(*args)
+        eg, eh, el, en = ref.hinge_stats(*args)
+        np.testing.assert_allclose(g, eg, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(h, eh, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(loss, el, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(nerr, en, atol=1e-5)
+
+    def test_gram_is_psd(self):
+        args = self._case(256, 32, seed=7)
+        _, h, _, _ = hinge.hinge_stats(*args)
+        evals = np.linalg.eigvalsh(np.asarray(h, dtype=np.float64))
+        assert evals.min() > -1e-3
+
+    def test_masked_rows_do_not_contribute(self):
+        k, y, m, beta, c = self._case(128, 16, seed=3)
+        m0 = np.zeros_like(m)
+        g, h, loss, nerr = hinge.hinge_stats(k, y, m0, beta, c)
+        np.testing.assert_allclose(g, 0.0, atol=1e-6)
+        np.testing.assert_allclose(h, 0.0, atol=1e-6)
+        assert float(loss[0]) == 0.0 and float(nerr[0]) == 0.0
+
+    def test_zero_beta_all_rows_active(self):
+        k, y, m, _, c = self._case(128, 16, seed=4)
+        beta = np.zeros(16, np.float32)
+        _, _, loss, nerr = hinge.hinge_stats(k, y, m, beta, c)
+        # f=0 -> hinge=1 for every valid row, and every row counts as error.
+        assert float(loss[0]) == pytest.approx(float(c[0]) * m.sum(), rel=1e-5)
+        assert float(nerr[0]) == pytest.approx(m.sum())
+
+    def test_accumulates_across_grid_steps(self):
+        # result over 3 row-blocks == sum of per-block results
+        k, y, m, beta, c = self._case(384, 32, seed=5)
+        g, h, loss, nerr = hinge.hinge_stats(k, y, m, beta, c)
+        gs = np.zeros(32, np.float32)
+        ls = 0.0
+        for i in range(3):
+            sl = slice(128 * i, 128 * (i + 1))
+            gi, _, li, _ = hinge.hinge_stats(k[sl], y[sl], m[sl], beta, c)
+            gs += np.asarray(gi)
+            ls += float(li[0])
+        np.testing.assert_allclose(g, gs, rtol=1e-4, atol=1e-4)
+        assert float(loss[0]) == pytest.approx(ls, rel=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(t_blocks=st.integers(1, 3), b=st.integers(2, 48),
+           cval=st.floats(0.1, 100.0), seed=st.integers(0, 10 ** 6))
+    def test_hypothesis_sweep(self, t_blocks, b, cval, seed):
+        rng = np.random.default_rng(seed)
+        t = 128 * t_blocks
+        k = rng.uniform(0, 1, (t, b)).astype(np.float32)
+        y = rng.choice([-1.0, 1.0], t).astype(np.float32)
+        m = (rng.uniform(0, 1, t) > 0.5).astype(np.float32)
+        beta = (rng.standard_normal(b) * 0.2).astype(np.float32)
+        c = np.array([cval], np.float32)
+        g, h, loss, nerr = hinge.hinge_stats(k, y, m, beta, c)
+        eg, eh, el, en = ref.hinge_stats(k, y, m, beta, c)
+        np.testing.assert_allclose(g, eg, rtol=1e-3, atol=1e-3 * cval)
+        np.testing.assert_allclose(h, eh, rtol=1e-3, atol=1e-3 * cval)
+        np.testing.assert_allclose(loss, el, rtol=1e-3, atol=1e-3 * cval)
+        np.testing.assert_allclose(nerr, en, atol=1e-4)

@@ -1,0 +1,140 @@
+"""L2 graph ops vs oracles, and end-to-end graph composition."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(42)
+
+
+def randn(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+class TestCgSolve:
+    def _spd(self, b, occupied, seed=0):
+        rng = np.random.default_rng(seed)
+        a = rng.standard_normal((b, b)).astype(np.float32)
+        h = a @ a.T / b + 0.5 * np.eye(b, dtype=np.float32)
+        bm = np.zeros(b, np.float32)
+        bm[:occupied] = 1.0
+        g = rng.standard_normal(b).astype(np.float32)
+        reg = np.array([1e-3], np.float32)
+        return h, g, bm, reg
+
+    @pytest.mark.parametrize("b,occ", [(16, 16), (32, 17), (64, 3), (64, 64)])
+    def test_solves_masked_system(self, b, occ):
+        h, g, bm, reg = self._spd(b, occ, seed=b + occ)
+        (x,) = model.cg_solve(h, g, bm, reg)
+        x = np.asarray(x, np.float64)
+        hm = (h * np.outer(bm, bm) + np.diag(reg[0] * bm + (1 - bm)))
+        resid = hm @ x - g * bm
+        assert np.linalg.norm(resid) < 1e-3 * max(1.0, np.linalg.norm(g))
+
+    def test_padded_slots_stay_zero(self):
+        h, g, bm, reg = self._spd(32, 10, seed=9)
+        (x,) = model.cg_solve(h, g, bm, reg)
+        np.testing.assert_allclose(np.asarray(x)[10:], 0.0, atol=1e-7)
+
+    def test_matches_numpy_reference(self):
+        h, g, bm, reg = self._spd(24, 24, seed=5)
+        (x,) = model.cg_solve(h, g, bm, reg)
+        expect = ref.cg_solve(h, g, bm, reg, iters=model.CG_MAX_ITERS)
+        np.testing.assert_allclose(x, expect, rtol=1e-3, atol=1e-4)
+
+    def test_identity_system(self):
+        b = 16
+        h = np.eye(b, dtype=np.float32)
+        g = randn(b)
+        bm = np.ones(b, np.float32)
+        (x,) = model.cg_solve(h, g, bm, np.zeros(1, np.float32))
+        np.testing.assert_allclose(x, g, rtol=1e-5, atol=1e-6)
+
+
+class TestScoreAndPredict:
+    def test_score_tile_matches_ref(self):
+        kc, r = randn(256, 64), randn(256)
+        a = (RNG.uniform(0, 1, 256) > 0.3).astype(np.float32)
+        gc, hc = model.score_tile(kc, r * a, a)
+        eg, eh = ref.score_tile(kc, r * a, a)
+        np.testing.assert_allclose(gc, eg, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(hc, eh, rtol=1e-4, atol=1e-4)
+
+    def test_predict_block_matches_ref(self):
+        k, beta = randn(128, 32), randn(32)
+        (f,) = model.predict_block(k, beta)
+        np.testing.assert_allclose(f, ref.predict_block(k, beta),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_hc_nonnegative(self):
+        kc = randn(128, 64)
+        a = np.ones(128, np.float32)
+        _, hc = model.score_tile(kc, randn(128), a)
+        assert np.asarray(hc).min() >= -1e-5
+
+
+class TestComposition:
+    """Full SP-SVM Newton step stitched from the ops (as Rust will drive it)."""
+
+    def test_newton_step_reduces_loss(self):
+        rng = np.random.default_rng(3)
+        t, d, nb = 256, 4, 33  # occupied basis 33 of 64 bucket
+        b = 64
+        x = rng.standard_normal((t, d)).astype(np.float32)
+        y = np.sign(x[:, 0] * x[:, 1] + 0.1).astype(np.float32)
+        xb = np.zeros((b, d), np.float32)
+        xb[1:nb] = x[: nb - 1]  # slot 0 reserved for bias
+        gamma = np.array([0.25], np.float32)
+        c = np.array([1.0], np.float32)
+        m = np.ones(t, np.float32)
+        bm = np.zeros(b, np.float32)
+        bm[:nb] = 1.0
+
+        (k,) = model.kernel_block(x, xb, gamma)
+        k = np.asarray(k).copy()
+        k[:, 0] = 1.0  # bias column
+        # K_JJ is computed on the Rust side (tiny, CPU); use the oracle here.
+        kjj = np.asarray(ref.rbf_block(xb, xb, gamma)).copy()
+        kjj[0, :] = 0.0
+        kjj[:, 0] = 0.0  # bias unregularized
+
+        def objective(beta):
+            f = k @ beta
+            hinge = np.maximum(0, 1 - y * f)
+            return 0.5 * beta @ (kjj * np.outer(bm, bm)) @ beta + \
+                float(c[0]) * np.sum(hinge ** 2)
+
+        beta = np.zeros(b, np.float32)
+        loss0 = objective(beta)
+        for _ in range(3):
+            g, h, _, _ = model.tile_stats(k, y, m, beta, c)
+            g = np.asarray(g) + (kjj * np.outer(bm, bm)) @ beta
+            h = np.asarray(h) + kjj
+            (delta,) = model.cg_solve(h.astype(np.float32),
+                                      (-g).astype(np.float32), bm,
+                                      np.array([1e-4], np.float32))
+            beta = beta + np.asarray(delta)
+        loss1 = objective(beta)
+        assert loss1 < 0.5 * loss0
+
+    def test_tile_stats_c_factor_note(self):
+        # tile_stats returns C/2-convention pieces scaled so that the
+        # quadratic model is consistent: g uses 2C, H uses 2C, loss uses C.
+        rng = np.random.default_rng(11)
+        k = rng.uniform(0, 1, (128, 8)).astype(np.float32)
+        y = rng.choice([-1.0, 1.0], 128).astype(np.float32)
+        m = np.ones(128, np.float32)
+        beta = np.zeros(8, np.float32)
+        g1, h1, l1, _ = model.tile_stats(k, y, m, beta,
+                                         np.array([1.0], np.float32))
+        g2, h2, l2, _ = model.tile_stats(k, y, m, beta,
+                                         np.array([2.0], np.float32))
+        np.testing.assert_allclose(np.asarray(g2), 2 * np.asarray(g1),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(h2), 2 * np.asarray(h1),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(l2), 2 * np.asarray(l1),
+                                   rtol=1e-5)

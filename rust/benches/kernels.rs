@@ -1,0 +1,94 @@
+//! Micro-benchmarks of the five tile ops across engines — the per-op
+//! explicit-vs-implicit comparison underlying every Table-1 number.
+//!
+//! Run: `cargo bench --bench kernels`
+
+use wu_svm::bench_util::{bench, header};
+use wu_svm::engine::Engine;
+use wu_svm::pool;
+use wu_svm::rng::Rng;
+use wu_svm::runtime::{default_artifacts_dir, XlaRuntime};
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform_f32()).collect()
+}
+
+fn main() {
+    let mut engines: Vec<Engine> = vec![Engine::cpu_seq(), Engine::cpu_par(pool::default_threads())];
+    match XlaRuntime::load(&default_artifacts_dir()) {
+        Ok(rt) => engines.push(Engine::xla(std::sync::Arc::new(rt))),
+        Err(e) => eprintln!("xla engine unavailable: {e}"),
+    }
+
+    let mut rng = Rng::new(1);
+    let t = 1024;
+
+    header("rbf_block K[1024 x B] (d features)");
+    for &(d, b) in &[(64usize, 64usize), (128, 256), (512, 512), (2048, 512)] {
+        let x = rand_vec(&mut rng, t * d);
+        let xb = rand_vec(&mut rng, b * d);
+        for e in &engines {
+            let s = bench(&format!("rbf d={d} b={b} [{}]", e.name()), 1, 5, || {
+                let _ = e.rbf_block(&x, t, d, &xb, b, 0.5).unwrap();
+            });
+            println!("{}", s.row());
+        }
+    }
+
+    header("tile_stats (fused hinge grad+gram) [1024 x B]");
+    for &b in &[64usize, 256, 512] {
+        let k = rand_vec(&mut rng, t * b);
+        let y: Vec<f32> = (0..t).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let m = vec![1.0f32; t];
+        let beta = rand_vec(&mut rng, b);
+        for e in &engines {
+            let s = bench(&format!("tile_stats b={b} [{}]", e.name()), 1, 5, || {
+                let _ = e.tile_stats(&k, t, b, &y, &m, &beta, 2.0).unwrap();
+            });
+            println!("{}", s.row());
+        }
+    }
+
+    header("cg_solve (masked Newton system) [B x B]");
+    for &b in &[64usize, 256, 512] {
+        // SPD system
+        let a = rand_vec(&mut rng, b * b);
+        let mut h = vec![0.0f32; b * b];
+        for i in 0..b {
+            for j in 0..b {
+                let mut acc = 0.0f32;
+                for k2 in 0..b {
+                    acc += a[i * b + k2] * a[j * b + k2];
+                }
+                h[i * b + j] = acc / b as f32 + if i == j { 1.0 } else { 0.0 };
+            }
+        }
+        let g = rand_vec(&mut rng, b);
+        let bm = vec![1.0f32; b];
+        for e in &engines {
+            let s = bench(&format!("cg_solve b={b} [{}]", e.name()), 1, 5, || {
+                let _ = e.cg_solve(&h, b, &g, &bm, 1e-3).unwrap();
+            });
+            println!("{}", s.row());
+        }
+    }
+
+    header("score_tile + predict_block [1024 x {64,256}]");
+    {
+        let kc = rand_vec(&mut rng, t * 64);
+        let r: Vec<f32> = rand_vec(&mut rng, t);
+        let a: Vec<f32> = vec![1.0; t];
+        let k = rand_vec(&mut rng, t * 256);
+        let beta = rand_vec(&mut rng, 256);
+        for e in &engines {
+            let s = bench(&format!("score_tile s=64 [{}]", e.name()), 1, 5, || {
+                let _ = e.score_tile(&kc, t, 64, &r, &a).unwrap();
+            });
+            println!("{}", s.row());
+            let s = bench(&format!("predict_block b=256 [{}]", e.name()), 1, 5, || {
+                let _ = e.predict_block(&k, t, 256, &beta).unwrap();
+            });
+            println!("{}", s.row());
+        }
+    }
+}

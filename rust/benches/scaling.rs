@@ -1,0 +1,44 @@
+//! F.scaling + F.basis + F.memory — the prose-claim figures (DESIGN.md
+//! §6): thread-count speedup for explicit vs implicit, SP-SVM's basis
+//! size/accuracy trade-off, and the memory wall that excludes the exact
+//! implicit methods from Table 1.
+//!
+//! Run: `cargo bench --bench scaling [-- --dataset covertype --scale 0.01]`
+
+use wu_svm::config::Config;
+use wu_svm::experiments;
+use wu_svm::pool;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let cfg = Config::from_args(&args).unwrap();
+    let dataset = cfg.str_or("dataset", "covertype");
+    let scale = cfg.f64_or("scale", 0.01).unwrap();
+
+    let max_t = pool::default_threads();
+    let mut threads = vec![1usize, 2, 4];
+    if max_t >= 8 {
+        threads.push(8);
+    }
+    if max_t > 8 {
+        threads.push(max_t);
+    }
+
+    match experiments::run_scaling(&dataset, scale, &threads) {
+        Ok(t) => println!("{t}"),
+        Err(e) => eprintln!("scaling failed: {e:#}"),
+    }
+
+    match experiments::run_basis_sweep(&dataset, scale, &[15, 31, 63, 127, 255]) {
+        Ok(t) => println!("{t}"),
+        Err(e) => eprintln!("basis sweep failed: {e:#}"),
+    }
+
+    println!(
+        "{}",
+        experiments::run_memory_table(
+            &[1_000, 10_000, 31_562, 100_000, 489_410, 4_898_431],
+            511
+        )
+    );
+}

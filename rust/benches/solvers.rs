@@ -1,0 +1,73 @@
+//! Solver-level benchmarks on a fixed mid-size workload: time-to-model
+//! for each algorithm/engine pair plus the F.wss and F.epsstop ablations
+//! (DESIGN.md §6).
+//!
+//! Run: `cargo bench --bench solvers [-- --scale 0.02]`
+
+use wu_svm::bench_util::{bench_once, header};
+use wu_svm::config::Config;
+use wu_svm::coordinator::{run, EngineChoice, Solver, TrainJob};
+use wu_svm::experiments;
+use wu_svm::pool;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let cfg = Config::from_args(&args).unwrap();
+    let scale = cfg.f64_or("scale", 0.01).unwrap();
+    let dataset = cfg.str_or("dataset", "covertype");
+    let threads = pool::default_threads();
+
+    header(&format!("solvers on {dataset} (scale {scale})"));
+    let cases: Vec<(String, Solver, EngineChoice)> = vec![
+        ("smo[cpu-seq]".into(), Solver::Smo, EngineChoice::CpuSeq),
+        (format!("smo[cpu-par({threads})]"), Solver::Smo, EngineChoice::CpuPar(threads)),
+        ("smo[xla]".into(), Solver::Smo, EngineChoice::Xla),
+        ("wss16[xla]".into(), Solver::Wss, EngineChoice::Xla),
+        (format!("spsvm[cpu-par({threads})]"), Solver::SpSvm, EngineChoice::CpuPar(threads)),
+        ("spsvm[xla]".into(), Solver::SpSvm, EngineChoice::Xla),
+        (format!("mu[cpu-par({threads})]"), Solver::Mu, EngineChoice::CpuPar(threads)),
+        (format!("primal[cpu-par({threads})]"), Solver::Primal, EngineChoice::CpuPar(threads)),
+    ];
+    for (name, solver, engine) in cases {
+        let job = TrainJob {
+            dataset: dataset.clone(),
+            scale,
+            solver,
+            engine,
+            max_basis: 255,
+            ..Default::default()
+        };
+        let mut metric = f64::NAN;
+        let s = bench_once(&name, || match run(&job) {
+            Ok(rec) => metric = rec.test_metric,
+            Err(e) => eprintln!("  {name}: {e}"),
+        });
+        println!("{}   metric={:.4}", s.row(), metric);
+    }
+
+    // F.wss ablation (cpu engine so it runs without artifacts)
+    header("F.wss: working-set size (GTSVM's 16 vs SMO's 2)");
+    for s in [2usize, 4, 8, 16, 32] {
+        let job = TrainJob {
+            dataset: dataset.clone(),
+            scale,
+            solver: Solver::Wss,
+            engine: EngineChoice::CpuPar(threads),
+            wss_size: s,
+            ..Default::default()
+        };
+        let mut metric = f64::NAN;
+        let smp = bench_once(&format!("wss s={s}"), || match run(&job) {
+            Ok(rec) => metric = rec.test_metric,
+            Err(e) => eprintln!("  wss{s}: {e}"),
+        });
+        println!("{}   metric={:.4}", smp.row(), metric);
+    }
+
+    // F.epsstop ablation
+    header("F.epsstop: SP-SVM stopping threshold");
+    match experiments::run_eps_sweep(&dataset, scale, &[1e-3, 1e-4, 1e-5, 5e-6]) {
+        Ok(t) => println!("{t}"),
+        Err(e) => eprintln!("eps sweep failed: {e}"),
+    }
+}

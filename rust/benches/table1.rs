@@ -1,0 +1,49 @@
+//! Table 1 — the paper's only exhibit, regenerated end to end.
+//!
+//! For every dataset analog: test error / (1-AUC), training time, and
+//! speedup vs single-core LibSVM, across the six method configurations
+//! (LibSVM SC/MC, SP-SVM MC, GPU-SVM, GTSVM, SP-SVM on the XLA engine).
+//!
+//! Run: `cargo bench --bench table1 [-- --dataset adult --scale 0.05
+//!       --methods SP-SVM,LibSVM --max-basis 255]`
+//! Default runs every dataset at `experiments::default_scale`, which is
+//! sized so the whole table finishes in tens of minutes. The recorded
+//! output lives in EXPERIMENTS.md.
+
+use wu_svm::config::Config;
+use wu_svm::data::paper;
+use wu_svm::experiments;
+use wu_svm::report;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let cfg = Config::from_args(&args).unwrap();
+    let dataset = cfg.str_or("dataset", "all");
+    let max_basis = cfg.usize_or("max-basis", 255).unwrap();
+    let methods: Vec<String> = cfg
+        .get("methods")
+        .map(|m| m.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_default();
+
+    let keys: Vec<String> = if dataset == "all" {
+        paper::specs().iter().map(|s| s.key.to_string()).collect()
+    } else {
+        vec![dataset]
+    };
+
+    let mut all = Vec::new();
+    for k in keys {
+        let scale = cfg
+            .f64_or("scale", experiments::default_scale(&k))
+            .unwrap();
+        eprintln!("=== {k} (scale {scale}) ===");
+        match experiments::run_table1_dataset(&k, scale, max_basis, &methods) {
+            Ok(rows) => {
+                println!("{}", report::render_table(&rows));
+                all.extend(rows);
+            }
+            Err(e) => eprintln!("{k} failed: {e:#}"),
+        }
+    }
+    println!("{}", experiments::render_with_reference(&all));
+}

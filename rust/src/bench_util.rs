@@ -1,0 +1,132 @@
+//! Measurement harness (the offline registry has no criterion).
+//!
+//! `cargo bench` targets use `harness = false` and this module: warmup,
+//! repeated samples, median/mean/min/stddev, and aligned table output.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub runs: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub stddev: Duration,
+}
+
+/// Run `f` `runs` times after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, runs: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(runs);
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    summarize(name, &mut times)
+}
+
+/// Time a single run (for long end-to-end cases).
+pub fn bench_once<F: FnOnce()>(name: &str, f: F) -> Sample {
+    let t0 = Instant::now();
+    f();
+    let mut times = vec![t0.elapsed()];
+    summarize(name, &mut times)
+}
+
+fn summarize(name: &str, times: &mut [Duration]) -> Sample {
+    times.sort();
+    let runs = times.len();
+    let total: Duration = times.iter().sum();
+    let mean = total / runs as u32;
+    let median = times[runs / 2];
+    let min = times[0];
+    let mean_s = mean.as_secs_f64();
+    let var = times
+        .iter()
+        .map(|t| {
+            let d = t.as_secs_f64() - mean_s;
+            d * d
+        })
+        .sum::<f64>()
+        / runs as f64;
+    Sample {
+        name: name.to_string(),
+        runs,
+        mean,
+        median,
+        min,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    }
+}
+
+impl Sample {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>9} x{}",
+            self.name,
+            fmt(self.median),
+            fmt(self.mean),
+            fmt(self.min),
+            fmt(self.stddev),
+            self.runs
+        )
+    }
+}
+
+fn fmt(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Print a bench table header.
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>9} runs",
+        "case", "median", "mean", "min", "stddev"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_times() {
+        let s = bench("spin", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.runs, 5);
+        assert!(s.min <= s.median && s.median <= s.mean * 3);
+    }
+
+    #[test]
+    fn bench_once_single_run() {
+        let s = bench_once("one", || {});
+        assert_eq!(s.runs, 1);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt(Duration::from_nanos(500)).ends_with("us"));
+        assert!(fmt(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn row_contains_name() {
+        let s = bench("named", 0, 2, || {});
+        assert!(s.row().contains("named"));
+    }
+}

@@ -1,0 +1,184 @@
+//! Configuration: key=value files and CLI flags (the offline registry has
+//! no clap/serde, so this is a small hand-rolled layer).
+//!
+//! Precedence: defaults < config file (`--config path`) < CLI flags
+//! (`--key value` or `--key=value`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Ordered key -> value map with typed getters.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+    /// positional (non-flag) arguments, in order
+    pub positional: Vec<String>,
+}
+
+impl Config {
+    /// Parse a config file: `key = value` lines, '#' comments.
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        let mut cfg = Config::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            cfg.map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(cfg)
+    }
+
+    /// Parse CLI args (after the subcommand). `--key value`, `--key=value`
+    /// and bare `--flag` (-> "true") forms. `--config FILE` merges the
+    /// file first (CLI wins).
+    pub fn from_args(args: &[String]) -> Result<Config> {
+        let mut cli = Config::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    cli.map.insert(k.to_string(), v.to_string());
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    cli.map.insert(stripped.to_string(), args[i + 1].clone());
+                    i += 1;
+                } else {
+                    cli.map.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                cli.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        if let Some(path) = cli.map.get("config").cloned() {
+            let mut merged = Config::from_file(Path::new(&path))?;
+            merged.map.extend(cli.map);
+            merged.positional = cli.positional;
+            return Ok(merged);
+        }
+        Ok(cli)
+    }
+
+    pub fn set(&mut self, k: &str, v: &str) {
+        self.map.insert(k.to_string(), v.to_string());
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.map.get(k).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, k: &str, default: &str) -> String {
+        self.get(k).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, k: &str, default: f64) -> Result<f64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{k} = '{v}' is not a number")),
+        }
+    }
+
+    pub fn f32_or(&self, k: &str, default: f32) -> Result<f32> {
+        Ok(self.f64_or(k, default as f64)? as f32)
+    }
+
+    pub fn usize_or(&self, k: &str, default: usize) -> Result<usize> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{k} = '{v}' is not an integer")),
+        }
+    }
+
+    pub fn u64_or(&self, k: &str, default: u64) -> Result<u64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{k} = '{v}' is not an integer")),
+        }
+    }
+
+    pub fn bool_or(&self, k: &str, default: bool) -> Result<bool> {
+        match self.get(k) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("--{k} = '{v}' is not a bool"),
+        }
+    }
+
+    /// Reject unknown keys (catch typos in experiment scripts).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.map.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k}; known: {}", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|v| v.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flag_forms() {
+        // note: a bare `--flag` eats a following non--- token as its
+        // value, so positionals go before flags (like the CLI subcommand).
+        let c = Config::from_args(&args(&["pos", "--a", "1", "--b=x", "--flag"])).unwrap();
+        assert_eq!(c.get("a"), Some("1"));
+        assert_eq!(c.get("b"), Some("x"));
+        assert_eq!(c.bool_or("flag", false).unwrap(), true);
+        assert_eq!(c.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let c = Config::from_args(&args(&["--x", "2.5", "--n", "7"])).unwrap();
+        assert_eq!(c.f64_or("x", 0.0).unwrap(), 2.5);
+        assert_eq!(c.usize_or("n", 0).unwrap(), 7);
+        assert_eq!(c.usize_or("missing", 9).unwrap(), 9);
+        assert!(c.f64_or("n", 0.0).is_ok());
+        assert!(Config::from_args(&args(&["--x", "abc"])).unwrap().f64_or("x", 0.0).is_err());
+    }
+
+    #[test]
+    fn config_file_and_cli_precedence() {
+        let dir = std::env::temp_dir().join("wu_svm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.cfg");
+        std::fs::write(&p, "a = 1\nb = 2 # comment\n# whole line\n").unwrap();
+        let c = Config::from_args(&args(&["--config", p.to_str().unwrap(), "--b", "3"])).unwrap();
+        assert_eq!(c.get("a"), Some("1"));
+        assert_eq!(c.get("b"), Some("3"));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn unknown_key_detection() {
+        let c = Config::from_args(&args(&["--oops", "1"])).unwrap();
+        assert!(c.check_known(&["fine"]).is_err());
+        assert!(c.check_known(&["oops"]).is_ok());
+    }
+
+    #[test]
+    fn malformed_file_rejected() {
+        let dir = std::env::temp_dir().join("wu_svm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.cfg");
+        std::fs::write(&p, "no equals sign\n").unwrap();
+        assert!(Config::from_file(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

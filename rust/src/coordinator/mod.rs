@@ -1,0 +1,377 @@
+//! Training-job coordination: one place that wires datasets, solvers and
+//! engines together (used by the CLI, the examples and the bench harness).
+
+pub mod serve;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::data::{paper, Dataset};
+use crate::engine::Engine;
+use crate::kernel::KernelKind;
+use crate::metrics::{auc, error_rate, multiclass_error};
+use crate::model::SvmModel;
+use crate::multiclass::OvoModel;
+use crate::pool;
+use crate::runtime::{default_artifacts_dir, XlaRuntime};
+use crate::solvers::{mu, primal, smo, spsvm, wss};
+
+/// Which solver to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Solver {
+    Smo,
+    Wss,
+    Mu,
+    Primal,
+    SpSvm,
+}
+
+impl Solver {
+    pub fn parse(s: &str) -> Result<Solver> {
+        Ok(match s {
+            "smo" | "libsvm" => Solver::Smo,
+            "wss" | "gtsvm" => Solver::Wss,
+            "mu" => Solver::Mu,
+            "primal" => Solver::Primal,
+            "spsvm" | "wusvm" => Solver::SpSvm,
+            _ => bail!("unknown solver '{s}' (smo|wss|mu|primal|spsvm)"),
+        })
+    }
+}
+
+/// Which engine executes the heavy ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineChoice {
+    CpuSeq,
+    CpuPar(usize),
+    Xla,
+}
+
+impl EngineChoice {
+    pub fn parse(s: &str, threads: usize) -> Result<EngineChoice> {
+        Ok(match s {
+            "cpu-seq" | "sc" => EngineChoice::CpuSeq,
+            "cpu-par" | "mc" => EngineChoice::CpuPar(threads),
+            "xla" | "gpu" => EngineChoice::Xla,
+            _ => bail!("unknown engine '{s}' (cpu-seq|cpu-par|xla)"),
+        })
+    }
+
+    /// Table-1 architecture label.
+    pub fn arch(&self) -> &'static str {
+        match self {
+            EngineChoice::CpuSeq => "SC",
+            EngineChoice::CpuPar(_) => "MC",
+            EngineChoice::Xla => "XLA",
+        }
+    }
+}
+
+/// A fully specified training job.
+#[derive(Debug, Clone)]
+pub struct TrainJob {
+    pub dataset: String,
+    pub scale: f64,
+    pub solver: Solver,
+    pub engine: EngineChoice,
+    pub c: Option<f32>,
+    pub gamma: Option<f32>,
+    pub eps: Option<f64>,
+    pub max_basis: usize,
+    pub wss_size: usize,
+    pub cache_mb: usize,
+    pub seed: u64,
+    /// Cap on training rows (0 = spec size * scale).
+    pub max_train: usize,
+}
+
+impl Default for TrainJob {
+    fn default() -> Self {
+        TrainJob {
+            dataset: "adult".into(),
+            scale: 0.05,
+            solver: Solver::SpSvm,
+            engine: EngineChoice::CpuPar(pool::default_threads()),
+            c: None,
+            gamma: None,
+            eps: None,
+            max_basis: 255,
+            wss_size: 16,
+            cache_mb: 512,
+            seed: 1,
+            max_train: 0,
+        }
+    }
+}
+
+impl TrainJob {
+    /// Build from parsed CLI config.
+    pub fn from_config(cfg: &Config) -> Result<TrainJob> {
+        let threads = cfg.usize_or("threads", pool::default_threads())?;
+        let mut job = TrainJob::default();
+        job.dataset = cfg.str_or("dataset", &job.dataset);
+        job.scale = cfg.f64_or("scale", job.scale)?;
+        job.solver = Solver::parse(&cfg.str_or("solver", "spsvm"))?;
+        job.engine = EngineChoice::parse(&cfg.str_or("engine", "cpu-par"), threads)?;
+        job.c = cfg.get("c").map(|v| v.parse()).transpose()?;
+        job.gamma = cfg.get("gamma").map(|v| v.parse()).transpose()?;
+        job.eps = cfg.get("eps").map(|v| v.parse()).transpose()?;
+        job.max_basis = cfg.usize_or("max-basis", job.max_basis)?;
+        job.wss_size = cfg.usize_or("wss-size", job.wss_size)?;
+        job.cache_mb = cfg.usize_or("cache-mb", job.cache_mb)?;
+        job.seed = cfg.u64_or("seed", job.seed)?;
+        job.max_train = cfg.usize_or("max-train", 0)?;
+        Ok(job)
+    }
+}
+
+/// Outcome of a run, ready for reporting.
+#[derive(Debug)]
+pub struct RunRecord {
+    pub job: TrainJob,
+    pub metric_name: String,
+    /// Test error or (1-AUC), fraction.
+    pub test_metric: f64,
+    pub train_time: Duration,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub expansion_size: usize,
+    pub notes: Vec<(String, String)>,
+}
+
+/// Shared, lazily created XLA runtime (compiling artifacts once per
+/// process regardless of how many jobs run).
+static XLA_RT: once_cell::sync::OnceCell<Arc<XlaRuntime>> = once_cell::sync::OnceCell::new();
+
+pub fn shared_runtime() -> Result<Arc<XlaRuntime>> {
+    if let Some(rt) = XLA_RT.get() {
+        return Ok(rt.clone());
+    }
+    let rt = Arc::new(XlaRuntime::load(&default_artifacts_dir())?);
+    let _ = XLA_RT.set(rt.clone());
+    Ok(rt)
+}
+
+pub fn build_engine(choice: EngineChoice) -> Result<Engine> {
+    Ok(match choice {
+        EngineChoice::CpuSeq => Engine::cpu_seq(),
+        EngineChoice::CpuPar(t) => Engine::cpu_par(t),
+        EngineChoice::Xla => Engine::xla(shared_runtime()?),
+    })
+}
+
+/// Generate the job's dataset pair.
+pub fn load_data(job: &TrainJob) -> Result<(Dataset, Dataset, paper::PaperSpec)> {
+    let spec = paper::spec(&job.dataset)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown dataset '{}' (one of: {})",
+            job.dataset,
+            paper::specs().iter().map(|s| s.key).collect::<Vec<_>>().join(", ")
+        ))?;
+    let (mut tr, te) = spec.generate(job.scale, job.seed);
+    if job.max_train > 0 && tr.n > job.max_train {
+        tr = tr.subsample(job.max_train, job.seed ^ 0xfeed);
+    }
+    Ok((tr, te, spec))
+}
+
+fn train_binary(
+    ds: &Dataset,
+    job: &TrainJob,
+    spec: &paper::PaperSpec,
+    engine: &Engine,
+) -> Result<(SvmModel, Vec<(String, String)>)> {
+    let c = job.c.unwrap_or(spec.c);
+    let gamma = job.gamma.unwrap_or(spec.gamma);
+    let kind = KernelKind::Rbf { gamma };
+    let r = match job.solver {
+        // Iteration caps keep pathological (huge-C) configurations bounded
+        // in benches; 50n is far past typical SMO convergence (~2-5n) and a
+        // capped run is flagged in the notes.
+        Solver::Smo => smo::train(
+            ds,
+            kind,
+            &smo::SmoParams {
+                c,
+                eps: job.eps.unwrap_or(1e-3),
+                cache_mb: job.cache_mb,
+                max_iters: 50 * ds.n,
+            },
+            engine,
+        )?,
+        Solver::Wss => wss::train(
+            ds,
+            kind,
+            &wss::WssParams {
+                c,
+                s: job.wss_size,
+                eps: job.eps.unwrap_or(1e-3),
+                cache_mb: job.cache_mb,
+                max_outer: 10 * ds.n,
+                ..Default::default()
+            },
+            engine,
+        )?,
+        Solver::Mu => mu::train(
+            ds,
+            kind,
+            &mu::MuParams {
+                c,
+                threads: match job.engine {
+                    EngineChoice::CpuPar(t) => t,
+                    _ => 1,
+                },
+                ..Default::default()
+            },
+        )?,
+        Solver::Primal => primal::train(
+            ds,
+            kind,
+            &primal::PrimalParams {
+                c,
+                threads: match job.engine {
+                    EngineChoice::CpuPar(t) => t,
+                    _ => 1,
+                },
+                ..Default::default()
+            },
+        )?,
+        Solver::SpSvm => spsvm::train(
+            ds,
+            &spsvm::SpSvmParams {
+                c,
+                gamma,
+                max_basis: job.max_basis,
+                eps: job.eps.unwrap_or(5e-6),
+                seed: job.seed,
+                ..Default::default()
+            },
+            engine,
+        )?,
+    };
+    Ok((r.model, r.notes))
+}
+
+/// Run a training job end to end (train + evaluate).
+pub fn run(job: &TrainJob) -> Result<RunRecord> {
+    let (train_ds, test_ds, spec) = load_data(job)?;
+    let engine = build_engine(job.engine)?;
+    let eval_threads = pool::default_threads();
+
+    let t0 = std::time::Instant::now();
+    if train_ds.is_multiclass() {
+        // OvO, accumulated per-pair training time (Table-1 convention)
+        let ovo = OvoModel::train(&train_ds, |view, _, _| {
+            Ok(train_binary(view, job, &spec, &engine)?.0)
+        })?;
+        let train_time = t0.elapsed();
+        let pred = ovo.predict(&test_ds, eval_threads);
+        let err = multiclass_error(&pred, &test_ds.class_ids);
+        return Ok(RunRecord {
+            job: job.clone(),
+            metric_name: "error".into(),
+            test_metric: err,
+            train_time,
+            n_train: train_ds.n,
+            n_test: test_ds.n,
+            expansion_size: ovo.total_vectors(),
+            notes: vec![("pairs".into(), ovo.pairs.len().to_string())],
+        });
+    }
+
+    let (model, notes) = train_binary(&train_ds, job, &spec, &engine)?;
+    let train_time = t0.elapsed();
+    let margins = model.decision_batch(&test_ds, eval_threads);
+    let (metric_name, metric) = match spec.metric {
+        paper::Metric::Error => ("error".to_string(), error_rate(&margins, &test_ds.y)),
+        paper::Metric::OneMinusAuc => {
+            ("1-auc".to_string(), 1.0 - auc(&margins, &test_ds.y))
+        }
+    };
+    Ok(RunRecord {
+        job: job.clone(),
+        metric_name,
+        test_metric: metric,
+        train_time,
+        n_train: train_ds.n,
+        n_test: test_ds.n,
+        expansion_size: model.num_vectors(),
+        notes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solver_and_engine_parsing() {
+        assert_eq!(Solver::parse("libsvm").unwrap(), Solver::Smo);
+        assert_eq!(Solver::parse("wusvm").unwrap(), Solver::SpSvm);
+        assert!(Solver::parse("nope").is_err());
+        assert_eq!(EngineChoice::parse("mc", 4).unwrap(), EngineChoice::CpuPar(4));
+        assert_eq!(EngineChoice::parse("xla", 4).unwrap(), EngineChoice::Xla);
+        assert!(EngineChoice::parse("quantum", 1).is_err());
+    }
+
+    #[test]
+    fn job_from_config() {
+        let cfg = Config::from_args(&[
+            "--dataset".into(),
+            "covertype".into(),
+            "--solver".into(),
+            "smo".into(),
+            "--engine".into(),
+            "cpu-seq".into(),
+            "--scale".into(),
+            "0.01".into(),
+            "--c".into(),
+            "2.5".into(),
+        ])
+        .unwrap();
+        let job = TrainJob::from_config(&cfg).unwrap();
+        assert_eq!(job.dataset, "covertype");
+        assert_eq!(job.solver, Solver::Smo);
+        assert_eq!(job.engine, EngineChoice::CpuSeq);
+        assert_eq!(job.c, Some(2.5));
+    }
+
+    #[test]
+    fn run_spsvm_small_end_to_end() {
+        let job = TrainJob {
+            dataset: "adult".into(),
+            scale: 0.02,
+            solver: Solver::SpSvm,
+            engine: EngineChoice::CpuPar(4),
+            max_basis: 63,
+            ..Default::default()
+        };
+        let rec = run(&job).unwrap();
+        assert!(rec.test_metric < 0.45, "metric {}", rec.test_metric);
+        assert!(rec.expansion_size > 0 && rec.expansion_size <= 63);
+        assert!(rec.n_train > 500);
+    }
+
+    #[test]
+    fn run_smo_small_end_to_end() {
+        let job = TrainJob {
+            dataset: "covertype".into(),
+            scale: 0.003,
+            solver: Solver::Smo,
+            engine: EngineChoice::CpuSeq,
+            ..Default::default()
+        };
+        let rec = run(&job).unwrap();
+        assert!(rec.test_metric < 0.5);
+        assert_eq!(rec.metric_name, "error");
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        let job = TrainJob { dataset: "nope".into(), ..Default::default() };
+        assert!(run(&job).is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! LibSVM sparse text format reader/writer.
+//!
+//! `label idx:val idx:val ...` per line, 1-based indices. This is the
+//! format every dataset in the paper ships in; our synthetic analogs can
+//! round-trip through it so real downloads drop in unchanged.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+/// Parse libsvm text. Labels may be real classes (multiclass) or +/-1.
+/// `d_hint` pads/validates dimensionality (0 = infer from max index).
+pub fn parse<R: BufRead>(reader: R, name: &str, d_hint: usize) -> Result<Dataset> {
+    let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let lab: f64 = parts
+            .next()
+            .context("missing label")?
+            .parse()
+            .with_context(|| format!("bad label on line {}", lineno + 1))?;
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (i, v) = tok
+                .split_once(':')
+                .with_context(|| format!("bad feature '{tok}' line {}", lineno + 1))?;
+            let i: usize = i.parse()?;
+            if i == 0 {
+                bail!("libsvm indices are 1-based (line {})", lineno + 1);
+            }
+            let v: f32 = v.parse()?;
+            max_idx = max_idx.max(i);
+            feats.push((i - 1, v));
+        }
+        rows.push(feats);
+        labels.push(lab);
+    }
+    if rows.is_empty() {
+        bail!("empty libsvm file");
+    }
+    let d = if d_hint > 0 {
+        if max_idx > d_hint {
+            bail!("feature index {max_idx} exceeds d_hint {d_hint}");
+        }
+        d_hint
+    } else {
+        max_idx
+    };
+
+    let n = rows.len();
+    let mut x = vec![0.0f32; n * d];
+    for (r, feats) in rows.iter().enumerate() {
+        for &(j, v) in feats {
+            x[r * d + j] = v;
+        }
+    }
+
+    // Binary iff labels take exactly the values {-1, +1} (or {0, 1}).
+    let mut uniq: Vec<f64> = labels.clone();
+    uniq.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    uniq.dedup();
+    let binary = uniq.len() <= 2
+        && uniq.iter().all(|&v| v == -1.0 || v == 1.0 || v == 0.0);
+    if binary {
+        let y = labels
+            .into_iter()
+            .map(|v| if v > 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        Ok(Dataset::new_binary(name, d, x, y))
+    } else {
+        // map sorted unique labels to 0..k
+        let ids = labels
+            .into_iter()
+            .map(|v| uniq.binary_search_by(|u| u.partial_cmp(&v).unwrap()).unwrap())
+            .collect();
+        Ok(Dataset::new_multiclass(name, d, x, ids))
+    }
+}
+
+/// Read a libsvm file from disk.
+pub fn read_file(path: &Path, d_hint: usize) -> Result<Dataset> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "dataset".into());
+    parse(std::io::BufReader::new(f), &name, d_hint)
+}
+
+/// Write a dataset in libsvm format (zeros omitted).
+pub fn write_file(ds: &Dataset, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for i in 0..ds.n {
+        if ds.is_multiclass() {
+            write!(w, "{}", ds.class_ids[i])?;
+        } else {
+            write!(w, "{}", if ds.y[i] > 0.0 { "+1" } else { "-1" })?;
+        }
+        for (j, &v) in ds.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_binary() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n";
+        let ds = parse(Cursor::new(text), "t", 0).unwrap();
+        assert_eq!((ds.n, ds.d), (2, 3));
+        assert_eq!(ds.row(0), &[0.5, 0.0, 1.5]);
+        assert_eq!(ds.row(1), &[0.0, 2.0, 0.0]);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        assert!(!ds.is_multiclass());
+    }
+
+    #[test]
+    fn parses_multiclass() {
+        let text = "3 1:1\n7 1:2\n3 2:1\n";
+        let ds = parse(Cursor::new(text), "t", 0).unwrap();
+        assert!(ds.is_multiclass());
+        assert_eq!(ds.class_ids, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn zero_one_labels_map_to_pm1() {
+        let ds = parse(Cursor::new("0 1:1\n1 1:2\n"), "t", 0).unwrap();
+        assert_eq!(ds.y, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn d_hint_pads() {
+        let ds = parse(Cursor::new("+1 1:1\n"), "t", 5).unwrap();
+        assert_eq!(ds.d, 5);
+    }
+
+    #[test]
+    fn d_hint_too_small_errors() {
+        assert!(parse(Cursor::new("+1 4:1\n"), "t", 2).is_err());
+    }
+
+    #[test]
+    fn zero_index_rejected() {
+        assert!(parse(Cursor::new("+1 0:1\n"), "t", 0).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let ds = parse(Cursor::new("# c\n\n+1 1:1\n"), "t", 0).unwrap();
+        assert_eq!(ds.n, 1);
+    }
+
+    #[test]
+    fn round_trip_through_file() {
+        let dir = std::env::temp_dir().join("wu_svm_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.libsvm");
+        let ds = Dataset::new_binary(
+            "rt",
+            3,
+            vec![1.0, 0.0, 2.0, 0.0, 0.5, 0.0],
+            vec![1.0, -1.0],
+        );
+        write_file(&ds, &path).unwrap();
+        let back = read_file(&path, 3).unwrap();
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.y, ds.y);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,258 @@
+//! Dataset substrate: dense row-major design matrices with labels.
+//!
+//! The paper's datasets are stored dense on the accelerator (GPU SVM and
+//! SP-SVM both "store the inputs in dense format"); we mirror that. Sparse
+//! sources (libsvm format, the kdd99-like generator) densify on load.
+
+pub mod libsvm;
+pub mod paper;
+pub mod synth;
+
+use crate::rng::Rng;
+
+/// A labeled dataset. `labels` are {-1,+1} for binary tasks; multiclass
+/// tasks keep class ids in `class_ids` and derive pairwise binary views.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    pub d: usize,
+    /// Row-major n x d feature matrix.
+    pub x: Vec<f32>,
+    /// Binary labels in {-1.0, +1.0} (for multiclass: -1 placeholder).
+    pub y: Vec<f32>,
+    /// Multiclass ids (empty for binary tasks).
+    pub class_ids: Vec<usize>,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new_binary(name: &str, d: usize, x: Vec<f32>, y: Vec<f32>) -> Self {
+        assert_eq!(x.len() % d, 0);
+        let n = x.len() / d;
+        assert_eq!(y.len(), n);
+        debug_assert!(y.iter().all(|&v| v == 1.0 || v == -1.0));
+        Dataset { n, d, x, y, class_ids: Vec::new(), name: name.to_string() }
+    }
+
+    pub fn new_multiclass(name: &str, d: usize, x: Vec<f32>, class_ids: Vec<usize>) -> Self {
+        assert_eq!(x.len() % d, 0);
+        let n = x.len() / d;
+        assert_eq!(class_ids.len(), n);
+        Dataset {
+            n,
+            d,
+            x,
+            y: vec![-1.0; n],
+            class_ids,
+            name: name.to_string(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn is_multiclass(&self) -> bool {
+        !self.class_ids.is_empty()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.class_ids.iter().copied().max().map_or(2, |m| m + 1)
+    }
+
+    /// Scale every feature to [0, 1] (paper §5 "Datasets"). Returns the
+    /// per-feature (min, max) used, so test sets can reuse train scaling.
+    pub fn scale_unit(&mut self) -> Vec<(f32, f32)> {
+        let mut ranges = vec![(f32::INFINITY, f32::NEG_INFINITY); self.d];
+        for i in 0..self.n {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                ranges[j].0 = ranges[j].0.min(v);
+                ranges[j].1 = ranges[j].1.max(v);
+            }
+        }
+        self.apply_scaling(&ranges);
+        ranges
+    }
+
+    /// Apply previously computed per-feature (min, max) scaling.
+    pub fn apply_scaling(&mut self, ranges: &[(f32, f32)]) {
+        assert_eq!(ranges.len(), self.d);
+        for i in 0..self.n {
+            let row = &mut self.x[i * self.d..(i + 1) * self.d];
+            for (v, &(lo, hi)) in row.iter_mut().zip(ranges) {
+                let span = hi - lo;
+                *v = if span > 0.0 { (*v - lo) / span } else { 0.0 };
+            }
+        }
+    }
+
+    /// Uniform random subsample without replacement (paper §5 subsamples
+    /// Epsilon and FD the same way).
+    pub fn subsample(&self, n_keep: usize, seed: u64) -> Dataset {
+        let n_keep = n_keep.min(self.n);
+        let mut rng = Rng::new(seed);
+        let mut idx = rng.sample_indices(self.n, n_keep);
+        idx.sort_unstable();
+        self.select(&idx)
+    }
+
+    /// Row-index selection.
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.d);
+        let mut y = Vec::with_capacity(idx.len());
+        let mut cls = Vec::new();
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+            if self.is_multiclass() {
+                cls.push(self.class_ids[i]);
+            }
+        }
+        Dataset {
+            n: idx.len(),
+            d: self.d,
+            x,
+            y,
+            class_ids: cls,
+            name: self.name.clone(),
+        }
+    }
+
+    /// Shuffled train/test split.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut idx: Vec<usize> = (0..self.n).collect();
+        Rng::new(seed).shuffle(&mut idx);
+        let ntr = ((self.n as f64) * train_frac).round() as usize;
+        let ntr = ntr.clamp(1, self.n.saturating_sub(1).max(1));
+        (self.select(&idx[..ntr]), self.select(&idx[ntr..]))
+    }
+
+    /// Fraction of exactly-zero entries (sparsity, kdd99-like is ~90%).
+    pub fn sparsity(&self) -> f64 {
+        if self.x.is_empty() {
+            return 0.0;
+        }
+        let z = self.x.iter().filter(|&&v| v == 0.0).count();
+        z as f64 / self.x.len() as f64
+    }
+
+    /// Positive-class fraction (class-imbalance check, mitfaces-like).
+    pub fn positive_fraction(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.y.iter().filter(|&&v| v > 0.0).count() as f64 / self.n as f64
+    }
+
+    /// Binary one-vs-one view of a multiclass dataset: class `a` -> +1,
+    /// class `b` -> -1, others dropped.
+    pub fn ovo_view(&self, a: usize, b: usize) -> Dataset {
+        assert!(self.is_multiclass());
+        let idx: Vec<usize> = (0..self.n)
+            .filter(|&i| self.class_ids[i] == a || self.class_ids[i] == b)
+            .collect();
+        let mut ds = self.select(&idx);
+        for (yi, &i) in ds.y.iter_mut().zip(&idx) {
+            *yi = if self.class_ids[i] == a { 1.0 } else { -1.0 };
+        }
+        ds.class_ids.clear();
+        ds.name = format!("{}-{}v{}", self.name, a, b);
+        ds
+    }
+
+    /// Approximate in-memory footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.x.len() * 4 + self.y.len() * 4 + self.class_ids.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new_binary(
+            "t",
+            2,
+            vec![0.0, 10.0, 1.0, 20.0, 2.0, 30.0, 3.0, 40.0],
+            vec![1.0, -1.0, 1.0, -1.0],
+        )
+    }
+
+    #[test]
+    fn scale_unit_maps_to_unit_interval() {
+        let mut ds = tiny();
+        let ranges = ds.scale_unit();
+        assert_eq!(ranges, vec![(0.0, 3.0), (10.0, 40.0)]);
+        for i in 0..ds.n {
+            for &v in ds.row(i) {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+        assert_eq!(ds.row(0), &[0.0, 0.0]);
+        assert_eq!(ds.row(3), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn apply_scaling_reuses_train_ranges() {
+        let mut train = tiny();
+        let ranges = train.scale_unit();
+        let mut test = Dataset::new_binary("t2", 2, vec![1.5, 25.0], vec![1.0]);
+        test.apply_scaling(&ranges);
+        assert_eq!(test.row(0), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn constant_feature_scales_to_zero() {
+        let mut ds = Dataset::new_binary("c", 1, vec![5.0, 5.0], vec![1.0, -1.0]);
+        ds.scale_unit();
+        assert_eq!(ds.x, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn subsample_preserves_rows() {
+        let ds = tiny();
+        let sub = ds.subsample(2, 1);
+        assert_eq!(sub.n, 2);
+        for i in 0..sub.n {
+            let found = (0..ds.n).any(|j| ds.row(j) == sub.row(i) && ds.y[j] == sub.y[i]);
+            assert!(found);
+        }
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = tiny();
+        let (tr, te) = ds.split(0.5, 3);
+        assert_eq!(tr.n + te.n, ds.n);
+        assert_eq!(tr.n, 2);
+    }
+
+    #[test]
+    fn ovo_view_filters_and_relabels() {
+        let ds = Dataset::new_multiclass(
+            "m",
+            1,
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            vec![0, 1, 2, 0, 1, 2],
+        );
+        let v = ds.ovo_view(0, 2);
+        assert_eq!(v.n, 4);
+        assert_eq!(v.y, vec![1.0, -1.0, 1.0, -1.0]);
+        assert!(!v.is_multiclass());
+    }
+
+    #[test]
+    fn sparsity_and_imbalance() {
+        let ds = Dataset::new_binary("s", 2, vec![0.0, 1.0, 0.0, 0.0], vec![1.0, -1.0]);
+        assert!((ds.sparsity() - 0.75).abs() < 1e-12);
+        assert!((ds.positive_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn num_classes_counts() {
+        let ds = Dataset::new_multiclass("m", 1, vec![0.0; 3], vec![0, 4, 2]);
+        assert_eq!(ds.num_classes(), 5);
+    }
+}

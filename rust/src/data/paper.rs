@@ -1,0 +1,264 @@
+//! The seven Table-1 dataset analogs (DESIGN.md §4, §6).
+//!
+//! Each spec records the paper's original size alongside our generated
+//! size: solver *cost* scales with (n, d, #SV), so scaled-down n with the
+//! paper's d and published (C, gamma) preserves who-beats-whom; absolute
+//! times are reported against our own single-core baseline.
+
+use super::synth::{generate, sigma_for, SynthSpec};
+use super::Dataset;
+
+/// Which Table-1 metric the dataset reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Test error % (most datasets).
+    Error,
+    /// (1 - AUC)% — MITFaces, extreme class imbalance.
+    OneMinusAuc,
+}
+
+/// Full description of one Table-1 row's workload.
+#[derive(Debug, Clone)]
+pub struct PaperSpec {
+    pub key: &'static str,
+    /// Paper's n (train), for the record.
+    pub paper_n: usize,
+    /// Our generated train size at scale = 1.0.
+    pub n_train: usize,
+    pub n_test: usize,
+    pub d: usize,
+    pub classes: usize,
+    pub c: f32,
+    pub gamma: f32,
+    pub metric: Metric,
+    /// Paper's reported LibSVM test error (fraction), the calibration
+    /// target for the generator's noise floor.
+    pub paper_error: f64,
+    flip: f64,
+    sparsity: f64,
+    pos_frac: f64,
+    clusters: usize,
+}
+
+/// All seven Table-1 workloads.
+pub fn specs() -> Vec<PaperSpec> {
+    vec![
+        PaperSpec {
+            key: "adult",
+            paper_n: 31_562,
+            n_train: 31_562,
+            n_test: 16_281,
+            d: 123,
+            classes: 2,
+            c: 1.0,
+            gamma: 0.05,
+            metric: Metric::Error,
+            paper_error: 0.149,
+            flip: 0.135,
+            sparsity: 0.7,
+            pos_frac: 0.25,
+            clusters: 12,
+        },
+        PaperSpec {
+            key: "covertype",
+            paper_n: 522_911,
+            n_train: 100_000,
+            n_test: 40_000,
+            d: 54,
+            classes: 2,
+            c: 3.0,
+            gamma: 1.0,
+            metric: Metric::Error,
+            paper_error: 0.139,
+            flip: 0.125,
+            sparsity: 0.0,
+            pos_frac: 0.45,
+            clusters: 24,
+        },
+        PaperSpec {
+            key: "kdd99",
+            paper_n: 4_898_431,
+            n_train: 150_000,
+            n_test: 60_000,
+            d: 127,
+            classes: 2,
+            // paper uses C = 1e6; with squared hinge on f32 that is
+            // numerically extreme, we scale to 1e3 (DESIGN.md §4).
+            c: 1.0e3,
+            gamma: 0.137,
+            metric: Metric::Error,
+            paper_error: 0.074,
+            flip: 0.065,
+            sparsity: 0.9,
+            pos_frac: 0.4,
+            clusters: 10,
+        },
+        PaperSpec {
+            key: "mitfaces",
+            paper_n: 489_410,
+            n_train: 80_000,
+            n_test: 40_000,
+            d: 361,
+            classes: 2,
+            c: 20.0,
+            gamma: 0.02,
+            metric: Metric::OneMinusAuc,
+            paper_error: 0.056,
+            flip: 0.03,
+            sparsity: 0.0,
+            pos_frac: 0.02,
+            clusters: 10,
+        },
+        PaperSpec {
+            key: "fd",
+            paper_n: 200_000,
+            n_train: 50_000,
+            n_test: 20_000,
+            d: 900,
+            classes: 2,
+            c: 10.0,
+            gamma: 1.0,
+            metric: Metric::Error,
+            paper_error: 0.014,
+            flip: 0.012,
+            sparsity: 0.0,
+            pos_frac: 0.3,
+            clusters: 10,
+        },
+        PaperSpec {
+            key: "epsilon",
+            paper_n: 160_000,
+            n_train: 40_000,
+            n_test: 16_000,
+            d: 2000,
+            classes: 2,
+            c: 1.0,
+            gamma: 0.125,
+            metric: Metric::Error,
+            paper_error: 0.109,
+            flip: 0.10,
+            sparsity: 0.0,
+            pos_frac: 0.5,
+            clusters: 16,
+        },
+        PaperSpec {
+            key: "mnist8m",
+            paper_n: 8_100_000,
+            n_train: 60_000,
+            n_test: 10_000,
+            d: 784,
+            classes: 10,
+            c: 1000.0,
+            gamma: 0.006,
+            metric: Metric::Error,
+            paper_error: 0.010,
+            flip: 0.008,
+            sparsity: 0.75,
+            pos_frac: 0.5,
+            clusters: 4,
+        },
+    ]
+}
+
+/// Look up a spec by key.
+pub fn spec(key: &str) -> Option<PaperSpec> {
+    specs().into_iter().find(|s| s.key == key)
+}
+
+impl PaperSpec {
+    fn synth_spec(&self) -> SynthSpec {
+        SynthSpec {
+            d: self.d,
+            classes: self.classes,
+            clusters: self.clusters,
+            sigma: sigma_for(self.gamma as f64, self.d, self.sparsity, 0.5),
+            flip: self.flip,
+            sparsity: self.sparsity,
+            pos_frac: self.pos_frac,
+        }
+    }
+
+    /// Generate (train, test) at the given scale factor in (0, 1].
+    /// Test points come from the same distribution, disjoint stream.
+    pub fn generate(&self, scale: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!(scale > 0.0 && scale <= 1.0);
+        let ntr = ((self.n_train as f64 * scale) as usize).max(64);
+        let nte = ((self.n_test as f64 * scale) as usize).max(64);
+        let spec = self.synth_spec();
+        // One stream, split: train and test share centers (same seed into
+        // generate), disjoint samples via distinct row-index streams.
+        let all = generate(&spec, ntr + nte, seed ^ 0xda7a_5e7, self.key);
+        let train_idx: Vec<usize> = (0..ntr).collect();
+        let test_idx: Vec<usize> = (ntr..ntr + nte).collect();
+        (all.select(&train_idx), all.select(&test_idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_specs_with_unique_keys() {
+        let s = specs();
+        assert_eq!(s.len(), 7);
+        let keys: std::collections::HashSet<_> = s.iter().map(|x| x.key).collect();
+        assert_eq!(keys.len(), 7);
+    }
+
+    #[test]
+    fn spec_lookup() {
+        assert!(spec("adult").is_some());
+        assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn paper_dims_preserved() {
+        let a = spec("adult").unwrap();
+        assert_eq!((a.d, a.paper_n), (123, 31_562));
+        assert_eq!(spec("epsilon").unwrap().d, 2000);
+        assert_eq!(spec("mnist8m").unwrap().classes, 10);
+    }
+
+    #[test]
+    fn generate_small_scale_shapes() {
+        let s = spec("adult").unwrap();
+        let (tr, te) = s.generate(0.02, 1);
+        assert_eq!(tr.d, 123);
+        assert!(tr.n >= 600 && te.n >= 300);
+        assert!(!tr.is_multiclass());
+    }
+
+    #[test]
+    fn kdd_is_sparse() {
+        let s = spec("kdd99").unwrap();
+        let (tr, _) = s.generate(0.01, 2);
+        assert!(tr.sparsity() > 0.8, "sparsity {}", tr.sparsity());
+    }
+
+    #[test]
+    fn mitfaces_is_imbalanced() {
+        let s = spec("mitfaces").unwrap();
+        let (tr, _) = s.generate(0.05, 3);
+        let pf = tr.positive_fraction();
+        assert!(pf < 0.06, "pos frac {pf}");
+    }
+
+    #[test]
+    fn mnist_is_multiclass() {
+        let s = spec("mnist8m").unwrap();
+        let (tr, te) = s.generate(0.02, 4);
+        assert!(tr.is_multiclass());
+        assert_eq!(tr.num_classes(), 10);
+        assert_eq!(te.d, 784);
+    }
+
+    #[test]
+    fn train_test_disjoint_streams_share_distribution() {
+        let s = spec("covertype").unwrap();
+        let (tr, te) = s.generate(0.01, 5);
+        // quick sanity: means within a tolerance of each other
+        let mean = |ds: &Dataset| ds.x.iter().map(|&v| v as f64).sum::<f64>() / ds.x.len() as f64;
+        assert!((mean(&tr) - mean(&te)).abs() < 0.05);
+    }
+}

@@ -1,0 +1,234 @@
+//! Synthetic dataset generators.
+//!
+//! The paper's seven benchmark datasets are multi-gigabyte downloads we do
+//! not have (DESIGN.md §4). These generators produce RBF-SVM-learnable
+//! surrogates with the *same cost-determining shape*: n, d, class count,
+//! class imbalance, sparsity, and an adjustable Bayes-error floor (label
+//! flip noise) calibrated to the paper's reported test errors.
+//!
+//! Structure: each class owns `clusters` Gaussian clusters whose centers
+//! are interleaved in [0,1]^d (so the decision surface is nonlinear and a
+//! kernel method is actually required); label noise sets the error floor.
+//! Sparse datasets put clusters on sparse supports so the 90%-zeros
+//! property of kdd99-like data survives.
+//!
+//! Generation is deterministic per (spec, seed) regardless of thread
+//! count: each row derives its own RNG stream from the row index.
+
+use crate::pool;
+use crate::rng::Rng;
+
+use super::Dataset;
+
+/// Generator parameters (see module docs).
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub d: usize,
+    /// Number of classes (2 = binary with labels in {-1,+1}).
+    pub classes: usize,
+    /// Gaussian clusters per class.
+    pub clusters: usize,
+    /// Within-cluster standard deviation.
+    pub sigma: f32,
+    /// Label-flip probability (Bayes-error floor).
+    pub flip: f64,
+    /// Fraction of zero entries per cluster support (0 = dense).
+    pub sparsity: f64,
+    /// Positive-class fraction (binary only; 0.5 = balanced).
+    pub pos_frac: f64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        SynthSpec {
+            d: 16,
+            classes: 2,
+            clusters: 8,
+            sigma: 0.15,
+            flip: 0.0,
+            sparsity: 0.0,
+            pos_frac: 0.5,
+        }
+    }
+}
+
+/// A cluster center: dense values with an explicit support.
+struct Center {
+    values: Vec<f32>, // length d, zeros off-support
+    class: usize,
+}
+
+fn make_centers(spec: &SynthSpec, rng: &mut Rng) -> Vec<Center> {
+    let mut centers = Vec::with_capacity(spec.classes * spec.clusters);
+    let nz = ((spec.d as f64) * (1.0 - spec.sparsity)).ceil().max(1.0) as usize;
+    for class in 0..spec.classes {
+        for _ in 0..spec.clusters {
+            let mut values = vec![0.0f32; spec.d];
+            if spec.sparsity > 0.0 {
+                for j in rng.sample_indices(spec.d, nz) {
+                    values[j] = 0.3 + 0.7 * rng.uniform_f32();
+                }
+            } else {
+                for v in values.iter_mut() {
+                    *v = rng.uniform_f32();
+                }
+            }
+            centers.push(Center { values, class });
+        }
+    }
+    centers
+}
+
+/// Generate `n` samples. Binary specs return {-1,+1} labels; multiclass
+/// specs return class ids.
+pub fn generate(spec: &SynthSpec, n: usize, seed: u64, name: &str) -> Dataset {
+    assert!(spec.classes >= 2);
+    let mut rng = Rng::new(seed);
+    let centers = make_centers(spec, &mut rng);
+    let base = rng.next_u64();
+
+    let d = spec.d;
+    let mut x = vec![0.0f32; n * d];
+    let mut labels = vec![0usize; n];
+    {
+        let labels_ptr = crate::pool::SendPtr::new(labels.as_mut_ptr());
+        let centers_ref = &centers;
+        pool::parallel_chunks_mut(
+            pool::default_threads(),
+            &mut x,
+            d, // one row per chunk
+            |i, row| {
+                let mut r = Rng::new(base ^ (i as u64).wrapping_mul(0x9E37_79B9));
+                // class choice: imbalance for binary, uniform otherwise
+                let class = if spec.classes == 2 {
+                    usize::from(r.bernoulli(spec.pos_frac))
+                } else {
+                    r.below(spec.classes)
+                };
+                let k = r.below(spec.clusters);
+                let c = &centers_ref[class * spec.clusters + k];
+                for (j, v) in row.iter_mut().enumerate() {
+                    let cv = c.values[j];
+                    if cv == 0.0 && spec.sparsity > 0.0 {
+                        *v = 0.0; // stay on the sparse support
+                    } else {
+                        *v = (cv + spec.sigma * r.gaussian_f32()).clamp(0.0, 1.0);
+                    }
+                }
+                let mut lab = c.class;
+                if r.bernoulli(spec.flip) {
+                    // flip to a uniformly random *other* class
+                    lab = (lab + 1 + r.below(spec.classes - 1)) % spec.classes;
+                }
+                // SAFETY: row i written exactly once.
+                unsafe { *labels_ptr.get().add(i) = lab };
+            },
+        );
+    }
+
+    if spec.classes == 2 {
+        let y = labels
+            .into_iter()
+            .map(|c| if c == 1 { 1.0 } else { -1.0 })
+            .collect();
+        Dataset::new_binary(name, d, x, y)
+    } else {
+        Dataset::new_multiclass(name, d, x, labels)
+    }
+}
+
+/// Pick sigma so that gamma * E[within-cluster distance^2] ~ target,
+/// keeping the paper's published (C, gamma) in a regime where the RBF
+/// kernel resolves the cluster structure (DESIGN.md §4).
+pub fn sigma_for(gamma: f64, d: usize, sparsity: f64, target: f64) -> f32 {
+    let d_eff = (d as f64) * (1.0 - sparsity);
+    let s2 = target / (2.0 * gamma * d_eff.max(1.0));
+    (s2.sqrt() as f32).clamp(0.01, 0.25)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let spec = SynthSpec::default();
+        let a = generate(&spec, 200, 7, "a");
+        let b = generate(&spec, 200, 7, "b");
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = generate(&spec, 200, 8, "c");
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn features_in_unit_cube() {
+        let ds = generate(&SynthSpec::default(), 500, 1, "u");
+        assert!(ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn imbalance_respected() {
+        let spec = SynthSpec { pos_frac: 0.05, ..Default::default() };
+        let ds = generate(&spec, 20_000, 2, "i");
+        let pf = ds.positive_fraction();
+        assert!((pf - 0.05).abs() < 0.01, "pos frac {pf}");
+    }
+
+    #[test]
+    fn sparsity_respected() {
+        let spec = SynthSpec { d: 100, sparsity: 0.9, ..Default::default() };
+        let ds = generate(&spec, 2_000, 3, "s");
+        let sp = ds.sparsity();
+        assert!(sp > 0.85 && sp < 0.95, "sparsity {sp}");
+    }
+
+    #[test]
+    fn multiclass_labels_cover_classes() {
+        let spec = SynthSpec { classes: 10, ..Default::default() };
+        let ds = generate(&spec, 5_000, 4, "m");
+        assert!(ds.is_multiclass());
+        assert_eq!(ds.num_classes(), 10);
+        let mut seen = vec![false; 10];
+        for &c in &ds.class_ids {
+            seen[c] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn flip_sets_error_floor() {
+        // a 1-NN-on-centers classifier cannot beat the flip rate
+        let spec = SynthSpec { flip: 0.25, sigma: 0.02, clusters: 2, ..Default::default() };
+        let ds = generate(&spec, 10_000, 5, "f");
+        // measure: nearest center class vs observed label disagreement
+        let mut rng = Rng::new(5);
+        let centers = make_centers(&spec, &mut rng);
+        let mut dis = 0usize;
+        for i in 0..ds.n {
+            let row = ds.row(i);
+            let best = centers
+                .iter()
+                .min_by(|a, b| {
+                    crate::linalg::dist2(&a.values, row)
+                        .partial_cmp(&crate::linalg::dist2(&b.values, row))
+                        .unwrap()
+                })
+                .unwrap();
+            let lab = if best.class == 1 { 1.0 } else { -1.0 };
+            if lab != ds.y[i] {
+                dis += 1;
+            }
+        }
+        let rate = dis as f64 / ds.n as f64;
+        assert!((rate - 0.25).abs() < 0.03, "disagreement {rate}");
+    }
+
+    #[test]
+    fn sigma_for_reasonable() {
+        let s = sigma_for(0.05, 123, 0.0, 0.5);
+        assert!(s > 0.1 && s <= 0.25, "{s}");
+        let s2 = sigma_for(1.0, 900, 0.0, 0.5);
+        assert!(s2 < 0.05, "{s2}");
+    }
+}

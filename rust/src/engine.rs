@@ -1,0 +1,388 @@
+//! ComputeEngine — the paper's independent variable, as a type.
+//!
+//! Every solver expresses its heavy math as the five tile ops below. Who
+//! executes them is the *explicit vs implicit* axis of the study
+//! (DESIGN.md §2):
+//!
+//! * [`EngineKind::CpuSeq`] — scalar Rust loops, one thread. The paper's
+//!   single-core LibSVM baseline substrate.
+//! * [`EngineKind::CpuPar`] — the same loops hand-decomposed over our
+//!   scoped thread pool. The paper's *explicit* parallelization
+//!   (LibSVM+OpenMP, hand-tuned CUDA).
+//! * [`EngineKind::Xla`] — one call per op into an AOT-compiled XLA
+//!   executable (from the JAX/Pallas build path). The paper's *implicit*
+//!   parallelization: the algorithm is a few large dense ops and the
+//!   library owns the schedule (MKL / CUBLAS / Jacket).
+//!
+//! All three produce the same numbers (tested below), so Table-1 style
+//! comparisons measure the parallelization strategy, not the algorithm.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::linalg::{self, Matrix};
+use crate::pool;
+use crate::pool::SendPtr;
+use crate::runtime::XlaRuntime;
+
+/// Engine flavor (see module docs).
+#[derive(Clone)]
+pub enum EngineKind {
+    CpuSeq,
+    CpuPar { threads: usize },
+    Xla { runtime: Arc<XlaRuntime> },
+}
+
+/// Output of `tile_stats`.
+#[derive(Debug, Clone)]
+pub struct TileStats {
+    pub grad: Vec<f32>,
+    pub hess: Vec<f32>, // b x b row-major
+    pub loss: f32,
+    pub nerr: f32,
+}
+
+/// A compute engine bound to fixed tile/bucket shapes.
+#[derive(Clone)]
+pub struct Engine {
+    pub kind: EngineKind,
+}
+
+impl Engine {
+    pub fn cpu_seq() -> Engine {
+        Engine { kind: EngineKind::CpuSeq }
+    }
+
+    pub fn cpu_par(threads: usize) -> Engine {
+        Engine { kind: EngineKind::CpuPar { threads: threads.max(1) } }
+    }
+
+    pub fn xla(runtime: Arc<XlaRuntime>) -> Engine {
+        Engine { kind: EngineKind::Xla { runtime } }
+    }
+
+    pub fn name(&self) -> String {
+        match &self.kind {
+            EngineKind::CpuSeq => "cpu-seq".into(),
+            EngineKind::CpuPar { threads } => format!("cpu-par({threads})"),
+            EngineKind::Xla { .. } => "xla".into(),
+        }
+    }
+
+    pub fn is_xla(&self) -> bool {
+        matches!(self.kind, EngineKind::Xla { .. })
+    }
+
+    fn threads(&self) -> usize {
+        match &self.kind {
+            EngineKind::CpuSeq => 1,
+            EngineKind::CpuPar { threads } => *threads,
+            EngineKind::Xla { .. } => 1,
+        }
+    }
+
+    /// K[t, b] = exp(-gamma ||x_i - xb_j||^2).
+    pub fn rbf_block(
+        &self,
+        x: &[f32],
+        t: usize,
+        d: usize,
+        xb: &[f32],
+        b: usize,
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), t * d);
+        assert_eq!(xb.len(), b * d);
+        if let EngineKind::Xla { runtime } = &self.kind {
+            let entry = runtime.lookup("kernel_block", t, d, b, 0)?;
+            assert_eq!((entry.t, entry.d, entry.b), (t, d, b),
+                "xla engine requires exact bucket shapes (got t={t} d={d} b={b})");
+            let out = runtime.execute(
+                &entry,
+                &[
+                    (&[t as i64, d as i64], x),
+                    (&[b as i64, d as i64], xb),
+                    (&[1], &[gamma]),
+                ],
+            )?;
+            return Ok(out.into_iter().next().unwrap());
+        }
+        // CPU path: same expansion as the Pallas kernel, hand-threaded
+        // over rows.
+        let mut k = vec![0.0f32; t * b];
+        let bsq: Vec<f32> = (0..b).map(|j| linalg::dot(&xb[j * d..(j + 1) * d], &xb[j * d..(j + 1) * d])).collect();
+        let kptr = SendPtr::new(k.as_mut_ptr());
+        pool::parallel_for(self.threads(), t, 8, |i| {
+            let xi = &x[i * d..(i + 1) * d];
+            let xsq = linalg::dot(xi, xi);
+            // SAFETY: row i written by exactly one task.
+            let row = unsafe { std::slice::from_raw_parts_mut(kptr.get().add(i * b), b) };
+            for (j, slot) in row.iter_mut().enumerate() {
+                let cross = linalg::dot(xi, &xb[j * d..(j + 1) * d]);
+                let d2 = (xsq + bsq[j] - 2.0 * cross).max(0.0);
+                *slot = (-gamma * d2).exp();
+            }
+        });
+        Ok(k)
+    }
+
+    /// Fused squared-hinge statistics for one tile (see kernels/hinge.py).
+    pub fn tile_stats(
+        &self,
+        k: &[f32],
+        t: usize,
+        b: usize,
+        y: &[f32],
+        m: &[f32],
+        beta: &[f32],
+        c: f32,
+    ) -> Result<TileStats> {
+        assert_eq!(k.len(), t * b);
+        assert_eq!(y.len(), t);
+        assert_eq!(m.len(), t);
+        assert_eq!(beta.len(), b);
+        if let EngineKind::Xla { runtime } = &self.kind {
+            let entry = runtime.lookup("tile_stats", t, 0, b, 0)?;
+            assert_eq!((entry.t, entry.b), (t, b));
+            let out = runtime.execute(
+                &entry,
+                &[
+                    (&[t as i64, b as i64], k),
+                    (&[t as i64], y),
+                    (&[t as i64], m),
+                    (&[b as i64], beta),
+                    (&[1], &[c]),
+                ],
+            )?;
+            let mut it = out.into_iter();
+            let grad = it.next().unwrap();
+            let hess = it.next().unwrap();
+            let loss = it.next().unwrap()[0];
+            let nerr = it.next().unwrap()[0];
+            return Ok(TileStats { grad, hess, loss, nerr });
+        }
+        let threads = self.threads();
+        let km = Matrix { rows: t, cols: b, data: k.to_vec() };
+        let mut f = vec![0.0f32; t];
+        linalg::gemv(threads, &km, beta, &mut f);
+        let mut w = vec![0.0f32; t]; // a_i y_i h_i
+        let mut active = vec![0.0f32; t];
+        let mut loss = 0.0f64;
+        let mut nerr = 0.0f64;
+        for i in 0..t {
+            let hinge = (1.0 - y[i] * f[i]).max(0.0);
+            let a = if hinge > 0.0 { m[i] } else { 0.0 };
+            active[i] = a;
+            w[i] = a * y[i] * hinge;
+            loss += (c * a * hinge * hinge) as f64;
+            if y[i] * f[i] <= 0.0 {
+                nerr += m[i] as f64;
+            }
+        }
+        let mut grad = vec![0.0f32; b];
+        linalg::gemv_t(threads, &km, &w, &mut grad);
+        for g in grad.iter_mut() {
+            *g *= -2.0 * c;
+        }
+        let mut hess = Matrix::zeros(b, b);
+        linalg::syrk_masked(threads, &km, &active, &mut hess);
+        for h in hess.data.iter_mut() {
+            *h *= 2.0 * c;
+        }
+        Ok(TileStats { grad, hess: hess.data, loss: loss as f32, nerr: nerr as f32 })
+    }
+
+    /// Masked damped CG solve (see model.py cg_solve for the convention).
+    pub fn cg_solve(&self, h: &[f32], b: usize, g: &[f32], bmask: &[f32], reg: f32) -> Result<Vec<f32>> {
+        assert_eq!(h.len(), b * b);
+        assert_eq!(g.len(), b);
+        assert_eq!(bmask.len(), b);
+        if let EngineKind::Xla { runtime } = &self.kind {
+            let entry = runtime.lookup("cg_solve", 0, 0, b, 0)?;
+            assert_eq!(entry.b, b);
+            let out = runtime.execute(
+                &entry,
+                &[
+                    (&[b as i64, b as i64], h),
+                    (&[b as i64], g),
+                    (&[b as i64], bmask),
+                    (&[1], &[reg]),
+                ],
+            )?;
+            return Ok(out.into_iter().next().unwrap());
+        }
+        let hm = Matrix { rows: b, cols: b, data: h.to_vec() };
+        // mirror the artifact: fixed cap 96, residual tolerance 1e-10
+        let r = linalg::cg::solve_masked(self.threads(), &hm, g, bmask, reg, 96, 1e-10);
+        Ok(r.x)
+    }
+
+    /// Candidate-scoring accumulators for one tile.
+    pub fn score_tile(&self, kc: &[f32], t: usize, s: usize, r: &[f32], a: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        assert_eq!(kc.len(), t * s);
+        assert_eq!(r.len(), t);
+        assert_eq!(a.len(), t);
+        if let EngineKind::Xla { runtime } = &self.kind {
+            let entry = runtime.lookup("score_tile", t, 0, 0, s)?;
+            assert_eq!((entry.t, entry.s), (t, s));
+            let out = runtime.execute(
+                &entry,
+                &[
+                    (&[t as i64, s as i64], kc),
+                    (&[t as i64], r),
+                    (&[t as i64], a),
+                ],
+            )?;
+            let mut it = out.into_iter();
+            return Ok((it.next().unwrap(), it.next().unwrap()));
+        }
+        let threads = self.threads();
+        let km = Matrix { rows: t, cols: s, data: kc.to_vec() };
+        let mut gc = vec![0.0f32; s];
+        linalg::gemv_t(threads, &km, r, &mut gc);
+        let k2 = Matrix {
+            rows: t,
+            cols: s,
+            data: kc.iter().map(|v| v * v).collect(),
+        };
+        let mut hc = vec![0.0f32; s];
+        linalg::gemv_t(threads, &k2, a, &mut hc);
+        Ok((gc, hc))
+    }
+
+    /// Margins f[t] = K beta.
+    pub fn predict_block(&self, k: &[f32], t: usize, b: usize, beta: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(k.len(), t * b);
+        assert_eq!(beta.len(), b);
+        if let EngineKind::Xla { runtime } = &self.kind {
+            let entry = runtime.lookup("predict_block", t, 0, b, 0)?;
+            assert_eq!((entry.t, entry.b), (t, b));
+            let out = runtime.execute(
+                &entry,
+                &[(&[t as i64, b as i64], k), (&[b as i64], beta)],
+            )?;
+            return Ok(out.into_iter().next().unwrap());
+        }
+        let km = Matrix { rows: t, cols: b, data: k.to_vec() };
+        let mut f = vec![0.0f32; t];
+        linalg::gemv(self.threads(), &km, beta, &mut f);
+        Ok(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_f32()).collect()
+    }
+
+    fn engines() -> Vec<Engine> {
+        let mut v = vec![Engine::cpu_seq(), Engine::cpu_par(4)];
+        if let Ok(rt) = XlaRuntime::load(&crate::runtime::default_artifacts_dir()) {
+            v.push(Engine::xla(Arc::new(rt)));
+        } else {
+            eprintln!("note: xla engine skipped (no artifacts)");
+        }
+        v
+    }
+
+    #[test]
+    fn rbf_block_agrees_across_engines() {
+        let mut rng = Rng::new(1);
+        let (t, d, b) = (1024, 64, 64); // a real bucket so xla can join
+        let x = rand_vec(&mut rng, t * d);
+        let xb = rand_vec(&mut rng, b * d);
+        let base = Engine::cpu_seq().rbf_block(&x, t, d, &xb, b, 0.4).unwrap();
+        for e in engines() {
+            let k = e.rbf_block(&x, t, d, &xb, b, 0.4).unwrap();
+            let max: f32 = k
+                .iter()
+                .zip(&base)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(max < 1e-4, "{} differs by {max}", e.name());
+        }
+    }
+
+    #[test]
+    fn tile_stats_agree_across_engines() {
+        let mut rng = Rng::new(2);
+        let (t, b) = (1024, 64);
+        let k = rand_vec(&mut rng, t * b);
+        let y: Vec<f32> = (0..t).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let m: Vec<f32> = (0..t).map(|_| if rng.bernoulli(0.8) { 1.0 } else { 0.0 }).collect();
+        let beta: Vec<f32> = (0..b).map(|_| rng.gaussian_f32() * 0.1).collect();
+        let base = Engine::cpu_seq().tile_stats(&k, t, b, &y, &m, &beta, 2.0).unwrap();
+        for e in engines() {
+            let s = e.tile_stats(&k, t, b, &y, &m, &beta, 2.0).unwrap();
+            assert!((s.loss - base.loss).abs() / base.loss.max(1.0) < 1e-3,
+                "{} loss {} vs {}", e.name(), s.loss, base.loss);
+            assert_eq!(s.nerr, base.nerr, "{}", e.name());
+            let gmax: f32 = s.grad.iter().zip(&base.grad).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+            assert!(gmax < 2e-2, "{} grad diff {gmax}", e.name());
+            let hmax: f32 = s.hess.iter().zip(&base.hess).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+            assert!(hmax < 0.5, "{} hess diff {hmax}", e.name());
+        }
+    }
+
+    #[test]
+    fn cg_solve_agrees_across_engines() {
+        let mut rng = Rng::new(3);
+        let b = 64;
+        // SPD: A A^T / b + I
+        let a = rand_vec(&mut rng, b * b);
+        let am = Matrix { rows: b, cols: b, data: a };
+        let mut h = Matrix::zeros(b, b);
+        linalg::gemm_nt(1, &am, &am, &mut h);
+        for i in 0..b {
+            h.set(i, i, h.at(i, i) + b as f32);
+        }
+        let g: Vec<f32> = (0..b).map(|_| rng.gaussian_f32()).collect();
+        let mut bmask = vec![1.0f32; b];
+        for i in 50..b {
+            bmask[i] = 0.0;
+        }
+        let base = Engine::cpu_seq().cg_solve(&h.data, b, &g, &bmask, 1e-3).unwrap();
+        for e in engines() {
+            let x = e.cg_solve(&h.data, b, &g, &bmask, 1e-3).unwrap();
+            for i in 0..b {
+                assert!((x[i] - base[i]).abs() < 1e-3,
+                    "{} x[{i}] = {} vs {}", e.name(), x[i], base[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn score_and_predict_agree_across_engines() {
+        let mut rng = Rng::new(4);
+        let (t, s, b) = (1024, 64, 128);
+        let kc = rand_vec(&mut rng, t * s);
+        let r: Vec<f32> = (0..t).map(|_| rng.gaussian_f32()).collect();
+        let a: Vec<f32> = (0..t).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        let k = rand_vec(&mut rng, t * b);
+        let beta: Vec<f32> = (0..b).map(|_| rng.gaussian_f32()).collect();
+        let (gc0, hc0) = Engine::cpu_seq().score_tile(&kc, t, s, &r, &a).unwrap();
+        let f0 = Engine::cpu_seq().predict_block(&k, t, b, &beta).unwrap();
+        for e in engines() {
+            let (gc, hc) = e.score_tile(&kc, t, s, &r, &a).unwrap();
+            let (dg, dh): (f32, f32) = (
+                gc.iter().zip(&gc0).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max),
+                hc.iter().zip(&hc0).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max),
+            );
+            assert!(dg < 1e-2 && dh < 1e-2, "{}: {dg} {dh}", e.name());
+            let f = e.predict_block(&k, t, b, &beta).unwrap();
+            let df: f32 = f.iter().zip(&f0).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+            assert!(df < 1e-2, "{}: {df}", e.name());
+        }
+    }
+
+    #[test]
+    fn engine_names() {
+        assert_eq!(Engine::cpu_seq().name(), "cpu-seq");
+        assert_eq!(Engine::cpu_par(12).name(), "cpu-par(12)");
+    }
+}

@@ -1,0 +1,319 @@
+//! Experiment drivers: Table 1 and the prose-claim ablation figures
+//! (DESIGN.md §6). Shared by the CLI (`wu-svm bench ...`) and the
+//! `cargo bench` targets.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::{run, EngineChoice, RunRecord, Solver, TrainJob};
+use crate::data::paper;
+use crate::pool;
+use crate::report::{fill_speedups, render_sweep, render_table, Row};
+
+/// Default bench scale per dataset: sized so the single-core SMO baseline
+/// finishes in minutes, not hours (the *relative* ordering is the paper's
+/// claim; see EXPERIMENTS.md for the scale used in the recorded run).
+pub fn default_scale(key: &str) -> f64 {
+    match key {
+        "adult" => 0.16,     // ~5.0k train
+        "covertype" => 0.05, // ~5.0k
+        "kdd99" => 0.02,     // ~3.0k (C = 1e3 -> many bounded SVs)
+        "mitfaces" => 0.04,  // ~3.2k
+        "fd" => 0.06,        // ~3.0k (d = 900)
+        "epsilon" => 0.075,  // ~3.0k (d = 2000)
+        "mnist8m" => 0.05,   // ~3.0k over 45 pairs
+        _ => 0.05,
+    }
+}
+
+/// The six Table-1 method configurations (paper row order).
+pub fn table1_methods(mc_threads: usize) -> Vec<(&'static str, &'static str, Solver, EngineChoice)> {
+    vec![
+        ("SC", "LibSVM", Solver::Smo, EngineChoice::CpuSeq),
+        ("MC", "LibSVM", Solver::Smo, EngineChoice::CpuPar(mc_threads)),
+        ("MC", "SP-SVM", Solver::SpSvm, EngineChoice::CpuPar(mc_threads)),
+        ("XLA", "GPU-SVM", Solver::Smo, EngineChoice::Xla),
+        ("XLA", "GTSVM", Solver::Wss, EngineChoice::Xla),
+        ("XLA", "SP-SVM", Solver::SpSvm, EngineChoice::Xla),
+    ]
+}
+
+fn record_to_row(arch: &str, method: &str, rec: &RunRecord) -> Row {
+    Row {
+        dataset: rec.job.dataset.clone(),
+        arch: arch.to_string(),
+        method: method.to_string(),
+        metric_name: rec.metric_name.clone(),
+        test_metric: rec.test_metric,
+        train_time: rec.train_time,
+        speedup: 1.0,
+        notes: format!(
+            "n={} m={}",
+            rec.n_train, rec.expansion_size
+        ),
+    }
+}
+
+/// Run one Table-1 dataset row across methods. `methods_filter` limits to
+/// matching method names (empty = all). Failures become "—" rows, like the
+/// paper's dashes.
+pub fn run_table1_dataset(
+    key: &str,
+    scale: f64,
+    max_basis: usize,
+    methods_filter: &[String],
+) -> Result<Vec<Row>> {
+    let threads = pool::default_threads();
+    let mut rows = Vec::new();
+    for (arch, method, solver, engine) in table1_methods(threads) {
+        if !methods_filter.is_empty()
+            && !methods_filter.iter().any(|m| m.eq_ignore_ascii_case(method))
+        {
+            continue;
+        }
+        // mnist8m (45 pair models) is too slow for the accelerator SMO
+        // family at any useful scale on this box; the paper's Table 1
+        // likewise has "—" for every GPU method on MNIST8M. Keep SC/MC
+        // LibSVM (the baseline) and SP-SVM.
+        if key == "mnist8m"
+            && (matches!(solver, Solver::Wss)
+                || (matches!(solver, Solver::Smo) && engine == EngineChoice::Xla))
+        {
+            rows.push(dash_row(key, arch, method, "skipped: 45 OvO pairs on accel (paper: —)"));
+            continue;
+        }
+        let job = TrainJob {
+            dataset: key.to_string(),
+            scale,
+            solver,
+            engine,
+            max_basis,
+            ..Default::default()
+        };
+        eprintln!("[table1] {key} {arch}/{method} ...");
+        match run(&job) {
+            Ok(rec) => rows.push(record_to_row(arch, method, &rec)),
+            Err(e) => {
+                eprintln!("[table1] {key} {arch}/{method} failed: {e:#}");
+                rows.push(dash_row(key, arch, method, &format!("{e}")));
+            }
+        }
+    }
+    fill_speedups(&mut rows, "LibSVM", "SC");
+    Ok(rows)
+}
+
+fn dash_row(ds: &str, arch: &str, method: &str, note: &str) -> Row {
+    Row {
+        dataset: ds.into(),
+        arch: arch.into(),
+        method: method.into(),
+        metric_name: "-".into(),
+        test_metric: f64::NAN,
+        train_time: Duration::ZERO,
+        speedup: f64::NAN,
+        notes: note.chars().take(60).collect(),
+    }
+}
+
+/// F.scaling — speedup vs thread count for SMO and SP-SVM (paper §5:
+/// "5-8x on twelve cores"; SP-SVM speedup grows with library occupancy).
+pub fn run_scaling(dataset: &str, scale: f64, threads_list: &[usize]) -> Result<String> {
+    let mut points = Vec::new();
+    let mut base = (0.0f64, 0.0f64);
+    for (i, &t) in threads_list.iter().enumerate() {
+        let smo_job = TrainJob {
+            dataset: dataset.into(),
+            scale,
+            solver: Solver::Smo,
+            engine: if t == 1 { EngineChoice::CpuSeq } else { EngineChoice::CpuPar(t) },
+            ..Default::default()
+        };
+        let sp_job = TrainJob {
+            dataset: dataset.into(),
+            scale,
+            solver: Solver::SpSvm,
+            engine: if t == 1 { EngineChoice::CpuSeq } else { EngineChoice::CpuPar(t) },
+            max_basis: 255,
+            ..Default::default()
+        };
+        let rs = run(&smo_job)?;
+        let rp = run(&sp_job)?;
+        let ts = rs.train_time.as_secs_f64();
+        let tp = rp.train_time.as_secs_f64();
+        if i == 0 {
+            base = (ts, tp);
+        }
+        points.push((t as f64, vec![ts, base.0 / ts, tp, base.1 / tp]));
+    }
+    Ok(render_sweep(
+        &format!("F.scaling on {dataset} (scale {scale})"),
+        "threads",
+        &["smo_time_s", "smo_speedup", "spsvm_time_s", "spsvm_speedup"],
+        &points,
+    ))
+}
+
+/// F.basis — error/time vs basis capacity (SP-SVM's accuracy trade-off).
+pub fn run_basis_sweep(dataset: &str, scale: f64, sizes: &[usize]) -> Result<String> {
+    let mut points = Vec::new();
+    for &b in sizes {
+        let job = TrainJob {
+            dataset: dataset.into(),
+            scale,
+            solver: Solver::SpSvm,
+            engine: EngineChoice::CpuPar(pool::default_threads()),
+            max_basis: b,
+            ..Default::default()
+        };
+        let rec = run(&job)?;
+        points.push((
+            b as f64,
+            vec![rec.test_metric, rec.train_time.as_secs_f64(), rec.expansion_size as f64],
+        ));
+    }
+    Ok(render_sweep(
+        &format!("F.basis on {dataset} (scale {scale})"),
+        "max_basis",
+        &["test_metric", "time_s", "used"],
+        &points,
+    ))
+}
+
+/// F.wss — working-set-size sweep (GTSVM's S = 16 vs SMO's S = 2).
+pub fn run_wss_sweep(dataset: &str, scale: f64, sizes: &[usize]) -> Result<String> {
+    let mut points = Vec::new();
+    for &s in sizes {
+        let job = TrainJob {
+            dataset: dataset.into(),
+            scale,
+            solver: Solver::Wss,
+            engine: EngineChoice::Xla,
+            wss_size: s,
+            ..Default::default()
+        };
+        let rec = run(&job)?;
+        points.push((s as f64, vec![rec.test_metric, rec.train_time.as_secs_f64()]));
+    }
+    Ok(render_sweep(
+        &format!("F.wss on {dataset} (scale {scale}, xla engine)"),
+        "wss_size",
+        &["test_metric", "time_s"],
+        &points,
+    ))
+}
+
+/// F.epsstop — the paper's epsilon = 5e-6 stopping-rule sweep.
+pub fn run_eps_sweep(dataset: &str, scale: f64, epss: &[f64]) -> Result<String> {
+    let mut points = Vec::new();
+    for &e in epss {
+        let job = TrainJob {
+            dataset: dataset.into(),
+            scale,
+            solver: Solver::SpSvm,
+            engine: EngineChoice::CpuPar(pool::default_threads()),
+            eps: Some(e),
+            max_basis: 511,
+            ..Default::default()
+        };
+        let rec = run(&job)?;
+        points.push((
+            e,
+            vec![rec.test_metric, rec.train_time.as_secs_f64(), rec.expansion_size as f64],
+        ));
+    }
+    Ok(render_sweep(
+        &format!("F.epsstop on {dataset} (scale {scale})"),
+        "eps",
+        &["test_metric", "time_s", "basis"],
+        &points,
+    ))
+}
+
+/// F.memory — the memory wall for exact implicit methods: bytes required
+/// vs n for MU (2 n^2), full primal (n^2) and SP-SVM (|J| n), plus
+/// whether each method runs under a 2 GB cap.
+pub fn run_memory_table(ns: &[usize], basis: usize) -> String {
+    let cap: usize = 2 << 30;
+    let mut points = Vec::new();
+    for &n in ns {
+        let mu = 2 * n * n * 4;
+        let primal = n * n * 4;
+        let spsvm = n * (basis + 1) * 4;
+        points.push((
+            n as f64,
+            vec![
+                mu as f64 / 1e9,
+                if mu <= cap { 1.0 } else { 0.0 },
+                primal as f64 / 1e9,
+                if primal <= cap { 1.0 } else { 0.0 },
+                spsvm as f64 / 1e9,
+                if spsvm <= cap { 1.0 } else { 0.0 },
+            ],
+        ));
+    }
+    render_sweep(
+        &format!("F.memory (2 GB cap, |J| = {basis})"),
+        "n",
+        &["mu_gb", "mu_ok", "primal_gb", "primal_ok", "spsvm_gb", "spsvm_ok"],
+        &points,
+    )
+}
+
+/// Render Table-1 rows with the paper's reference numbers alongside.
+pub fn render_with_reference(rows: &[Row]) -> String {
+    let mut out = render_table(rows);
+    out.push_str("\npaper reference (Table 1):\n");
+    for spec in paper::specs() {
+        out.push_str(&format!(
+            "  {:<10} paper LibSVM err {:.1}%  (C = {}, gamma = {}, paper n = {})\n",
+            spec.key,
+            spec.paper_error * 100.0,
+            spec.c,
+            spec.gamma,
+            spec.paper_n
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_scales_are_sane() {
+        for s in paper::specs() {
+            let sc = default_scale(s.key);
+            assert!(sc > 0.0 && sc <= 1.0);
+            let n = (s.n_train as f64 * sc) as usize;
+            assert!(n >= 500 && n <= 10_000, "{}: n = {n}", s.key);
+        }
+    }
+
+    #[test]
+    fn methods_cover_table1() {
+        let m = table1_methods(4);
+        assert_eq!(m.len(), 6);
+        assert_eq!(m[0].0, "SC");
+        assert!(m.iter().filter(|x| x.1 == "SP-SVM").count() == 2);
+    }
+
+    #[test]
+    fn memory_table_shows_the_wall() {
+        let t = run_memory_table(&[10_000, 100_000, 1_000_000], 511);
+        assert!(t.contains("mu_gb"));
+        // at n = 1M, MU needs 8 TB -> not ok; SP-SVM a few GB -> ok
+        let last = t.lines().last().unwrap();
+        assert!(last.contains("0.00000")); // some method fails the cap
+    }
+
+    #[test]
+    fn table1_single_method_small() {
+        let rows =
+            run_table1_dataset("adult", 0.01, 63, &["SP-SVM".to_string()]).unwrap();
+        assert_eq!(rows.len(), 2); // MC + XLA-or-dash
+        assert!(rows.iter().all(|r| r.method == "SP-SVM"));
+    }
+}

@@ -1,0 +1,154 @@
+//! LRU kernel-row cache (LibSVM-style).
+//!
+//! Dual-decomposition solvers touch a skewed subset of kernel rows over
+//! and over (working-set variables recur); LibSVM's cache is the reason it
+//! is usable at all at medium scale. Bounded by bytes, evicts least
+//! recently used whole rows.
+
+use std::collections::HashMap;
+
+/// Byte-bounded LRU cache of f32 kernel rows.
+pub struct RowCache {
+    capacity_rows: usize,
+    row_len: usize,
+    map: HashMap<usize, usize>, // row index -> slot
+    slots: Vec<Vec<f32>>,
+    slot_owner: Vec<Option<usize>>,
+    // LRU via monotone ticks (simple and fast enough; slot count is small)
+    ticks: Vec<u64>,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl RowCache {
+    /// `max_bytes` of row storage for rows of `row_len` f32s.
+    pub fn new(max_bytes: usize, row_len: usize) -> Self {
+        let capacity_rows = (max_bytes / (row_len.max(1) * 4)).max(2);
+        RowCache {
+            capacity_rows,
+            row_len,
+            map: HashMap::new(),
+            slots: Vec::new(),
+            slot_owner: Vec::new(),
+            ticks: Vec::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn capacity_rows(&self) -> usize {
+        self.capacity_rows
+    }
+
+    /// Fetch row `i`, computing it with `fill` on a miss.
+    pub fn get_or_compute<F>(&mut self, i: usize, fill: F) -> &[f32]
+    where
+        F: FnOnce(&mut [f32]),
+    {
+        self.clock += 1;
+        if let Some(&slot) = self.map.get(&i) {
+            self.hits += 1;
+            self.ticks[slot] = self.clock;
+            return &self.slots[slot];
+        }
+        self.misses += 1;
+        let slot = if self.slots.len() < self.capacity_rows {
+            self.slots.push(vec![0.0; self.row_len]);
+            self.slot_owner.push(None);
+            self.ticks.push(0);
+            self.slots.len() - 1
+        } else {
+            // evict LRU
+            let (slot, _) = self
+                .ticks
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &t)| t)
+                .unwrap();
+            if let Some(old) = self.slot_owner[slot] {
+                self.map.remove(&old);
+            }
+            slot
+        };
+        fill(&mut self.slots[slot]);
+        self.map.insert(i, slot);
+        self.slot_owner[slot] = Some(i);
+        self.ticks[slot] = self.clock;
+        &self.slots[slot]
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        self.map.contains_key(&i)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill_const(v: f32) -> impl FnOnce(&mut [f32]) {
+        move |row| row.iter_mut().for_each(|x| *x = v)
+    }
+
+    #[test]
+    fn computes_on_miss_and_caches() {
+        let mut c = RowCache::new(1024, 4);
+        let r = c.get_or_compute(5, fill_const(5.0)).to_vec();
+        assert_eq!(r, vec![5.0; 4]);
+        // second access must not recompute
+        let r2 = c.get_or_compute(5, |_| panic!("recomputed")).to_vec();
+        assert_eq!(r2, r);
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = RowCache::new(2 * 4 * 4, 4); // 2 rows
+        c.get_or_compute(1, fill_const(1.0));
+        c.get_or_compute(2, fill_const(2.0));
+        c.get_or_compute(1, |_| panic!()); // touch 1 -> 2 is LRU
+        c.get_or_compute(3, fill_const(3.0)); // evicts 2
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+        let r = c.get_or_compute(2, fill_const(2.5)).to_vec();
+        assert_eq!(r, vec![2.5; 4]);
+    }
+
+    #[test]
+    fn capacity_at_least_two_rows() {
+        let c = RowCache::new(1, 1000);
+        assert!(c.capacity_rows() >= 2);
+    }
+
+    #[test]
+    fn hit_rate_tracks() {
+        let mut c = RowCache::new(4096, 8);
+        for _ in 0..4 {
+            c.get_or_compute(0, fill_const(0.0));
+        }
+        assert!((c.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn many_rows_stress() {
+        let mut c = RowCache::new(16 * 4 * 10, 10); // 16 rows
+        for round in 0..3 {
+            for i in 0..100 {
+                let v = i as f32;
+                let row = c.get_or_compute(i, fill_const(v)).to_vec();
+                assert_eq!(row[0], v, "round {round} row {i}");
+            }
+        }
+        assert!(c.misses >= 100);
+    }
+}

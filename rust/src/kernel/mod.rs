@@ -1,0 +1,211 @@
+//! Kernel functions and CPU kernel-matrix computation.
+//!
+//! The explicit engines compute kernel rows/blocks here (scalar loops,
+//! optionally hand-threaded — the paper's LibSVM / LibSVM+OpenMP path);
+//! the implicit engine computes the same blocks inside XLA artifacts.
+
+pub mod cache;
+
+use crate::data::Dataset;
+use crate::linalg::{dist2, dot};
+use crate::pool;
+use crate::pool::SendPtr;
+
+/// Kernel function family. The paper evaluates RBF throughout; linear and
+/// polynomial are provided for completeness of the public API.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelKind {
+    Rbf { gamma: f32 },
+    Linear,
+    Poly { degree: i32, gamma: f32, coef0: f32 },
+}
+
+impl KernelKind {
+    /// k(x, z).
+    #[inline]
+    pub fn eval(&self, x: &[f32], z: &[f32]) -> f32 {
+        match *self {
+            KernelKind::Rbf { gamma } => (-gamma * dist2(x, z)).exp(),
+            KernelKind::Linear => dot(x, z),
+            KernelKind::Poly { degree, gamma, coef0 } => {
+                (gamma * dot(x, z) + coef0).powi(degree)
+            }
+        }
+    }
+
+    /// k(x, x) without computing a distance (1 for RBF).
+    #[inline]
+    pub fn self_eval(&self, x: &[f32]) -> f32 {
+        match *self {
+            KernelKind::Rbf { .. } => 1.0,
+            _ => self.eval(x, x),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Rbf { .. } => "rbf",
+            KernelKind::Linear => "linear",
+            KernelKind::Poly { .. } => "poly",
+        }
+    }
+}
+
+/// Compute one kernel row k(x_i, .) against every row of `ds` into `out`.
+/// `threads = 1` is the LibSVM single-core path; more threads is the
+/// LibSVM+OpenMP path (the paper's most basic speedup).
+pub fn kernel_row(kind: &KernelKind, ds: &Dataset, i: usize, threads: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), ds.n);
+    let xi: Vec<f32> = ds.row(i).to_vec();
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    pool::parallel_for(threads, ds.n, 256, |j| {
+        // SAFETY: each j written once.
+        unsafe { *out_ptr.get().add(j) = kind.eval(&xi, ds.row(j)) };
+    });
+}
+
+/// Dense kernel block K[rows x cols] for row indices `ri` against column
+/// indices `ci` (row-major into `out`).
+pub fn kernel_block(
+    kind: &KernelKind,
+    ds: &Dataset,
+    ri: &[usize],
+    ci: &[usize],
+    threads: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), ri.len() * ci.len());
+    let w = ci.len();
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    pool::parallel_for(threads, ri.len(), 4, |r| {
+        let xi = ds.row(ri[r]);
+        // SAFETY: row r written by exactly one task.
+        let row = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r * w), w) };
+        for (slot, &c) in row.iter_mut().zip(ci) {
+            *slot = kind.eval(xi, ds.row(c));
+        }
+    });
+}
+
+/// Full n x n kernel matrix (full-kernel baselines only; refuses above a
+/// byte cap — the paper's point about MU/primal memory infeasibility).
+pub fn full_kernel(
+    kind: &KernelKind,
+    ds: &Dataset,
+    threads: usize,
+    max_bytes: usize,
+) -> Result<crate::linalg::Matrix, String> {
+    let need = ds.n * ds.n * 4;
+    if need > max_bytes {
+        return Err(format!(
+            "full kernel needs {:.1} GB > cap {:.1} GB (n = {}); \
+             this is the memory wall the paper describes for the exact \
+             implicit methods",
+            need as f64 / 1e9,
+            max_bytes as f64 / 1e9,
+            ds.n
+        ));
+    }
+    let mut k = crate::linalg::Matrix::zeros(ds.n, ds.n);
+    let idx: Vec<usize> = (0..ds.n).collect();
+    kernel_block(kind, ds, &idx, &idx, threads, &mut k.data);
+    Ok(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.uniform_f32()).collect();
+        let y: Vec<f32> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        Dataset::new_binary("t", d, x, y)
+    }
+
+    #[test]
+    fn rbf_self_is_one() {
+        let k = KernelKind::Rbf { gamma: 0.7 };
+        let x = [0.3f32, 0.9, 0.1];
+        assert!((k.eval(&x, &x) - 1.0).abs() < 1e-6);
+        assert_eq!(k.self_eval(&x), 1.0);
+    }
+
+    #[test]
+    fn rbf_decreases_with_distance() {
+        let k = KernelKind::Rbf { gamma: 1.0 };
+        let a = [0.0f32, 0.0];
+        assert!(k.eval(&a, &[0.1, 0.0]) > k.eval(&a, &[0.5, 0.0]));
+    }
+
+    #[test]
+    fn linear_matches_dot() {
+        let k = KernelKind::Linear;
+        assert!((k.eval(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn poly_matches_formula() {
+        let k = KernelKind::Poly { degree: 2, gamma: 1.0, coef0: 1.0 };
+        // (1*2 + 1)^2 = 9
+        assert!((k.eval(&[1.0], &[2.0]) - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kernel_row_matches_eval() {
+        let ds = dataset(50, 7, 1);
+        let kind = KernelKind::Rbf { gamma: 0.5 };
+        let mut row = vec![0.0; 50];
+        kernel_row(&kind, &ds, 3, 4, &mut row);
+        for j in 0..50 {
+            assert!((row[j] - kind.eval(ds.row(3), ds.row(j))).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kernel_block_matches_eval() {
+        let ds = dataset(30, 5, 2);
+        let kind = KernelKind::Rbf { gamma: 2.0 };
+        let ri = [0, 5, 7];
+        let ci = [1, 2, 3, 4];
+        let mut out = vec![0.0; 12];
+        kernel_block(&kind, &ds, &ri, &ci, 2, &mut out);
+        for (r, &i) in ri.iter().enumerate() {
+            for (c, &j) in ci.iter().enumerate() {
+                assert!((out[r * 4 + c] - kind.eval(ds.row(i), ds.row(j))).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn full_kernel_symmetric_psd_diag() {
+        let ds = dataset(40, 4, 3);
+        let kind = KernelKind::Rbf { gamma: 1.0 };
+        let k = full_kernel(&kind, &ds, 2, usize::MAX).unwrap();
+        for i in 0..40 {
+            assert!((k.at(i, i) - 1.0).abs() < 1e-6);
+            for j in 0..40 {
+                assert!((k.at(i, j) - k.at(j, i)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn full_kernel_memory_cap_enforced() {
+        let ds = dataset(100, 2, 4);
+        let err = full_kernel(&KernelKind::Linear, &ds, 1, 1000).unwrap_err();
+        assert!(err.contains("memory wall"));
+    }
+
+    #[test]
+    fn threaded_row_matches_sequential() {
+        let ds = dataset(300, 6, 5);
+        let kind = KernelKind::Rbf { gamma: 0.3 };
+        let mut r1 = vec![0.0; 300];
+        let mut r8 = vec![0.0; 300];
+        kernel_row(&kind, &ds, 17, 1, &mut r1);
+        kernel_row(&kind, &ds, 17, 8, &mut r8);
+        assert_eq!(r1, r8);
+    }
+}

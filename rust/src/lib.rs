@@ -1,0 +1,34 @@
+//! # wu-svm — Parallel Support Vector Machines in Practice
+//!
+//! A from-scratch reproduction of Tyree et al. (2014): kernel-SVM training
+//! parallelized *explicitly* (hand-threaded SMO-family solvers) and
+//! *implicitly* (the optimization reformulated as a few large dense
+//! linear-algebra calls, AOT-compiled from JAX/Pallas to XLA and executed
+//! through PJRT from this Rust coordinator).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! Table-1 reproduction.
+//!
+//! Layering (Python never runs at train/serve time):
+//! * L1 — Pallas kernels (`python/compile/kernels/`): RBF block, fused
+//!   squared-hinge statistics.
+//! * L2 — JAX graphs (`python/compile/model.py`): the five tile ops,
+//!   lowered to HLO text artifacts by `make artifacts`.
+//! * L3 — this crate: datasets, solvers, engines, coordinator, CLI.
+
+pub mod bench_util;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod experiments;
+pub mod kernel;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod multiclass;
+pub mod pool;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod solvers;

@@ -1,0 +1,171 @@
+//! Conjugate-gradient SPD solver (CPU counterpart of the `cg_solve`
+//! artifact; used by the CpuSeq/CpuPar engines and the primal baseline).
+
+use super::{dot, gemv, Matrix};
+
+/// Result of a CG solve.
+#[derive(Debug, Clone)]
+pub struct CgResult {
+    pub x: Vec<f32>,
+    pub iters: usize,
+    pub residual: f32,
+}
+
+/// Solve (M (H + reg I) M + (I-M)) x = M g by conjugate gradient, where
+/// M = diag(mask). Mirrors the masked-system convention of the XLA
+/// `cg_solve` artifact exactly (model.py) so engines are interchangeable.
+pub fn solve_masked(
+    threads: usize,
+    h: &Matrix,
+    g: &[f32],
+    mask: &[f32],
+    reg: f32,
+    max_iters: usize,
+    tol: f32,
+) -> CgResult {
+    let n = h.rows;
+    assert_eq!(h.cols, n);
+    assert_eq!(g.len(), n);
+    assert_eq!(mask.len(), n);
+
+    let apply = |v: &[f32], out: &mut Vec<f32>| {
+        // out = (M (H + reg I) M + (I-M)) v
+        let mv: Vec<f32> = v.iter().zip(mask).map(|(a, m)| a * m).collect();
+        gemv(threads, h, &mv, out);
+        for i in 0..n {
+            out[i] = mask[i] * (out[i] + reg * mv[i]) + (1.0 - mask[i]) * v[i];
+        }
+    };
+
+    let b: Vec<f32> = g.iter().zip(mask).map(|(a, m)| a * m).collect();
+    let mut x = vec![0.0f32; n];
+    let mut r = b.clone();
+    let mut p = b.clone();
+    let mut rs = dot(&r, &r);
+    let mut ap = vec![0.0f32; n];
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        if rs <= tol {
+            break;
+        }
+        iters += 1;
+        apply(&p, &mut ap);
+        let denom = dot(&p, &ap).max(1e-30);
+        let alpha = rs / denom;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new = dot(&r, &r);
+        let beta = rs_new / rs.max(1e-30);
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs = rs_new;
+    }
+    for i in 0..n {
+        x[i] *= mask[i];
+    }
+    CgResult { x, iters, residual: rs.sqrt() }
+}
+
+/// Plain SPD solve (mask of ones).
+pub fn solve(
+    threads: usize,
+    h: &Matrix,
+    g: &[f32],
+    reg: f32,
+    max_iters: usize,
+    tol: f32,
+) -> CgResult {
+    let mask = vec![1.0f32; g.len()];
+    solve_masked(threads, h, g, &mask, reg, max_iters, tol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm_nt;
+    use crate::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Matrix {
+        let a = Matrix::from_vec(n, n, (0..n * n).map(|_| rng.gaussian_f32()).collect());
+        let mut c = Matrix::zeros(n, n);
+        gemm_nt(1, &a, &a, &mut c);
+        for i in 0..n {
+            c.set(i, i, c.at(i, i) + n as f32);
+        }
+        c
+    }
+
+    #[test]
+    fn solves_spd_system() {
+        let mut rng = Rng::new(10);
+        let h = spd(&mut rng, 40);
+        let x_true: Vec<f32> = (0..40).map(|_| rng.gaussian_f32()).collect();
+        let mut g = vec![0.0; 40];
+        gemv(1, &h, &x_true, &mut g);
+        let r = solve(1, &h, &g, 0.0, 400, 1e-12);
+        for (a, b) in r.x.iter().zip(&x_true) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn masked_slots_stay_zero() {
+        let mut rng = Rng::new(11);
+        let h = spd(&mut rng, 20);
+        let g: Vec<f32> = (0..20).map(|_| rng.gaussian_f32()).collect();
+        let mut mask = vec![1.0f32; 20];
+        for i in 12..20 {
+            mask[i] = 0.0;
+        }
+        let r = solve_masked(1, &h, &g, &mask, 1e-3, 200, 1e-12);
+        for i in 12..20 {
+            assert_eq!(r.x[i], 0.0);
+        }
+        // the occupied sub-system is actually solved
+        for i in 0..12 {
+            let mut resid = -g[i];
+            for j in 0..12 {
+                resid += (h.at(i, j) + if i == j { 1e-3 } else { 0.0 }) * r.x[j];
+            }
+            assert!(resid.abs() < 1e-2, "row {i} resid {resid}");
+        }
+    }
+
+    #[test]
+    fn matches_cholesky() {
+        let mut rng = Rng::new(12);
+        let h = spd(&mut rng, 25);
+        let g: Vec<f32> = (0..25).map(|_| rng.gaussian_f32()).collect();
+        let xc = crate::linalg::chol::solve_ridge(&h, &g, 0.0).unwrap();
+        let r = solve(1, &h, &g, 0.0, 300, 1e-14);
+        for (a, b) in r.x.iter().zip(&xc) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn identity_is_one_iteration() {
+        let h = Matrix::eye(8);
+        let g = vec![1.0f32; 8];
+        let r = solve(1, &h, &g, 0.0, 50, 1e-20);
+        assert!(r.iters <= 2);
+        for v in &r.x {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_sequential() {
+        let mut rng = Rng::new(13);
+        let h = spd(&mut rng, 64);
+        let g: Vec<f32> = (0..64).map(|_| rng.gaussian_f32()).collect();
+        let r1 = solve(1, &h, &g, 1e-3, 100, 1e-12);
+        let r8 = solve(8, &h, &g, 1e-3, 100, 1e-12);
+        for (a, b) in r1.x.iter().zip(&r8.x) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+}

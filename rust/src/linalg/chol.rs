@@ -1,0 +1,152 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! Used by the full-kernel baselines (primal Newton on small n) and as a
+//! cross-check for the CG solver. Plain right-looking factorization with
+//! f64 accumulation; the systems here are at most a few thousand on a side.
+
+use super::Matrix;
+
+/// Errors from the direct solvers.
+#[derive(Debug, thiserror::Error)]
+pub enum CholError {
+    #[error("matrix not positive definite at pivot {0} (value {1})")]
+    NotPd(usize, f64),
+    #[error("dimension mismatch: {0}")]
+    Dim(String),
+}
+
+/// Lower-triangular Cholesky factor L with A = L L^T.
+pub fn factor(a: &Matrix) -> Result<Matrix, CholError> {
+    if a.rows != a.cols {
+        return Err(CholError::Dim(format!("{}x{}", a.rows, a.cols)));
+    }
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut diag = a.at(j, j) as f64;
+        for k in 0..j {
+            let v = l.at(j, k) as f64;
+            diag -= v * v;
+        }
+        if diag <= 0.0 {
+            return Err(CholError::NotPd(j, diag));
+        }
+        let dj = diag.sqrt();
+        l.set(j, j, dj as f32);
+        for i in (j + 1)..n {
+            let mut v = a.at(i, j) as f64;
+            for k in 0..j {
+                v -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            l.set(i, j, (v / dj) as f32);
+        }
+    }
+    Ok(l)
+}
+
+/// Solve A x = b given the factor L (forward then backward substitution).
+pub fn solve_with_factor(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut v = b[i] as f64;
+        for k in 0..i {
+            v -= l.at(i, k) as f64 * y[k];
+        }
+        y[i] = v / l.at(i, i) as f64;
+    }
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut v = y[i];
+        for k in (i + 1)..n {
+            v -= l.at(k, i) as f64 * x[k];
+        }
+        x[i] = v / l.at(i, i) as f64;
+    }
+    x.into_iter().map(|v| v as f32).collect()
+}
+
+/// One-shot SPD solve with ridge fallback: tries A, then A + reg I with
+/// increasing reg until the factorization succeeds.
+pub fn solve_ridge(a: &Matrix, b: &[f32], mut reg: f32) -> Result<Vec<f32>, CholError> {
+    for _ in 0..8 {
+        let mut aa = a.clone();
+        for i in 0..aa.rows {
+            let v = aa.at(i, i) + reg;
+            aa.set(i, i, v);
+        }
+        match factor(&aa) {
+            Ok(l) => return Ok(solve_with_factor(&l, b)),
+            Err(_) => reg = (reg * 10.0).max(1e-6),
+        }
+    }
+    factor(a).map(|l| solve_with_factor(&l, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dot, gemm_nt};
+    use crate::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Matrix {
+        let a = Matrix::from_vec(n, n, (0..n * n).map(|_| rng.gaussian_f32()).collect());
+        let mut c = Matrix::zeros(n, n);
+        gemm_nt(1, &a, &a, &mut c);
+        for i in 0..n {
+            c.set(i, i, c.at(i, i) + n as f32);
+        }
+        c
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::new(7);
+        let a = spd(&mut rng, 20);
+        let l = factor(&a).unwrap();
+        // A == L L^T
+        for i in 0..20 {
+            for j in 0..20 {
+                let e: f32 = dot(&l.row(i)[..=j.min(i)], &l.row(j)[..=j.min(i)]);
+                assert!((a.at(i, j) - e).abs() < 1e-2 * a.at(i, i).abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn solve_recovers_solution() {
+        let mut rng = Rng::new(8);
+        let a = spd(&mut rng, 30);
+        let x_true: Vec<f32> = (0..30).map(|_| rng.gaussian_f32()).collect();
+        let mut b = vec![0.0; 30];
+        crate::linalg::gemv(1, &a, &x_true, &mut b);
+        let l = factor(&a).unwrap();
+        let x = solve_with_factor(&l, &b);
+        for (xa, xb) in x.iter().zip(&x_true) {
+            assert!((xa - xb).abs() < 1e-2, "{xa} vs {xb}");
+        }
+    }
+
+    #[test]
+    fn not_pd_detected() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig -1
+        assert!(matches!(factor(&a), Err(CholError::NotPd(_, _))));
+    }
+
+    #[test]
+    fn ridge_fallback_solves_singular() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]); // rank 1
+        let x = solve_ridge(&a, &[2.0, 2.0], 1e-4).unwrap();
+        // residual small under the ridge
+        assert!((x[0] + x[1] - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn identity_solve() {
+        let a = Matrix::eye(5);
+        let l = factor(&a).unwrap();
+        let b = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(solve_with_factor(&l, &b), b.to_vec());
+    }
+}

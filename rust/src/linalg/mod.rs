@@ -1,0 +1,316 @@
+//! Dense linear-algebra substrate (row-major f32).
+//!
+//! This is the hand-written counterpart to the optimized library the
+//! implicit approach leans on: blocked, thread-parallel GEMM/GEMV plus the
+//! small direct solvers the baselines need. The explicit engines and the
+//! full-kernel solvers (multiplicative update, primal Newton) run on this;
+//! the implicit engine runs on XLA artifacts instead.
+
+pub mod chol;
+pub mod cg;
+
+use crate::pool;
+use crate::pool::SendPtr;
+
+/// Dense row-major matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Frobenius-norm distance to another matrix (test helper).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Dot product with f64 accumulation (keeps SMO's gradient stable).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    for (a, b) in x.iter().zip(y) {
+        acc += (*a as f64) * (*b as f64);
+    }
+    acc as f32
+}
+
+/// Squared euclidean distance.
+#[inline]
+pub fn dist2(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    for (a, b) in x.iter().zip(y) {
+        let d = (*a - *b) as f64;
+        acc += d * d;
+    }
+    acc as f32
+}
+
+/// out = M v  (threaded over rows).
+pub fn gemv(threads: usize, m: &Matrix, v: &[f32], out: &mut [f32]) {
+    assert_eq!(m.cols, v.len());
+    assert_eq!(m.rows, out.len());
+    let rows_per = ((m.rows + 63) / 64).max(1);
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    pool::parallel_for(threads, m.rows, rows_per, |r| {
+        let val = dot(m.row(r), v);
+        // SAFETY: each index r is visited exactly once (parallel_for
+        // guarantee), so writes are disjoint.
+        unsafe { *out_ptr.get().add(r) = val }
+    });
+}
+
+/// out = M^T v (threaded over column blocks).
+pub fn gemv_t(threads: usize, m: &Matrix, v: &[f32], out: &mut [f32]) {
+    assert_eq!(m.rows, v.len());
+    assert_eq!(m.cols, out.len());
+    out.iter_mut().for_each(|o| *o = 0.0);
+    let nblk = (m.cols + 255) / 256;
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    pool::parallel_for(threads, nblk, 1, |b| {
+        let c0 = b * 256;
+        let c1 = (c0 + 256).min(m.cols);
+        // SAFETY: column blocks are disjoint across iterations.
+        let o = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(c0), c1 - c0) };
+        for r in 0..m.rows {
+            let row = &m.row(r)[c0..c1];
+            let vr = v[r];
+            if vr != 0.0 {
+                axpy(vr, row, o);
+            }
+        }
+    });
+}
+
+/// C = A * B^T (threaded, blocked). A: [m,k], B: [n,k] -> C: [m,n].
+/// B^T layout means both operands stream row-major — the natural layout for
+/// kernel blocks (rows = points).
+pub fn gemm_nt(threads: usize, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    let n = b.rows;
+    let c_ptr = SendPtr::new(c.data.as_mut_ptr());
+    pool::parallel_for(threads, a.rows, 8, |i| {
+        let ai = a.row(i);
+        // SAFETY: row i of C written by exactly one task.
+        let ci = unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(i * n), n) };
+        for j in 0..n {
+            ci[j] = dot(ai, b.row(j));
+        }
+    });
+}
+
+/// C = A^T * A over rows where mask != 0 (Gauss-Newton Gram block).
+/// A: [t, b] -> C: [b, b].
+pub fn syrk_masked(threads: usize, a: &Matrix, mask: &[f32], c: &mut Matrix) {
+    assert_eq!(a.rows, mask.len());
+    assert_eq!((c.rows, c.cols), (a.cols, a.cols));
+    let bdim = a.cols;
+    let nthread = threads.max(1);
+    // Per-thread partial accumulators, reduced at the end.
+    let ranges = pool::split_ranges(a.rows, nthread);
+    let partials: Vec<Matrix> = {
+        let outs: Vec<std::sync::Mutex<Matrix>> = (0..ranges.len())
+            .map(|_| std::sync::Mutex::new(Matrix::zeros(bdim, bdim)))
+            .collect();
+        let ranges_ref = &ranges;
+        pool::parallel_for(nthread, ranges.len(), 1, |t| {
+            let mut acc = outs[t].lock().unwrap();
+            for r in ranges_ref[t].clone() {
+                let w = mask[r];
+                if w == 0.0 {
+                    continue;
+                }
+                let row = a.row(r);
+                for i in 0..bdim {
+                    let ri = row[i] * w;
+                    if ri == 0.0 {
+                        continue;
+                    }
+                    axpy(ri, row, &mut acc.row_mut(i)[..]);
+                }
+            }
+        });
+        outs.into_iter().map(|m| m.into_inner().unwrap()).collect()
+    };
+    c.data.iter_mut().for_each(|v| *v = 0.0);
+    for p in partials {
+        for (cv, pv) in c.data.iter_mut().zip(p.data) {
+            *cv += pv;
+        }
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randmat(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_vec(r, c, (0..r * c).map(|_| rng.gaussian_f32()).collect())
+    }
+
+    fn gemv_naive(m: &Matrix, v: &[f32]) -> Vec<f32> {
+        (0..m.rows).map(|r| dot(m.row(r), v)).collect()
+    }
+
+    #[test]
+    fn gemv_matches_naive() {
+        let mut rng = Rng::new(1);
+        let m = randmat(&mut rng, 123, 45);
+        let v: Vec<f32> = (0..45).map(|_| rng.gaussian_f32()).collect();
+        let mut out = vec![0.0; 123];
+        gemv(4, &m, &v, &mut out);
+        let expect = gemv_naive(&m, &v);
+        for (a, b) in out.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemv_t_matches_transpose_gemv() {
+        let mut rng = Rng::new(2);
+        let m = randmat(&mut rng, 67, 301);
+        let v: Vec<f32> = (0..67).map(|_| rng.gaussian_f32()).collect();
+        let mut out = vec![0.0; 301];
+        gemv_t(4, &m, &v, &mut out);
+        let expect = gemv_naive(&m.transpose(), &v);
+        for (a, b) in out.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_naive() {
+        let mut rng = Rng::new(3);
+        let a = randmat(&mut rng, 31, 17);
+        let b = randmat(&mut rng, 23, 17);
+        let mut c = Matrix::zeros(31, 23);
+        gemm_nt(4, &a, &b, &mut c);
+        for i in 0..31 {
+            for j in 0..23 {
+                let e = dot(a.row(i), b.row(j));
+                assert!((c.at(i, j) - e).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_masked_matches_naive() {
+        let mut rng = Rng::new(4);
+        let a = randmat(&mut rng, 100, 13);
+        let mask: Vec<f32> = (0..100)
+            .map(|_| if rng.bernoulli(0.6) { 1.0 } else { 0.0 })
+            .collect();
+        let mut c = Matrix::zeros(13, 13);
+        syrk_masked(4, &a, &mask, &mut c);
+        for i in 0..13 {
+            for j in 0..13 {
+                let mut e = 0.0f64;
+                for r in 0..100 {
+                    e += (mask[r] * a.at(r, i) * a.at(r, j)) as f64;
+                }
+                assert!((c.at(i, j) - e as f32).abs() < 1e-3,
+                        "({i},{j}): {} vs {e}", c.at(i, j));
+            }
+        }
+        // symmetric
+        for i in 0..13 {
+            for j in 0..13 {
+                assert!((c.at(i, j) - c.at(j, i)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::new(5);
+        let m = randmat(&mut rng, 8, 5);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn dist2_zero_on_self() {
+        let x = [1.0f32, -2.0, 3.5];
+        assert_eq!(dist2(&x, &x), 0.0);
+        assert!((dist2(&[0.0, 0.0], &[3.0, 4.0]) - 25.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn threaded_matches_single_thread() {
+        let mut rng = Rng::new(6);
+        let a = randmat(&mut rng, 200, 64);
+        let b = randmat(&mut rng, 50, 64);
+        let mut c1 = Matrix::zeros(200, 50);
+        let mut c8 = Matrix::zeros(200, 50);
+        gemm_nt(1, &a, &b, &mut c1);
+        gemm_nt(8, &a, &b, &mut c8);
+        assert!(c1.max_abs_diff(&c8) < 1e-6);
+    }
+}

@@ -1,0 +1,314 @@
+//! wu-svm CLI: train / predict / datagen / bench / serve / info.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use wu_svm::config::Config;
+use wu_svm::coordinator::{self, serve, TrainJob};
+use wu_svm::data::{libsvm, paper};
+use wu_svm::experiments;
+use wu_svm::metrics::fmt_duration;
+use wu_svm::model::SvmModel;
+use wu_svm::pool;
+use wu_svm::report;
+
+const USAGE: &str = "\
+wu-svm — Parallel Support Vector Machines in Practice (Tyree et al. 2014)
+
+USAGE: wu-svm <command> [--flags]
+
+COMMANDS
+  train     train one model
+            --dataset adult|covertype|kdd99|mitfaces|fd|epsilon|mnist8m
+            --solver smo|wss|mu|primal|spsvm   --engine cpu-seq|cpu-par|xla
+            --scale 0.05  --c --gamma --eps --max-basis --seed
+            --save model.txt
+  predict   --model model.txt --input data.libsvm [--threads N]
+  datagen   --dataset KEY --scale S --out file.libsvm [--test-out f]
+  bench     table1|scaling|basis|wss|epsstop|memory
+            table1: --dataset KEY|all --scale S --methods a,b --max-basis N
+  serve     --dataset KEY --scale S [--engine E] [--requests N] [--batch N]
+  info      artifact manifest + runtime info
+  help      this text
+
+All heavy math is AOT-compiled XLA (run `make artifacts` first for the
+xla engine); cpu engines work without artifacts.";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let cfg = Config::from_args(&args[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&cfg),
+        "predict" => cmd_predict(&cfg),
+        "datagen" => cmd_datagen(&cfg),
+        "bench" => cmd_bench(&cfg),
+        "serve" => cmd_serve(&cfg),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_train(cfg: &Config) -> Result<()> {
+    let job = TrainJob::from_config(cfg)?;
+    println!(
+        "training {} with {:?} on {:?} (scale {})",
+        job.dataset, job.solver, job.engine, job.scale
+    );
+    let rec = coordinator::run(&job)?;
+    println!(
+        "n_train={} n_test={} expansion={}",
+        rec.n_train, rec.n_test, rec.expansion_size
+    );
+    println!(
+        "{} = {:.2}%  train time = {}",
+        rec.metric_name,
+        rec.test_metric * 100.0,
+        fmt_duration(rec.train_time)
+    );
+    for (k, v) in &rec.notes {
+        println!("  {k} = {v}");
+    }
+    if let Some(path) = cfg.get("save") {
+        // retrain path for saving is wasteful; train once more cheaply?
+        // run() already discarded the model, so train again via coordinator
+        // internals would duplicate logic — instead note the limitation.
+        let (tr, _, spec) = coordinator::load_data(&job)?;
+        if tr.is_multiclass() {
+            bail!("--save supports binary datasets");
+        }
+        let engine = coordinator::build_engine(job.engine)?;
+        let gamma = job.gamma.unwrap_or(spec.gamma);
+        let c = job.c.unwrap_or(spec.c);
+        let r = wu_svm::solvers::spsvm::train(
+            &tr,
+            &wu_svm::solvers::spsvm::SpSvmParams {
+                c,
+                gamma,
+                max_basis: job.max_basis,
+                seed: job.seed,
+                ..Default::default()
+            },
+            &engine,
+        )?;
+        r.model.save(Path::new(path))?;
+        println!("saved SP-SVM model to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_predict(cfg: &Config) -> Result<()> {
+    let model_path = cfg.get("model").ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let input = cfg.get("input").ok_or_else(|| anyhow::anyhow!("--input required"))?;
+    let threads = cfg.usize_or("threads", pool::default_threads())?;
+    let model = SvmModel::load(Path::new(model_path))?;
+    let ds = libsvm::read_file(Path::new(input), model.d)?;
+    let t0 = std::time::Instant::now();
+    let margins = model.decision_batch(&ds, threads);
+    let dt = t0.elapsed();
+    let err = wu_svm::metrics::error_rate(&margins, &ds.y);
+    println!(
+        "predicted {} rows in {} ({:.0} rows/s), error = {:.2}%",
+        ds.n,
+        fmt_duration(dt),
+        ds.n as f64 / dt.as_secs_f64(),
+        err * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_datagen(cfg: &Config) -> Result<()> {
+    let key = cfg.str_or("dataset", "adult");
+    let scale = cfg.f64_or("scale", 0.05)?;
+    let seed = cfg.u64_or("seed", 1)?;
+    let out = PathBuf::from(cfg.str_or("out", &format!("{key}.libsvm")));
+    let spec = paper::spec(&key).ok_or_else(|| anyhow::anyhow!("unknown dataset {key}"))?;
+    let (tr, te) = spec.generate(scale, seed);
+    libsvm::write_file(&tr, &out)?;
+    println!("wrote {} train rows (d = {}) to {}", tr.n, tr.d, out.display());
+    if let Some(tpath) = cfg.get("test-out") {
+        libsvm::write_file(&te, Path::new(tpath))?;
+        println!("wrote {} test rows to {tpath}", te.n);
+    }
+    Ok(())
+}
+
+fn cmd_bench(cfg: &Config) -> Result<()> {
+    let which = cfg
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("table1");
+    match which {
+        "table1" => {
+            let key = cfg.str_or("dataset", "all");
+            let methods: Vec<String> = cfg
+                .get("methods")
+                .map(|m| m.split(',').map(|s| s.trim().to_string()).collect())
+                .unwrap_or_default();
+            let max_basis = cfg.usize_or("max-basis", 255)?;
+            let keys: Vec<String> = if key == "all" {
+                paper::specs().iter().map(|s| s.key.to_string()).collect()
+            } else {
+                vec![key]
+            };
+            let mut all_rows = Vec::new();
+            for k in keys {
+                let scale = cfg.f64_or("scale", experiments::default_scale(&k))?;
+                let rows = experiments::run_table1_dataset(&k, scale, max_basis, &methods)?;
+                println!("{}", report::render_table(&rows));
+                all_rows.extend(rows);
+            }
+            println!("{}", experiments::render_with_reference(&all_rows));
+        }
+        "scaling" => {
+            let ds = cfg.str_or("dataset", "covertype");
+            let scale = cfg.f64_or("scale", experiments::default_scale(&ds))?;
+            let max_t = pool::default_threads();
+            let mut ts = vec![1usize, 2, 4];
+            if max_t >= 8 {
+                ts.push(8);
+            }
+            if max_t > 8 {
+                ts.push(max_t);
+            }
+            println!("{}", experiments::run_scaling(&ds, scale, &ts)?);
+        }
+        "basis" => {
+            let ds = cfg.str_or("dataset", "covertype");
+            let scale = cfg.f64_or("scale", experiments::default_scale(&ds))?;
+            println!(
+                "{}",
+                experiments::run_basis_sweep(&ds, scale, &[15, 31, 63, 127, 255, 511])?
+            );
+        }
+        "wss" => {
+            let ds = cfg.str_or("dataset", "adult");
+            let scale = cfg.f64_or("scale", experiments::default_scale(&ds))?;
+            println!("{}", experiments::run_wss_sweep(&ds, scale, &[2, 4, 8, 16, 32])?);
+        }
+        "epsstop" => {
+            let ds = cfg.str_or("dataset", "adult");
+            let scale = cfg.f64_or("scale", experiments::default_scale(&ds))?;
+            println!(
+                "{}",
+                experiments::run_eps_sweep(&ds, scale, &[1e-3, 1e-4, 1e-5, 5e-6, 1e-6])?
+            );
+        }
+        "memory" => {
+            println!(
+                "{}",
+                experiments::run_memory_table(
+                    &[1_000, 10_000, 31_562, 100_000, 489_410, 4_898_431],
+                    511
+                )
+            );
+        }
+        other => bail!("unknown bench '{other}' (table1|scaling|basis|wss|epsstop|memory)"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    let key = cfg.str_or("dataset", "adult");
+    let scale = cfg.f64_or("scale", 0.02)?;
+    let n_req = cfg.usize_or("requests", 2000)?;
+    let batch = cfg.usize_or("batch", 256)?;
+    let engine_choice = coordinator::EngineChoice::parse(
+        &cfg.str_or("engine", "cpu-par"),
+        cfg.usize_or("threads", pool::default_threads())?,
+    )?;
+    let job = TrainJob {
+        dataset: key.clone(),
+        scale,
+        solver: coordinator::Solver::SpSvm,
+        engine: coordinator::EngineChoice::CpuPar(pool::default_threads()),
+        max_basis: 127,
+        ..Default::default()
+    };
+    println!("training a quick SP-SVM model on {key} (scale {scale})...");
+    let (tr, te, spec) = coordinator::load_data(&job)?;
+    anyhow::ensure!(!tr.is_multiclass(), "serve supports binary datasets");
+    let engine = coordinator::build_engine(job.engine)?;
+    let r = wu_svm::solvers::spsvm::train(
+        &tr,
+        &wu_svm::solvers::spsvm::SpSvmParams {
+            c: spec.c,
+            gamma: spec.gamma,
+            max_basis: 127,
+            ..Default::default()
+        },
+        &engine,
+    )?;
+    println!("model: {} basis vectors", r.model.num_vectors());
+
+    let serve_engine = coordinator::build_engine(engine_choice)?;
+    let server = serve::Server::start(
+        r.model,
+        serve_engine,
+        serve::ServeConfig { batch, ..Default::default() },
+    );
+    let client = server.client();
+    let t0 = std::time::Instant::now();
+    let mut latencies = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let row = te.row(i % te.n).to_vec();
+        let t1 = std::time::Instant::now();
+        let _ = client.predict(row)?;
+        latencies.push(t1.elapsed());
+    }
+    let total = t0.elapsed();
+    latencies.sort();
+    let stats = server.stop();
+    println!(
+        "served {} requests in {} ({:.0} req/s)",
+        n_req,
+        fmt_duration(total),
+        n_req as f64 / total.as_secs_f64()
+    );
+    println!(
+        "latency p50 = {:?} p99 = {:?}; batches = {} (max {})",
+        latencies[n_req / 2],
+        latencies[(n_req * 99) / 100],
+        stats.batches,
+        stats.max_batch
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("wu-svm {} ({} threads available)", env!("CARGO_PKG_VERSION"), pool::default_threads());
+    match coordinator::shared_runtime() {
+        Ok(rt) => {
+            println!("artifacts: tile_t = {}, s_cand = {}", rt.tile_t(), rt.s_cand());
+            println!("d buckets: {:?}", rt.manifest().d_buckets());
+            println!("b buckets: {:?}", rt.manifest().b_buckets());
+            let total: usize = rt.manifest().by_op.values().map(|v| v.len()).sum();
+            println!("{total} artifacts across {} ops", rt.manifest().by_op.len());
+        }
+        Err(e) => println!("xla runtime unavailable: {e} (cpu engines still work)"),
+    }
+    println!("datasets:");
+    for s in paper::specs() {
+        println!(
+            "  {:<10} n = {:>7} d = {:>4} classes = {:>2} C = {:<8} gamma = {}",
+            s.key, s.n_train, s.d, s.classes, s.c, s.gamma
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! Evaluation metrics and timing utilities (Table 1 columns).
+
+use std::time::{Duration, Instant};
+
+/// Fraction of sign disagreements between margins and labels (paper's
+/// "Test Error (%)" divided by 100). Ties (margin == 0) count as errors,
+/// matching LibSVM's decision rule for y in {-1,+1}.
+pub fn error_rate(margins: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(margins.len(), labels.len());
+    assert!(!margins.is_empty());
+    let errs = margins
+        .iter()
+        .zip(labels)
+        .filter(|(f, y)| *f * *y <= 0.0)
+        .count();
+    errs as f64 / margins.len() as f64
+}
+
+/// Area under the ROC curve via the rank statistic (ties handled by
+/// midranks). The paper reports (1 - AUC)% for MITFaces.
+pub fn auc(margins: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(margins.len(), labels.len());
+    let mut idx: Vec<usize> = (0..margins.len()).collect();
+    idx.sort_by(|&a, &b| margins[a].partial_cmp(&margins[b]).unwrap());
+    // midranks
+    let n = margins.len();
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && margins[idx[j + 1]] == margins[idx[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = mid;
+        }
+        i = j + 1;
+    }
+    let npos = labels.iter().filter(|&&y| y > 0.0).count();
+    let nneg = n - npos;
+    if npos == 0 || nneg == 0 {
+        return 0.5;
+    }
+    let rank_sum: f64 = (0..n).filter(|&k| labels[k] > 0.0).map(|k| ranks[k]).sum();
+    (rank_sum - (npos * (npos + 1)) as f64 / 2.0) / (npos as f64 * nneg as f64)
+}
+
+/// Multiclass error rate from predicted and true class ids.
+pub fn multiclass_error(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    let errs = pred.iter().zip(truth).filter(|(a, b)| a != b).count();
+    errs as f64 / pred.len() as f64
+}
+
+/// Simple stopwatch with named laps (used by solvers for phase breakdown).
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    pub laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now, laps: Vec::new() }
+    }
+
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        if let Some((_, acc)) = self.laps.iter_mut().find(|(n, _)| n == name) {
+            *acc += d;
+        } else {
+            self.laps.push((name.to_string(), d));
+        }
+        d
+    }
+
+    pub fn total(&self) -> Duration {
+        Instant::now() - self.start
+    }
+
+    pub fn lap_secs(&self, name: &str) -> f64 {
+        self.laps
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| d.as_secs_f64())
+            .unwrap_or(0.0)
+    }
+}
+
+/// Render a duration the way the paper's Table 1 does ("1h 5m 46s").
+pub fn fmt_duration(d: Duration) -> String {
+    let secs = d.as_secs_f64();
+    if secs < 1.0 {
+        return format!("{:.0}ms", secs * 1e3);
+    }
+    let total = secs.round() as u64;
+    let (h, m, s) = (total / 3600, (total % 3600) / 60, total % 60);
+    match (h, m) {
+        (0, 0) => format!("{:.1}s", secs),
+        (0, _) => format!("{m}m {s}s"),
+        _ => format!("{h}h {m}m {s}s"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_rate_basic() {
+        let f = [1.0, -2.0, 0.5, -0.1];
+        let y = [1.0, -1.0, -1.0, -1.0];
+        assert!((error_rate(&f, &y) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_rate_tie_counts_as_error() {
+        assert_eq!(error_rate(&[0.0], &[1.0]), 1.0);
+    }
+
+    #[test]
+    fn auc_perfect_ranking() {
+        let f = [0.1, 0.2, 0.8, 0.9];
+        let y = [-1.0, -1.0, 1.0, 1.0];
+        assert!((auc(&f, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_inverted_ranking() {
+        let f = [0.9, 0.8, 0.2, 0.1];
+        let y = [-1.0, -1.0, 1.0, 1.0];
+        assert!(auc(&f, &y).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        let f = [0.5, 0.5, 0.5, 0.5];
+        let y = [1.0, -1.0, 1.0, -1.0];
+        assert!((auc(&f, &y) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_classes() {
+        assert_eq!(auc(&[0.1, 0.2], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn multiclass_error_counts() {
+        assert!((multiclass_error(&[0, 1, 2, 2], &[0, 1, 1, 2]) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_duration_styles() {
+        assert_eq!(fmt_duration(Duration::from_millis(12)), "12ms");
+        assert_eq!(fmt_duration(Duration::from_secs_f64(9.94)), "9.9s");
+        assert_eq!(fmt_duration(Duration::from_secs(66)), "1m 6s");
+        assert_eq!(fmt_duration(Duration::from_secs(3 * 3600 + 61)), "3h 1m 1s");
+    }
+
+    #[test]
+    fn stopwatch_accumulates_laps() {
+        let mut sw = Stopwatch::new();
+        sw.lap("a");
+        sw.lap("b");
+        sw.lap("a");
+        assert_eq!(sw.laps.len(), 2);
+        assert!(sw.lap_secs("a") >= 0.0);
+        assert!(sw.total().as_nanos() > 0);
+    }
+}

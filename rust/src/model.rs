@@ -1,0 +1,226 @@
+//! Trained SVM models: prediction and (de)serialization.
+//!
+//! Both solver families produce the same functional form
+//! `f(x) = sum_j coef_j k(x, v_j) + bias`; only how the expansion vectors
+//! were chosen differs (support vectors for the dual solvers, basis
+//! vectors for SP-SVM).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+use crate::kernel::KernelKind;
+use crate::pool;
+
+/// A trained binary SVM.
+#[derive(Debug, Clone)]
+pub struct SvmModel {
+    pub kernel: KernelKind,
+    /// Expansion vectors, row-major [m x d].
+    pub vectors: Vec<f32>,
+    pub d: usize,
+    /// Expansion coefficients (alpha_j y_j for dual solvers, beta_j for
+    /// SP-SVM), length m.
+    pub coef: Vec<f32>,
+    pub bias: f32,
+    /// Which solver produced this model (report metadata).
+    pub solver: String,
+}
+
+impl SvmModel {
+    pub fn num_vectors(&self) -> usize {
+        self.coef.len()
+    }
+
+    /// Margin for a single input.
+    pub fn decision(&self, x: &[f32]) -> f32 {
+        assert_eq!(x.len(), self.d);
+        let mut f = self.bias as f64;
+        for (j, &c) in self.coef.iter().enumerate() {
+            if c != 0.0 {
+                f += (c * self.kernel.eval(x, &self.vectors[j * self.d..(j + 1) * self.d])) as f64;
+            }
+        }
+        f as f32
+    }
+
+    /// Margins for every row of a dataset (threaded).
+    pub fn decision_batch(&self, ds: &Dataset, threads: usize) -> Vec<f32> {
+        assert_eq!(ds.d, self.d);
+        pool::parallel_map(threads, ds.n, |i| self.decision(ds.row(i)))
+    }
+
+    /// {-1,+1} predictions.
+    pub fn predict_batch(&self, ds: &Dataset, threads: usize) -> Vec<f32> {
+        self.decision_batch(ds, threads)
+            .into_iter()
+            .map(|f| if f > 0.0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Save in a simple self-describing text format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "wu-svm-model v1")?;
+        writeln!(w, "solver {}", self.solver)?;
+        match self.kernel {
+            KernelKind::Rbf { gamma } => writeln!(w, "kernel rbf {gamma}")?,
+            KernelKind::Linear => writeln!(w, "kernel linear")?,
+            KernelKind::Poly { degree, gamma, coef0 } => {
+                writeln!(w, "kernel poly {degree} {gamma} {coef0}")?
+            }
+        }
+        writeln!(w, "bias {}", self.bias)?;
+        writeln!(w, "dims {} {}", self.num_vectors(), self.d)?;
+        for j in 0..self.num_vectors() {
+            write!(w, "{}", self.coef[j])?;
+            for v in &self.vectors[j * self.d..(j + 1) * self.d] {
+                write!(w, " {v}")?;
+            }
+            writeln!(w)?;
+        }
+        Ok(())
+    }
+
+    /// Load a model saved by [`SvmModel::save`].
+    pub fn load(path: &Path) -> Result<SvmModel> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut lines = std::io::BufReader::new(f).lines();
+        let mut next = || -> Result<String> {
+            lines
+                .next()
+                .transpose()?
+                .context("unexpected end of model file")
+        };
+        let magic = next()?;
+        if magic.trim() != "wu-svm-model v1" {
+            bail!("not a wu-svm model file");
+        }
+        let solver = next()?
+            .strip_prefix("solver ")
+            .context("solver line")?
+            .to_string();
+        let kline = next()?;
+        let ktok: Vec<&str> = kline.split_ascii_whitespace().collect();
+        let kernel = match ktok.as_slice() {
+            ["kernel", "rbf", g] => KernelKind::Rbf { gamma: g.parse()? },
+            ["kernel", "linear"] => KernelKind::Linear,
+            ["kernel", "poly", d, g, c0] => KernelKind::Poly {
+                degree: d.parse()?,
+                gamma: g.parse()?,
+                coef0: c0.parse()?,
+            },
+            _ => bail!("bad kernel line '{kline}'"),
+        };
+        let bias: f32 = next()?
+            .strip_prefix("bias ")
+            .context("bias line")?
+            .parse()?;
+        let dline = next()?;
+        let dtok: Vec<&str> = dline.split_ascii_whitespace().collect();
+        let (m, d): (usize, usize) = match dtok.as_slice() {
+            ["dims", m, d] => (m.parse()?, d.parse()?),
+            _ => bail!("bad dims line"),
+        };
+        let mut coef = Vec::with_capacity(m);
+        let mut vectors = Vec::with_capacity(m * d);
+        for _ in 0..m {
+            let line = next()?;
+            let mut it = line.split_ascii_whitespace();
+            coef.push(it.next().context("coef")?.parse()?);
+            let mut cnt = 0;
+            for tok in it {
+                vectors.push(tok.parse()?);
+                cnt += 1;
+            }
+            if cnt != d {
+                bail!("expected {d} features, got {cnt}");
+            }
+        }
+        Ok(SvmModel { kernel, vectors, d, coef, bias, solver })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> SvmModel {
+        SvmModel {
+            kernel: KernelKind::Rbf { gamma: 0.5 },
+            vectors: vec![0.0, 0.0, 1.0, 1.0],
+            d: 2,
+            coef: vec![1.0, -1.0],
+            bias: 0.25,
+            solver: "test".into(),
+        }
+    }
+
+    #[test]
+    fn decision_matches_manual() {
+        let m = model();
+        let x = [0.0f32, 0.0];
+        let k2 = (-0.5f32 * 2.0).exp();
+        let expect = 1.0 - k2 + 0.25;
+        assert!((m.decision(&x) - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_matches_single(){
+        let m = model();
+        let ds = Dataset::new_binary(
+            "t",
+            2,
+            vec![0.1, 0.2, 0.9, 0.8, 0.5, 0.5],
+            vec![1.0, -1.0, 1.0],
+        );
+        let batch = m.decision_batch(&ds, 3);
+        for i in 0..3 {
+            assert!((batch[i] - m.decision(ds.row(i))).abs() < 1e-6);
+        }
+        let preds = m.predict_batch(&ds, 2);
+        for (p, f) in preds.iter().zip(&batch) {
+            assert_eq!(*p, if *f > 0.0 { 1.0 } else { -1.0 });
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join("wu_svm_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.model");
+        let m = model();
+        m.save(&path).unwrap();
+        let back = SvmModel::load(&path).unwrap();
+        assert_eq!(back.coef, m.coef);
+        assert_eq!(back.vectors, m.vectors);
+        assert_eq!(back.bias, m.bias);
+        assert_eq!(back.solver, "test");
+        assert_eq!(back.kernel, m.kernel);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("wu_svm_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.model");
+        std::fs::write(&path, "not a model\n").unwrap();
+        assert!(SvmModel::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn zero_coef_vectors_skipped_consistently() {
+        let mut m = model();
+        m.coef[1] = 0.0;
+        let x = [0.3f32, 0.7];
+        let k1 = m.kernel.eval(&x, &[0.0, 0.0]);
+        assert!((m.decision(&x) - (k1 + 0.25)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,152 @@
+//! One-vs-one multiclass training and voting (paper §5: MNIST8M uses
+//! pairwise coupling as LibSVM does; times are the accumulated per-pair
+//! training times).
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::metrics::Stopwatch;
+use crate::model::SvmModel;
+
+/// A one-vs-one ensemble: models for every unordered class pair (a < b),
+/// where a positive margin votes for class `a`.
+#[derive(Debug)]
+pub struct OvoModel {
+    pub classes: usize,
+    pub pairs: Vec<(usize, usize)>,
+    pub models: Vec<SvmModel>,
+    /// Accumulated per-pair training seconds (the Table-1 convention).
+    pub train_secs: f64,
+}
+
+impl OvoModel {
+    /// Train one binary model per class pair with the provided closure.
+    pub fn train<F>(ds: &Dataset, mut train_pair: F) -> Result<OvoModel>
+    where
+        F: FnMut(&Dataset, usize, usize) -> Result<SvmModel>,
+    {
+        assert!(ds.is_multiclass(), "dataset has no class ids");
+        let k = ds.num_classes();
+        assert!(k >= 2);
+        let mut pairs = Vec::new();
+        let mut models = Vec::new();
+        let sw = Stopwatch::new();
+        for a in 0..k {
+            for b in (a + 1)..k {
+                let view = ds.ovo_view(a, b);
+                if view.n == 0 {
+                    continue;
+                }
+                models.push(train_pair(&view, a, b)?);
+                pairs.push((a, b));
+            }
+        }
+        Ok(OvoModel {
+            classes: k,
+            pairs,
+            models,
+            train_secs: sw.total().as_secs_f64(),
+        })
+    }
+
+    /// Predict a class id for each row by pairwise voting (ties broken
+    /// toward the smaller class id, LibSVM-style).
+    pub fn predict(&self, ds: &Dataset, threads: usize) -> Vec<usize> {
+        let mut votes = vec![vec![0u32; self.classes]; ds.n];
+        for (m, &(a, b)) in self.models.iter().zip(&self.pairs) {
+            let margins = m.decision_batch(ds, threads);
+            for (i, &f) in margins.iter().enumerate() {
+                if f > 0.0 {
+                    votes[i][a] += 1;
+                } else {
+                    votes[i][b] += 1;
+                }
+            }
+        }
+        votes
+            .into_iter()
+            .map(|v| {
+                v.iter()
+                    .enumerate()
+                    .max_by(|(ia, va), (ib, vb)| va.cmp(vb).then(ib.cmp(ia)))
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Total expansion vectors across all pair models.
+    pub fn total_vectors(&self) -> usize {
+        self.models.iter().map(|m| m.num_vectors()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::engine::Engine;
+    use crate::kernel::KernelKind;
+    use crate::metrics::multiclass_error;
+    use crate::solvers::smo::{self, SmoParams};
+
+    fn three_class(n: usize, seed: u64) -> Dataset {
+        let spec = SynthSpec { classes: 3, clusters: 2, sigma: 0.05, d: 4, ..Default::default() };
+        generate(&spec, n, seed, "mc3")
+    }
+
+    #[test]
+    fn trains_all_pairs() {
+        let ds = three_class(300, 1);
+        let ovo = OvoModel::train(&ds, |view, _, _| {
+            Ok(smo::train(view, KernelKind::Rbf { gamma: 2.0 },
+                          &SmoParams { c: 10.0, ..Default::default() },
+                          &Engine::cpu_seq())?.model)
+        })
+        .unwrap();
+        assert_eq!(ovo.pairs, vec![(0, 1), (0, 2), (1, 2)]);
+        assert_eq!(ovo.models.len(), 3);
+        assert!(ovo.total_vectors() > 0);
+    }
+
+    #[test]
+    fn classifies_well_separated_classes() {
+        let tr = three_class(600, 2);
+        let te = three_class(300, 2); // same centers (same seed), new draw? same seed -> same data; use subsample
+        let te = te.subsample(200, 9);
+        let ovo = OvoModel::train(&tr, |view, _, _| {
+            Ok(smo::train(view, KernelKind::Rbf { gamma: 2.0 },
+                          &SmoParams { c: 10.0, ..Default::default() },
+                          &Engine::cpu_seq())?.model)
+        })
+        .unwrap();
+        let pred = ovo.predict(&te, 2);
+        let err = multiclass_error(&pred, &te.class_ids);
+        assert!(err < 0.05, "error {err}");
+    }
+
+    #[test]
+    fn vote_tie_break_prefers_smaller_class() {
+        // hand-build two constant models voting for different classes
+        let m_pos = SvmModel {
+            kernel: KernelKind::Linear,
+            vectors: vec![0.0],
+            d: 1,
+            coef: vec![0.0],
+            bias: 1.0,
+            solver: "t".into(),
+        };
+        let mut m_neg = m_pos.clone();
+        m_neg.bias = -1.0;
+        let ovo = OvoModel {
+            classes: 3,
+            pairs: vec![(0, 1), (0, 2), (1, 2)],
+            // (0,1): vote 0; (0,2): vote 2; (1,2): vote 1 -> three-way tie
+            models: vec![m_pos.clone(), m_neg.clone(), m_pos.clone()],
+            train_secs: 0.0,
+        };
+        let ds = Dataset::new_multiclass("t", 1, vec![0.5], vec![0]);
+        let pred = ovo.predict(&ds, 1);
+        assert_eq!(pred[0], 0);
+    }
+}

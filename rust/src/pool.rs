@@ -1,0 +1,204 @@
+//! Scoped thread pool — the *explicit* parallelism substrate.
+//!
+//! This is our stand-in for the paper's hand-written OpenMP/pthreads
+//! parallelism: work is decomposed by hand into index ranges and dispatched
+//! onto OS threads. The `CpuPar` compute engine (engine.rs) and the
+//! threaded linalg routines build on it. Contrast with the `Xla` engine,
+//! where the parallel schedule is owned by the library (the paper's
+//! "implicit" approach).
+//!
+//! Built on `std::thread::scope` — the offline registry has no rayon.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Shared raw pointer for disjoint parallel writes. Callers must
+/// guarantee each element is written by at most one task (as
+/// `parallel_for` guarantees for per-index writes).
+pub struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        SendPtr(p)
+    }
+
+    /// The wrapped pointer. Method (not field) access so closures capture
+    /// the whole `SendPtr` (which is Sync) rather than the raw pointer.
+    #[inline]
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// Number of worker threads to use by default (live cores, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(32)
+}
+
+/// Run `f(i)` for every `i in 0..n`, dynamically load-balanced over
+/// `threads` workers in chunks of `chunk`. `f` must be `Sync` (called
+/// concurrently from many threads).
+pub fn parallel_for<F>(threads: usize, n: usize, chunk: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    let chunk = chunk.max(1);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(threads, n, 1, |i| {
+            let mut slot = slots[i].lock().unwrap();
+            **slot = f(i);
+        });
+    }
+    out
+}
+
+/// Split `0..n` into `parts` near-equal contiguous ranges.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        if len == 0 {
+            continue;
+        }
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f` on each contiguous sub-slice of `data`, one task per range,
+/// in parallel. Used for disjoint in-place tile updates.
+pub fn parallel_chunks_mut<T, F>(threads: usize, data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let chunk = chunk.max(1);
+    let chunks: Vec<(usize, &mut [T])> =
+        data.chunks_mut(chunk).enumerate().collect();
+    let counter = AtomicUsize::new(0);
+    let n = chunks.len();
+    let slots: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads.max(1).min(n) {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let (idx, slice) = slots[i].lock().unwrap().take().unwrap();
+                f(idx, slice);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(8, 1000, 7, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_single_thread_matches() {
+        let sum = AtomicU64::new(0);
+        parallel_for(1, 100, 10, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(4, 257, |i| i * i);
+        assert_eq!(out, (0..257).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_ranges_cover_exactly() {
+        for &(n, p) in &[(10usize, 3usize), (0, 4), (7, 7), (100, 1), (5, 9)] {
+            let rs = split_ranges(n, p);
+            let total: usize = rs.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n);
+            let mut next = 0;
+            for r in &rs {
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_mut_writes_disjoint() {
+        let mut data = vec![0usize; 1000];
+        parallel_chunks_mut(8, &mut data, 13, |idx, slice| {
+            for (k, v) in slice.iter_mut().enumerate() {
+                *v = idx * 13 + k;
+            }
+        });
+        assert_eq!(data, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_work_is_fine() {
+        parallel_for(4, 0, 1, |_| panic!("should not run"));
+        let out: Vec<usize> = parallel_map(4, 0, |i| i);
+        assert!(out.is_empty());
+    }
+}

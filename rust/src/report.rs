@@ -1,0 +1,125 @@
+//! Paper-style result tables (Table 1 rendering).
+
+use std::time::Duration;
+
+use crate::metrics::fmt_duration;
+
+/// One Table-1 style row: a (dataset, architecture, method) measurement.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub dataset: String,
+    pub arch: String,   // SC / MC / GPU-analog
+    pub method: String, // LibSVM / SP-SVM / ...
+    pub metric_name: String,
+    /// Test error or (1-AUC), as a fraction.
+    pub test_metric: f64,
+    pub train_time: Duration,
+    /// Speedup vs the dataset's single-core baseline (1.0 for baseline).
+    pub speedup: f64,
+    pub notes: String,
+}
+
+/// Render rows grouped by dataset in the paper's layout.
+pub fn render_table(rows: &[Row]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:<4} {:<18} {:>10} {:>14} {:>9}  {}\n",
+        "dataset", "arch", "method", "metric", "train time", "speedup", "notes"
+    ));
+    out.push_str(&"-".repeat(96));
+    out.push('\n');
+    let mut last_ds = String::new();
+    for r in rows {
+        let ds = if r.dataset == last_ds { String::new() } else { r.dataset.clone() };
+        last_ds = r.dataset.clone();
+        out.push_str(&format!(
+            "{:<12} {:<4} {:<18} {:>9.2}% {:>14} {:>8.1}x  {}\n",
+            ds,
+            r.arch,
+            r.method,
+            r.test_metric * 100.0,
+            fmt_duration(r.train_time),
+            r.speedup,
+            r.notes
+        ));
+    }
+    out
+}
+
+/// Compute speedups within each dataset against the named baseline method.
+pub fn fill_speedups(rows: &mut [Row], baseline_method: &str, baseline_arch: &str) {
+    let baselines: Vec<(String, f64)> = rows
+        .iter()
+        .filter(|r| r.method == baseline_method && r.arch == baseline_arch)
+        .map(|r| (r.dataset.clone(), r.train_time.as_secs_f64()))
+        .collect();
+    for r in rows.iter_mut() {
+        if let Some((_, base)) = baselines.iter().find(|(d, _)| *d == r.dataset) {
+            let t = r.train_time.as_secs_f64();
+            r.speedup = if t > 0.0 { base / t } else { 0.0 };
+        }
+    }
+}
+
+/// Render a simple two-column sweep (ablation figures).
+pub fn render_sweep(title: &str, xlabel: &str, ylabels: &[&str], points: &[(f64, Vec<f64>)]) -> String {
+    let mut out = format!("== {title} ==\n{:<12}", xlabel);
+    for y in ylabels {
+        out.push_str(&format!(" {:>14}", y));
+    }
+    out.push('\n');
+    for (x, ys) in points {
+        out.push_str(&format!("{:<12.4}", x));
+        for y in ys {
+            out.push_str(&format!(" {:>14.5}", y));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(ds: &str, arch: &str, method: &str, secs: f64) -> Row {
+        Row {
+            dataset: ds.into(),
+            arch: arch.into(),
+            method: method.into(),
+            metric_name: "err".into(),
+            test_metric: 0.149,
+            train_time: Duration::from_secs_f64(secs),
+            speedup: 1.0,
+            notes: String::new(),
+        }
+    }
+
+    #[test]
+    fn speedups_relative_to_baseline() {
+        let mut rows = vec![
+            row("adult", "SC", "libsvm", 60.0),
+            row("adult", "MC", "libsvm", 10.0),
+            row("adult", "GPU", "spsvm", 5.0),
+        ];
+        fill_speedups(&mut rows, "libsvm", "SC");
+        assert!((rows[0].speedup - 1.0).abs() < 1e-9);
+        assert!((rows[1].speedup - 6.0).abs() < 1e-9);
+        assert!((rows[2].speedup - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let rows = vec![row("adult", "SC", "libsvm", 60.0), row("adult", "MC", "libsvm", 10.0)];
+        let t = render_table(&rows);
+        assert!(t.contains("libsvm"));
+        assert!(t.contains("14.90%"));
+        assert!(t.lines().count() >= 4);
+    }
+
+    #[test]
+    fn sweep_renders() {
+        let s = render_sweep("basis", "|J|", &["err", "time"], &[(8.0, vec![0.2, 1.0])]);
+        assert!(s.contains("|J|") && s.contains("0.2"));
+    }
+}

@@ -1,0 +1,176 @@
+//! Artifact manifest parsing and shape-bucket lookup.
+//!
+//! `make artifacts` writes `artifacts/manifest.txt` with one line per
+//! AOT-lowered executable:
+//!
+//! ```text
+//! <op> <t> <d> <b> <s> <file>
+//! ```
+//!
+//! (0 in a dimension means the op ignores it.) The store picks the
+//! *smallest bucket that fits* a request and the caller pads/masks up to
+//! the bucket shape (DESIGN.md §5).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    pub op: String,
+    pub t: usize,
+    pub d: usize,
+    pub b: usize,
+    pub s: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest: entries grouped by op.
+#[derive(Debug, Default, Clone)]
+pub struct Manifest {
+    pub by_op: HashMap<String, Vec<Entry>>,
+    pub tile_t: usize,
+    pub s_cand: usize,
+}
+
+impl Manifest {
+    /// Parse `manifest.txt` in `dir`; entry paths are resolved into `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('#') {
+                // header: "# ... tile_t=1024 s_cand=64"
+                for tok in line.split_ascii_whitespace() {
+                    if let Some(v) = tok.strip_prefix("tile_t=") {
+                        m.tile_t = v.parse().unwrap_or(0);
+                    } else if let Some(v) = tok.strip_prefix("s_cand=") {
+                        m.s_cand = v.parse().unwrap_or(0);
+                    }
+                }
+                continue;
+            }
+            let f: Vec<&str> = line.split_ascii_whitespace().collect();
+            if f.len() != 6 {
+                bail!("manifest line {} malformed: '{line}'", lineno + 1);
+            }
+            let e = Entry {
+                op: f[0].to_string(),
+                t: f[1].parse().context("t")?,
+                d: f[2].parse().context("d")?,
+                b: f[3].parse().context("b")?,
+                s: f[4].parse().context("s")?,
+                path: dir.join(f[5]),
+            };
+            m.by_op.entry(e.op.clone()).or_default().push(e);
+        }
+        if m.by_op.is_empty() {
+            bail!("manifest has no entries");
+        }
+        for v in m.by_op.values_mut() {
+            v.sort_by_key(|e| (e.d, e.b, e.s, e.t));
+        }
+        Ok(m)
+    }
+
+    /// Smallest bucket of `op` with t >= min_t, d >= min_d, b >= min_b,
+    /// s >= min_s (0 requirements match anything).
+    pub fn lookup(&self, op: &str, min_t: usize, min_d: usize, min_b: usize, min_s: usize) -> Option<&Entry> {
+        self.by_op.get(op)?.iter().find(|e| {
+            (min_t == 0 || e.t >= min_t)
+                && (min_d == 0 || e.d >= min_d)
+                && (min_b == 0 || e.b >= min_b)
+                && (min_s == 0 || e.s >= min_s)
+        })
+    }
+
+    /// Distinct d buckets available for `kernel_block`.
+    pub fn d_buckets(&self) -> Vec<usize> {
+        let mut ds: Vec<usize> = self
+            .by_op
+            .get("kernel_block")
+            .map(|v| v.iter().map(|e| e.d).collect())
+            .unwrap_or_default();
+        ds.sort_unstable();
+        ds.dedup();
+        ds
+    }
+
+    /// Distinct b buckets available for `tile_stats`.
+    pub fn b_buckets(&self) -> Vec<usize> {
+        let mut bs: Vec<usize> = self
+            .by_op
+            .get("tile_stats")
+            .map(|v| v.iter().map(|e| e.b).collect())
+            .unwrap_or_default();
+        bs.sort_unstable();
+        bs.dedup();
+        bs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# wu-svm artifact manifest; tile_t=1024 s_cand=64
+kernel_block 1024 64 64 0 kb_64_64.hlo.txt
+kernel_block 1024 128 64 0 kb_128_64.hlo.txt
+kernel_block 1024 64 128 0 kb_64_128.hlo.txt
+tile_stats 1024 0 64 0 ts_64.hlo.txt
+tile_stats 1024 0 128 0 ts_128.hlo.txt
+cg_solve 0 0 64 0 cg_64.hlo.txt
+score_tile 1024 0 0 64 sc_64.hlo.txt
+";
+
+    #[test]
+    fn parses_header_and_entries() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.tile_t, 1024);
+        assert_eq!(m.s_cand, 64);
+        assert_eq!(m.by_op["kernel_block"].len(), 3);
+        assert_eq!(m.by_op["tile_stats"][0].path, Path::new("/a/ts_64.hlo.txt"));
+    }
+
+    #[test]
+    fn lookup_picks_smallest_fitting_bucket() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        let e = m.lookup("kernel_block", 1024, 100, 10, 0).unwrap();
+        assert_eq!((e.d, e.b), (128, 64));
+        let e2 = m.lookup("kernel_block", 0, 64, 65, 0).unwrap();
+        assert_eq!((e2.d, e2.b), (64, 128));
+    }
+
+    #[test]
+    fn lookup_none_when_too_big() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert!(m.lookup("kernel_block", 0, 4096, 0, 0).is_none());
+        assert!(m.lookup("nope", 0, 0, 0, 0).is_none());
+    }
+
+    #[test]
+    fn buckets_listed() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.d_buckets(), vec![64, 128]);
+        assert_eq!(m.b_buckets(), vec![64, 128]);
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        assert!(Manifest::parse("kernel_block 1 2 3\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("", Path::new("/")).is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! PJRT runtime: load + compile AOT artifacts, execute from the hot path.
+//!
+//! This is the "optimized opaque library" of the implicit approach: the
+//! Rust coordinator hands it large padded tiles and the XLA CPU backend
+//! owns the parallel schedule (the role MKL/CUBLAS/Jacket play in the
+//! paper). One `XlaRuntime` per process; executables are compiled lazily
+//! per (op, bucket) and cached.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{Entry, Manifest};
+
+/// Per-op execution statistics (perf pass, EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct OpStats {
+    pub calls: u64,
+    pub total: Duration,
+    pub compile_time: Duration,
+}
+
+/// Everything that touches the non-atomically-refcounted xla wrappers
+/// lives behind one mutex: the `xla` crate uses `Rc` internally (so its
+/// types are !Send/!Sync) even though the underlying PJRT CPU client is
+/// thread-safe. Serializing every compile/execute/drop through `inner`
+/// means no `Rc` refcount is ever mutated concurrently.
+struct Inner {
+    client: xla::PjRtClient,
+    executables: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+/// Loaded PJRT runtime with lazy executable cache.
+pub struct XlaRuntime {
+    inner: Mutex<Inner>,
+    manifest: Manifest,
+    stats: Mutex<HashMap<String, OpStats>>,
+}
+
+// SAFETY: all access to the Rc-bearing `Inner` is serialized by the
+// mutex (see `Inner` docs); the wrapped PJRT C API itself is thread-safe.
+// One dispatch at a time also matches the single-accelerator model of the
+// paper's implicit library (the device owns intra-op parallelism).
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+impl XlaRuntime {
+    /// Load from an artifacts directory (`make artifacts` output).
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(XlaRuntime {
+            inner: Mutex::new(Inner { client, executables: HashMap::new() }),
+            manifest,
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Row-tile size every artifact expects.
+    pub fn tile_t(&self) -> usize {
+        self.manifest.tile_t
+    }
+
+    /// Candidate batch size of the score_tile artifact.
+    pub fn s_cand(&self) -> usize {
+        self.manifest.s_cand
+    }
+
+    /// Execute `entry` with f32 inputs of the given shapes; returns every
+    /// tuple element flattened to f32. Compiles lazily on first use.
+    ///
+    /// Inputs go through `buffer_from_host_buffer` + `execute_b` (explicit
+    /// PjRtBuffers we drop ourselves) rather than `execute` with Literals:
+    /// the C shim behind `execute` leaks one device copy of every input
+    /// per call (~4 MB/call at the d=2048 bucket — found via the OOM in
+    /// the first full Table-1 run; see EXPERIMENTS.md §Perf).
+    pub fn execute(&self, entry: &Entry, inputs: &[(&[i64], &[f32])]) -> Result<Vec<Vec<f32>>> {
+        let t0 = Instant::now();
+        let mut inner = self.inner.lock().unwrap();
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|(shape, data)| {
+                let dims: Vec<usize> = shape.iter().map(|&v| v as usize).collect();
+                inner
+                    .client
+                    .buffer_from_host_buffer(data, &dims, None)
+                    .map_err(|e| anyhow!("host buffer {:?} for {}: {e:?}", shape, entry.op))
+            })
+            .collect::<Result<_>>()?;
+        if !inner.executables.contains_key(&entry.path) {
+            let tc = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&entry.path)
+                .map_err(|e| anyhow!("load {}: {e:?}", entry.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", entry.path.display()))?;
+            inner.executables.insert(entry.path.clone(), exe);
+            self.stats
+                .lock()
+                .unwrap()
+                .entry(entry.op.clone())
+                .or_default()
+                .compile_time += tc.elapsed();
+        }
+        let exe = inner.executables.get(&entry.path).expect("compiled above");
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", entry.op))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        drop(result);
+        drop(bufs);
+        drop(inner);
+        let parts = lit.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let out: Vec<Vec<f32>> = parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect::<Result<_>>()?;
+        let mut stats = self.stats.lock().unwrap();
+        let s = stats.entry(entry.op.clone()).or_default();
+        s.calls += 1;
+        s.total += t0.elapsed();
+        Ok(out)
+    }
+
+    /// Look up the smallest fitting bucket (see `Manifest::lookup`).
+    pub fn lookup(&self, op: &str, min_t: usize, min_d: usize, min_b: usize, min_s: usize) -> Result<Entry> {
+        self.manifest
+            .lookup(op, min_t, min_d, min_b, min_s)
+            .cloned()
+            .with_context(|| {
+                format!("no artifact for {op} (t>={min_t}, d>={min_d}, b>={min_b}, s>={min_s}); re-run `make artifacts`")
+            })
+    }
+
+    /// Snapshot of per-op stats.
+    pub fn stats(&self) -> HashMap<String, OpStats> {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Human-readable stats summary.
+    pub fn stats_report(&self) -> String {
+        let stats = self.stats();
+        let mut keys: Vec<_> = stats.keys().cloned().collect();
+        keys.sort();
+        let mut out = String::from("op                calls   exec_total   compile\n");
+        for k in keys {
+            let s = &stats[&k];
+            out.push_str(&format!(
+                "{:<16} {:>6} {:>12.3}s {:>8.3}s\n",
+                k,
+                s.calls,
+                s.total.as_secs_f64(),
+                s.compile_time.as_secs_f64()
+            ));
+        }
+        out
+    }
+}
+
+/// Default artifacts directory: $WU_SVM_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("WU_SVM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<XlaRuntime> {
+        let dir = default_artifacts_dir();
+        XlaRuntime::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_manifest_and_buckets() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        assert_eq!(rt.tile_t(), 1024);
+        assert!(!rt.manifest().d_buckets().is_empty());
+        assert!(!rt.manifest().b_buckets().is_empty());
+    }
+
+    #[test]
+    fn kernel_block_executes_and_matches_cpu() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let entry = rt.lookup("kernel_block", 1024, 64, 64, 0).unwrap();
+        let (t, d, b) = (entry.t, entry.d, entry.b);
+        let mut rng = crate::rng::Rng::new(1);
+        let x: Vec<f32> = (0..t * d).map(|_| rng.uniform_f32()).collect();
+        let xb: Vec<f32> = (0..b * d).map(|_| rng.uniform_f32()).collect();
+        let gamma = [0.35f32];
+        let out = rt
+            .execute(
+                &entry,
+                &[
+                    (&[t as i64, d as i64], &x),
+                    (&[b as i64, d as i64], &xb),
+                    (&[1], &gamma),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let k = &out[0];
+        assert_eq!(k.len(), t * b);
+        // spot-check against scalar CPU eval
+        let kind = crate::kernel::KernelKind::Rbf { gamma: gamma[0] };
+        for &(i, j) in &[(0usize, 0usize), (5, 3), (1023, 63), (512, 17)] {
+            let e = kind.eval(&x[i * d..(i + 1) * d], &xb[j * d..(j + 1) * d]);
+            assert!(
+                (k[i * b + j] - e).abs() < 1e-4,
+                "K[{i},{j}] = {} vs {e}",
+                k[i * b + j]
+            );
+        }
+        let stats = rt.stats();
+        assert_eq!(stats["kernel_block"].calls, 1);
+    }
+
+    #[test]
+    fn lookup_error_is_actionable() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let err = rt.lookup("kernel_block", 0, 1 << 20, 0, 0).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

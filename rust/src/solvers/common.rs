@@ -1,0 +1,312 @@
+//! Shared solver infrastructure: cached kernel-row providers and padded
+//! tile views of a dataset.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::engine::Engine;
+use crate::kernel::{self, cache::RowCache, KernelKind};
+
+/// Padded row-tile view of a dataset for engine calls: X tiles of
+/// [t x d_pad] with validity masks (DESIGN.md §5).
+pub struct TiledData {
+    pub t: usize,
+    pub d: usize,
+    pub d_pad: usize,
+    pub n: usize,
+    pub n_tiles: usize,
+    /// Per tile: t*d_pad features (padded rows zero).
+    pub x: Vec<Vec<f32>>,
+    /// Per tile: labels (padding 1.0, masked out).
+    pub y: Vec<Vec<f32>>,
+    /// Per tile: validity mask.
+    pub m: Vec<Vec<f32>>,
+}
+
+impl TiledData {
+    pub fn new(ds: &Dataset, t: usize, d_pad: usize) -> TiledData {
+        assert!(d_pad >= ds.d);
+        let n_tiles = (ds.n + t - 1) / t;
+        let mut x = Vec::with_capacity(n_tiles);
+        let mut y = Vec::with_capacity(n_tiles);
+        let mut m = Vec::with_capacity(n_tiles);
+        for tile in 0..n_tiles {
+            let mut xt = vec![0.0f32; t * d_pad];
+            let mut yt = vec![1.0f32; t];
+            let mut mt = vec![0.0f32; t];
+            for r in 0..t {
+                let i = tile * t + r;
+                if i >= ds.n {
+                    break;
+                }
+                xt[r * d_pad..r * d_pad + ds.d].copy_from_slice(ds.row(i));
+                yt[r] = ds.y[i];
+                mt[r] = 1.0;
+            }
+            x.push(xt);
+            y.push(yt);
+            m.push(mt);
+        }
+        TiledData { t, d: ds.d, d_pad, n: ds.n, n_tiles, x, y, m }
+    }
+
+    /// Global row index -> (tile, row-in-tile).
+    #[inline]
+    pub fn locate(&self, i: usize) -> (usize, usize) {
+        (i / self.t, i % self.t)
+    }
+
+    /// Copy row `i`'s padded features into `out` (length d_pad).
+    pub fn copy_row(&self, i: usize, out: &mut [f32]) {
+        let (tile, r) = self.locate(i);
+        out[..self.d_pad]
+            .copy_from_slice(&self.x[tile][r * self.d_pad..(r + 1) * self.d_pad]);
+    }
+}
+
+/// Cached provider of kernel rows k(x_i, .) over the whole training set.
+///
+/// The row *source* is the engine: CPU engines compute rows with scalar
+/// loops (threaded for CpuPar); the XLA engine computes them through the
+/// `kernel_block` artifact over padded tiles — the GPU-offload path of
+/// GPU SVM / GTSVM. A byte-bounded LRU cache sits in front either way
+/// (LibSVM's design).
+pub struct KernelRows {
+    pub kind: KernelKind,
+    engine: Engine,
+    cache: RowCache,
+    tiled: Option<TiledData>, // present iff engine is xla
+    /// Diagonal K_ii (constant 1 for RBF).
+    pub diag: Vec<f32>,
+    /// b bucket used for xla row batches.
+    bucket_b: usize,
+    pub rows_computed: u64,
+}
+
+impl KernelRows {
+    pub fn new(ds: &Dataset, kind: KernelKind, engine: Engine, cache_mb: usize) -> Result<KernelRows> {
+        let diag = (0..ds.n).map(|i| kind.self_eval(ds.row(i))).collect();
+        let (tiled, bucket_b) = if engine.is_xla() {
+            let (rt, gamma_ok) = match (&engine.kind, kind) {
+                (crate::engine::EngineKind::Xla { runtime }, KernelKind::Rbf { .. }) => (runtime.clone(), true),
+                (crate::engine::EngineKind::Xla { runtime }, _) => (runtime.clone(), false),
+                _ => unreachable!(),
+            };
+            anyhow::ensure!(gamma_ok, "xla kernel rows support the RBF kernel only");
+            let t = rt.tile_t();
+            let d_pad = *rt
+                .manifest()
+                .d_buckets()
+                .iter()
+                .find(|&&b| b >= ds.d)
+                .ok_or_else(|| anyhow::anyhow!("no d bucket >= {}", ds.d))?;
+            let b = *rt
+                .manifest()
+                .b_buckets()
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("no b buckets"))?;
+            (Some(TiledData::new(ds, t, d_pad)), b)
+        } else {
+            (None, 0)
+        };
+        Ok(KernelRows {
+            kind,
+            engine,
+            cache: RowCache::new(cache_mb * 1024 * 1024, ds.n),
+            tiled,
+            diag,
+            bucket_b,
+            rows_computed: 0,
+        })
+    }
+
+    /// Fetch row `i` (through the cache).
+    pub fn get(&mut self, ds: &Dataset, i: usize) -> Result<&[f32]> {
+        let engine = &self.engine;
+        let kind = &self.kind;
+        let tiled = &self.tiled;
+        let bucket_b = self.bucket_b;
+        let mut computed = false;
+        let mut err = None;
+        let row = self.cache.get_or_compute(i, |out| {
+            computed = true;
+            if let Some(tiled) = tiled {
+                if let Err(e) = xla_fill_rows(engine, kind, tiled, bucket_b, &[i], &mut [out]) {
+                    err = Some(e);
+                }
+            } else {
+                let threads = match engine.kind {
+                    crate::engine::EngineKind::CpuPar { threads } => threads,
+                    _ => 1,
+                };
+                kernel::kernel_row(kind, ds, i, threads, out);
+            }
+        });
+        if let Some(e) = err {
+            return Err(e);
+        }
+        if computed {
+            self.rows_computed += 1;
+        }
+        Ok(row)
+    }
+
+    /// Fetch a batch of rows at once into a dense [batch x n] buffer.
+    /// The XLA path amortizes one tile sweep over the whole batch — the
+    /// GTSVM working-set amortization.
+    pub fn get_batch(&mut self, ds: &Dataset, idx: &[usize]) -> Result<Vec<Vec<f32>>> {
+        // serve hits from cache, batch the misses
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); idx.len()];
+        let mut misses = Vec::new();
+        for (slot, &i) in idx.iter().enumerate() {
+            if self.cache.contains(i) {
+                out[slot] = self.get(ds, i)?.to_vec();
+            } else {
+                misses.push((slot, i));
+            }
+        }
+        if misses.is_empty() {
+            return Ok(out);
+        }
+        if let Some(tiled) = &self.tiled {
+            let ids: Vec<usize> = misses.iter().map(|&(_, i)| i).collect();
+            let mut bufs: Vec<Vec<f32>> = vec![vec![0.0f32; ds.n]; ids.len()];
+            {
+                let mut views: Vec<&mut [f32]> =
+                    bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+                xla_fill_rows(&self.engine, &self.kind, tiled, self.bucket_b, &ids, &mut views)?;
+            }
+            for ((slot, i), buf) in misses.into_iter().zip(bufs) {
+                self.rows_computed += 1;
+                let row = self.cache.get_or_compute(i, |out| out.copy_from_slice(&buf));
+                out[slot] = row.to_vec();
+            }
+        } else {
+            for (slot, i) in misses {
+                out[slot] = self.get(ds, i)?.to_vec();
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
+    }
+}
+
+/// Compute full kernel rows for `ids` through the `kernel_block` artifact:
+/// one sweep over the row tiles with the query points packed into the
+/// basis-side bucket.
+fn xla_fill_rows(
+    engine: &Engine,
+    kind: &KernelKind,
+    tiled: &TiledData,
+    bucket_b: usize,
+    ids: &[usize],
+    outs: &mut [&mut [f32]],
+) -> Result<()> {
+    assert!(ids.len() <= bucket_b, "batch {} > bucket {bucket_b}", ids.len());
+    assert_eq!(ids.len(), outs.len());
+    let gamma = match kind {
+        KernelKind::Rbf { gamma } => *gamma,
+        _ => anyhow::bail!("xla rows are RBF-only"),
+    };
+    let d_pad = tiled.d_pad;
+    let mut xb = vec![0.0f32; bucket_b * d_pad];
+    for (q, &i) in ids.iter().enumerate() {
+        let (tile, r) = tiled.locate(i);
+        xb[q * d_pad..(q + 1) * d_pad]
+            .copy_from_slice(&tiled.x[tile][r * d_pad..(r + 1) * d_pad]);
+    }
+    for tile in 0..tiled.n_tiles {
+        let k = engine.rbf_block(&tiled.x[tile], tiled.t, d_pad, &xb, bucket_b, gamma)?;
+        let base = tile * tiled.t;
+        let rows_here = tiled.t.min(tiled.n - base);
+        for (q, out) in outs.iter_mut().enumerate() {
+            for r in 0..rows_here {
+                out[base + r] = k[r * bucket_b + q];
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.uniform_f32()).collect();
+        let y: Vec<f32> = (0..n)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        Dataset::new_binary("t", d, x, y)
+    }
+
+    #[test]
+    fn tiled_data_pads_and_masks() {
+        let ds = dataset(100, 5, 1);
+        let td = TiledData::new(&ds, 64, 8);
+        assert_eq!(td.n_tiles, 2);
+        assert_eq!(td.m[0].iter().sum::<f32>(), 64.0);
+        assert_eq!(td.m[1].iter().sum::<f32>(), 36.0);
+        // row 70 lives in tile 1, row 6
+        let (tile, r) = td.locate(70);
+        assert_eq!((tile, r), (1, 6));
+        assert_eq!(&td.x[tile][r * 8..r * 8 + 5], ds.row(70));
+        assert_eq!(&td.x[tile][r * 8 + 5..r * 8 + 8], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn kernel_rows_cpu_match_direct() {
+        let ds = dataset(200, 7, 2);
+        let kind = KernelKind::Rbf { gamma: 0.8 };
+        let mut kr = KernelRows::new(&ds, kind, Engine::cpu_seq(), 16).unwrap();
+        let row = kr.get(&ds, 13).unwrap().to_vec();
+        for j in 0..ds.n {
+            assert!((row[j] - kind.eval(ds.row(13), ds.row(j))).abs() < 1e-5);
+        }
+        // cache hit on second fetch
+        let _ = kr.get(&ds, 13).unwrap();
+        assert!(kr.hit_rate() > 0.0);
+        assert_eq!(kr.rows_computed, 1);
+    }
+
+    #[test]
+    fn batch_matches_single_rows() {
+        let ds = dataset(150, 6, 3);
+        let kind = KernelKind::Rbf { gamma: 0.5 };
+        let mut kr = KernelRows::new(&ds, kind, Engine::cpu_par(2), 16).unwrap();
+        let batch = kr.get_batch(&ds, &[3, 77, 3, 149]).unwrap();
+        for (slot, &i) in [3usize, 77, 3, 149].iter().enumerate() {
+            for j in 0..ds.n {
+                assert!((batch[slot][j] - kind.eval(ds.row(i), ds.row(j))).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn xla_rows_match_cpu() {
+        let Ok(rt) = crate::runtime::XlaRuntime::load(&crate::runtime::default_artifacts_dir()) else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let ds = dataset(2500, 10, 4); // spans 3 tiles
+        let kind = KernelKind::Rbf { gamma: 0.6 };
+        let mut cpu = KernelRows::new(&ds, kind, Engine::cpu_seq(), 16).unwrap();
+        let mut xla = KernelRows::new(&ds, kind, Engine::xla(std::sync::Arc::new(rt)), 16).unwrap();
+        for &i in &[0usize, 1023, 1024, 2499] {
+            let a = cpu.get(&ds, i).unwrap().to_vec();
+            let b = xla.get(&ds, i).unwrap().to_vec();
+            let dmax: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+            assert!(dmax < 1e-4, "row {i} differs by {dmax}");
+        }
+        // batch path
+        let batch = xla.get_batch(&ds, &[5, 2000]).unwrap();
+        let a5 = cpu.get(&ds, 5).unwrap().to_vec();
+        let dmax: f32 = a5.iter().zip(&batch[0]).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(dmax < 1e-4);
+    }
+}

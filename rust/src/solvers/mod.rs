@@ -1,0 +1,42 @@
+//! SVM training algorithms.
+//!
+//! Explicit family (dual decomposition, §3 of the paper):
+//! * [`smo`] — SMO with 2nd-order working-set selection (LibSVM analog;
+//!   `cpu-seq` = LibSVM, `cpu-par` = LibSVM+OpenMP, `xla` = GPU SVM).
+//! * [`wss`] — working-set-S dual decomposition (GTSVM analog, S = 16).
+//!
+//! Implicit family (linear-algebra reformulations, §4):
+//! * [`mu`] — multiplicative updates (Sha et al.), full kernel.
+//! * [`primal`] — primal Newton (Chapelle), full kernel.
+//! * [`spsvm`] — sparse primal SVM (Keerthi et al.), the paper's headline
+//!   method (WU-SVM).
+
+pub mod common;
+pub mod mu;
+pub mod primal;
+pub mod smo;
+pub mod spsvm;
+pub mod wss;
+
+use crate::metrics::Stopwatch;
+use crate::model::SvmModel;
+
+/// Common training outcome.
+#[derive(Debug)]
+pub struct TrainResult {
+    pub model: SvmModel,
+    /// Total optimization iterations (solver-specific unit).
+    pub iterations: usize,
+    /// Final objective value (solver-specific convention).
+    pub objective: f64,
+    /// Phase timing breakdown.
+    pub stopwatch: Stopwatch,
+    /// Solver-specific notes for reports (cache hit rate etc.).
+    pub notes: Vec<(String, String)>,
+}
+
+impl TrainResult {
+    pub fn note(&mut self, k: &str, v: String) {
+        self.notes.push((k.to_string(), v));
+    }
+}

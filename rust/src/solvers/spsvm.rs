@@ -1,0 +1,631 @@
+//! SP-SVM — sparse primal SVM (Keerthi, Chapelle & DeCoste 2006), the
+//! paper's headline implicitly-parallel method (released as WU-SVM).
+//!
+//! Optimizes the basis-restricted primal (paper eq. 4)
+//!   min_b  1/2 b^T K_JJ b + C sum_i max(0, 1 - y_i (b^T k_Ji))^2
+//! by alternating two stages:
+//!
+//! * **Basis selection** — sample S candidates, score each by the
+//!   approximate one-dimensional loss decrease g_j^2 / (k_jj + h_j)
+//!   (accumulated tile-by-tile with `score_tile`), greedily add the top
+//!   scorers to J.
+//! * **Re-optimization** — Newton on the restricted primal: per-tile
+//!   gradient/Gauss-Newton statistics (`tile_stats`, a fused Pallas
+//!   kernel), masked CG solve (`cg_solve`, a single artifact call), line
+//!   search on cached margins.
+//!
+//! Every heavy operation is one large dense engine op over padded tiles,
+//! so the same code is the paper's multicore-MKL SP-SVM under `cpu-par`
+//! and the GPU SP-SVM under `xla`. Stopping follows the paper: after
+//! re-optimization, stop when (change in training error) / (basis vectors
+//! added) < epsilon (default 5e-6), or at the basis capacity.
+//!
+//! Memory: O(|J| n) for the cached kernel tiles — the compromise that
+//! lets SP-SVM scale where MU/full-primal cannot (paper §4).
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::engine::Engine;
+use crate::kernel::KernelKind;
+use crate::metrics::Stopwatch;
+use crate::model::SvmModel;
+use crate::rng::Rng;
+
+use super::common::TiledData;
+use super::TrainResult;
+
+/// SP-SVM hyperparameters.
+#[derive(Debug, Clone)]
+pub struct SpSvmParams {
+    pub c: f32,
+    pub gamma: f32,
+    /// Basis capacity, excluding the bias slot. The engine bucket is the
+    /// next b bucket above (max_basis + 1).
+    pub max_basis: usize,
+    /// Candidates sampled per selection round (Keerthi's kappa = 59; we
+    /// use the artifact bucket 64).
+    pub candidates: usize,
+    /// Basis vectors added per selection round before re-optimizing.
+    pub add_per_round: usize,
+    /// Paper's stopping threshold epsilon.
+    pub eps: f64,
+    /// Newton iterations per re-optimization.
+    pub max_newton: usize,
+    pub seed: u64,
+}
+
+impl Default for SpSvmParams {
+    fn default() -> Self {
+        SpSvmParams {
+            c: 1.0,
+            gamma: 1.0,
+            max_basis: 511,
+            candidates: 64,
+            add_per_round: 8,
+            eps: 5e-6,
+            max_newton: 8,
+            seed: 0x5b5b,
+        }
+    }
+}
+
+/// Internal training state over padded tiles.
+struct SpState {
+    tiled: TiledData,
+    /// Engine bucket for the basis dimension (includes bias slot 0).
+    /// Starts at the smallest bucket and grows as the basis fills —
+    /// tile_stats/cg cost scales with the bucket, so early rounds run at
+    /// a fraction of the final cost (EXPERIMENTS.md §Perf).
+    b: usize,
+    /// Available bucket ladder (ascending).
+    buckets: Vec<usize>,
+    /// Cached kernel tiles K[t x b]; column 0 = bias ones; columns filled
+    /// up to n_basis+1.
+    ktiles: Vec<Vec<f32>>,
+    /// Cached margins per tile.
+    margins: Vec<Vec<f32>>,
+    /// Basis vector rows (padded d), slot 0 unused (bias).
+    xb: Vec<f32>,
+    /// Training-set indices of basis vectors (slot order, bias skipped).
+    basis_idx: Vec<usize>,
+    /// K_JJ regularizer (b x b, bias row/col zero).
+    kjj: Vec<f32>,
+    beta: Vec<f32>,
+    bmask: Vec<f32>,
+}
+
+impl SpState {
+    fn n_basis(&self) -> usize {
+        self.basis_idx.len()
+    }
+
+    /// Occupied slots including bias.
+    fn occ(&self) -> usize {
+        self.n_basis() + 1
+    }
+}
+
+fn build_state(ds: &Dataset, engine: &Engine, params: &SpSvmParams) -> Result<SpState> {
+    // pick buckets: xla engines must land exactly on manifest buckets;
+    // cpu engines use the same sizes for comparability.
+    let (t, d_pad, buckets) = match &engine.kind {
+        crate::engine::EngineKind::Xla { runtime } => {
+            let t = runtime.tile_t();
+            let d_pad = *runtime
+                .manifest()
+                .d_buckets()
+                .iter()
+                .find(|&&x| x >= ds.d)
+                .ok_or_else(|| anyhow::anyhow!("no d bucket >= {} (make artifacts)", ds.d))?;
+            let buckets: Vec<usize> = runtime
+                .manifest()
+                .b_buckets()
+                .into_iter()
+                .filter(|&x| {
+                    // the d bucket must exist for kernel_block at this b
+                    runtime.manifest().lookup("kernel_block", t, d_pad, x, 0).is_some()
+                })
+                .collect();
+            anyhow::ensure!(
+                buckets.last().copied().unwrap_or(0) >= params.max_basis.min(511) + 1 || !buckets.is_empty(),
+                "no b bucket large enough (make artifacts)"
+            );
+            (t, d_pad, buckets)
+        }
+        _ => {
+            let t = 1024;
+            let max_b = (params.max_basis + 1).next_power_of_two().max(64);
+            let mut buckets = vec![];
+            let mut b = 64;
+            while b <= max_b {
+                buckets.push(b);
+                b *= 2;
+            }
+            (t, ds.d, buckets)
+        }
+    };
+    let b = buckets[0];
+    let tiled = TiledData::new(ds, t, d_pad);
+    let n_tiles = tiled.n_tiles;
+    let mut ktiles = Vec::with_capacity(n_tiles);
+    let mut margins = Vec::with_capacity(n_tiles);
+    for _ in 0..n_tiles {
+        let mut kt = vec![0.0f32; t * b];
+        for r in 0..t {
+            kt[r * b] = 1.0; // bias column
+        }
+        ktiles.push(kt);
+        margins.push(vec![0.0f32; t]);
+    }
+    let mut bmask = vec![0.0f32; b];
+    bmask[0] = 1.0; // bias active from the start
+    Ok(SpState {
+        tiled,
+        b,
+        buckets,
+        ktiles,
+        margins,
+        xb: vec![0.0f32; b * d_pad],
+        basis_idx: Vec::new(),
+        kjj: vec![0.0f32; b * b],
+        beta: vec![0.0f32; b],
+        bmask,
+    })
+}
+
+/// Migrate the state to the next bucket size (copy-stride reallocation of
+/// the kernel tiles and B-indexed arrays). Returns false at the ladder top.
+fn grow_bucket(st: &mut SpState) -> bool {
+    let old_b = st.b;
+    let Some(&new_b) = st.buckets.iter().find(|&&x| x > old_b) else {
+        return false;
+    };
+    let t = st.tiled.t;
+    let d_pad = st.tiled.d_pad;
+    for kt in st.ktiles.iter_mut() {
+        let mut nk = vec![0.0f32; t * new_b];
+        for r in 0..t {
+            nk[r * new_b..r * new_b + old_b].copy_from_slice(&kt[r * old_b..(r + 1) * old_b]);
+        }
+        *kt = nk;
+    }
+    let mut nkjj = vec![0.0f32; new_b * new_b];
+    for r in 0..old_b {
+        nkjj[r * new_b..r * new_b + old_b].copy_from_slice(&st.kjj[r * old_b..(r + 1) * old_b]);
+    }
+    st.kjj = nkjj;
+    let mut nxb = vec![0.0f32; new_b * d_pad];
+    nxb[..old_b * d_pad].copy_from_slice(&st.xb);
+    st.xb = nxb;
+    st.beta.resize(new_b, 0.0);
+    st.bmask.resize(new_b, 0.0);
+    st.b = new_b;
+    true
+}
+
+/// Loss over all tiles from cached margins: 1/2 b K_JJ b + C sum h^2,
+/// plus the training error count.
+fn loss_and_err(st: &SpState, c: f32) -> (f64, usize) {
+    let b = st.b;
+    // reg term
+    let mut reg = 0.0f64;
+    for i in 0..b {
+        if st.bmask[i] == 0.0 {
+            continue;
+        }
+        let bi = st.beta[i] as f64;
+        if bi == 0.0 {
+            continue;
+        }
+        let mut acc = 0.0f64;
+        for j in 0..b {
+            acc += st.kjj[i * b + j] as f64 * st.beta[j] as f64;
+        }
+        reg += bi * acc;
+    }
+    let mut loss = 0.5 * reg;
+    let mut nerr = 0usize;
+    for tile in 0..st.tiled.n_tiles {
+        let y = &st.tiled.y[tile];
+        let m = &st.tiled.m[tile];
+        let f = &st.margins[tile];
+        for r in 0..st.tiled.t {
+            if m[r] == 0.0 {
+                continue;
+            }
+            let h = (1.0 - y[r] * f[r]).max(0.0);
+            loss += (c * h * h) as f64;
+            if y[r] * f[r] <= 0.0 {
+                nerr += 1;
+            }
+        }
+    }
+    (loss, nerr)
+}
+
+/// Refresh cached margins from the kernel tiles (one predict per tile).
+fn refresh_margins(st: &mut SpState, engine: &Engine) -> Result<()> {
+    for tile in 0..st.tiled.n_tiles {
+        st.margins[tile] =
+            engine.predict_block(&st.ktiles[tile], st.tiled.t, st.b, &st.beta)?;
+    }
+    Ok(())
+}
+
+/// One full re-optimization (Newton with line search). Returns #iters.
+fn reoptimize(st: &mut SpState, engine: &Engine, params: &SpSvmParams, sw: &mut Stopwatch) -> Result<usize> {
+    let b = st.b;
+    let t = st.tiled.t;
+    let c = params.c;
+    let (mut cur_loss, _) = loss_and_err(st, c);
+    let mut iters = 0;
+    for _ in 0..params.max_newton {
+        iters += 1;
+        // accumulate data-term gradient and Gauss-Newton across tiles
+        let mut grad = vec![0.0f32; b];
+        let mut hess = vec![0.0f32; b * b];
+        for tile in 0..st.tiled.n_tiles {
+            let stats = engine.tile_stats(
+                &st.ktiles[tile],
+                t,
+                b,
+                &st.tiled.y[tile],
+                &st.tiled.m[tile],
+                &st.beta,
+                c,
+            )?;
+            for i in 0..b {
+                grad[i] += stats.grad[i];
+            }
+            for i in 0..b * b {
+                hess[i] += stats.hess[i];
+            }
+        }
+        sw.lap("reopt/stats");
+        // regularizer: g += K_JJ beta, H += K_JJ
+        for i in 0..b {
+            if st.bmask[i] == 0.0 {
+                continue;
+            }
+            let mut acc = 0.0f64;
+            for j in 0..b {
+                acc += st.kjj[i * b + j] as f64 * st.beta[j] as f64;
+            }
+            grad[i] += acc as f32;
+        }
+        for i in 0..b * b {
+            hess[i] += st.kjj[i];
+        }
+        // Levenberg damping relative to the Gauss-Newton diagonal scale
+        let mut diag_mean = 0.0f64;
+        let occ = st.occ().max(1);
+        for i in 0..b {
+            if st.bmask[i] != 0.0 {
+                diag_mean += hess[i * b + i] as f64;
+            }
+        }
+        diag_mean /= occ as f64;
+        let reg = (1e-4 * diag_mean).max(1e-6) as f32;
+
+        let neg_grad: Vec<f32> = grad.iter().map(|v| -v).collect();
+        let delta = engine.cg_solve(&hess, b, &neg_grad, &st.bmask, reg)?;
+        sw.lap("reopt/solve");
+
+        // line search on cached margin updates: f_new = f + step * K delta
+        let mut fdelta: Vec<Vec<f32>> = Vec::with_capacity(st.tiled.n_tiles);
+        for tile in 0..st.tiled.n_tiles {
+            fdelta.push(engine.predict_block(&st.ktiles[tile], t, b, &delta)?);
+        }
+        let mut step = 1.0f32;
+        let mut accepted = false;
+        for _ in 0..6 {
+            // trial margins
+            let trial_beta: Vec<f32> = st
+                .beta
+                .iter()
+                .zip(&delta)
+                .map(|(bv, dv)| bv + step * dv)
+                .collect();
+            let saved_margins = std::mem::take(&mut st.margins);
+            let mut trial_margins = saved_margins.clone();
+            for tile in 0..st.tiled.n_tiles {
+                for r in 0..t {
+                    trial_margins[tile][r] += step * fdelta[tile][r];
+                }
+            }
+            st.margins = trial_margins;
+            let saved_beta = std::mem::replace(&mut st.beta, trial_beta);
+            let (trial_loss, _) = loss_and_err(st, c);
+            if trial_loss <= cur_loss {
+                cur_loss = trial_loss;
+                accepted = true;
+                break;
+            }
+            // revert
+            st.beta = saved_beta;
+            st.margins = saved_margins;
+            step *= 0.5;
+        }
+        sw.lap("reopt/linesearch");
+        if !accepted {
+            break;
+        }
+        // stop when the Newton step stops mattering
+        let gn: f64 = grad
+            .iter()
+            .zip(&st.bmask)
+            .map(|(g, m)| (g * m) as f64)
+            .map(|v| v * v)
+            .sum::<f64>()
+            .sqrt();
+        if gn < 1e-4 * (1.0 + cur_loss.abs()) {
+            break;
+        }
+    }
+    Ok(iters)
+}
+
+/// Train SP-SVM.
+pub fn train(ds: &Dataset, params: &SpSvmParams, engine: &Engine) -> Result<TrainResult> {
+    assert!(!ds.is_multiclass(), "use multiclass::train_ovo");
+    let mut sw = Stopwatch::new();
+    let mut st = build_state(ds, engine, params)?;
+    let mut rng = Rng::new(params.seed);
+    let kind = KernelKind::Rbf { gamma: params.gamma };
+    let s = params.candidates.min(64);
+    let t = st.tiled.t;
+    let d_pad = st.tiled.d_pad;
+    let n = ds.n;
+    sw.lap("setup");
+
+    refresh_margins(&mut st, engine)?; // beta = 0 -> margins 0
+    let (_, mut last_err) = loss_and_err(&st, params.c);
+    let mut newton_total = 0usize;
+    let mut rounds = 0usize;
+    let max_basis = params.max_basis.min(st.buckets.last().unwrap() - 1);
+
+    'outer: while st.n_basis() < max_basis {
+        rounds += 1;
+        let mut added_this_phase = 0usize;
+        // ---- selection stage: add up to add_per_round basis vectors ----
+        while added_this_phase < params.add_per_round && st.n_basis() < max_basis {
+            // sample S candidates, biased toward active (hinge > 0) rows
+            let mut cand: Vec<usize> = Vec::with_capacity(s);
+            let mut guard = 0;
+            while cand.len() < s && guard < 50 * s {
+                guard += 1;
+                let i = rng.below(n);
+                let (tile, r) = st.tiled.locate(i);
+                let active = {
+                    let y = st.tiled.y[tile][r];
+                    let f = st.margins[tile][r];
+                    1.0 - y * f > 0.0
+                };
+                // keep actives; accept inactives with low probability
+                if (active || rng.bernoulli(0.1))
+                    && !st.basis_idx.contains(&i)
+                    && !cand.contains(&i)
+                {
+                    cand.push(i);
+                }
+            }
+            if cand.is_empty() {
+                break 'outer; // nothing violates: done
+            }
+            // pack candidate rows into the S-bucket
+            let mut xc = vec![0.0f32; s * d_pad];
+            for (q, &i) in cand.iter().enumerate() {
+                st.tiled.copy_row(i, &mut xc[q * d_pad..(q + 1) * d_pad]);
+            }
+            // accumulate scoring stats over tiles; stash Kc columns so the
+            // winners' kernel columns are free
+            let mut gc = vec![0.0f64; s];
+            let mut hc = vec![0.0f64; s];
+            let mut kc_tiles: Vec<Vec<f32>> = Vec::with_capacity(st.tiled.n_tiles);
+            for tile in 0..st.tiled.n_tiles {
+                let kc = engine.rbf_block(&st.tiled.x[tile], t, d_pad, &xc, s, params.gamma)?;
+                let y = &st.tiled.y[tile];
+                let m = &st.tiled.m[tile];
+                let f = &st.margins[tile];
+                let mut r_t = vec![0.0f32; t];
+                let mut a_t = vec![0.0f32; t];
+                for r in 0..t {
+                    let h = (1.0 - y[r] * f[r]).max(0.0);
+                    if h > 0.0 && m[r] != 0.0 {
+                        a_t[r] = 1.0;
+                        r_t[r] = y[r] * h;
+                    }
+                }
+                let (gct, hct) = engine.score_tile(&kc, t, s, &r_t, &a_t)?;
+                for q in 0..s.min(cand.len()) {
+                    gc[q] += gct[q] as f64;
+                    hc[q] += hct[q] as f64;
+                }
+                kc_tiles.push(kc);
+            }
+            sw.lap("select/score");
+            // Keerthi score: one-dim Newton decrease (2C g)^2 / (k_jj + 2C h)
+            let c2 = 2.0 * params.c as f64;
+            let mut scored: Vec<(f64, usize)> = (0..cand.len())
+                .map(|q| {
+                    let g = c2 * gc[q];
+                    let h = 1.0 + c2 * hc[q]; // k_jj = 1 for RBF
+                    (g * g / h, q)
+                })
+                .collect();
+            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            // add the best candidate from this sample (Keerthi adds 1 per
+            // 59-sample; we add 1 per 64-sample)
+            let &(best_score, q) = &scored[0];
+            if best_score <= 0.0 {
+                break 'outer;
+            }
+            let i = cand[q];
+            if st.occ() == st.b && !grow_bucket(&mut st) {
+                break 'outer; // bucket ladder exhausted
+            }
+            let slot = st.occ(); // next free slot (0 is bias)
+            // basis row
+            st.tiled
+                .copy_row(i, &mut st.xb[slot * d_pad..(slot + 1) * d_pad]);
+            // kernel column: reuse the scoring block
+            for tile in 0..st.tiled.n_tiles {
+                let kc = &kc_tiles[tile];
+                let kt = &mut st.ktiles[tile];
+                for r in 0..t {
+                    kt[r * st.b + slot] = kc[r * s + q];
+                }
+            }
+            // K_JJ extension (tiny: |J| kernel evals on the CPU)
+            let xi = &st.xb[slot * d_pad..(slot + 1) * d_pad];
+            for (other_pos, &other_idx) in st.basis_idx.clone().iter().enumerate() {
+                let _ = other_idx;
+                let oslot = other_pos + 1;
+                let xo = &st.xb[oslot * d_pad..(oslot + 1) * d_pad];
+                let v = kind.eval(xi, xo);
+                st.kjj[slot * st.b + oslot] = v;
+                st.kjj[oslot * st.b + slot] = v;
+            }
+            st.kjj[slot * st.b + slot] = 1.0;
+            st.bmask[slot] = 1.0;
+            st.basis_idx.push(i);
+            added_this_phase += 1;
+            sw.lap("select/add");
+        }
+        if added_this_phase == 0 {
+            break;
+        }
+        // ---- re-optimization stage ----
+        newton_total += reoptimize(&mut st, engine, params, &mut sw)?;
+        refresh_margins(&mut st, engine)?;
+        sw.lap("reopt/margins");
+        let (_, err) = loss_and_err(&st, params.c);
+        // paper's stopping rule
+        let delta_err = (last_err as f64 - err as f64) / n as f64;
+        last_err = err;
+        if st.n_basis() >= 16 && delta_err / (added_this_phase as f64) < params.eps {
+            break;
+        }
+    }
+
+    // ---- extract the model (unpadded vectors, bias from slot 0) ----
+    let nb = st.n_basis();
+    let mut vectors = Vec::with_capacity(nb * ds.d);
+    let mut coef = Vec::with_capacity(nb);
+    for pos in 0..nb {
+        let slot = pos + 1;
+        vectors.extend_from_slice(&st.xb[slot * d_pad..slot * d_pad + ds.d]);
+        coef.push(st.beta[slot]);
+    }
+    sw.lap("finalize");
+    let model = SvmModel {
+        kernel: kind,
+        vectors,
+        d: ds.d,
+        coef,
+        bias: st.beta[0],
+        solver: format!("spsvm[{}]", engine.name()),
+    };
+    let (final_loss, final_err) = loss_and_err(&st, params.c);
+    let mut res = TrainResult {
+        model,
+        iterations: newton_total,
+        objective: final_loss,
+        stopwatch: sw,
+        notes: vec![],
+    };
+    res.note("n_basis", nb.to_string());
+    res.note("rounds", rounds.to_string());
+    res.note("train_err", format!("{:.4}", final_err as f64 / n as f64));
+    res.note("kernel_cache_bytes", (st.tiled.n_tiles * t * st.b * 4).to_string());
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::error_rate;
+
+    fn xor_dataset(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(n * 2);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let a = rng.uniform_f32();
+            let b = rng.uniform_f32();
+            x.push(a);
+            x.push(b);
+            y.push(if (a > 0.5) ^ (b > 0.5) { 1.0 } else { -1.0 });
+        }
+        Dataset::new_binary("xor", 2, x, y)
+    }
+
+    fn params(gamma: f32, c: f32, max_basis: usize) -> SpSvmParams {
+        SpSvmParams { c, gamma, max_basis, ..Default::default() }
+    }
+
+    #[test]
+    fn solves_xor() {
+        let ds = xor_dataset(1500, 21);
+        let r = train(&ds, &params(8.0, 10.0, 63), &Engine::cpu_seq()).unwrap();
+        let margins = r.model.decision_batch(&ds, 2);
+        let err = error_rate(&margins, &ds.y);
+        assert!(err < 0.06, "train error {err}");
+        assert!(r.model.num_vectors() <= 63);
+        assert!(r.model.num_vectors() >= 8);
+    }
+
+    #[test]
+    fn basis_capacity_respected() {
+        let ds = xor_dataset(800, 23);
+        let r = train(&ds, &params(8.0, 10.0, 20), &Engine::cpu_seq()).unwrap();
+        assert!(r.model.num_vectors() <= 20);
+    }
+
+    #[test]
+    fn cpu_engines_agree() {
+        let ds = xor_dataset(600, 25);
+        let p = params(8.0, 5.0, 31);
+        let a = train(&ds, &p, &Engine::cpu_seq()).unwrap();
+        let b = train(&ds, &p, &Engine::cpu_par(4)).unwrap();
+        // same seed, same candidate stream -> same basis, near-same loss
+        assert_eq!(a.model.num_vectors(), b.model.num_vectors());
+        let rel = (a.objective - b.objective).abs() / a.objective.abs().max(1.0);
+        assert!(rel < 1e-2, "{} vs {}", a.objective, b.objective);
+    }
+
+    #[test]
+    fn more_basis_lowers_training_error() {
+        let ds = xor_dataset(1200, 27);
+        let small = train(&ds, &params(8.0, 10.0, 8), &Engine::cpu_seq()).unwrap();
+        let large = train(&ds, &params(8.0, 10.0, 63), &Engine::cpu_seq()).unwrap();
+        let es = error_rate(&small.model.decision_batch(&ds, 2), &ds.y);
+        let el = error_rate(&large.model.decision_batch(&ds, 2), &ds.y);
+        assert!(el <= es + 0.01, "small {es} vs large {el}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let ds = xor_dataset(500, 29);
+        let p = params(8.0, 5.0, 24);
+        let a = train(&ds, &p, &Engine::cpu_seq()).unwrap();
+        let b = train(&ds, &p, &Engine::cpu_seq()).unwrap();
+        assert_eq!(a.model.coef, b.model.coef);
+    }
+
+    #[test]
+    fn xla_engine_close_to_cpu() {
+        let Ok(rt) = crate::runtime::XlaRuntime::load(&crate::runtime::default_artifacts_dir()) else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let ds = xor_dataset(1500, 31);
+        let p = params(8.0, 10.0, 63);
+        let cpu = train(&ds, &p, &Engine::cpu_seq()).unwrap();
+        let xla = train(&ds, &p, &Engine::xla(std::sync::Arc::new(rt))).unwrap();
+        let ec = error_rate(&cpu.model.decision_batch(&ds, 2), &ds.y);
+        let ex = error_rate(&xla.model.decision_batch(&ds, 2), &ds.y);
+        assert!((ec - ex).abs() < 0.03, "cpu {ec} vs xla {ex}");
+    }
+}

@@ -1,0 +1,226 @@
+//! Integration tests: all layers composed, including the AOT-XLA path
+//! when artifacts exist (CI note: run `make artifacts` first; the xla
+//! cases skip gracefully without them).
+
+use std::sync::Arc;
+
+use wu_svm::coordinator::{self, run, serve, EngineChoice, Solver, TrainJob};
+use wu_svm::data::{libsvm, paper};
+use wu_svm::engine::Engine;
+use wu_svm::metrics::error_rate;
+use wu_svm::model::SvmModel;
+use wu_svm::runtime::{default_artifacts_dir, XlaRuntime};
+
+fn xla_runtime() -> Option<Arc<XlaRuntime>> {
+    coordinator::shared_runtime().ok().or_else(|| {
+        XlaRuntime::load(&default_artifacts_dir()).ok().map(Arc::new)
+    })
+}
+
+#[test]
+fn spsvm_beats_noise_floor_on_adult_analog() {
+    let spec = paper::spec("adult").unwrap();
+    let (tr, te) = spec.generate(0.04, 11);
+    let r = wu_svm::solvers::spsvm::train(
+        &tr,
+        &wu_svm::solvers::spsvm::SpSvmParams {
+            c: spec.c,
+            gamma: spec.gamma,
+            max_basis: 127,
+            ..Default::default()
+        },
+        &Engine::cpu_par(4),
+    )
+    .unwrap();
+    let err = error_rate(&r.model.decision_batch(&te, 4), &te.y);
+    // better than predicting the majority class (pos_frac 0.25)
+    assert!(err < 0.25, "test error {err}");
+}
+
+#[test]
+fn solver_family_agrees_on_small_workload() {
+    // All five solvers learn the same small problem to similar accuracy —
+    // the paper's "remarkably consistent" accuracy observation.
+    let spec = paper::spec("covertype").unwrap();
+    let (tr, te) = spec.generate(0.004, 13);
+    let kind = wu_svm::kernel::KernelKind::Rbf { gamma: spec.gamma };
+    let engine = Engine::cpu_par(4);
+
+    let smo = wu_svm::solvers::smo::train(
+        &tr,
+        kind,
+        &wu_svm::solvers::smo::SmoParams { c: spec.c, ..Default::default() },
+        &engine,
+    )
+    .unwrap();
+    let wss = wu_svm::solvers::wss::train(
+        &tr,
+        kind,
+        &wu_svm::solvers::wss::WssParams { c: spec.c, ..Default::default() },
+        &engine,
+    )
+    .unwrap();
+    let spsvm = wu_svm::solvers::spsvm::train(
+        &tr,
+        &wu_svm::solvers::spsvm::SpSvmParams {
+            c: spec.c,
+            gamma: spec.gamma,
+            max_basis: 255,
+            ..Default::default()
+        },
+        &engine,
+    )
+    .unwrap();
+    let primal = wu_svm::solvers::primal::train(
+        &tr,
+        kind,
+        &wu_svm::solvers::primal::PrimalParams { c: spec.c, ..Default::default() },
+    )
+    .unwrap();
+
+    let e_smo = error_rate(&smo.model.decision_batch(&te, 4), &te.y);
+    let e_wss = error_rate(&wss.model.decision_batch(&te, 4), &te.y);
+    let e_sp = error_rate(&spsvm.model.decision_batch(&te, 4), &te.y);
+    let e_pr = error_rate(&primal.model.decision_batch(&te, 4), &te.y);
+    eprintln!("smo {e_smo:.3} wss {e_wss:.3} spsvm {e_sp:.3} primal {e_pr:.3}");
+    assert!((e_smo - e_wss).abs() < 0.03, "smo {e_smo} vs wss {e_wss}");
+    assert!((e_smo - e_pr).abs() < 0.05, "smo {e_smo} vs primal {e_pr}");
+    assert!(e_sp < e_smo + 0.06, "spsvm {e_sp} vs smo {e_smo}");
+}
+
+#[test]
+fn xla_and_cpu_spsvm_match_end_to_end() {
+    let Some(rt) = xla_runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let spec = paper::spec("covertype").unwrap();
+    let (tr, te) = spec.generate(0.01, 17);
+    let p = wu_svm::solvers::spsvm::SpSvmParams {
+        c: spec.c,
+        gamma: spec.gamma,
+        max_basis: 127,
+        ..Default::default()
+    };
+    let cpu = wu_svm::solvers::spsvm::train(&tr, &p, &Engine::cpu_par(4)).unwrap();
+    let xla = wu_svm::solvers::spsvm::train(&tr, &p, &Engine::xla(rt)).unwrap();
+    let ec = error_rate(&cpu.model.decision_batch(&te, 4), &te.y);
+    let ex = error_rate(&xla.model.decision_batch(&te, 4), &te.y);
+    eprintln!("cpu {ec:.4} xla {ex:.4}");
+    assert!((ec - ex).abs() < 0.03, "cpu {ec} vs xla {ex}");
+}
+
+#[test]
+fn coordinator_runs_gpusvm_and_gtsvm_analogs() {
+    if xla_runtime().is_none() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    for solver in [Solver::Smo, Solver::Wss] {
+        let job = TrainJob {
+            dataset: "adult".into(),
+            scale: 0.008,
+            solver,
+            engine: EngineChoice::Xla,
+            ..Default::default()
+        };
+        let rec = run(&job).unwrap();
+        assert!(rec.test_metric < 0.45, "{solver:?}: {}", rec.test_metric);
+    }
+}
+
+#[test]
+fn model_round_trips_through_disk_and_libsvm_data() {
+    let dir = std::env::temp_dir().join("wu_svm_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = paper::spec("adult").unwrap();
+    let (tr, te) = spec.generate(0.01, 19);
+
+    // write/read the test set in libsvm format
+    let data_path = dir.join("adult_test.libsvm");
+    libsvm::write_file(&te, &data_path).unwrap();
+    let te_back = libsvm::read_file(&data_path, te.d).unwrap();
+    assert_eq!(te_back.n, te.n);
+
+    // train, save, reload, compare predictions
+    let r = wu_svm::solvers::spsvm::train(
+        &tr,
+        &wu_svm::solvers::spsvm::SpSvmParams {
+            c: spec.c,
+            gamma: spec.gamma,
+            max_basis: 63,
+            ..Default::default()
+        },
+        &Engine::cpu_par(4),
+    )
+    .unwrap();
+    let model_path = dir.join("adult.model");
+    r.model.save(&model_path).unwrap();
+    let loaded = SvmModel::load(&model_path).unwrap();
+    let a = r.model.decision_batch(&te_back, 2);
+    let b = loaded.decision_batch(&te_back, 2);
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-4);
+    }
+    std::fs::remove_file(data_path).ok();
+    std::fs::remove_file(model_path).ok();
+}
+
+#[test]
+fn serving_a_trained_model_end_to_end() {
+    let spec = paper::spec("adult").unwrap();
+    let (tr, te) = spec.generate(0.01, 23);
+    let r = wu_svm::solvers::spsvm::train(
+        &tr,
+        &wu_svm::solvers::spsvm::SpSvmParams {
+            c: spec.c,
+            gamma: spec.gamma,
+            max_basis: 63,
+            ..Default::default()
+        },
+        &Engine::cpu_par(4),
+    )
+    .unwrap();
+    let expect: Vec<f32> = (0..50).map(|i| r.model.decision(te.row(i))).collect();
+    let server = serve::Server::start(r.model, Engine::cpu_par(2), serve::ServeConfig::default());
+    let client = server.client();
+    for i in 0..50 {
+        let got = client.predict(te.row(i).to_vec()).unwrap();
+        assert!((got - expect[i]).abs() < 1e-4, "row {i}: {got} vs {}", expect[i]);
+    }
+    let stats = server.stop();
+    assert_eq!(stats.requests, 50);
+}
+
+#[test]
+fn mitfaces_analog_reports_auc_metric() {
+    let job = TrainJob {
+        dataset: "mitfaces".into(),
+        scale: 0.004,
+        solver: Solver::SpSvm,
+        engine: EngineChoice::CpuPar(4),
+        max_basis: 63,
+        ..Default::default()
+    };
+    let rec = run(&job).unwrap();
+    assert_eq!(rec.metric_name, "1-auc");
+    // must beat random ranking (1-auc = 0.5) comfortably
+    assert!(rec.test_metric < 0.35, "1-auc {}", rec.test_metric);
+}
+
+#[test]
+fn mnist_analog_trains_ovo_pairs() {
+    let job = TrainJob {
+        dataset: "mnist8m".into(),
+        scale: 0.004, // 240 rows, 45 tiny pairs
+        solver: Solver::SpSvm,
+        engine: EngineChoice::CpuPar(4),
+        max_basis: 15,
+        ..Default::default()
+    };
+    let rec = run(&job).unwrap();
+    assert_eq!(rec.metric_name, "error");
+    // 10 classes: random = 0.9; require real learning
+    assert!(rec.test_metric < 0.6, "multiclass error {}", rec.test_metric);
+    assert!(rec.notes.iter().any(|(k, v)| k == "pairs" && v == "45"));
+}

@@ -1,0 +1,275 @@
+//! Property-based tests (seeded-RNG case generation; the offline registry
+//! has no proptest). Each property runs across a few hundred random cases
+//! and shrinks nothing — failures print the case seed for reproduction.
+
+use wu_svm::data::Dataset;
+use wu_svm::engine::Engine;
+use wu_svm::kernel::{cache::RowCache, KernelKind};
+use wu_svm::pool;
+use wu_svm::rng::Rng;
+
+fn rand_dataset(rng: &mut Rng, n: usize, d: usize) -> Dataset {
+    let x: Vec<f32> = (0..n * d).map(|_| rng.uniform_f32()).collect();
+    let y: Vec<f32> = (0..n)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+        .collect();
+    Dataset::new_binary("p", d, x, y)
+}
+
+#[test]
+fn prop_split_ranges_always_partition() {
+    let mut rng = Rng::new(1);
+    for case in 0..500 {
+        let n = rng.below(10_000);
+        let parts = 1 + rng.below(64);
+        let rs = pool::split_ranges(n, parts);
+        let total: usize = rs.iter().map(|r| r.len()).sum();
+        assert_eq!(total, n, "case {case}: n={n} parts={parts}");
+        let mut next = 0;
+        for r in &rs {
+            assert_eq!(r.start, next, "case {case}: gap/overlap");
+            assert!(r.end > r.start, "case {case}: empty range emitted");
+            next = r.end;
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_for_covers_every_index_once() {
+    let mut rng = Rng::new(2);
+    for case in 0..60 {
+        let n = rng.below(3000);
+        let threads = 1 + rng.below(16);
+        let chunk = 1 + rng.below(40);
+        let hits: Vec<std::sync::atomic::AtomicU8> =
+            (0..n).map(|_| std::sync::atomic::AtomicU8::new(0)).collect();
+        pool::parallel_for(threads, n, chunk, |i| {
+            hits[i].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert!(
+            hits.iter().all(|h| h.load(std::sync::atomic::Ordering::Relaxed) == 1),
+            "case {case}: n={n} threads={threads} chunk={chunk}"
+        );
+    }
+}
+
+#[test]
+fn prop_scale_unit_bounds_and_idempotence() {
+    let mut rng = Rng::new(3);
+    for case in 0..100 {
+        let n = 2 + rng.below(100);
+        let d = 1 + rng.below(20);
+        let mut ds = Dataset::new_binary(
+            "s",
+            d,
+            (0..n * d).map(|_| (rng.gaussian_f32()) * 100.0).collect(),
+            (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect(),
+        );
+        ds.scale_unit();
+        assert!(
+            ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)),
+            "case {case}: out of unit interval"
+        );
+        let before = ds.x.clone();
+        ds.scale_unit(); // idempotent on already-scaled data
+        for (a, b) in before.iter().zip(&ds.x) {
+            assert!((a - b).abs() < 1e-6, "case {case}: not idempotent");
+        }
+    }
+}
+
+#[test]
+fn prop_row_cache_never_returns_wrong_row() {
+    let mut rng = Rng::new(4);
+    for case in 0..50 {
+        let rows = 2 + rng.below(30);
+        let len = 1 + rng.below(16);
+        let cap_bytes = (1 + rng.below(10)) * len * 4;
+        let mut cache = RowCache::new(cap_bytes, len);
+        for _ in 0..500 {
+            let i = rng.below(rows);
+            let got = cache.get_or_compute(i, |out| {
+                out.iter_mut().for_each(|v| *v = i as f32);
+            });
+            assert!(
+                got.iter().all(|&v| v == i as f32),
+                "case {case}: stale row for {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_engines_agree_on_random_shapes() {
+    let mut rng = Rng::new(5);
+    let seq = Engine::cpu_seq();
+    let par = Engine::cpu_par(4);
+    for case in 0..40 {
+        let t = 1 + rng.below(300);
+        let d = 1 + rng.below(50);
+        let b = 1 + rng.below(40);
+        let x: Vec<f32> = (0..t * d).map(|_| rng.uniform_f32()).collect();
+        let xb: Vec<f32> = (0..b * d).map(|_| rng.uniform_f32()).collect();
+        let gamma = rng.uniform_f32() * 2.0;
+        let k1 = seq.rbf_block(&x, t, d, &xb, b, gamma).unwrap();
+        let k2 = par.rbf_block(&x, t, d, &xb, b, gamma).unwrap();
+        let dmax: f32 = k1.iter().zip(&k2).map(|(a, c)| (a - c).abs()).fold(0.0, f32::max);
+        assert!(dmax < 1e-5, "case {case}: rbf diff {dmax}");
+        // kernel values are valid RBF values
+        assert!(k1.iter().all(|&v| (0.0..=1.0 + 1e-6).contains(&v)), "case {case}");
+    }
+}
+
+#[test]
+fn prop_smo_satisfies_kkt_approximately() {
+    let mut rng = Rng::new(6);
+    for case in 0..12 {
+        let n = 40 + rng.below(120);
+        let ds = rand_dataset(&mut rng, n, 3);
+        let c = 0.5 + rng.uniform_f32() * 5.0;
+        let kind = KernelKind::Rbf { gamma: 1.0 + rng.uniform_f32() * 4.0 };
+        let r = wu_svm::solvers::smo::train(
+            &ds,
+            kind,
+            &wu_svm::solvers::smo::SmoParams { c, eps: 1e-3, ..Default::default() },
+            &Engine::cpu_seq(),
+        )
+        .unwrap();
+        // box constraint: |coef| = |alpha y| <= C
+        assert!(
+            r.model.coef.iter().all(|&v| v.abs() <= c + 1e-4),
+            "case {case}: coef out of box"
+        );
+        // KKT: free SVs (0 < alpha < C) sit near the margin y f = 1
+        let margins = r.model.decision_batch(&ds, 2);
+        let mut worst: f32 = 0.0;
+        for (j, &co) in r.model.coef.iter().enumerate() {
+            let a = co.abs();
+            if a > 1e-5 && a < c - 1e-5 {
+                // find this SV's row in ds to read its label/margin
+                let vrow = &r.model.vectors[j * ds.d..(j + 1) * ds.d];
+                if let Some(i) = (0..ds.n).find(|&i| ds.row(i) == vrow) {
+                    worst = worst.max((ds.y[i] * margins[i] - 1.0).abs());
+                }
+            }
+        }
+        assert!(worst < 0.05, "case {case}: free SV margin violation {worst}");
+    }
+}
+
+#[test]
+fn prop_spsvm_respects_capacity_and_mask() {
+    let mut rng = Rng::new(7);
+    for case in 0..6 {
+        let n = 300 + rng.below(500);
+        let ds = rand_dataset(&mut rng, n, 4);
+        let cap = 8 + rng.below(40);
+        let r = wu_svm::solvers::spsvm::train(
+            &ds,
+            &wu_svm::solvers::spsvm::SpSvmParams {
+                c: 1.0,
+                gamma: 2.0,
+                max_basis: cap,
+                seed: case as u64,
+                ..Default::default()
+            },
+            &Engine::cpu_par(4),
+        )
+        .unwrap();
+        assert!(
+            r.model.num_vectors() <= cap,
+            "case {case}: {} > cap {cap}",
+            r.model.num_vectors()
+        );
+        // basis vectors must be actual training rows
+        for j in 0..r.model.num_vectors().min(5) {
+            let v = &r.model.vectors[j * ds.d..(j + 1) * ds.d];
+            assert!(
+                (0..ds.n).any(|i| ds.row(i) == v),
+                "case {case}: basis vector {j} not from the training set"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_serve_batcher_answers_all_under_random_load() {
+    let mut rng = Rng::new(8);
+    for case in 0..10 {
+        let batch = 1 + rng.below(64);
+        let n_req = 1 + rng.below(300);
+        let model = wu_svm::model::SvmModel {
+            kernel: KernelKind::Rbf { gamma: 0.5 },
+            vectors: vec![0.2, 0.8, 0.9, 0.1],
+            d: 2,
+            coef: vec![1.0, -0.5],
+            bias: 0.05,
+            solver: "p".into(),
+        };
+        let server = wu_svm::coordinator::serve::Server::start(
+            model.clone(),
+            Engine::cpu_seq(),
+            wu_svm::coordinator::serve::ServeConfig {
+                batch,
+                max_wait: std::time::Duration::from_micros(200),
+            },
+        );
+        let client = server.client();
+        let pending: Vec<_> = (0..n_req)
+            .map(|_| {
+                let f = vec![rng.uniform_f32(), rng.uniform_f32()];
+                let (id, rx) = client.submit(f.clone());
+                (id, rx, f)
+            })
+            .collect();
+        for (id, rx, f) in pending {
+            let resp = rx.recv().expect("response must arrive");
+            assert_eq!(resp.id, id, "case {case}: response routed to wrong request");
+            let want = model.decision(&f);
+            assert!(
+                (resp.margin - want).abs() < 1e-4,
+                "case {case}: margin {} want {want}",
+                resp.margin
+            );
+        }
+        let stats = server.stop();
+        assert_eq!(stats.requests, n_req as u64, "case {case}");
+        assert!(stats.max_batch <= batch, "case {case}: batch overflow");
+    }
+}
+
+#[test]
+fn prop_manifest_lookup_minimal_fitting_bucket() {
+    use wu_svm::runtime::Manifest;
+    let mut rng = Rng::new(9);
+    // synthetic manifest with random bucket grid
+    let mut text = String::from("# tile_t=1024 s_cand=64\n");
+    let mut ds: Vec<usize> = (0..4).map(|_| 32 << rng.below(6)).collect();
+    ds.sort_unstable();
+    ds.dedup();
+    let mut bs: Vec<usize> = (0..3).map(|_| 64 << rng.below(4)).collect();
+    bs.sort_unstable();
+    bs.dedup();
+    for &d in &ds {
+        for &b in &bs {
+            text.push_str(&format!("kernel_block 1024 {d} {b} 0 kb_{d}_{b}.hlo\n"));
+        }
+    }
+    let m = Manifest::parse(&text, std::path::Path::new("/x")).unwrap();
+    for _ in 0..300 {
+        let want_d = 1 + rng.below(*ds.last().unwrap());
+        let want_b = 1 + rng.below(*bs.last().unwrap());
+        let e = m.lookup("kernel_block", 0, want_d, want_b, 0).unwrap();
+        assert!(e.d >= want_d && e.b >= want_b, "bucket must fit");
+        // minimality: no other bucket fits with smaller (d, b) pair order
+        let smaller_fits = ds
+            .iter()
+            .any(|&d| d >= want_d && d < e.d)
+            .then(|| true)
+            .unwrap_or(false);
+        if smaller_fits {
+            // lookup sorts by (d, b): a smaller fitting d must not exist
+            panic!("non-minimal d bucket chosen: {} for want {}", e.d, want_d);
+        }
+    }
+}
