@@ -1,0 +1,29 @@
+#!/bin/sh
+# CI entry point. Usage: ./ci.sh [tier1|lint|all]
+# tier1 is the repository's canonical verification (see ROADMAP.md).
+set -eu
+
+mode="${1:-all}"
+
+tier1() {
+    cargo build --release
+    cargo test -q
+}
+
+lint() {
+    cargo fmt --check
+    cargo clippy --all-targets -- -D warnings
+}
+
+case "$mode" in
+    tier1) tier1 ;;
+    lint) lint ;;
+    all)
+        tier1
+        lint
+        ;;
+    *)
+        echo "usage: ./ci.sh [tier1|lint|all]" >&2
+        exit 2
+        ;;
+esac

@@ -45,6 +45,50 @@ fn main() {
         println!("{}   metric={:.4}", s.row(), metric);
     }
 
+    // Tentpole check: explicitly-parallel SMO (threaded WSS+gradient scans
+    // and active-set shrinking) against the seed cpu-par behavior (kernel
+    // rows threaded, scans sequential, no shrinking) on a synthetic
+    // n >= 4000 RBF problem.
+    header(&format!(
+        "smo hot loop on synthetic rbf n=4000 (cpu-par({threads}))"
+    ));
+    {
+        use wu_svm::data::synth::{generate, SynthSpec};
+        use wu_svm::engine::Engine;
+        use wu_svm::kernel::KernelKind;
+        use wu_svm::solvers::smo::{self, SmoParams};
+        let spec = SynthSpec {
+            d: 24,
+            classes: 2,
+            clusters: 8,
+            sigma: 0.08,
+            flip: 0.02,
+            sparsity: 0.0,
+            pos_frac: 0.5,
+        };
+        let ds = generate(&spec, 4000, 42, "smo-bench");
+        let kind = KernelKind::Rbf { gamma: 1.0 };
+        let engine = Engine::cpu_par(threads);
+        let seed_params = SmoParams {
+            c: 5.0,
+            shrinking: false,
+            scan_threads: 1,
+            ..Default::default()
+        };
+        let new_params = SmoParams { c: 5.0, ..Default::default() };
+        let mut objs = (f64::NAN, f64::NAN);
+        let s_old = bench_once("smo seed-style [seq scans, no shrinking]", || {
+            objs.0 = smo::train(&ds, kind, &seed_params, &engine).unwrap().objective;
+        });
+        println!("{}   objective={:.6}", s_old.row(), objs.0);
+        let s_new = bench_once("smo parallel scans + shrinking", || {
+            objs.1 = smo::train(&ds, kind, &new_params, &engine).unwrap().objective;
+        });
+        println!("{}   objective={:.6}", s_new.row(), objs.1);
+        let speedup = s_old.median.as_secs_f64() / s_new.median.as_secs_f64().max(1e-9);
+        println!("parallel WSS+gradient+shrinking speedup vs seed cpu-par: {speedup:.2}x");
+    }
+
     // F.wss ablation (cpu engine so it runs without artifacts)
     header("F.wss: working-set size (GTSVM's 16 vs SMO's 2)");
     for s in [2usize, 4, 8, 16, 32] {

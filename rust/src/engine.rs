@@ -74,7 +74,10 @@ impl Engine {
         matches!(self.kind, EngineKind::Xla { .. })
     }
 
-    fn threads(&self) -> usize {
+    /// Worker threads this engine hand-parallelizes over (1 for `cpu-seq`
+    /// and `xla` — the xla library owns its own parallel schedule). The
+    /// solvers use this to size their explicit WSS/gradient parallelism.
+    pub fn threads(&self) -> usize {
         match &self.kind {
             EngineKind::CpuSeq => 1,
             EngineKind::CpuPar { threads } => *threads,

@@ -1,11 +1,26 @@
-//! LRU kernel-row cache (LibSVM-style).
+//! LRU kernel-row caches (LibSVM-style).
 //!
 //! Dual-decomposition solvers touch a skewed subset of kernel rows over
 //! and over (working-set variables recur); LibSVM's cache is the reason it
 //! is usable at all at medium scale. Bounded by bytes, evicts least
 //! recently used whole rows.
+//!
+//! Two variants (see `rust/DESIGN.md` §Cache):
+//! * [`RowCache`] — the original single-owner cache (`&mut self`, rows
+//!   borrowed out, fixed row length). Kept for callers that own their
+//!   cache exclusively.
+//! * [`SharedRowCache`] — sharded, `Mutex`-per-shard, `Arc`-handed rows of
+//!   per-call length. Many solver instances (e.g. concurrent OvO
+//!   subproblems with different training-set sizes) share one byte
+//!   budget; rows are keyed by `(group, row)` so each subproblem sees its
+//!   own kernel. A failed fill commits nothing — the next fetch
+//!   recomputes instead of silently hitting a poisoned slot.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
 
 /// Byte-bounded LRU cache of f32 kernel rows.
 pub struct RowCache {
@@ -93,6 +108,170 @@ impl RowCache {
     }
 }
 
+/// One cached row inside a [`Shard`].
+struct Entry {
+    key: (u64, usize),
+    row: Arc<Vec<f32>>,
+    tick: u64,
+}
+
+/// One shard of a [`SharedRowCache`]: an independently locked LRU pool
+/// with its own byte budget.
+struct Shard {
+    map: HashMap<(u64, usize), usize>, // key -> index into entries
+    entries: Vec<Entry>,
+    bytes: usize,
+    clock: u64,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard { map: HashMap::new(), entries: Vec::new(), bytes: 0, clock: 0 }
+    }
+
+    fn lookup(&mut self, key: (u64, usize)) -> Option<Arc<Vec<f32>>> {
+        let idx = *self.map.get(&key)?;
+        self.clock += 1;
+        self.entries[idx].tick = self.clock;
+        Some(self.entries[idx].row.clone())
+    }
+
+    fn remove_at(&mut self, idx: usize) {
+        let e = self.entries.swap_remove(idx);
+        self.map.remove(&e.key);
+        self.bytes -= e.row.len() * 4;
+        if idx < self.entries.len() {
+            let moved = self.entries[idx].key;
+            self.map.insert(moved, idx);
+        }
+    }
+
+    fn insert(&mut self, key: (u64, usize), row: Arc<Vec<f32>>, budget: usize) {
+        if self.map.contains_key(&key) {
+            // another thread raced the same miss; keep its row
+            return;
+        }
+        let sz = row.len() * 4;
+        // Evict LRU rows until the new one fits. An oversized row still
+        // lands after the shard empties (progress over strictness).
+        while self.bytes + sz > budget && !self.entries.is_empty() {
+            let (victim, _) = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.tick)
+                .expect("entries nonempty");
+            self.remove_at(victim);
+        }
+        self.clock += 1;
+        self.map.insert(key, self.entries.len());
+        self.bytes += sz;
+        self.entries.push(Entry { key, row, tick: self.clock });
+    }
+}
+
+/// Byte-bounded, sharded LRU cache of f32 kernel rows with interior
+/// mutability: `&self` everywhere, one `Mutex` per shard, rows handed out
+/// as `Arc` clones so eviction never invalidates a row in use. Rows are
+/// keyed by `(group, row-index)` and may have different lengths per group;
+/// concurrent solver instances use distinct groups and share the single
+/// byte budget.
+pub struct SharedRowCache {
+    shards: Vec<Mutex<Shard>>,
+    bytes_per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SharedRowCache {
+    /// `max_bytes` of row storage split over `shards` independently locked
+    /// LRU pools.
+    pub fn new(max_bytes: usize, shards: usize) -> SharedRowCache {
+        let shards = shards.max(1);
+        SharedRowCache {
+            bytes_per_shard: (max_bytes / shards).max(64),
+            shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Total byte budget across shards.
+    pub fn budget_bytes(&self) -> usize {
+        self.bytes_per_shard * self.shards.len()
+    }
+
+    /// Bytes currently held.
+    pub fn used_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes).sum()
+    }
+
+    #[inline]
+    fn shard_of(&self, key: (u64, usize)) -> &Mutex<Shard> {
+        let h = key
+            .0
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(key.1 as u64)
+            .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        &self.shards[(h >> 32) as usize % self.shards.len()]
+    }
+
+    /// Fetch row `(group, i)` of `row_len` f32s, computing it with `fill`
+    /// on a miss. The fill runs **outside** the shard lock (concurrent
+    /// misses on different rows compute in parallel; a duplicate miss on
+    /// the same row wastes one computation, never correctness). If `fill`
+    /// errors, nothing is committed: the next fetch recomputes.
+    pub fn get_or_try_compute<F>(
+        &self,
+        group: u64,
+        i: usize,
+        row_len: usize,
+        fill: F,
+    ) -> Result<Arc<Vec<f32>>>
+    where
+        F: FnOnce(&mut [f32]) -> Result<()>,
+    {
+        let key = (group, i);
+        let shard = self.shard_of(key);
+        if let Some(row) = shard.lock().unwrap().lookup(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(row);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut buf = vec![0.0f32; row_len];
+        fill(&mut buf)?;
+        let row = Arc::new(buf);
+        shard
+            .lock()
+            .unwrap()
+            .insert(key, row.clone(), self.bytes_per_shard);
+        Ok(row)
+    }
+
+    /// Whether `(group, i)` is currently cached.
+    pub fn contains(&self, group: u64, i: usize) -> bool {
+        let key = (group, i);
+        self.shard_of(key).lock().unwrap().map.contains_key(&key)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits() as f64, self.misses() as f64);
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +329,99 @@ mod tests {
             }
         }
         assert!(c.misses >= 100);
+    }
+
+    fn ok_fill(v: f32) -> impl FnOnce(&mut [f32]) -> Result<()> {
+        move |row| {
+            row.iter_mut().for_each(|x| *x = v);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn shared_computes_on_miss_and_caches() {
+        let c = SharedRowCache::new(1 << 16, 4);
+        let r = c.get_or_try_compute(0, 5, 4, ok_fill(5.0)).unwrap();
+        assert_eq!(r.to_vec(), vec![5.0; 4]);
+        let r2 = c
+            .get_or_try_compute(0, 5, 4, |_| panic!("recomputed"))
+            .unwrap();
+        assert_eq!(r2.to_vec(), r.to_vec());
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+    }
+
+    #[test]
+    fn shared_failed_fill_commits_nothing() {
+        // Regression: a fill error must not leave a zero-filled (or
+        // half-filled) slot behind as a future silent hit.
+        let c = SharedRowCache::new(1 << 16, 2);
+        let err = c
+            .get_or_try_compute(3, 7, 8, |row| {
+                row[0] = 123.0; // partial garbage written before the error
+                Err(anyhow::anyhow!("simulated engine failure"))
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("simulated"));
+        assert!(!c.contains(3, 7), "failed fill left a cache entry");
+        // the next fetch recomputes and sees clean data
+        let r = c.get_or_try_compute(3, 7, 8, ok_fill(2.5)).unwrap();
+        assert_eq!(r.to_vec(), vec![2.5; 8]);
+        assert_eq!(c.misses(), 2, "second fetch must be a recompute");
+        assert_eq!(c.hits(), 0);
+    }
+
+    #[test]
+    fn shared_groups_are_distinct_and_budget_is_shared() {
+        let c = SharedRowCache::new(8 * 4 * 4, 2); // 8 rows of 4 floats
+        let a = c.get_or_try_compute(1, 0, 4, ok_fill(1.0)).unwrap();
+        let b = c.get_or_try_compute(2, 0, 4, ok_fill(2.0)).unwrap();
+        assert_eq!(a[0], 1.0);
+        assert_eq!(b[0], 2.0, "groups must not alias the same row index");
+        // overflow the shared budget from a third group; bytes stay bounded
+        for i in 0..100 {
+            let _ = c.get_or_try_compute(9, i, 4, ok_fill(i as f32)).unwrap();
+        }
+        assert!(
+            c.used_bytes() <= c.budget_bytes(),
+            "used {} > budget {}",
+            c.used_bytes(),
+            c.budget_bytes()
+        );
+    }
+
+    #[test]
+    fn shared_variable_row_lengths_coexist() {
+        let c = SharedRowCache::new(1 << 16, 2);
+        let short = c.get_or_try_compute(0, 1, 3, ok_fill(1.0)).unwrap();
+        let long = c.get_or_try_compute(1, 1, 9, ok_fill(2.0)).unwrap();
+        assert_eq!(short.len(), 3);
+        assert_eq!(long.len(), 9);
+    }
+
+    #[test]
+    fn shared_rows_survive_eviction_while_held() {
+        let c = SharedRowCache::new(2 * 4 * 4, 1); // 2 rows of 4 floats
+        let held = c.get_or_try_compute(0, 0, 4, ok_fill(7.0)).unwrap();
+        for i in 1..10 {
+            let _ = c.get_or_try_compute(0, i, 4, ok_fill(i as f32)).unwrap();
+        }
+        assert_eq!(held.to_vec(), vec![7.0; 4], "Arc row mutated by eviction");
+        assert!(c.used_bytes() <= c.budget_bytes().max(64));
+    }
+
+    #[test]
+    fn shared_concurrent_stress_never_returns_wrong_row() {
+        let c = SharedRowCache::new(32 * 4 * 8, 4);
+        crate::pool::parallel_for(8, 2000, 1, |k| {
+            let group = (k % 3) as u64;
+            let i = (k * 17) % 50;
+            let want = group as f32 * 1000.0 + i as f32;
+            let row = c.get_or_try_compute(group, i, 8, ok_fill(want)).unwrap();
+            assert!(
+                row.iter().all(|&v| v == want),
+                "stale row for ({group},{i})"
+            );
+        });
+        assert_eq!(c.hits() + c.misses(), 2000);
     }
 }

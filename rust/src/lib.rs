@@ -6,8 +6,9 @@
 //! linear-algebra calls, AOT-compiled from JAX/Pallas to XLA and executed
 //! through PJRT from this Rust coordinator).
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! Table-1 reproduction.
+//! See `rust/DESIGN.md` for the system inventory (engine layering, the
+//! shared kernel-row cache, the SMO shrinking heuristic) and
+//! `rust/EXPERIMENTS.md` for how to regenerate the Table-1 numbers.
 //!
 //! Layering (Python never runs at train/serve time):
 //! * L1 — Pallas kernels (`python/compile/kernels/`): RBF block, fused

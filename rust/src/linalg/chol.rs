@@ -7,13 +7,24 @@
 use super::Matrix;
 
 /// Errors from the direct solvers.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CholError {
-    #[error("matrix not positive definite at pivot {0} (value {1})")]
     NotPd(usize, f64),
-    #[error("dimension mismatch: {0}")]
     Dim(String),
 }
+
+impl std::fmt::Display for CholError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholError::NotPd(pivot, value) => {
+                write!(f, "matrix not positive definite at pivot {pivot} (value {value})")
+            }
+            CholError::Dim(dims) => write!(f, "dimension mismatch: {dims}"),
+        }
+    }
+}
+
+impl std::error::Error for CholError {}
 
 /// Lower-triangular Cholesky factor L with A = L L^T.
 pub fn factor(a: &Matrix) -> Result<Matrix, CholError> {

@@ -1,12 +1,19 @@
 //! One-vs-one multiclass training and voting (paper §5: MNIST8M uses
 //! pairwise coupling as LibSVM does; times are the accumulated per-pair
 //! training times).
+//!
+//! [`OvoModel::train`] runs the pairs sequentially (the seed behavior);
+//! [`OvoModel::train_parallel`] dispatches them over the pool so a
+//! multicore box trains many pairs at once — pair trainers typically
+//! share one [`crate::kernel::cache::SharedRowCache`] so the concurrent
+//! subproblems stay within a single kernel-cache byte budget.
 
 use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
+use crate::pool;
 
 /// A one-vs-one ensemble: models for every unordered class pair (a < b),
 /// where a positive margin votes for class `a`.
@@ -47,6 +54,48 @@ impl OvoModel {
             models,
             train_secs: sw.total().as_secs_f64(),
         })
+    }
+
+    /// Train the pair models concurrently over `workers` pool threads.
+    /// `train_pair` must be thread-safe (`Fn + Sync`); the resulting pair
+    /// order is identical to [`OvoModel::train`]'s, and `train_secs` stays
+    /// the *accumulated* per-pair time (the Table-1 convention), not the
+    /// smaller wall-clock of the concurrent run.
+    pub fn train_parallel<F>(ds: &Dataset, workers: usize, train_pair: F) -> Result<OvoModel>
+    where
+        F: Fn(&Dataset, usize, usize) -> Result<SvmModel> + Sync,
+    {
+        assert!(ds.is_multiclass(), "dataset has no class ids");
+        let k = ds.num_classes();
+        assert!(k >= 2);
+        let mut pair_ids = Vec::with_capacity(k * (k - 1) / 2);
+        for a in 0..k {
+            for b in (a + 1)..k {
+                pair_ids.push((a, b));
+            }
+        }
+        let results: Vec<Result<Option<(usize, usize, SvmModel, f64)>>> =
+            pool::parallel_map(workers.max(1), pair_ids.len(), |p| {
+                let (a, b) = pair_ids[p];
+                let view = ds.ovo_view(a, b);
+                if view.n == 0 {
+                    return Ok(None);
+                }
+                let t0 = std::time::Instant::now();
+                let model = train_pair(&view, a, b)?;
+                Ok(Some((a, b, model, t0.elapsed().as_secs_f64())))
+            });
+        let mut pairs = Vec::new();
+        let mut models = Vec::new();
+        let mut train_secs = 0.0f64;
+        for r in results {
+            if let Some((a, b, m, secs)) = r? {
+                pairs.push((a, b));
+                models.push(m);
+                train_secs += secs;
+            }
+        }
+        Ok(OvoModel { classes: k, pairs, models, train_secs })
     }
 
     /// Predict a class id for each row by pairwise voting (ties broken
@@ -123,6 +172,30 @@ mod tests {
         let pred = ovo.predict(&te, 2);
         let err = multiclass_error(&pred, &te.class_ids);
         assert!(err < 0.05, "error {err}");
+    }
+
+    #[test]
+    fn parallel_training_matches_sequential() {
+        let ds = three_class(300, 4);
+        let train_pair = |view: &Dataset, _a: usize, _b: usize| {
+            Ok(smo::train(
+                view,
+                KernelKind::Rbf { gamma: 2.0 },
+                &SmoParams { c: 10.0, ..Default::default() },
+                &Engine::cpu_seq(),
+            )?
+            .model)
+        };
+        let seq = OvoModel::train(&ds, train_pair).unwrap();
+        let par = OvoModel::train_parallel(&ds, 4, train_pair).unwrap();
+        assert_eq!(par.pairs, seq.pairs);
+        assert_eq!(par.models.len(), seq.models.len());
+        for (a, b) in par.models.iter().zip(&seq.models) {
+            assert_eq!(a.coef.len(), b.coef.len());
+            assert!((a.bias - b.bias).abs() < 1e-6);
+        }
+        let te = ds.subsample(100, 5);
+        assert_eq!(par.predict(&te, 2), seq.predict(&te, 2));
     }
 
     #[test]

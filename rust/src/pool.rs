@@ -1,4 +1,4 @@
-//! Scoped thread pool — the *explicit* parallelism substrate.
+//! Persistent scoped thread pool — the *explicit* parallelism substrate.
 //!
 //! This is our stand-in for the paper's hand-written OpenMP/pthreads
 //! parallelism: work is decomposed by hand into index ranges and dispatched
@@ -7,9 +7,19 @@
 //! where the parallel schedule is owned by the library (the paper's
 //! "implicit" approach).
 //!
-//! Built on `std::thread::scope` — the offline registry has no rayon.
+//! The pool is a lazily started set of long-lived workers (the offline
+//! registry has no rayon). Earlier revisions spawned scoped threads per
+//! call; that is fine for coarse work (kernel tiles) but the SMO hot loop
+//! issues two O(n) scans *per iteration*, where a ~100µs spawn dwarfs the
+//! scan itself. Submissions are erased closures drained cooperatively: the
+//! submitter always participates (so nested submissions from inside pool
+//! workers can never deadlock — every job can finish on its submitter
+//! alone), idle workers join up to the submitter's thread budget, and the
+//! submitter blocks until every joined worker has left the closure.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Shared raw pointer for disjoint parallel writes. Callers must
 /// guarantee each element is written by at most one task (as
@@ -39,9 +49,169 @@ pub fn default_threads() -> usize {
         .min(32)
 }
 
+/// Erased borrow of a submitter's drain closure. Only dereferenced while
+/// the owning [`Pool::run`] call keeps the closure alive (see the
+/// completion protocol in `run`).
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn() + Sync));
+unsafe impl Send for JobPtr {}
+unsafe impl Sync for JobPtr {}
+
+/// One in-flight submission.
+struct JobEntry {
+    job: JobPtr,
+    /// Helpers allowed to join (the submitter drains unconditionally).
+    max_helpers: usize,
+    /// Helpers currently inside the closure (guarded by `Pool::state`).
+    helpers_in: usize,
+    /// Set once the chunk source is drained; no new helper joins after.
+    exhausted: Arc<AtomicBool>,
+    /// A helper's drain panicked; rethrown by the submitter.
+    panicked: bool,
+    id: u64,
+}
+
+#[derive(Default)]
+struct PoolState {
+    jobs: Vec<JobEntry>,
+    next_id: u64,
+}
+
+/// Long-lived worker pool; one global instance, started on first use.
+struct Pool {
+    state: Mutex<PoolState>,
+    /// Wakes workers when a job is pushed.
+    work_cv: Condvar,
+    /// Wakes submitters when a helper leaves a job.
+    done_cv: Condvar,
+}
+
+impl Pool {
+    fn global() -> &'static Pool {
+        static POOL: OnceLock<&'static Pool> = OnceLock::new();
+        *POOL.get_or_init(|| {
+            let pool: &'static Pool = Box::leak(Box::new(Pool {
+                state: Mutex::new(PoolState::default()),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            }));
+            let workers = default_threads().saturating_sub(1).max(1);
+            for _ in 0..workers {
+                std::thread::Builder::new()
+                    .name("wu-svm-pool".into())
+                    .spawn(move || pool.worker_loop())
+                    .expect("spawn pool worker");
+            }
+            pool
+        })
+    }
+
+    fn worker_loop(&self) {
+        let mut guard = self.state.lock().unwrap();
+        loop {
+            let pick = guard.jobs.iter_mut().find(|j| {
+                !j.exhausted.load(Ordering::Relaxed) && j.helpers_in < j.max_helpers
+            });
+            if let Some(entry) = pick {
+                entry.helpers_in += 1;
+                let id = entry.id;
+                let job = entry.job;
+                drop(guard);
+                // SAFETY: the submitter of `id` blocks in `run` until
+                // `helpers_in` returns to 0, so the closure outlives this
+                // call (we registered under the lock before releasing it).
+                let result = catch_unwind(AssertUnwindSafe(|| unsafe { (*job.0)() }));
+                guard = self.state.lock().unwrap();
+                if let Some(entry) = guard.jobs.iter_mut().find(|j| j.id == id) {
+                    entry.helpers_in -= 1;
+                    if result.is_err() {
+                        entry.panicked = true;
+                    }
+                }
+                self.done_cv.notify_all();
+            } else {
+                guard = self.work_cv.wait(guard).unwrap();
+            }
+        }
+    }
+
+    /// Run `job` to completion: the calling thread drains it, up to
+    /// `max_helpers` idle workers join, and the call returns only after
+    /// every participant has left the closure. `exhausted` must be set by
+    /// the closure once its work source is empty (participants that enter
+    /// afterwards return immediately). Panics from helpers are rethrown.
+    fn run(&self, job: &(dyn Fn() + Sync), max_helpers: usize, exhausted: &Arc<AtomicBool>) {
+        let id = {
+            let mut guard = self.state.lock().unwrap();
+            let id = guard.next_id;
+            guard.next_id += 1;
+            guard.jobs.push(JobEntry {
+                job: JobPtr(job as *const _),
+                max_helpers,
+                helpers_in: 0,
+                exhausted: exhausted.clone(),
+                panicked: false,
+                id,
+            });
+            id
+        };
+        self.work_cv.notify_all();
+        // The completion guard runs even if the submitter's own drain
+        // panics: it bars new helpers, waits out the ones inside the
+        // closure (which must stay borrowable until they leave), and
+        // unregisters the job.
+        struct Completion<'a> {
+            pool: &'a Pool,
+            exhausted: &'a AtomicBool,
+            id: u64,
+        }
+        impl Drop for Completion<'_> {
+            fn drop(&mut self) {
+                self.exhausted.store(true, Ordering::Relaxed);
+                let mut guard = self.pool.state.lock().unwrap();
+                loop {
+                    let pos = guard
+                        .jobs
+                        .iter()
+                        .position(|j| j.id == self.id)
+                        .expect("job registered");
+                    if guard.jobs[pos].helpers_in == 0 {
+                        guard.jobs.remove(pos);
+                        break;
+                    }
+                    guard = self.pool.done_cv.wait(guard).unwrap();
+                }
+            }
+        }
+        let completion = Completion { pool: self, exhausted: exhausted.as_ref(), id };
+        job();
+        // Wait for helpers now so the panic flag is final, then rethrow.
+        let panicked = {
+            let mut guard = self.state.lock().unwrap();
+            loop {
+                let pos = guard
+                    .jobs
+                    .iter()
+                    .position(|j| j.id == completion.id)
+                    .expect("job registered");
+                if guard.jobs[pos].helpers_in == 0 {
+                    break guard.jobs[pos].panicked;
+                }
+                guard = self.done_cv.wait(guard).unwrap();
+            }
+        };
+        if panicked {
+            // completion's Drop unregisters before the unwind leaves `run`
+            panic!("wu-svm pool helper panicked");
+        }
+        drop(completion);
+    }
+}
+
 /// Run `f(i)` for every `i in 0..n`, dynamically load-balanced over
-/// `threads` workers in chunks of `chunk`. `f` must be `Sync` (called
-/// concurrently from many threads).
+/// `threads` participants in chunks of `chunk`. `f` must be `Sync`
+/// (called concurrently from many threads). `threads == 1` runs inline
+/// with no synchronization at all.
 pub fn parallel_for<F>(threads: usize, n: usize, chunk: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -56,11 +226,13 @@ where
         }
         return;
     }
-    let counter = AtomicUsize::new(0);
     let chunk = chunk.max(1);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
+    let counter = AtomicUsize::new(0);
+    let exhausted = Arc::new(AtomicBool::new(false));
+    let drain = {
+        let exhausted = exhausted.clone();
+        move || {
+            loop {
                 let start = counter.fetch_add(chunk, Ordering::Relaxed);
                 if start >= n {
                     break;
@@ -69,27 +241,114 @@ where
                 for i in start..end {
                     f(i);
                 }
-            });
+            }
+            exhausted.store(true, Ordering::Relaxed);
         }
-    });
+    };
+    Pool::global().run(&drain, threads - 1, &exhausted);
 }
 
 /// Map `f` over `0..n` in parallel, collecting results in index order.
+/// Each result is written directly into its (uninitialized) output slot —
+/// the same disjoint-write guarantee `parallel_for` documents — so `T`
+/// needs neither `Default` nor `Clone` and no per-element lock is taken.
 pub fn parallel_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    let done: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+    // If `f` panics, the output Vec unwinds with len 0; this guard drops
+    // the elements that were already written so they are not leaked.
+    // `Pool::run` only propagates a panic after every participant has
+    // left the closure, so the flags are final when the guard runs.
+    struct DropInitialized<'a, T> {
+        ptr: *mut T,
+        done: &'a [AtomicBool],
+        armed: bool,
+    }
+    impl<T> Drop for DropInitialized<'_, T> {
+        fn drop(&mut self) {
+            if !self.armed {
+                return;
+            }
+            for (i, d) in self.done.iter().enumerate() {
+                if d.load(Ordering::Acquire) {
+                    // SAFETY: slot i was fully written and is not owned by
+                    // the Vec (its len is still 0).
+                    unsafe { std::ptr::drop_in_place(self.ptr.add(i)) };
+                }
+            }
+        }
+    }
+    let mut guard = DropInitialized { ptr: out.as_mut_ptr(), done: &done, armed: true };
     {
-        let slots: Vec<std::sync::Mutex<&mut T>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
+        let out_ptr = SendPtr::new(out.as_mut_ptr());
+        let done_ref = &done;
         parallel_for(threads, n, 1, |i| {
-            let mut slot = slots[i].lock().unwrap();
-            **slot = f(i);
+            // SAFETY: slot i of the reserved capacity is written by exactly
+            // one task (parallel_for visits each index once).
+            unsafe { out_ptr.get().add(i).write(f(i)) };
+            done_ref[i].store(true, Ordering::Release);
         });
     }
+    guard.armed = false;
+    // SAFETY: all n slots were initialized above (parallel_for covers
+    // every index; a panic in `f` propagates before reaching here).
+    unsafe { out.set_len(n) };
     out
+}
+
+/// Deterministic chunked parallel reduction over `0..n`: `map` folds each
+/// contiguous chunk `[k*chunk, (k+1)*chunk)` into a partial accumulator,
+/// and partials are combined **in chunk order** with `reduce`. The result
+/// is therefore identical for every thread count (including 1), which is
+/// what lets `cpu-par(k)` SMO reproduce `cpu-seq` working-set choices
+/// bit for bit. Returns `None` when `n == 0`.
+pub fn parallel_reduce<A, M, R>(
+    threads: usize,
+    n: usize,
+    chunk: usize,
+    map: M,
+    reduce: R,
+) -> Option<A>
+where
+    A: Send,
+    M: Fn(std::ops::Range<usize>) -> A + Sync,
+    R: Fn(A, A) -> A,
+{
+    if n == 0 {
+        return None;
+    }
+    let chunk = chunk.max(1);
+    let n_chunks = (n + chunk - 1) / chunk;
+    let threads = threads.max(1).min(n_chunks);
+    if threads == 1 {
+        let mut acc = map(0..chunk.min(n));
+        let mut start = chunk;
+        while start < n {
+            let end = (start + chunk).min(n);
+            acc = reduce(acc, map(start..end));
+            start = end;
+        }
+        return Some(acc);
+    }
+    let mut partials: Vec<Option<A>> = (0..n_chunks).map(|_| None).collect();
+    {
+        let out_ptr = SendPtr::new(partials.as_mut_ptr());
+        parallel_for(threads, n_chunks, 1, |c| {
+            let start = c * chunk;
+            let end = (start + chunk).min(n);
+            // SAFETY: partial slot c is written by exactly one task, and
+            // overwriting the prefilled `None` drops nothing.
+            unsafe { out_ptr.get().add(c).write(Some(map(start..end))) };
+        });
+    }
+    partials
+        .into_iter()
+        .map(|p| p.expect("every chunk produced a partial"))
+        .reduce(reduce)
 }
 
 /// Split `0..n` into `parts` near-equal contiguous ranges.
@@ -121,23 +380,16 @@ where
         return;
     }
     let chunk = chunk.max(1);
-    let chunks: Vec<(usize, &mut [T])> =
-        data.chunks_mut(chunk).enumerate().collect();
-    let counter = AtomicUsize::new(0);
-    let n = chunks.len();
-    let slots: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
-        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
-    std::thread::scope(|s| {
-        for _ in 0..threads.max(1).min(n) {
-            s.spawn(|| loop {
-                let i = counter.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let (idx, slice) = slots[i].lock().unwrap().take().unwrap();
-                f(idx, slice);
-            });
-        }
+    let n = data.len();
+    let n_chunks = (n + chunk - 1) / chunk;
+    let base = SendPtr::new(data.as_mut_ptr());
+    parallel_for(threads, n_chunks, 1, |idx| {
+        let start = idx * chunk;
+        let len = chunk.min(n - start);
+        // SAFETY: chunk idx covers [start, start+len), disjoint from every
+        // other chunk, and each idx is visited exactly once.
+        let slice = unsafe { std::slice::from_raw_parts_mut(base.get().add(start), len) };
+        f(idx, slice);
     });
 }
 
@@ -168,6 +420,106 @@ mod tests {
     fn parallel_map_preserves_order() {
         let out = parallel_map(4, 257, |i| i * i);
         assert_eq!(out, (0..257).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_handles_non_default_non_clone_types() {
+        // neither Default nor Clone: a boxed string built per index
+        struct Opaque(Box<str>, usize);
+        let out = parallel_map(8, 100, |i| Opaque(format!("v{i}").into(), i));
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v.1, i);
+            assert_eq!(&*v.0, format!("v{i}").as_str());
+        }
+    }
+
+    #[test]
+    fn parallel_reduce_sums_like_sequential() {
+        let expect: u64 = (0..10_000u64).sum();
+        for &threads in &[1usize, 2, 7] {
+            let got = parallel_reduce(
+                threads,
+                10_000,
+                333,
+                |r| r.map(|i| i as u64).sum::<u64>(),
+                |a, b| a + b,
+            )
+            .unwrap();
+            assert_eq!(got, expect, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_reduce_deterministic_argmax_across_thread_counts() {
+        // values with deliberate ties: the winner must not depend on the
+        // thread count, only on the (chunk-ordered) reduction
+        let vals: Vec<i64> = (0..5000).map(|i| (i * 37) % 101).collect();
+        let argmax = |threads: usize| {
+            parallel_reduce(
+                threads,
+                vals.len(),
+                256,
+                |r| {
+                    let mut best = (i64::MIN, usize::MAX);
+                    for i in r {
+                        if vals[i] >= best.0 {
+                            best = (vals[i], i);
+                        }
+                    }
+                    best
+                },
+                |a, b| if b.0 >= a.0 { b } else { a },
+            )
+            .unwrap()
+        };
+        let base = argmax(1);
+        for threads in [2usize, 4, 16] {
+            assert_eq!(argmax(threads), base, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_reduce_empty_is_none() {
+        assert!(parallel_reduce(4, 0, 8, |_| 0u32, |a, b| a + b).is_none());
+    }
+
+    #[test]
+    fn nested_submissions_do_not_deadlock() {
+        // outer parallel_map items each submit their own inner reductions,
+        // mirroring OvO pair workers running parallel SMO scans
+        let sums = parallel_map(4, 8, |outer| {
+            parallel_reduce(
+                4,
+                1000,
+                64,
+                |r| r.map(|i| (i + outer) as u64).sum::<u64>(),
+                |a, b| a + b,
+            )
+            .unwrap()
+        });
+        for (outer, s) in sums.iter().enumerate() {
+            let expect: u64 = (0..1000).map(|i| (i + outer) as u64).sum();
+            assert_eq!(*s, expect);
+        }
+    }
+
+    #[test]
+    fn many_small_jobs_reuse_the_pool() {
+        // regression guard for per-call spawn overhead: thousands of tiny
+        // submissions must complete promptly
+        let t0 = std::time::Instant::now();
+        let total = AtomicU64::new(0);
+        for _ in 0..2000 {
+            parallel_for(4, 64, 8, |i| {
+                total.fetch_add(i as u64, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 2000 * (0..64u64).sum::<u64>());
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(20),
+            "pool submissions far too slow: {:?}",
+            t0.elapsed()
+        );
     }
 
     #[test]

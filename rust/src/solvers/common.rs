@@ -1,14 +1,16 @@
 //! Shared solver infrastructure: cached kernel-row providers and padded
 //! tile views of a dataset.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::engine::Engine;
-use crate::kernel::{self, cache::RowCache, KernelKind};
+use crate::kernel::{self, cache::SharedRowCache, KernelKind};
 
 /// Padded row-tile view of a dataset for engine calls: X tiles of
-/// [t x d_pad] with validity masks (DESIGN.md §5).
+/// [t x d_pad] with validity masks (`rust/DESIGN.md` §Tiling).
 pub struct TiledData {
     pub t: usize,
     pub d: usize,
@@ -69,12 +71,17 @@ impl TiledData {
 /// The row *source* is the engine: CPU engines compute rows with scalar
 /// loops (threaded for CpuPar); the XLA engine computes them through the
 /// `kernel_block` artifact over padded tiles — the GPU-offload path of
-/// GPU SVM / GTSVM. A byte-bounded LRU cache sits in front either way
-/// (LibSVM's design).
+/// GPU SVM / GTSVM. A byte-bounded sharded LRU cache sits in front either
+/// way (LibSVM's design); several `KernelRows` instances may share one
+/// cache (and its byte budget) via [`KernelRows::with_shared_cache`], each
+/// under its own group id — how concurrent OvO subproblems stay within a
+/// single memory bound.
 pub struct KernelRows {
     pub kind: KernelKind,
     engine: Engine,
-    cache: RowCache,
+    cache: Arc<SharedRowCache>,
+    group: u64,
+    row_len: usize,
     tiled: Option<TiledData>, // present iff engine is xla
     /// Diagonal K_ii (constant 1 for RBF).
     pub diag: Vec<f32>,
@@ -83,8 +90,34 @@ pub struct KernelRows {
     pub rows_computed: u64,
 }
 
+/// A sensible shard count for a cache serving `threads` workers.
+pub fn cache_shards(threads: usize) -> usize {
+    threads.clamp(1, 16).next_power_of_two()
+}
+
 impl KernelRows {
-    pub fn new(ds: &Dataset, kind: KernelKind, engine: Engine, cache_mb: usize) -> Result<KernelRows> {
+    /// Provider with a private cache of `cache_mb` megabytes.
+    pub fn new(
+        ds: &Dataset,
+        kind: KernelKind,
+        engine: Engine,
+        cache_mb: usize,
+    ) -> Result<KernelRows> {
+        let shards = cache_shards(engine.threads());
+        let cache = Arc::new(SharedRowCache::new(cache_mb * 1024 * 1024, shards));
+        KernelRows::with_shared_cache(ds, kind, engine, cache, 0)
+    }
+
+    /// Provider backed by a shared cache under the given `group` id.
+    /// Groups keep row indices from different datasets (e.g. OvO pair
+    /// views) from aliasing; the byte budget is shared by all groups.
+    pub fn with_shared_cache(
+        ds: &Dataset,
+        kind: KernelKind,
+        engine: Engine,
+        cache: Arc<SharedRowCache>,
+        group: u64,
+    ) -> Result<KernelRows> {
         let diag = (0..ds.n).map(|i| kind.self_eval(ds.row(i))).collect();
         let (tiled, bucket_b) = if engine.is_xla() {
             let (rt, gamma_ok) = match (&engine.kind, kind) {
@@ -112,7 +145,9 @@ impl KernelRows {
         Ok(KernelRows {
             kind,
             engine,
-            cache: RowCache::new(cache_mb * 1024 * 1024, ds.n),
+            cache,
+            group,
+            row_len: ds.n,
             tiled,
             diag,
             bucket_b,
@@ -120,73 +155,69 @@ impl KernelRows {
         })
     }
 
-    /// Fetch row `i` (through the cache).
-    pub fn get(&mut self, ds: &Dataset, i: usize) -> Result<&[f32]> {
+    /// Fetch row `i` (through the cache). A failed fill commits nothing,
+    /// so a later retry recomputes instead of hitting poisoned data.
+    pub fn get(&mut self, ds: &Dataset, i: usize) -> Result<Arc<Vec<f32>>> {
         let engine = &self.engine;
         let kind = &self.kind;
         let tiled = &self.tiled;
         let bucket_b = self.bucket_b;
         let mut computed = false;
-        let mut err = None;
-        let row = self.cache.get_or_compute(i, |out| {
+        let row = self.cache.get_or_try_compute(self.group, i, self.row_len, |out| {
             computed = true;
             if let Some(tiled) = tiled {
-                if let Err(e) = xla_fill_rows(engine, kind, tiled, bucket_b, &[i], &mut [out]) {
-                    err = Some(e);
-                }
+                xla_fill_rows(engine, kind, tiled, bucket_b, &[i], &mut [out])?;
             } else {
-                let threads = match engine.kind {
-                    crate::engine::EngineKind::CpuPar { threads } => threads,
-                    _ => 1,
-                };
-                kernel::kernel_row(kind, ds, i, threads, out);
+                kernel::kernel_row(kind, ds, i, engine.threads(), out);
             }
-        });
-        if let Some(e) = err {
-            return Err(e);
-        }
+            Ok(())
+        })?;
         if computed {
             self.rows_computed += 1;
         }
         Ok(row)
     }
 
-    /// Fetch a batch of rows at once into a dense [batch x n] buffer.
-    /// The XLA path amortizes one tile sweep over the whole batch — the
-    /// GTSVM working-set amortization.
-    pub fn get_batch(&mut self, ds: &Dataset, idx: &[usize]) -> Result<Vec<Vec<f32>>> {
+    /// Fetch a batch of rows at once. The XLA path amortizes one tile
+    /// sweep over the whole batch — the GTSVM working-set amortization.
+    pub fn get_batch(&mut self, ds: &Dataset, idx: &[usize]) -> Result<Vec<Arc<Vec<f32>>>> {
         // serve hits from cache, batch the misses
-        let mut out: Vec<Vec<f32>> = vec![Vec::new(); idx.len()];
+        let mut out: Vec<Option<Arc<Vec<f32>>>> = vec![None; idx.len()];
         let mut misses = Vec::new();
         for (slot, &i) in idx.iter().enumerate() {
-            if self.cache.contains(i) {
-                out[slot] = self.get(ds, i)?.to_vec();
+            if self.cache.contains(self.group, i) {
+                out[slot] = Some(self.get(ds, i)?);
             } else {
                 misses.push((slot, i));
             }
         }
-        if misses.is_empty() {
-            return Ok(out);
+        if !misses.is_empty() {
+            if let Some(tiled) = &self.tiled {
+                let ids: Vec<usize> = misses.iter().map(|&(_, i)| i).collect();
+                let mut bufs: Vec<Vec<f32>> = vec![vec![0.0f32; ds.n]; ids.len()];
+                {
+                    let mut views: Vec<&mut [f32]> =
+                        bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+                    xla_fill_rows(&self.engine, &self.kind, tiled, self.bucket_b, &ids, &mut views)?;
+                }
+                for ((slot, i), buf) in misses.into_iter().zip(bufs) {
+                    self.rows_computed += 1;
+                    let row = self.cache.get_or_try_compute(self.group, i, self.row_len, |out| {
+                        out.copy_from_slice(&buf);
+                        Ok(())
+                    })?;
+                    out[slot] = Some(row);
+                }
+            } else {
+                for (slot, i) in misses {
+                    out[slot] = Some(self.get(ds, i)?);
+                }
+            }
         }
-        if let Some(tiled) = &self.tiled {
-            let ids: Vec<usize> = misses.iter().map(|&(_, i)| i).collect();
-            let mut bufs: Vec<Vec<f32>> = vec![vec![0.0f32; ds.n]; ids.len()];
-            {
-                let mut views: Vec<&mut [f32]> =
-                    bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
-                xla_fill_rows(&self.engine, &self.kind, tiled, self.bucket_b, &ids, &mut views)?;
-            }
-            for ((slot, i), buf) in misses.into_iter().zip(bufs) {
-                self.rows_computed += 1;
-                let row = self.cache.get_or_compute(i, |out| out.copy_from_slice(&buf));
-                out[slot] = row.to_vec();
-            }
-        } else {
-            for (slot, i) in misses {
-                out[slot] = self.get(ds, i)?.to_vec();
-            }
-        }
-        Ok(out)
+        Ok(out
+            .into_iter()
+            .map(|r| r.expect("every slot filled"))
+            .collect())
     }
 
     pub fn hit_rate(&self) -> f64 {

@@ -8,24 +8,44 @@
 //!
 //! The engine choice reproduces three Table-1 configurations:
 //! * `cpu-seq`  — single-core LibSVM;
-//! * `cpu-par`  — LibSVM+OpenMP (kernel rows hand-threaded, the paper's
-//!   "most basic method of speedup", 5-8x on twelve cores);
+//! * `cpu-par`  — LibSVM+OpenMP: kernel rows hand-threaded *and* the
+//!   per-iteration O(n) work (WSS i/j scans, gradient maintenance)
+//!   decomposed into chunked parallel reductions over the pool — the
+//!   paper's "most basic method of speedup", 5-8x on twelve cores. The
+//!   reductions combine per-chunk partials in chunk order, so every
+//!   thread count (including 1) selects identical working sets and
+//!   reaches an identical objective.
 //! * `xla`      — GPU SVM (kernel rows offloaded to the accelerator
 //!   library one working pair at a time; high per-call overhead, which is
 //!   exactly the paper's observation about explicit GPU SMO).
+//!
+//! On top of either engine sits LibSVM-style active-set **shrinking**
+//! (`rust/DESIGN.md` §Shrinking): bounded variables that are strongly
+//! KKT-satisfied leave the active set every `min(n, 1000)` iterations, so
+//! the per-iteration scans touch only the surviving set; the gradient of
+//! shrunk variables is reconstructed from cached kernel rows before any
+//! final decision (convergence re-check, bias, objective).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::engine::Engine;
+use crate::kernel::cache::SharedRowCache;
 use crate::kernel::KernelKind;
 use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
+use crate::pool::{self, SendPtr};
 
-use super::common::KernelRows;
+use super::common::{cache_shards, KernelRows};
 use super::TrainResult;
 
 const TAU: f64 = 1e-12;
+/// Chunk size of the parallel WSS/gradient scans. Fixed (not derived from
+/// the thread count) so chunk boundaries — and therefore tie-breaks — are
+/// identical for every engine.
+const SCAN_CHUNK: usize = 512;
 
 /// SMO hyperparameters.
 #[derive(Debug, Clone)]
@@ -35,26 +55,313 @@ pub struct SmoParams {
     pub eps: f64,
     pub max_iters: usize,
     pub cache_mb: usize,
+    /// LibSVM-style active-set shrinking with gradient reconstruction.
+    pub shrinking: bool,
+    /// Threads for the WSS scans and gradient update; 0 derives the count
+    /// from the engine. 1 reproduces the pre-shrinking seed behavior
+    /// where only kernel-row fills were threaded.
+    pub scan_threads: usize,
 }
 
 impl Default for SmoParams {
     fn default() -> Self {
-        SmoParams { c: 1.0, eps: 1e-3, max_iters: 2_000_000, cache_mb: 512 }
+        SmoParams {
+            c: 1.0,
+            eps: 1e-3,
+            max_iters: 2_000_000,
+            cache_mb: 512,
+            shrinking: true,
+            scan_threads: 0,
+        }
     }
 }
 
-/// Train a binary SVM with SMO.
+#[inline]
+fn in_i_up(y: f64, a: f64, c: f64) -> bool {
+    (y > 0.0 && a < c) || (y < 0.0 && a > 0.0)
+}
+
+#[inline]
+fn in_i_low(y: f64, a: f64, c: f64) -> bool {
+    (y > 0.0 && a > 0.0) || (y < 0.0 && a < c)
+}
+
+/// First half of WSS2: argmax over `active ∩ I_up` of `-y_t G_t`.
+/// Ties go to the later index, matching the sequential scan.
+fn select_i(
+    active: &[usize],
+    y: &[f64],
+    alpha: &[f64],
+    grad: &[f64],
+    c: f64,
+    threads: usize,
+) -> (f64, usize) {
+    pool::parallel_reduce(
+        threads,
+        active.len(),
+        SCAN_CHUNK,
+        |r| {
+            let mut gmax = f64::NEG_INFINITY;
+            let mut i_sel = usize::MAX;
+            for p in r {
+                let t = active[p];
+                if in_i_up(y[t], alpha[t], c) {
+                    let v = -y[t] * grad[t];
+                    if v >= gmax {
+                        gmax = v;
+                        i_sel = t;
+                    }
+                }
+            }
+            (gmax, i_sel)
+        },
+        |a, b| if b.0 >= a.0 && b.1 != usize::MAX { b } else { a },
+    )
+    .unwrap_or((f64::NEG_INFINITY, usize::MAX))
+}
+
+/// Second half of WSS2: over `active ∩ I_low`, the maximal violation
+/// partner `gmax2` and the second-order best `j` for the chosen `i`.
+#[allow(clippy::too_many_arguments)]
+fn select_j(
+    active: &[usize],
+    y: &[f64],
+    alpha: &[f64],
+    grad: &[f64],
+    diag: &[f64],
+    c: f64,
+    gmax: f64,
+    i_sel: usize,
+    yi: f64,
+    ki: &[f32],
+    threads: usize,
+) -> (f64, usize) {
+    let red = pool::parallel_reduce(
+        threads,
+        active.len(),
+        SCAN_CHUNK,
+        |r| {
+            let mut gmax2 = f64::NEG_INFINITY;
+            let mut obj_min = f64::INFINITY;
+            let mut j_sel = usize::MAX;
+            for p in r {
+                let t = active[p];
+                if in_i_low(y[t], alpha[t], c) {
+                    let v = y[t] * grad[t];
+                    if v > gmax2 {
+                        gmax2 = v;
+                    }
+                    let grad_diff = gmax + v;
+                    if grad_diff > 0.0 {
+                        // Q_ii + Q_tt - 2 Q_it with Q_it = y_i y_t K_it
+                        let quad = (diag[i_sel] + diag[t]
+                            - 2.0 * yi * y[t] * ki[t] as f64)
+                            .max(TAU);
+                        let obj = -(grad_diff * grad_diff) / quad;
+                        if obj <= obj_min {
+                            obj_min = obj;
+                            j_sel = t;
+                        }
+                    }
+                }
+            }
+            (gmax2, obj_min, j_sel)
+        },
+        |a, b| {
+            let gmax2 = if b.0 > a.0 { b.0 } else { a.0 };
+            if b.2 != usize::MAX && (a.2 == usize::MAX || b.1 <= a.1) {
+                (gmax2, b.1, b.2)
+            } else {
+                (gmax2, a.1, a.2)
+            }
+        },
+    )
+    .unwrap_or((f64::NEG_INFINITY, f64::INFINITY, usize::MAX));
+    (red.0, red.2)
+}
+
+/// Fused pass: apply the rank-2 gradient update over the active set and
+/// select the next iteration's `i` in the same sweep (each `grad[t]` is
+/// final before the `I_up` test reads it).
+#[allow(clippy::too_many_arguments)]
+fn update_grad_select_i(
+    active: &[usize],
+    y: &[f64],
+    alpha: &[f64],
+    grad: &mut [f64],
+    ki: &[f32],
+    kj: &[f32],
+    yi: f64,
+    yj: f64,
+    dai: f64,
+    daj: f64,
+    c: f64,
+    threads: usize,
+) -> (f64, usize) {
+    let grad_ptr = SendPtr::new(grad.as_mut_ptr());
+    pool::parallel_reduce(
+        threads,
+        active.len(),
+        SCAN_CHUNK,
+        |r| {
+            let mut gmax = f64::NEG_INFINITY;
+            let mut i_sel = usize::MAX;
+            for p in r {
+                let t = active[p];
+                // SAFETY: active indices are distinct, so each grad slot
+                // is touched by exactly one chunk.
+                let g = unsafe { &mut *grad_ptr.get().add(t) };
+                *g += yi * y[t] * ki[t] as f64 * dai + yj * y[t] * kj[t] as f64 * daj;
+                if in_i_up(y[t], alpha[t], c) {
+                    let v = -y[t] * *g;
+                    if v >= gmax {
+                        gmax = v;
+                        i_sel = t;
+                    }
+                }
+            }
+            (gmax, i_sel)
+        },
+        |a, b| if b.0 >= a.0 && b.1 != usize::MAX { b } else { a },
+    )
+    .unwrap_or((f64::NEG_INFINITY, usize::MAX))
+}
+
+/// Fresh `max over active ∩ I_low of y_t G_t` (shrinking heuristic input).
+fn max_low_violation(
+    active: &[usize],
+    y: &[f64],
+    alpha: &[f64],
+    grad: &[f64],
+    c: f64,
+    threads: usize,
+) -> f64 {
+    pool::parallel_reduce(
+        threads,
+        active.len(),
+        SCAN_CHUNK,
+        |r| {
+            let mut m = f64::NEG_INFINITY;
+            for p in r {
+                let t = active[p];
+                if in_i_low(y[t], alpha[t], c) {
+                    m = m.max(y[t] * grad[t]);
+                }
+            }
+            m
+        },
+        f64::max,
+    )
+    .unwrap_or(f64::NEG_INFINITY)
+}
+
+/// LibSVM's `be_shrunk`: a bounded variable leaves the active set when it
+/// is strongly on the right side of both maximal violations.
+#[allow(clippy::too_many_arguments)]
+fn be_shrunk(
+    t: usize,
+    y: &[f64],
+    alpha: &[f64],
+    grad: &[f64],
+    c: f64,
+    gmax1: f64,
+    gmax2: f64,
+) -> bool {
+    if alpha[t] >= c {
+        if y[t] > 0.0 {
+            -grad[t] > gmax1
+        } else {
+            -grad[t] > gmax2
+        }
+    } else if alpha[t] <= 0.0 {
+        if y[t] > 0.0 {
+            grad[t] > gmax2
+        } else {
+            grad[t] > gmax1
+        }
+    } else {
+        false
+    }
+}
+
+/// Recompute the gradient of every index *not* in `active` from scratch:
+/// `G_t = -1 + y_t * sum_j alpha_j y_j K(j, t)`, streaming one (usually
+/// cached) kernel row per nonzero alpha — K is symmetric, so row j
+/// provides the K(j, t) column entries.
+fn reconstruct_gradient(
+    rows: &mut KernelRows,
+    ds: &Dataset,
+    active: &[usize],
+    y: &[f64],
+    alpha: &[f64],
+    grad: &mut [f64],
+    threads: usize,
+) -> Result<()> {
+    let n = ds.n;
+    if active.len() == n {
+        return Ok(());
+    }
+    let mut is_active = vec![false; n];
+    for &t in active {
+        is_active[t] = true;
+    }
+    let inactive: Vec<usize> = (0..n).filter(|&t| !is_active[t]).collect();
+    for &t in &inactive {
+        grad[t] = -1.0;
+    }
+    for j in 0..n {
+        if alpha[j] == 0.0 {
+            continue;
+        }
+        let kj = rows.get(ds, j)?;
+        let coef = alpha[j] * y[j];
+        let grad_ptr = SendPtr::new(grad.as_mut_ptr());
+        let inact = &inactive;
+        let kj_ref = &kj;
+        pool::parallel_for(threads, inact.len(), SCAN_CHUNK, |p| {
+            let t = inact[p];
+            // SAFETY: inactive indices are distinct.
+            unsafe { *grad_ptr.get().add(t) += coef * y[t] * kj_ref[t] as f64 };
+        });
+    }
+    Ok(())
+}
+
+/// Train a binary SVM with SMO on a private kernel-row cache.
 pub fn train(
     ds: &Dataset,
     kind: KernelKind,
     params: &SmoParams,
     engine: &Engine,
 ) -> Result<TrainResult> {
+    let cache = Arc::new(SharedRowCache::new(
+        params.cache_mb * 1024 * 1024,
+        cache_shards(engine.threads()),
+    ));
+    train_cached(ds, kind, params, engine, cache, 0)
+}
+
+/// Train a binary SVM with SMO, sharing `cache` (and its byte budget)
+/// with other concurrent solvers under the given `cache_group` id — the
+/// one-vs-one training path runs every pair subproblem through one cache.
+pub fn train_cached(
+    ds: &Dataset,
+    kind: KernelKind,
+    params: &SmoParams,
+    engine: &Engine,
+    cache: Arc<SharedRowCache>,
+    cache_group: u64,
+) -> Result<TrainResult> {
     assert!(!ds.is_multiclass(), "use multiclass::train_ovo");
     let mut sw = Stopwatch::new();
     let n = ds.n;
     let c = params.c as f64;
-    let mut rows = KernelRows::new(ds, kind, engine.clone(), params.cache_mb)?;
+    let mut rows = KernelRows::with_shared_cache(ds, kind, engine.clone(), cache, cache_group)?;
+    let scan_threads = if params.scan_threads > 0 {
+        params.scan_threads
+    } else {
+        engine.threads()
+    };
     sw.lap("setup");
 
     let y: Vec<f64> = ds.y.iter().map(|&v| v as f64).collect();
@@ -63,57 +370,80 @@ pub fn train(
     let mut grad = vec![-1.0f64; n];
     let diag: Vec<f64> = rows.diag.iter().map(|&v| v as f64).collect();
 
+    let mut active: Vec<usize> = (0..n).collect();
+    let shrink_interval = n.clamp(1, 1000);
+    let mut since_shrink = 0usize;
+    let mut unshrunk_once = false;
+    let mut shrink_events = 0usize;
+
     let mut iters = 0usize;
+    // (gmax, i) carried over from the fused update pass of the previous
+    // iteration; None forces a standalone i-scan.
+    let mut sel: Option<(f64, usize)> = None;
     loop {
+        // --- periodic shrinking (LibSVM do_shrinking) ---
+        if params.shrinking && since_shrink >= shrink_interval {
+            since_shrink = 0;
+            let (gmax1, _) = select_i(&active, &y, &alpha, &grad, c, scan_threads);
+            let gmax2 = max_low_violation(&active, &y, &alpha, &grad, c, scan_threads);
+            if !unshrunk_once && gmax1 + gmax2 <= params.eps * 10.0 {
+                // near convergence: restore everything once and re-shrink
+                // against the full gradient
+                unshrunk_once = true;
+                reconstruct_gradient(&mut rows, ds, &active, &y, &alpha, &mut grad, scan_threads)?;
+                active = (0..n).collect();
+                sw.lap("reconstruct");
+            }
+            let before = active.len();
+            active.retain(|&t| !be_shrunk(t, &y, &alpha, &grad, c, gmax1, gmax2));
+            if active.len() < 2 {
+                reconstruct_gradient(&mut rows, ds, &active, &y, &alpha, &mut grad, scan_threads)?;
+                active = (0..n).collect();
+            }
+            if active.len() != before {
+                shrink_events += 1;
+            }
+            sel = None;
+            sw.lap("shrink");
+        }
+
         // --- working-set selection (WSS2 of Fan, Chen & Lin) ---
-        let mut gmax = f64::NEG_INFINITY;
-        let mut gmax2 = f64::NEG_INFINITY;
-        let mut i_sel = usize::MAX;
-        for t in 0..n {
-            // I_up: y=+1 & a<C, or y=-1 & a>0
-            if (y[t] > 0.0 && alpha[t] < c) || (y[t] < 0.0 && alpha[t] > 0.0) {
-                let v = -y[t] * grad[t];
-                if v >= gmax {
-                    gmax = v;
-                    i_sel = t;
-                }
-            }
-        }
+        let (gmax, i_sel) = match sel.take() {
+            Some(s) => s,
+            None => select_i(&active, &y, &alpha, &grad, c, scan_threads),
+        };
         if i_sel == usize::MAX {
-            break;
-        }
-        let ki = rows.get(ds, i_sel)?.to_vec();
-        let yi = y[i_sel];
-
-        let mut j_sel = usize::MAX;
-        let mut obj_min = f64::INFINITY;
-        for t in 0..n {
-            // I_low: y=+1 & a>0, or y=-1 & a<C
-            if (y[t] > 0.0 && alpha[t] > 0.0) || (y[t] < 0.0 && alpha[t] < c) {
-                let v = y[t] * grad[t];
-                if v > gmax2 {
-                    gmax2 = v;
-                }
-                let grad_diff = gmax + v;
-                if grad_diff > 0.0 {
-                    // Q_ii + Q_tt - 2 Q_it with Q_it = y_i y_t K_it
-                    let quad = (diag[i_sel] + diag[t]
-                        - 2.0 * yi * y[t] * ki[t] as f64)
-                        .max(TAU);
-                    let obj = -(grad_diff * grad_diff) / quad;
-                    if obj <= obj_min {
-                        obj_min = obj;
-                        j_sel = t;
-                    }
-                }
+            if active.len() < n {
+                // the active set may hide violators: restore and re-check
+                reconstruct_gradient(&mut rows, ds, &active, &y, &alpha, &mut grad, scan_threads)?;
+                active = (0..n).collect();
+                since_shrink = 0;
+                sw.lap("reconstruct");
+                continue;
             }
-        }
-        if gmax + gmax2 < params.eps || j_sel == usize::MAX {
             break;
         }
-        sw.lap("select");
+        let ki = rows.get(ds, i_sel)?;
+        let yi = y[i_sel];
+        sw.lap("kernel");
 
-        let kj = rows.get(ds, j_sel)?.to_vec();
+        let (gmax2, j_sel) =
+            select_j(&active, &y, &alpha, &grad, &diag, c, gmax, i_sel, yi, &ki, scan_threads);
+        sw.lap("select");
+        if gmax + gmax2 < params.eps || j_sel == usize::MAX {
+            if active.len() < n {
+                // converged on the shrunk set only: restore and re-check
+                reconstruct_gradient(&mut rows, ds, &active, &y, &alpha, &mut grad, scan_threads)?;
+                active = (0..n).collect();
+                sel = None;
+                since_shrink = 0;
+                sw.lap("reconstruct");
+                continue;
+            }
+            break;
+        }
+
+        let kj = rows.get(ds, j_sel)?;
         sw.lap("kernel");
         let yj = y[j_sel];
         let (i, j) = (i_sel, j_sel);
@@ -171,18 +501,26 @@ pub fn train(
             }
         }
 
-        // --- gradient maintenance: G_t += Q_ti dAi + Q_tj dAj ---
+        // --- fused gradient maintenance + next i-selection:
+        // G_t += Q_ti dAi + Q_tj dAj over the active set ---
         let dai = alpha[i] - old_ai;
         let daj = alpha[j] - old_aj;
-        for t in 0..n {
-            grad[t] += yi * y[t] * ki[t] as f64 * dai + yj * y[t] * kj[t] as f64 * daj;
-        }
+        sel = Some(update_grad_select_i(
+            &active, &y, &alpha, &mut grad, &ki, &kj, yi, yj, dai, daj, c, scan_threads,
+        ));
         sw.lap("update");
 
         iters += 1;
+        since_shrink += 1;
         if iters >= params.max_iters {
             break;
         }
+    }
+
+    // shrunk gradients are stale; the bias and objective need all of them
+    if active.len() < n {
+        reconstruct_gradient(&mut rows, ds, &active, &y, &alpha, &mut grad, scan_threads)?;
+        sw.lap("reconstruct");
     }
 
     // --- bias: average y_i G_i over free vectors (LibSVM calc_rho) ---
@@ -234,6 +572,8 @@ pub fn train(
     res.note("n_sv", sv_idx.len().to_string());
     res.note("cache_hit_rate", format!("{:.3}", rows.hit_rate()));
     res.note("rows_computed", rows.rows_computed.to_string());
+    res.note("shrink_events", shrink_events.to_string());
+    res.note("final_active", active.len().to_string());
     Ok(res)
 }
 
@@ -256,6 +596,16 @@ mod tests {
             y.push(if (a > 0.5) ^ (b > 0.5) { 1.0 } else { -1.0 });
         }
         Dataset::new_binary("xor", 2, x, y)
+    }
+
+    fn nsv(r: &TrainResult) -> usize {
+        r.notes
+            .iter()
+            .find(|(k, _)| k == "n_sv")
+            .unwrap()
+            .1
+            .parse()
+            .unwrap()
     }
 
     #[test]
@@ -281,8 +631,7 @@ mod tests {
             &Engine::cpu_seq(),
         )
         .unwrap();
-        let nsv: usize = r.notes.iter().find(|(k, _)| k == "n_sv").unwrap().1.parse().unwrap();
-        assert!(nsv < ds.n / 2, "nsv {nsv}");
+        assert!(nsv(&r) < ds.n / 2, "nsv {}", nsv(&r));
         let margins = r.model.decision_batch(&ds, 2);
         assert!(error_rate(&margins, &ds.y) < 0.02);
     }
@@ -311,6 +660,78 @@ mod tests {
         let a = train(&ds, kind, &p, &Engine::cpu_seq()).unwrap();
         let b = train(&ds, kind, &p, &Engine::cpu_par(4)).unwrap();
         assert!((a.objective - b.objective).abs() < 1e-6 * a.objective.abs().max(1.0));
+    }
+
+    #[test]
+    fn parallel_scans_match_sequential_exactly() {
+        // chunk-ordered reductions: identical working sets, identical
+        // objective and SV count at any thread count
+        let ds = xor_dataset(500, 8);
+        let kind = KernelKind::Rbf { gamma: 8.0 };
+        for shrinking in [false, true] {
+            let p = SmoParams { c: 10.0, shrinking, ..Default::default() };
+            let base = train(&ds, kind, &p, &Engine::cpu_seq()).unwrap();
+            for threads in [2usize, 8] {
+                let r = train(&ds, kind, &p, &Engine::cpu_par(threads)).unwrap();
+                let rel = (r.objective - base.objective).abs()
+                    / base.objective.abs().max(1.0);
+                assert!(
+                    rel < 1e-12,
+                    "shrinking={shrinking} threads={threads}: {} vs {}",
+                    r.objective,
+                    base.objective
+                );
+                assert_eq!(r.iterations, base.iterations, "shrinking={shrinking} threads={threads}");
+                assert_eq!(nsv(&r), nsv(&base), "shrinking={shrinking} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn shrinking_reaches_the_unshrunk_objective() {
+        let ds = xor_dataset(600, 11);
+        let kind = KernelKind::Rbf { gamma: 8.0 };
+        // tight eps so the run comfortably outlasts the shrink interval
+        let on = train(
+            &ds,
+            kind,
+            &SmoParams { c: 10.0, eps: 1e-5, shrinking: true, ..Default::default() },
+            &Engine::cpu_seq(),
+        )
+        .unwrap();
+        let off = train(
+            &ds,
+            kind,
+            &SmoParams { c: 10.0, eps: 1e-5, shrinking: false, ..Default::default() },
+            &Engine::cpu_seq(),
+        )
+        .unwrap();
+        let rel = (on.objective - off.objective).abs() / off.objective.abs().max(1.0);
+        assert!(rel < 1e-3, "shrunk {} vs unshrunk {}", on.objective, off.objective);
+        // shrinking must have actually engaged on a 600-point problem
+        let events: usize = on
+            .notes
+            .iter()
+            .find(|(k, _)| k == "shrink_events")
+            .unwrap()
+            .1
+            .parse()
+            .unwrap();
+        assert!(events > 0, "no shrink events recorded");
+    }
+
+    #[test]
+    fn shared_cache_across_groups_reaches_same_solution() {
+        let ds = xor_dataset(200, 13);
+        let kind = KernelKind::Rbf { gamma: 6.0 };
+        let p = SmoParams { c: 5.0, ..Default::default() };
+        let own = train(&ds, kind, &p, &Engine::cpu_seq()).unwrap();
+        let cache = Arc::new(SharedRowCache::new(8 * 1024 * 1024, 4));
+        let a = train_cached(&ds, kind, &p, &Engine::cpu_seq(), cache.clone(), 1).unwrap();
+        let b = train_cached(&ds, kind, &p, &Engine::cpu_seq(), cache.clone(), 2).unwrap();
+        assert!((a.objective - own.objective).abs() < 1e-12 * own.objective.abs().max(1.0));
+        assert!((b.objective - own.objective).abs() < 1e-12 * own.objective.abs().max(1.0));
+        assert!(cache.hits() > 0);
     }
 
     #[test]

@@ -11,18 +11,25 @@
 //! solves the S-variable subproblem exactly with inner SMO on the cached
 //! S x S block, and (4) applies the aggregate gradient update.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::engine::Engine;
+use crate::kernel::cache::SharedRowCache;
 use crate::kernel::KernelKind;
 use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
+use crate::pool::{self, SendPtr};
 
-use super::common::KernelRows;
+use super::common::{cache_shards, KernelRows};
 use super::TrainResult;
 
 const TAU: f64 = 1e-12;
+/// Chunk size of the threaded KKT scan / gradient sweep (fixed so results
+/// are identical across thread counts).
+const SCAN_CHUNK: usize = 512;
 
 /// Working-set solver hyperparameters.
 #[derive(Debug, Clone)]
@@ -51,12 +58,31 @@ impl Default for WssParams {
     }
 }
 
-/// Train a binary SVM by S-variable dual decomposition.
+/// Train a binary SVM by S-variable dual decomposition on a private
+/// kernel-row cache.
 pub fn train(
     ds: &Dataset,
     kind: KernelKind,
     params: &WssParams,
     engine: &Engine,
+) -> Result<TrainResult> {
+    let cache = Arc::new(SharedRowCache::new(
+        params.cache_mb * 1024 * 1024,
+        cache_shards(engine.threads()),
+    ));
+    train_cached(ds, kind, params, engine, cache, 0)
+}
+
+/// Train a binary SVM by S-variable dual decomposition, sharing `cache`
+/// (and its byte budget) with other concurrent solvers under the given
+/// `cache_group` id.
+pub fn train_cached(
+    ds: &Dataset,
+    kind: KernelKind,
+    params: &WssParams,
+    engine: &Engine,
+    cache: Arc<SharedRowCache>,
+    cache_group: u64,
 ) -> Result<TrainResult> {
     assert!(!ds.is_multiclass(), "use multiclass::train_ovo");
     assert!(params.s >= 2);
@@ -64,7 +90,8 @@ pub fn train(
     let n = ds.n;
     let c = params.c as f64;
     let s_max = params.s.min(n);
-    let mut rows = KernelRows::new(ds, kind, engine.clone(), params.cache_mb)?;
+    let mut rows = KernelRows::with_shared_cache(ds, kind, engine.clone(), cache, cache_group)?;
+    let scan_threads = engine.threads();
     sw.lap("setup");
 
     let y: Vec<f64> = ds.y.iter().map(|&v| v as f64).collect();
@@ -74,17 +101,32 @@ pub fn train(
 
     let mut outer = 0usize;
     loop {
-        // --- KKT violation scan ---
-        let mut ups: Vec<(f64, usize)> = Vec::new();
-        let mut lows: Vec<(f64, usize)> = Vec::new();
-        for t in 0..n {
-            if (y[t] > 0.0 && alpha[t] < c) || (y[t] < 0.0 && alpha[t] > 0.0) {
-                ups.push((-y[t] * grad[t], t));
-            }
-            if (y[t] > 0.0 && alpha[t] > 0.0) || (y[t] < 0.0 && alpha[t] < c) {
-                lows.push((y[t] * grad[t], t));
-            }
-        }
+        // --- KKT violation scan (chunk-ordered parallel reduction, so the
+        // candidate order matches the sequential scan exactly) ---
+        let (mut ups, mut lows) = pool::parallel_reduce(
+            scan_threads,
+            n,
+            SCAN_CHUNK,
+            |r| {
+                let mut ups: Vec<(f64, usize)> = Vec::new();
+                let mut lows: Vec<(f64, usize)> = Vec::new();
+                for t in r {
+                    if (y[t] > 0.0 && alpha[t] < c) || (y[t] < 0.0 && alpha[t] > 0.0) {
+                        ups.push((-y[t] * grad[t], t));
+                    }
+                    if (y[t] > 0.0 && alpha[t] > 0.0) || (y[t] < 0.0 && alpha[t] < c) {
+                        lows.push((y[t] * grad[t], t));
+                    }
+                }
+                (ups, lows)
+            },
+            |mut a, b| {
+                a.0.extend(b.0);
+                a.1.extend(b.1);
+                a
+            },
+        )
+        .unwrap_or_default();
         ups.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
         lows.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
         let gmax = ups.first().map_or(f64::NEG_INFINITY, |v| v.0);
@@ -233,19 +275,29 @@ pub fn train(
         }
         sw.lap("inner");
 
-        // --- apply aggregate update to global state ---
-        let mut changed = false;
+        // --- apply aggregate update to global state: one threaded sweep
+        // over t accumulates every changed row's contribution ---
+        let mut deltas: Vec<(f64, f64, Arc<Vec<f32>>)> = Vec::new(); // (y_p, da, K row)
         for p in 0..s {
             let da = a_loc[p] - a0[p];
             if da.abs() > 1e-15 {
-                changed = true;
                 alpha[ws[p]] = a_loc[p];
-                let yp = y[ws[p]];
-                let kp = &krows[p];
-                for t in 0..n {
-                    grad[t] += yp * y[t] * kp[t] as f64 * da;
-                }
+                deltas.push((y[ws[p]], da, krows[p].clone()));
             }
+        }
+        let changed = !deltas.is_empty();
+        if changed {
+            let grad_ptr = SendPtr::new(grad.as_mut_ptr());
+            let deltas_ref = &deltas;
+            let y_ref = &y;
+            pool::parallel_for(scan_threads, n, SCAN_CHUNK, |t| {
+                let mut acc = 0.0f64;
+                for (yp, da, kp) in deltas_ref {
+                    acc += yp * kp[t] as f64 * da;
+                }
+                // SAFETY: each index t is written by exactly one task.
+                unsafe { *grad_ptr.get().add(t) += y_ref[t] * acc };
+            });
         }
         sw.lap("update");
         outer += 1;

@@ -121,6 +121,67 @@ fn prop_engines_agree_on_random_shapes() {
 }
 
 #[test]
+fn prop_shared_cache_never_returns_wrong_row() {
+    use wu_svm::kernel::cache::SharedRowCache;
+    let mut rng = Rng::new(14);
+    for case in 0..30 {
+        let rows = 2 + rng.below(30);
+        let len = 1 + rng.below(16);
+        let cap_bytes = (1 + rng.below(10)) * len * 4;
+        let cache = SharedRowCache::new(cap_bytes, 1 + rng.below(4));
+        for _ in 0..400 {
+            let g = rng.below(3) as u64;
+            let i = rng.below(rows);
+            let want = (g as f32) * 100.0 + i as f32;
+            let got = cache
+                .get_or_try_compute(g, i, len, |out| {
+                    out.iter_mut().for_each(|v| *v = want);
+                    Ok(())
+                })
+                .unwrap();
+            assert!(
+                got.iter().all(|&v| v == want),
+                "case {case}: stale row for group {g} index {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_smo_matches_sequential_objective_and_svs() {
+    // cpu_par(k) must reproduce cpu_seq exactly (chunk-ordered reductions)
+    // for k in {1, 2, 8}, with shrinking both on and off.
+    use wu_svm::solvers::smo::{self, SmoParams};
+    let mut rng = Rng::new(15);
+    for case in 0..6 {
+        let n = 150 + rng.below(150);
+        let ds = rand_dataset(&mut rng, n, 3);
+        let c = 0.5 + rng.uniform_f32() * 5.0;
+        let kind = KernelKind::Rbf { gamma: 1.0 + rng.uniform_f32() * 4.0 };
+        for shrinking in [false, true] {
+            let p = SmoParams { c, shrinking, ..Default::default() };
+            let base = smo::train(&ds, kind, &p, &Engine::cpu_seq()).unwrap();
+            for k in [1usize, 2, 8] {
+                let r = smo::train(&ds, kind, &p, &Engine::cpu_par(k)).unwrap();
+                let rel = (r.objective - base.objective).abs()
+                    / base.objective.abs().max(1.0);
+                assert!(
+                    rel < 1e-6,
+                    "case {case} k={k} shrinking={shrinking}: objective {} vs {}",
+                    r.objective,
+                    base.objective
+                );
+                assert_eq!(
+                    r.model.coef.len(),
+                    base.model.coef.len(),
+                    "case {case} k={k} shrinking={shrinking}: sv count"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_smo_satisfies_kkt_approximately() {
     let mut rng = Rng::new(6);
     for case in 0..12 {

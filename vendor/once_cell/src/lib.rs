@@ -1,0 +1,48 @@
+//! Minimal offline stand-in for the `once_cell` crate: `sync::OnceCell`
+//! as a thin wrapper over `std::sync::OnceLock`.
+
+pub mod sync {
+    /// Thread-safe cell that can be written to at most once.
+    #[derive(Debug, Default)]
+    pub struct OnceCell<T> {
+        inner: std::sync::OnceLock<T>,
+    }
+
+    impl<T> OnceCell<T> {
+        /// Create an empty cell (usable in `static` initializers).
+        pub const fn new() -> OnceCell<T> {
+            OnceCell { inner: std::sync::OnceLock::new() }
+        }
+
+        /// The stored value, if set.
+        pub fn get(&self) -> Option<&T> {
+            self.inner.get()
+        }
+
+        /// Store a value; returns it back if the cell was already set.
+        pub fn set(&self, value: T) -> Result<(), T> {
+            self.inner.set(value)
+        }
+
+        /// Get the stored value, initializing it with `f` if empty.
+        pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+            self.inner.get_or_init(f)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::OnceCell;
+
+    static CELL: OnceCell<u32> = OnceCell::new();
+
+    #[test]
+    fn set_once_then_read() {
+        assert!(CELL.get().is_none() || CELL.get() == Some(&42));
+        let _ = CELL.set(42);
+        assert_eq!(CELL.get(), Some(&42));
+        assert_eq!(CELL.set(7), Err(7));
+        assert_eq!(*CELL.get_or_init(|| 9), 42);
+    }
+}
