@@ -1,6 +1,8 @@
 #!/bin/sh
-# CI entry point. Usage: ./ci.sh [tier1|lint|all]
+# CI entry point. Usage: ./ci.sh [tier1|benchcheck|lint|all]
 # tier1 is the repository's canonical verification (see ROADMAP.md).
+# benchcheck compiles the bench targets without running them, so the
+# harness=false benchmarks (which `cargo test` never builds) can't rot.
 set -eu
 
 mode="${1:-all}"
@@ -10,6 +12,10 @@ tier1() {
     cargo test -q
 }
 
+benchcheck() {
+    cargo bench --no-run
+}
+
 lint() {
     cargo fmt --check
     cargo clippy --all-targets -- -D warnings
@@ -17,13 +23,15 @@ lint() {
 
 case "$mode" in
     tier1) tier1 ;;
+    benchcheck) benchcheck ;;
     lint) lint ;;
     all)
         tier1
+        benchcheck
         lint
         ;;
     *)
-        echo "usage: ./ci.sh [tier1|lint|all]" >&2
+        echo "usage: ./ci.sh [tier1|benchcheck|lint|all]" >&2
         exit 2
         ;;
 esac

@@ -91,4 +91,94 @@ fn main() {
             println!("{}", s.row());
         }
     }
+
+    // ---- the substrate comparison behind every number above: the seed's
+    // dot-loop GEMM vs the blocked/packed path, plus the rbf_block tile it
+    // feeds. Emits machine-readable BENCH_gemm.json for the perf
+    // trajectory (rust/EXPERIMENTS.md §GEMM).
+    header("gemm_nt C[4000x512] = A[4000x64] · B[512x64]ᵀ — seed dot-loop vs blocked");
+    {
+        use wu_svm::linalg::{gemm_nt, gemm_nt_naive, Matrix};
+        let threads = pool::default_threads();
+        let (m, k, n) = (4000usize, 64usize, 512usize);
+        let a = Matrix::from_vec(m, k, rand_vec(&mut rng, m * k));
+        let b = Matrix::from_vec(n, k, rand_vec(&mut rng, n * k));
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        let gflops = |d: std::time::Duration| flops / d.as_secs_f64().max(1e-12) / 1e9;
+        let mut c = Matrix::zeros(m, n);
+        let s_naive = bench(&format!("gemm seed dot-loop [{threads}t]"), 1, 7, || {
+            gemm_nt_naive(threads, &a, &b, &mut c);
+        });
+        println!("{}   {:.2} GFLOP/s", s_naive.row(), gflops(s_naive.median));
+        let s_b1 = bench("gemm blocked [1t]", 1, 7, || {
+            gemm_nt(1, &a, &b, &mut c);
+        });
+        println!("{}   {:.2} GFLOP/s", s_b1.row(), gflops(s_b1.median));
+        let s_blk = bench(&format!("gemm blocked [{threads}t]"), 1, 7, || {
+            gemm_nt(threads, &a, &b, &mut c);
+        });
+        println!("{}   {:.2} GFLOP/s", s_blk.row(), gflops(s_blk.median));
+        let speedup = s_naive.median.as_secs_f64() / s_blk.median.as_secs_f64().max(1e-12);
+        println!("blocked vs seed dot-loop: {speedup:.2}x");
+
+        // rbf_block on a 4000-row tile: the seed's per-pair f64-dot
+        // expansion vs the engine's norms + GEMM + fused-exp path.
+        let (rt, rd, rb) = (4000usize, 64usize, 512usize);
+        let x = rand_vec(&mut rng, rt * rd);
+        let xb = rand_vec(&mut rng, rb * rd);
+        let gamma = 0.5f32;
+        let mut sink = 0.0f32;
+        let s_rseed = bench(&format!("rbf seed dot-loop t=4000 [{threads}t]"), 1, 5, || {
+            use wu_svm::linalg::dot;
+            use wu_svm::pool::SendPtr;
+            let mut kk = vec![0.0f32; rt * rb];
+            let bsq: Vec<f32> = (0..rb)
+                .map(|j| dot(&xb[j * rd..(j + 1) * rd], &xb[j * rd..(j + 1) * rd]))
+                .collect();
+            let kptr = SendPtr::new(kk.as_mut_ptr());
+            pool::parallel_for(threads, rt, 8, |i| {
+                let xi = &x[i * rd..(i + 1) * rd];
+                let xsq = dot(xi, xi);
+                let row =
+                    unsafe { std::slice::from_raw_parts_mut(kptr.get().add(i * rb), rb) };
+                for (j, slot) in row.iter_mut().enumerate() {
+                    let cross = dot(xi, &xb[j * rd..(j + 1) * rd]);
+                    let d2 = (xsq + bsq[j] - 2.0 * cross).max(0.0);
+                    *slot = (-gamma * d2).exp();
+                }
+            });
+            sink += kk[0];
+        });
+        println!("{}", s_rseed.row());
+        let epar = Engine::cpu_par(threads);
+        let s_rblk = bench(&format!("rbf blocked t=4000 [{}]", epar.name()), 1, 5, || {
+            sink += epar.rbf_block(&x, rt, rd, &xb, rb, gamma).unwrap()[0];
+        });
+        println!("{}", s_rblk.row());
+        let rbf_speedup = s_rseed.median.as_secs_f64() / s_rblk.median.as_secs_f64().max(1e-12);
+        println!("rbf_block blocked vs seed: {rbf_speedup:.2}x   (sink {sink:.3})");
+
+        let json = format!(
+            "{{\n  \"workload\": {{\"m\": {m}, \"k\": {k}, \"n\": {n}}},\n  \
+             \"threads\": {threads},\n  \
+             \"seed_dot_loop_ms\": {:.3},\n  \"seed_dot_loop_gflops\": {:.3},\n  \
+             \"blocked_1t_ms\": {:.3},\n  \"blocked_ms\": {:.3},\n  \
+             \"blocked_gflops\": {:.3},\n  \"speedup_vs_seed\": {:.3},\n  \
+             \"rbf_tile\": {{\"t\": {rt}, \"d\": {rd}, \"b\": {rb}, \
+             \"seed_ms\": {:.3}, \"blocked_ms\": {:.3}, \"speedup\": {:.3}}}\n}}\n",
+            s_naive.median.as_secs_f64() * 1e3,
+            gflops(s_naive.median),
+            s_b1.median.as_secs_f64() * 1e3,
+            s_blk.median.as_secs_f64() * 1e3,
+            gflops(s_blk.median),
+            speedup,
+            s_rseed.median.as_secs_f64() * 1e3,
+            s_rblk.median.as_secs_f64() * 1e3,
+            rbf_speedup,
+        );
+        match std::fs::write("BENCH_gemm.json", &json) {
+            Ok(()) => println!("wrote BENCH_gemm.json:\n{json}"),
+            Err(e) => eprintln!("could not write BENCH_gemm.json: {e}"),
+        }
+    }
 }

@@ -3,11 +3,14 @@
 //! The implicit-parallel credo applied to inference: individual prediction
 //! requests are routed into a queue, a batcher thread groups them into
 //! padded tiles, and one engine call per tile computes every margin
-//! (kernel block against the model's expansion vectors + predict). This
-//! mirrors how a deployed WU-SVM would serve traffic, and exercises the
-//! coordinator invariants the property tests check: every request is
-//! answered exactly once, responses match their requests, batches never
-//! exceed the tile size.
+//! (kernel block against the model's expansion vectors + predict). Under
+//! the cpu engines those two calls — `rbf_block` + `predict_block` — run
+//! on the blocked-GEMM substrate (DESIGN.md §GEMM), so batching buys the
+//! same dense-library throughput at serve time that the implicit solvers
+//! get at train time. This mirrors how a deployed WU-SVM would serve
+//! traffic, and exercises the coordinator invariants the property tests
+//! check: every request is answered exactly once, responses match their
+//! requests, batches never exceed the tile size.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;

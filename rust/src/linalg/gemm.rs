@@ -1,0 +1,618 @@
+//! Cache-blocked, panel-packing GEMM — the CPU substrate that makes the
+//! implicit engines behave like the paper's optimized BLAS.
+//!
+//! The paper's implicit methods win because their work collapses into a
+//! few large dense ops executed by MKL/CUBLAS. The seed's CPU fallback
+//! computed those ops as `m·n` independent f64-converted scalar dot
+//! products, which demonstrates the *algorithms* without the
+//! *performance mechanism*. This module supplies the mechanism:
+//!
+//! * **Packing** — operand slabs are repacked into contiguous
+//!   depth-major micro-panels (`MR`/`NR` rows wide), so the inner kernel
+//!   streams both operands with unit stride regardless of the caller's
+//!   layout. Strided packing doubles as free transposition: the masked
+//!   SYRK packs `Aᵀ` directly out of the row-major tile.
+//! * **Register tiling** — an `MR x NR` micro-kernel accumulates a full
+//!   C tile in a fixed-size f32 array the compiler keeps in vector
+//!   registers and auto-vectorizes (the offline registry has no SIMD
+//!   intrinsics crate; unrolled fixed-shape lanes get the same effect).
+//! * **Cache blocking** — the shared `k` dimension is processed in `KC`
+//!   slabs (packed panels stay L2-resident), and the C plane is tiled
+//!   into `MC x NC` macro-tiles for the 2-D parallel decomposition.
+//!
+//! **Determinism.** Every C element is owned by exactly one macro-tile
+//! task per `k`-slab, slabs run in a fixed sequential order, and the
+//! micro-kernel accumulates in a fixed depth order — so the result is
+//! bit-identical for every thread count (including 1). That is what
+//! lets `cpu-par(k)` engines reproduce `cpu-seq` exactly, the same
+//! contract `pool::parallel_reduce` gives the SMO scans.
+
+use crate::pool::{self, SendPtr};
+
+/// Micro-tile rows (A-side panel width).
+pub const MR: usize = 8;
+/// Micro-tile columns (B-side panel width).
+pub const NR: usize = 8;
+/// Depth of one packed k-slab.
+pub const KC: usize = 256;
+/// Rows of one parallel macro-tile (multiple of `MR`).
+pub const MC: usize = 64;
+/// Columns of one parallel macro-tile (multiple of `NR`).
+pub const NC: usize = 128;
+
+/// Lane width of the unrolled vector-friendly reductions below
+/// (power of two — the lane combine folds pairwise).
+pub const LANES: usize = 8;
+const _: () = assert!(LANES.is_power_of_two());
+
+/// Combine the lane accumulators in a fixed pairwise tree — derived from
+/// `LANES` (retuning the constant cannot silently drop lanes) and
+/// order-deterministic.
+#[inline]
+fn combine_lanes(acc: [f32; LANES]) -> f32 {
+    let mut tmp = acc;
+    let mut width = LANES / 2;
+    while width > 0 {
+        for l in 0..width {
+            tmp[l] += tmp[l + width];
+        }
+        width /= 2;
+    }
+    tmp[0]
+}
+
+/// f32 dot product accumulated in `LANES` independent lanes combined in
+/// a fixed tree order — auto-vectorizable and deterministic. The f64
+/// scalar [`crate::linalg::dot`] remains for accuracy-critical callers.
+#[inline]
+pub fn dot_lanes(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let xb = &x[c * LANES..(c + 1) * LANES];
+        let yb = &y[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            acc[l] += xb[l] * yb[l];
+        }
+    }
+    let mut s = combine_lanes(acc);
+    for i in chunks * LANES..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// Squared euclidean distance with the same lane scheme as
+/// [`dot_lanes`]. Exact 0 on identical inputs (no cancellation).
+#[inline]
+pub fn dist2_lanes(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let xb = &x[c * LANES..(c + 1) * LANES];
+        let yb = &y[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            let d = xb[l] - yb[l];
+            acc[l] += d * d;
+        }
+    }
+    let mut s = combine_lanes(acc);
+    for i in chunks * LANES..n {
+        let d = x[i] - y[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Σ xᵢ² accumulated sequentially in `KC` slabs — the exact order the
+/// packed GEMM uses for a diagonal element `cᵢᵢ = Σ xₚ·xₚ`. RBF callers
+/// rely on this: `‖x‖² + ‖x‖² - 2·(x·x)` cancels bit-exactly, so kernel
+/// diagonals come out as exactly 1.0.
+#[inline]
+pub fn sum_sq(x: &[f32]) -> f32 {
+    let mut total = 0.0f32;
+    for chunk in x.chunks(KC) {
+        let mut s = 0.0f32;
+        for &v in chunk {
+            s += v * v;
+        }
+        total += s;
+    }
+    total
+}
+
+/// Pack one `pr`-row micro-panel of a strided operand slab into `dst`
+/// (depth-major: `dst[p*pr + i]`). Logical element `(r, p)` of the
+/// `dim x k` operand lives at `src[r*rs + p*cs]`; rows past `dim` are
+/// zero-filled so the micro-kernel never needs edge branches. With
+/// `kscale`, depth `p` is scaled by `kscale[k0 + p]` (the masked-SYRK
+/// row weight applied on one side).
+#[allow(clippy::too_many_arguments)]
+fn pack_panel(
+    dst: &mut [f32],
+    pr: usize,
+    src: &[f32],
+    rs: usize,
+    cs: usize,
+    dim: usize,
+    q: usize,
+    k0: usize,
+    kc: usize,
+    kscale: Option<&[f32]>,
+) {
+    debug_assert!(dst.len() >= pr * kc);
+    let r0 = q * pr;
+    debug_assert!(r0 < dim);
+    let rows = pr.min(dim - r0);
+    for p in 0..kc {
+        let col = &mut dst[p * pr..(p + 1) * pr];
+        let kidx = k0 + p;
+        let w = kscale.map_or(1.0, |s| s[kidx]);
+        if w == 1.0 {
+            for (i, slot) in col.iter_mut().take(rows).enumerate() {
+                *slot = src[(r0 + i) * rs + kidx * cs];
+            }
+        } else {
+            for (i, slot) in col.iter_mut().take(rows).enumerate() {
+                *slot = w * src[(r0 + i) * rs + kidx * cs];
+            }
+        }
+        for slot in col.iter_mut().skip(rows) {
+            *slot = 0.0;
+        }
+    }
+}
+
+/// The register-tiled inner kernel: accumulate an `MR x NR` C tile from
+/// two packed panels over `kc` depth steps. Fixed shapes and a local
+/// accumulator array let LLVM keep `acc` in vector registers and
+/// vectorize the `NR`-wide updates.
+#[inline]
+fn microkernel(pa: &[f32], pb: &[f32], kc: usize) -> [f32; MR * NR] {
+    let mut acc = [0.0f32; MR * NR];
+    for p in 0..kc {
+        let a = &pa[p * MR..(p + 1) * MR];
+        let b = &pb[p * NR..(p + 1) * NR];
+        for i in 0..MR {
+            let ai = a[i];
+            let row = &mut acc[i * NR..(i + 1) * NR];
+            for j in 0..NR {
+                row[j] += ai * b[j];
+            }
+        }
+    }
+    acc
+}
+
+/// `C = A · Bᵀ` over strided operand views (the general driver under
+/// [`crate::linalg::gemm_nt`] and [`crate::linalg::syrk_masked`]).
+///
+/// `A` is an `m x k` view with element `(i, p)` at `a[i*a_rs + p*a_cs]`;
+/// `B` is an `n x k` view with element `(j, p)` at `b[j*b_rs + p*b_cs]`
+/// (strides express transposition for free). `C` is row-major `m x n`
+/// with leading dimension `ldc` and is overwritten. With `b_kscale`,
+/// depth `p` of B is scaled by `b_kscale[p]`, which turns the call into
+/// the weighted Gram product `C = A·diag(w)·Bᵀ`.
+///
+/// Bit-identical output for every `threads` value — see module docs.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_strided(
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    a_rs: usize,
+    a_cs: usize,
+    b: &[f32],
+    b_rs: usize,
+    b_cs: usize,
+    b_kscale: Option<&[f32]>,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(ldc >= n, "ldc {ldc} < n {n}");
+    assert!(c.len() >= (m - 1) * ldc + n, "C buffer too small");
+    if k == 0 {
+        for r in 0..m {
+            for v in &mut c[r * ldc..r * ldc + n] {
+                *v = 0.0;
+            }
+        }
+        return;
+    }
+    if let Some(s) = b_kscale {
+        assert!(s.len() >= k, "kscale shorter than k");
+    }
+    let mpan = (m + MR - 1) / MR;
+    let npan = (n + NR - 1) / NR;
+    let slab = KC.min(k);
+    let mut pa = vec![0.0f32; mpan * MR * slab];
+    let mut pb = vec![0.0f32; npan * NR * slab];
+    let mblk = (m + MC - 1) / MC;
+    let nblk = (n + NC - 1) / NC;
+    let c_ptr = SendPtr::new(c.as_mut_ptr());
+
+    let mut k0 = 0usize;
+    while k0 < k {
+        let kc = KC.min(k - k0);
+        // ---- pack both operand slabs (parallel over micro-panels) ----
+        {
+            let pa_ptr = SendPtr::new(pa.as_mut_ptr());
+            pool::parallel_for(threads, mpan, 1, |q| {
+                // SAFETY: panel q's range is disjoint from every other q.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(pa_ptr.get().add(q * MR * kc), MR * kc)
+                };
+                pack_panel(dst, MR, a, a_rs, a_cs, m, q, k0, kc, None);
+            });
+            let pb_ptr = SendPtr::new(pb.as_mut_ptr());
+            pool::parallel_for(threads, npan, 1, |q| {
+                // SAFETY: panel q's range is disjoint from every other q.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(pb_ptr.get().add(q * NR * kc), NR * kc)
+                };
+                pack_panel(dst, NR, b, b_rs, b_cs, n, q, k0, kc, b_kscale);
+            });
+        }
+        // ---- 2-D macro-tile sweep over the C plane ----
+        let first = k0 == 0;
+        let pa_ref = &pa;
+        let pb_ref = &pb;
+        pool::parallel_for(threads, mblk * nblk, 1, |blk| {
+            let bi = blk / nblk;
+            let bj = blk % nblk;
+            let i_end = (bi * MC + MC).min(m);
+            let j_end = (bj * NC + NC).min(n);
+            let mut i = bi * MC;
+            while i < i_end {
+                let panel_a = &pa_ref[(i / MR) * MR * kc..(i / MR + 1) * MR * kc];
+                let ih = MR.min(m - i);
+                let mut j = bj * NC;
+                while j < j_end {
+                    let panel_b = &pb_ref[(j / NR) * NR * kc..(j / NR + 1) * NR * kc];
+                    let acc = microkernel(panel_a, panel_b, kc);
+                    let jw = NR.min(n - j);
+                    for ii in 0..ih {
+                        // SAFETY: rows [i, i+ih) x cols [j, j+jw) of C
+                        // belong to macro-tile (bi, bj), owned by exactly
+                        // this task for this slab.
+                        let crow = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                c_ptr.get().add((i + ii) * ldc + j),
+                                jw,
+                            )
+                        };
+                        let arow = &acc[ii * NR..ii * NR + jw];
+                        if first {
+                            crow.copy_from_slice(arow);
+                        } else {
+                            for (cv, av) in crow.iter_mut().zip(arow) {
+                                *cv += av;
+                            }
+                        }
+                    }
+                    j += NR;
+                }
+                i += MR;
+            }
+        });
+        k0 += kc;
+    }
+}
+
+/// `out = M v` over a row-major `rows x cols` view (lane-accumulated f32
+/// dots, threaded over row chunks). The slice-level form of
+/// [`crate::linalg::gemv`] for callers that hold a tile as `&[f32]`.
+pub fn gemv_blocked(
+    threads: usize,
+    rows: usize,
+    cols: usize,
+    a: &[f32],
+    lda: usize,
+    v: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(v.len(), cols);
+    assert_eq!(out.len(), rows);
+    assert!(lda >= cols);
+    let rows_per = ((rows + 63) / 64).max(1);
+    pool::parallel_chunks_mut(threads, out, rows_per, |c, slice| {
+        for (off, slot) in slice.iter_mut().enumerate() {
+            let r = c * rows_per + off;
+            *slot = dot_lanes(&a[r * lda..r * lda + cols], v);
+        }
+    });
+}
+
+/// `K[t x b] = exp(-gamma · max(0, ‖xᵢ‖² + ‖xbⱼ‖² - 2·xᵢ·xbⱼ))` — the
+/// canonical norms + GEMM + fused-exp RBF block, shared by
+/// `Engine::rbf_block` and `kernel::kernel_block` so the bit-exactness
+/// contract lives in one place. Norms use [`sum_sq`] (the GEMM's own
+/// accumulation order), so an identical pair of points cancels to a
+/// distance of exactly 0 — the diagonal of a symmetric block is exactly
+/// 1.0 — and the clamp keeps every value in (0, 1]. Deterministic for
+/// every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn rbf_blocked(
+    threads: usize,
+    x: &[f32],
+    t: usize,
+    xb: &[f32],
+    b: usize,
+    d: usize,
+    gamma: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), t * d);
+    assert_eq!(xb.len(), b * d);
+    assert_eq!(out.len(), t * b);
+    if b == 0 {
+        return;
+    }
+    gemm_nt_strided(threads, t, b, d, x, d, 1, xb, d, 1, None, out, b);
+    let bsq: Vec<f32> = (0..b).map(|j| sum_sq(&xb[j * d..(j + 1) * d])).collect();
+    pool::parallel_chunks_mut(threads, out, b, |i, row| {
+        let xsq = sum_sq(&x[i * d..(i + 1) * d]);
+        for (j, slot) in row.iter_mut().enumerate() {
+            let d2 = (xsq + bsq[j] - 2.0 * *slot).max(0.0);
+            *slot = (-gamma * d2).exp();
+        }
+    });
+}
+
+/// `out = Mᵀ v` over a row-major `rows x cols` view: column blocks run in
+/// parallel, rows stream through in 8-row panels so each `out` element is
+/// updated once per panel instead of once per row. Row order is fixed, so
+/// the result is thread-count independent.
+pub fn gemv_t_blocked(
+    threads: usize,
+    rows: usize,
+    cols: usize,
+    a: &[f32],
+    lda: usize,
+    v: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(v.len(), rows);
+    assert_eq!(out.len(), cols);
+    assert!(lda >= cols);
+    const CB: usize = 256;
+    pool::parallel_chunks_mut(threads, out, CB, |bidx, o| {
+        let c0 = bidx * CB;
+        let c1 = c0 + o.len();
+        let w = o.len();
+        o.iter_mut().for_each(|x| *x = 0.0);
+        let mut r = 0usize;
+        while r + 8 <= rows {
+            let vv = &v[r..r + 8];
+            if vv.iter().all(|&x| x == 0.0) {
+                r += 8;
+                continue;
+            }
+            let base = r * lda + c0;
+            let r0 = &a[base..base + w];
+            let r1 = &a[base + lda..base + lda + w];
+            let r2 = &a[base + 2 * lda..base + 2 * lda + w];
+            let r3 = &a[base + 3 * lda..base + 3 * lda + w];
+            let r4 = &a[base + 4 * lda..base + 4 * lda + w];
+            let r5 = &a[base + 5 * lda..base + 5 * lda + w];
+            let r6 = &a[base + 6 * lda..base + 6 * lda + w];
+            let r7 = &a[base + 7 * lda..base + 7 * lda + w];
+            for j in 0..w {
+                o[j] += ((vv[0] * r0[j] + vv[1] * r1[j])
+                    + (vv[2] * r2[j] + vv[3] * r3[j]))
+                    + ((vv[4] * r4[j] + vv[5] * r5[j])
+                        + (vv[6] * r6[j] + vv[7] * r7[j]));
+            }
+            r += 8;
+        }
+        while r < rows {
+            let vr = v[r];
+            if vr != 0.0 {
+                let row = &a[r * lda + c0..r * lda + c1];
+                for (oj, aj) in o.iter_mut().zip(row) {
+                    *oj += vr * aj;
+                }
+            }
+            r += 1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dot, Matrix};
+    use crate::rng::Rng;
+
+    fn randmat(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_vec(r, c, (0..r * c).map(|_| rng.gaussian_f32()).collect())
+    }
+
+    fn blocked(threads: usize, a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.rows);
+        gemm_nt_strided(
+            threads, a.rows, b.rows, a.cols, &a.data, a.cols, 1, &b.data, b.cols, 1, None,
+            &mut c.data, b.rows,
+        );
+        c
+    }
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.rows);
+        for i in 0..a.rows {
+            for j in 0..b.rows {
+                c.set(i, j, dot(a.row(i), b.row(j)));
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_on_odd_shapes() {
+        // non-bucket shapes: 1x1, prime dims, k < MR, k spanning slabs
+        let cases = [
+            (1usize, 1usize, 1usize),
+            (1, 1, 7),
+            (31, 29, 23),
+            (7, 13, 3),
+            (17, 5, 300), // k crosses the KC slab boundary
+            (9, 64, 1),
+            (64, 9, 257),
+            (130, 70, 40),
+        ];
+        let mut rng = Rng::new(100);
+        for &(m, n, k) in &cases {
+            let a = randmat(&mut rng, m, k);
+            let b = randmat(&mut rng, n, k);
+            let c = blocked(4, &a, &b);
+            let e = naive(&a, &b);
+            let dmax = c.max_abs_diff(&e);
+            let scale = (k as f32).sqrt();
+            assert!(dmax < 1e-4 * scale.max(1.0), "({m},{n},{k}): diff {dmax}");
+        }
+    }
+
+    #[test]
+    fn empty_dims_are_fine() {
+        let mut rng = Rng::new(101);
+        // m == 0 / n == 0: nothing to write
+        let a = Matrix::zeros(0, 5);
+        let b = randmat(&mut rng, 4, 5);
+        let mut c = Matrix::zeros(0, 4);
+        gemm_nt_strided(4, 0, 4, 5, &a.data, 5, 1, &b.data, 5, 1, None, &mut c.data, 4);
+        let mut c2 = Matrix::zeros(4, 0);
+        gemm_nt_strided(4, 4, 0, 5, &b.data, 5, 1, &a.data, 5, 1, None, &mut c2.data, 0);
+        // k == 0: C must be zeroed (empty sum), even if it held garbage
+        let a0 = Matrix::zeros(3, 0);
+        let b0 = Matrix::zeros(2, 0);
+        let mut c0 = Matrix::from_vec(3, 2, vec![9.0; 6]);
+        gemm_nt_strided(4, 3, 2, 0, &a0.data, 0, 1, &b0.data, 0, 1, None, &mut c0.data, 2);
+        assert!(c0.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(102);
+        for &(m, n, k) in &[(257usize, 129usize, 300usize), (40, 40, 17), (1024, 64, 64)] {
+            let a = randmat(&mut rng, m, k);
+            let b = randmat(&mut rng, n, k);
+            let c1 = blocked(1, &a, &b);
+            for &threads in &[2usize, 8] {
+                let ck = blocked(threads, &a, &b);
+                assert_eq!(c1.data, ck.data, "({m},{n},{k}) threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn strided_operands_express_transpose() {
+        // C = Aᵀ·A via strides must equal gemm(Aᵀ as a materialized matrix)
+        let mut rng = Rng::new(103);
+        let a = randmat(&mut rng, 37, 11); // t x b
+        let at = a.transpose();
+        let expect = naive(&at, &at);
+        let mut c = Matrix::zeros(11, 11);
+        gemm_nt_strided(
+            3, 11, 11, 37, &a.data, 1, 11, &a.data, 1, 11, None, &mut c.data, 11,
+        );
+        assert!(c.max_abs_diff(&expect) < 1e-3, "diff {}", c.max_abs_diff(&expect));
+    }
+
+    #[test]
+    fn kscale_weights_the_depth_dimension() {
+        let mut rng = Rng::new(104);
+        let a = randmat(&mut rng, 5, 50);
+        let b = randmat(&mut rng, 6, 50);
+        let w: Vec<f32> = (0..50).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        let mut c = Matrix::zeros(5, 6);
+        gemm_nt_strided(2, 5, 6, 50, &a.data, 50, 1, &b.data, 50, 1, Some(&w), &mut c.data, 6);
+        for i in 0..5 {
+            for j in 0..6 {
+                let mut e = 0.0f64;
+                for p in 0..50 {
+                    e += (w[p] * a.at(i, p) * b.at(j, p)) as f64;
+                }
+                assert!((c.at(i, j) - e as f32).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn ldc_larger_than_n_leaves_padding_untouched() {
+        let mut rng = Rng::new(105);
+        let a = randmat(&mut rng, 9, 12);
+        let b = randmat(&mut rng, 5, 12);
+        let ldc = 8;
+        let mut c = vec![7.0f32; 9 * ldc];
+        gemm_nt_strided(4, 9, 5, 12, &a.data, 12, 1, &b.data, 12, 1, None, &mut c, ldc);
+        let e = naive(&a, &b);
+        for i in 0..9 {
+            for j in 0..5 {
+                assert!((c[i * ldc + j] - e.at(i, j)).abs() < 1e-4);
+            }
+            for j in 5..ldc {
+                assert_eq!(c[i * ldc + j], 7.0, "padding clobbered at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_lanes_matches_f64_dot() {
+        let mut rng = Rng::new(106);
+        for len in [0usize, 1, 7, 8, 9, 64, 257] {
+            let x: Vec<f32> = (0..len).map(|_| rng.gaussian_f32()).collect();
+            let y: Vec<f32> = (0..len).map(|_| rng.gaussian_f32()).collect();
+            let got = dot_lanes(&x, &y);
+            let want = dot(&x, &y);
+            assert!((got - want).abs() < 1e-3, "len {len}: {got} vs {want}");
+            assert_eq!(dist2_lanes(&x, &x), 0.0, "len {len}");
+        }
+    }
+
+    #[test]
+    fn sum_sq_cancels_with_gemm_diagonal() {
+        // the RBF-diagonal contract: ‖x‖² from sum_sq must equal the
+        // GEMM's x·x bit-for-bit, including across slab boundaries
+        let mut rng = Rng::new(107);
+        for d in [3usize, 8, 255, 256, 257, 700] {
+            let x = randmat(&mut rng, 1, d);
+            let c = blocked(1, &x, &x);
+            assert_eq!(c.data[0].to_bits(), sum_sq(x.row(0)).to_bits(), "d={d}");
+        }
+    }
+
+    #[test]
+    fn gemv_t_blocked_matches_naive() {
+        let mut rng = Rng::new(108);
+        for &(rows, cols) in &[(1usize, 1usize), (9, 300), (67, 301), (300, 5), (8, 8)] {
+            let m = randmat(&mut rng, rows, cols);
+            let v: Vec<f32> = (0..rows).map(|_| rng.gaussian_f32()).collect();
+            let mut out = vec![0.0f32; cols];
+            gemv_t_blocked(4, rows, cols, &m.data, cols, &v, &mut out);
+            for j in 0..cols {
+                let mut e = 0.0f64;
+                for r in 0..rows {
+                    e += (v[r] * m.at(r, j)) as f64;
+                }
+                assert!(
+                    (out[j] - e as f32).abs() < 1e-3,
+                    "({rows},{cols}) col {j}: {} vs {e}",
+                    out[j]
+                );
+            }
+            // thread-count determinism
+            let mut o1 = vec![0.0f32; cols];
+            gemv_t_blocked(1, rows, cols, &m.data, cols, &v, &mut o1);
+            assert_eq!(out, o1);
+        }
+    }
+}

@@ -1,13 +1,18 @@
 //! Dense linear-algebra substrate (row-major f32).
 //!
 //! This is the hand-written counterpart to the optimized library the
-//! implicit approach leans on: blocked, thread-parallel GEMM/GEMV plus the
-//! small direct solvers the baselines need. The explicit engines and the
-//! full-kernel solvers (multiplicative update, primal Newton) run on this;
-//! the implicit engine runs on XLA artifacts instead.
+//! implicit approach leans on. The heavy lifting lives in [`gemm`]: a
+//! cache-blocked, panel-packing, register-tiled GEMM with deterministic
+//! (thread-count independent) accumulation — see `rust/DESIGN.md` §GEMM.
+//! The entry points here (`gemm_nt`, `syrk_masked`, `gemv`, `gemv_t`)
+//! are thin drivers over that substrate plus the small direct solvers
+//! the baselines need. The explicit engines and the full-kernel solvers
+//! (multiplicative update, primal Newton) run on this; the implicit
+//! engine runs on XLA artifacts instead.
 
 pub mod chol;
 pub mod cg;
+pub mod gemm;
 
 use crate::pool;
 use crate::pool::SendPtr;
@@ -68,7 +73,8 @@ impl Matrix {
         t
     }
 
-    /// Frobenius-norm distance to another matrix (test helper).
+    /// Maximum absolute elementwise difference to another matrix
+    /// (test helper).
     pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data
@@ -111,46 +117,37 @@ pub fn dist2(x: &[f32], y: &[f32]) -> f32 {
     acc as f32
 }
 
-/// out = M v  (threaded over rows).
+/// out = M v — driver over the lane-accumulated row kernel in [`gemm`].
 pub fn gemv(threads: usize, m: &Matrix, v: &[f32], out: &mut [f32]) {
     assert_eq!(m.cols, v.len());
     assert_eq!(m.rows, out.len());
-    let rows_per = ((m.rows + 63) / 64).max(1);
-    let out_ptr = SendPtr::new(out.as_mut_ptr());
-    pool::parallel_for(threads, m.rows, rows_per, |r| {
-        let val = dot(m.row(r), v);
-        // SAFETY: each index r is visited exactly once (parallel_for
-        // guarantee), so writes are disjoint.
-        unsafe { *out_ptr.get().add(r) = val }
-    });
+    gemm::gemv_blocked(threads, m.rows, m.cols, &m.data, m.cols, v, out);
 }
 
-/// out = M^T v (threaded over column blocks).
+/// out = M^T v — driver over the panel-streaming kernel in [`gemm`].
 pub fn gemv_t(threads: usize, m: &Matrix, v: &[f32], out: &mut [f32]) {
     assert_eq!(m.rows, v.len());
     assert_eq!(m.cols, out.len());
-    out.iter_mut().for_each(|o| *o = 0.0);
-    let nblk = (m.cols + 255) / 256;
-    let out_ptr = SendPtr::new(out.as_mut_ptr());
-    pool::parallel_for(threads, nblk, 1, |b| {
-        let c0 = b * 256;
-        let c1 = (c0 + 256).min(m.cols);
-        // SAFETY: column blocks are disjoint across iterations.
-        let o = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(c0), c1 - c0) };
-        for r in 0..m.rows {
-            let row = &m.row(r)[c0..c1];
-            let vr = v[r];
-            if vr != 0.0 {
-                axpy(vr, row, o);
-            }
-        }
-    });
+    gemm::gemv_t_blocked(threads, m.rows, m.cols, &m.data, m.cols, v, out);
 }
 
-/// C = A * B^T (threaded, blocked). A: [m,k], B: [n,k] -> C: [m,n].
-/// B^T layout means both operands stream row-major — the natural layout for
-/// kernel blocks (rows = points).
+/// C = A * B^T (cache-blocked, panel-packed, register-tiled — see
+/// [`gemm`]). A: [m,k], B: [n,k] -> C: [m,n]. B^T layout means both
+/// operands stream row-major — the natural layout for kernel blocks
+/// (rows = points). Output is bit-identical for every thread count.
 pub fn gemm_nt(threads: usize, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    gemm::gemm_nt_strided(
+        threads, a.rows, b.rows, a.cols, &a.data, a.cols, 1, &b.data, b.cols, 1, None,
+        &mut c.data, b.rows,
+    );
+}
+
+/// The seed's dot-loop GEMM (`m·n` independent f64-accumulated scalar
+/// dots), kept as the reference the property tests and the
+/// `BENCH_gemm.json` micro-benchmark compare the blocked path against.
+pub fn gemm_nt_naive(threads: usize, a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.cols);
     assert_eq!((c.rows, c.cols), (a.rows, b.rows));
     let n = b.rows;
@@ -165,45 +162,19 @@ pub fn gemm_nt(threads: usize, a: &Matrix, b: &Matrix, c: &mut Matrix) {
     });
 }
 
-/// C = A^T * A over rows where mask != 0 (Gauss-Newton Gram block).
-/// A: [t, b] -> C: [b, b].
+/// C = A^T * diag(mask) * A (Gauss-Newton Gram block). A: [t, b] ->
+/// C: [b, b]. A driver over the packed GEMM: both operands are the
+/// transposed tile expressed through strides (packing transposes for
+/// free) and the mask rides along as the B-side depth scale, so there is
+/// no materialized Aᵀ and no per-thread partial matrices.
 pub fn syrk_masked(threads: usize, a: &Matrix, mask: &[f32], c: &mut Matrix) {
     assert_eq!(a.rows, mask.len());
     assert_eq!((c.rows, c.cols), (a.cols, a.cols));
     let bdim = a.cols;
-    let nthread = threads.max(1);
-    // Per-thread partial accumulators, reduced at the end.
-    let ranges = pool::split_ranges(a.rows, nthread);
-    let partials: Vec<Matrix> = {
-        let outs: Vec<std::sync::Mutex<Matrix>> = (0..ranges.len())
-            .map(|_| std::sync::Mutex::new(Matrix::zeros(bdim, bdim)))
-            .collect();
-        let ranges_ref = &ranges;
-        pool::parallel_for(nthread, ranges.len(), 1, |t| {
-            let mut acc = outs[t].lock().unwrap();
-            for r in ranges_ref[t].clone() {
-                let w = mask[r];
-                if w == 0.0 {
-                    continue;
-                }
-                let row = a.row(r);
-                for i in 0..bdim {
-                    let ri = row[i] * w;
-                    if ri == 0.0 {
-                        continue;
-                    }
-                    axpy(ri, row, &mut acc.row_mut(i)[..]);
-                }
-            }
-        });
-        outs.into_iter().map(|m| m.into_inner().unwrap()).collect()
-    };
-    c.data.iter_mut().for_each(|v| *v = 0.0);
-    for p in partials {
-        for (cv, pv) in c.data.iter_mut().zip(p.data) {
-            *cv += pv;
-        }
-    }
+    gemm::gemm_nt_strided(
+        threads, bdim, bdim, a.rows, &a.data, 1, bdim, &a.data, 1, bdim, Some(mask),
+        &mut c.data, bdim,
+    );
 }
 
 
@@ -304,13 +275,32 @@ mod tests {
 
     #[test]
     fn threaded_matches_single_thread() {
+        // stronger than the seed's 1e-6: the blocked substrate is
+        // bit-identical for every thread count (DESIGN.md §GEMM)
         let mut rng = Rng::new(6);
         let a = randmat(&mut rng, 200, 64);
         let b = randmat(&mut rng, 50, 64);
         let mut c1 = Matrix::zeros(200, 50);
-        let mut c8 = Matrix::zeros(200, 50);
         gemm_nt(1, &a, &b, &mut c1);
-        gemm_nt(8, &a, &b, &mut c8);
-        assert!(c1.max_abs_diff(&c8) < 1e-6);
+        for threads in [2usize, 8] {
+            let mut ck = Matrix::zeros(200, 50);
+            gemm_nt(threads, &a, &b, &mut ck);
+            assert_eq!(c1.data, ck.data, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn blocked_gemm_matches_seed_dot_loop() {
+        let mut rng = Rng::new(7);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (31, 29, 17), (100, 40, 300)] {
+            let a = randmat(&mut rng, m, k);
+            let b = randmat(&mut rng, n, k);
+            let mut c = Matrix::zeros(m, n);
+            let mut e = Matrix::zeros(m, n);
+            gemm_nt(4, &a, &b, &mut c);
+            gemm_nt_naive(4, &a, &b, &mut e);
+            let dmax = c.max_abs_diff(&e);
+            assert!(dmax < 1e-3, "({m},{n},{k}): diff {dmax}");
+        }
     }
 }

@@ -7,7 +7,9 @@
 //!   a_i <- a_i * (1 + sqrt(1 + 4 (Q+ a)_i (Q- a)_i)) / (2 (Q+ a)_i)
 //!
 //! (for linear coefficient b_i = -1), clipped to the box. Every iteration
-//! is two dense GEMVs — maximally library-friendly — but the paper finds
+//! is two dense GEMVs — maximally library-friendly, and served by the
+//! blocked `linalg` substrate (DESIGN.md §GEMM) like the rest of the
+//! implicit family — but the paper finds
 //! (and we reproduce) that it is not competitive: it materializes
 //! *two* n x n matrices (Q+ and Q-) and converges too slowly. It refuses
 //! to run above a memory cap, which is the Table-1 "—" entry.
@@ -58,18 +60,30 @@ pub fn train(ds: &Dataset, kind: KernelKind, params: &MuParams) -> Result<TrainR
     // Q+ and Q- both materialize: half the cap each.
     let k = full_kernel(&kind, ds, params.threads, params.max_kernel_bytes / 2)
         .map_err(|e| anyhow!(e))?;
-    // Q = y y^T * K, split into positive and negative parts.
+    // Q = y y^T * K, split into positive and negative parts (rows are
+    // independent — the split streams in parallel like the GEMVs below).
     let mut qp = Matrix::zeros(n, n);
     let mut qm = Matrix::zeros(n, n);
-    for i in 0..n {
-        for j in 0..n {
-            let q = ds.y[i] * ds.y[j] * k.at(i, j);
-            if q >= 0.0 {
-                qp.set(i, j, q);
-            } else {
-                qm.set(i, j, -q);
+    {
+        let qp_ptr = crate::pool::SendPtr::new(qp.data.as_mut_ptr());
+        let qm_ptr = crate::pool::SendPtr::new(qm.data.as_mut_ptr());
+        let y = &ds.y;
+        let kref = &k;
+        crate::pool::parallel_for(params.threads, n, 8, |i| {
+            let yi = y[i];
+            let krow = kref.row(i);
+            // SAFETY: row i of each matrix written by exactly one task.
+            let qpr = unsafe { std::slice::from_raw_parts_mut(qp_ptr.get().add(i * n), n) };
+            let qmr = unsafe { std::slice::from_raw_parts_mut(qm_ptr.get().add(i * n), n) };
+            for j in 0..n {
+                let q = yi * y[j] * krow[j];
+                if q >= 0.0 {
+                    qpr[j] = q;
+                } else {
+                    qmr[j] = -q;
+                }
             }
-        }
+        });
     }
     drop(k);
     sw.lap("kernel");

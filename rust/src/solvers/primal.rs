@@ -110,13 +110,24 @@ pub fn train(ds: &Dataset, kind: KernelKind, params: &PrimalParams) -> Result<Tr
         let g_bias: f32 = 2.0 * c * resid.iter().sum::<f32>();
 
         // Newton direction by CG on H v = K v + 2C K (A .* (K v + v_b)) ;
-        // bias row handled jointly.
-        let apply = |v: &[f32], vb: f32, out: &mut Vec<f32>, ob: &mut f32| {
-            let mut kv = vec![0.0f32; n];
-            gemv(threads, &k, v, &mut kv);
-            let av: Vec<f32> = (0..n).map(|i| state.active[i] * (kv[i] + vb)).collect();
-            let mut kav = vec![0.0f32; n];
-            gemv(threads, &k, &av, &mut kav);
+        // bias row handled jointly. Scratch vectors are hoisted out of the
+        // apply so the CG loop allocates nothing per iteration (the GEMVs
+        // inside dominate and run on the blocked substrate).
+        let mut kv = vec![0.0f32; n];
+        let mut av = vec![0.0f32; n];
+        let mut kav = vec![0.0f32; n];
+        let apply = |v: &[f32],
+                     vb: f32,
+                     out: &mut Vec<f32>,
+                     ob: &mut f32,
+                     kv: &mut Vec<f32>,
+                     av: &mut Vec<f32>,
+                     kav: &mut Vec<f32>| {
+            gemv(threads, &k, v, kv);
+            for i in 0..n {
+                av[i] = state.active[i] * (kv[i] + vb);
+            }
+            gemv(threads, &k, av, kav);
             for i in 0..n {
                 out[i] = kv[i] + 2.0 * c * kav[i] + 1e-6 * v[i];
             }
@@ -137,7 +148,7 @@ pub fn train(ds: &Dataset, kind: KernelKind, params: &PrimalParams) -> Result<Tr
             if rs < 1e-10 * rs0.max(1.0) {
                 break;
             }
-            apply(&p, pb, &mut ap, &mut apb);
+            apply(&p, pb, &mut ap, &mut apb, &mut kv, &mut av, &mut kav);
             let denom = (dot(&p, &ap) as f64 + (pb * apb) as f64).max(1e-30);
             let alpha = (rs / denom) as f32;
             for i in 0..n {

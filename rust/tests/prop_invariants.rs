@@ -100,6 +100,36 @@ fn prop_row_cache_never_returns_wrong_row() {
 }
 
 #[test]
+fn prop_blocked_gemm_matches_naive_and_is_thread_deterministic() {
+    use wu_svm::linalg::{gemm_nt, gemm_nt_naive, Matrix};
+    let mut rng = Rng::new(21);
+    for case in 0..40 {
+        let m = 1 + rng.below(80);
+        let n = 1 + rng.below(80);
+        let k = rng.below(300); // includes 0, k < MR, and slab-crossing
+        let a = Matrix::from_vec(m, k, (0..m * k).map(|_| rng.gaussian_f32()).collect());
+        let b = Matrix::from_vec(n, k, (0..n * k).map(|_| rng.gaussian_f32()).collect());
+        let mut c1 = Matrix::zeros(m, n);
+        gemm_nt(1, &a, &b, &mut c1);
+        // agrees with the seed's f64 dot-loop reference
+        let mut e = Matrix::zeros(m, n);
+        gemm_nt_naive(2, &a, &b, &mut e);
+        let dmax = c1.max_abs_diff(&e);
+        let tol = 1e-4 * (k as f32).sqrt().max(1.0);
+        assert!(dmax < tol, "case {case} ({m},{n},{k}): diff {dmax} > {tol}");
+        // bit-identical C for every thread count
+        for threads in [2usize, 8] {
+            let mut ck = Matrix::zeros(m, n);
+            gemm_nt(threads, &a, &b, &mut ck);
+            assert_eq!(
+                c1.data, ck.data,
+                "case {case} ({m},{n},{k}): threads {threads} not bit-identical"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_engines_agree_on_random_shapes() {
     let mut rng = Rng::new(5);
     let seq = Engine::cpu_seq();
