@@ -3,17 +3,20 @@
 //! synthetic dataset substrate -> solvers (explicit SMO family + implicit
 //! SP-SVM) -> ComputeEngines (cpu-seq / cpu-par / AOT-XLA artifacts) ->
 //! metrics -> paper-style report — then serve the trained model through
-//! the batched prediction service and report latency/throughput.
+//! the serving subsystem (versioned registry, sharded batchers over a
+//! bounded queue) and report the serve metrics, including a mid-traffic
+//! hot swap.
 //!
 //! Run: `cargo run --release --example end_to_end_table1 -- [dataset] [scale]`
 //! The recorded run lives in EXPERIMENTS.md.
 
-use wu_svm::coordinator::{self, serve, EngineChoice, Solver, TrainJob};
+use wu_svm::coordinator::{self, EngineChoice, Solver, TrainJob};
 use wu_svm::data::paper;
 use wu_svm::experiments;
 use wu_svm::metrics::fmt_duration;
 use wu_svm::pool;
 use wu_svm::report;
+use wu_svm::serve;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -54,39 +57,43 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let engine = coordinator::build_engine(job.engine)?;
-    let model = wu_svm::solvers::spsvm::train(
-        &train,
-        &wu_svm::solvers::spsvm::SpSvmParams {
-            c: spec.c,
-            gamma: spec.gamma,
-            max_basis: 255,
-            ..Default::default()
-        },
-        &engine,
-    )?
-    .model;
-    let server = serve::Server::start(model, engine, serve::ServeConfig::default());
+    let params = wu_svm::solvers::spsvm::SpSvmParams {
+        c: spec.c,
+        gamma: spec.gamma,
+        max_basis: 255,
+        ..Default::default()
+    };
+    let model = wu_svm::solvers::spsvm::train(&train, &params, &engine)?.model;
+    let server = serve::Server::start(
+        &model,
+        engine,
+        serve::ServeConfig { shards: 2, ..Default::default() },
+    );
+    println!("registered: {}", server.registry().current().describe());
     let client = server.client();
     let n_req = 2000.min(test.n * 4);
     let t0 = std::time::Instant::now();
-    let mut lat = Vec::with_capacity(n_req);
     for i in 0..n_req {
-        let t1 = std::time::Instant::now();
         client.predict(test.row(i % test.n).to_vec())?;
-        lat.push(t1.elapsed());
     }
     let total = t0.elapsed();
-    lat.sort();
-    let stats = server.stop();
     println!(
-        "served {n_req} requests in {} — {:.0} req/s, p50 {:?}, p99 {:?}, {} batches (max {})",
+        "served {n_req} requests in {} — {:.0} req/s",
         fmt_duration(total),
         n_req as f64 / total.as_secs_f64(),
-        lat[n_req / 2],
-        lat[n_req * 99 / 100],
-        stats.batches,
-        stats.max_batch
     );
+    // hot-swap a retrained (smaller) version mid-service, then keep serving
+    let params2 = wu_svm::solvers::spsvm::SpSvmParams { max_basis: 63, ..params };
+    let engine2 = coordinator::build_engine(job.engine)?;
+    let model2 = wu_svm::solvers::spsvm::train(&train, &params2, &engine2)?.model;
+    let v = server.publish(&model2)?;
+    println!("hot-swapped to {} (version {v})", server.registry().current().describe());
+    for i in 0..n_req.min(500) {
+        client.predict(test.row(i % test.n).to_vec())?;
+    }
+    let stats = server.stop();
+    println!("{stats}");
+    assert_eq!(stats.fallbacks, 0, "engine fallbacks must be zero on a healthy run");
     println!("\nE2E OK: all layers composed (data -> solvers -> engines -> report -> serving)");
     Ok(())
 }

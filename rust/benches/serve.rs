@@ -1,0 +1,184 @@
+//! Serving throughput and latency across batch sizes and shard counts —
+//! the serve-side analog of the GEMM substrate comparison. Emits
+//! machine-readable `BENCH_serve.json` (rust/EXPERIMENTS.md §SERVE).
+//!
+//! Run: `cargo bench --bench serve`
+
+use std::time::{Duration, Instant};
+
+use wu_svm::bench_util::header;
+use wu_svm::engine::Engine;
+use wu_svm::kernel::KernelKind;
+use wu_svm::model::SvmModel;
+use wu_svm::multiclass::OvoModel;
+use wu_svm::pool;
+use wu_svm::rng::Rng;
+use wu_svm::serve::{Server, ServeConfig, Snapshot};
+
+fn rand_model(rng: &mut Rng, b: usize, d: usize) -> SvmModel {
+    SvmModel {
+        kernel: KernelKind::Rbf { gamma: 0.5 },
+        vectors: (0..b * d).map(|_| rng.uniform_f32()).collect(),
+        d,
+        coef: (0..b).map(|_| rng.gaussian_f32() * 0.3).collect(),
+        bias: 0.1,
+        solver: "bench".into(),
+    }
+}
+
+/// Closed-loop drive: `clients` threads each issue `per_client` blocking
+/// predicts. Returns (wall time, server's final snapshot).
+fn drive(server: Server, clients: usize, per_client: usize, d: usize) -> (Duration, Snapshot) {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients as u64)
+        .map(|t| {
+            let c = server.client();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0xbe0 + t);
+                for _ in 0..per_client {
+                    let f: Vec<f32> = (0..d).map(|_| rng.uniform_f32()).collect();
+                    c.predict(f).expect("predict");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    (wall, server.stop())
+}
+
+fn main() {
+    let threads = pool::default_threads();
+    let mut rng = Rng::new(7);
+    let d = 64;
+    let model = rand_model(&mut rng, 256, d);
+    let clients = 8;
+    let per_client = 1500;
+    let total_req = (clients * per_client) as f64;
+
+    header(&format!(
+        "serve throughput — binary b=256 d={d}, {clients} closed-loop clients x {per_client} reqs"
+    ));
+    println!(
+        "{:<34} {:>12} {:>10} {:>10} {:>10} {:>10}",
+        "case", "req/s", "p50<=", "p99<=", "mean", "fallback"
+    );
+    let mut json_cases = String::new();
+    for &shards in &[1usize, 2, 4] {
+        for &batch in &[32usize, 256] {
+            let server = Server::start(
+                &model,
+                Engine::cpu_par(threads),
+                ServeConfig {
+                    batch,
+                    shards,
+                    queue_cap: 8192,
+                    max_wait: Duration::from_micros(500),
+                },
+            );
+            // warm the pool and the packed tiles
+            {
+                let c = server.client();
+                for _ in 0..64 {
+                    c.predict(vec![0.5; d]).unwrap();
+                }
+            }
+            let (wall, snap) = drive(server, clients, per_client, d);
+            let rps = total_req / wall.as_secs_f64();
+            println!(
+                "{:<34} {:>12.0} {:>10?} {:>10?} {:>10.1} {:>10}",
+                format!("shards={shards} batch={batch}"),
+                rps,
+                snap.p50,
+                snap.p99,
+                snap.mean_batch,
+                snap.fallbacks
+            );
+            if !json_cases.is_empty() {
+                json_cases.push_str(",\n");
+            }
+            json_cases.push_str(&format!(
+                "    {{\"shards\": {shards}, \"batch\": {batch}, \"req_per_s\": {:.0}, \
+                 \"p50_us\": {}, \"p99_us\": {}, \"mean_batch\": {:.2}, \"fallbacks\": {}}}",
+                rps,
+                snap.p50.as_micros(),
+                snap.p99.as_micros(),
+                snap.mean_batch,
+                snap.fallbacks
+            ));
+        }
+    }
+
+    // OvO: 10 classes, 45 pairs sharing one dedup'd union — one kernel
+    // block per batch instead of 45
+    header("serve throughput — OvO 10 classes / 45 pairs, shared union block");
+    let classes = 10;
+    let mut pairs = Vec::new();
+    let mut models = Vec::new();
+    // pairs share a common pool of vectors so the union dedup bites
+    let pool_rows: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..d).map(|_| rng.uniform_f32()).collect())
+        .collect();
+    for a in 0..classes {
+        for b in (a + 1)..classes {
+            let ids: Vec<usize> = (0..12).map(|k| (a * 7 + b * 3 + k * 5) % 64).collect();
+            let mut vectors = Vec::with_capacity(ids.len() * d);
+            for &i in &ids {
+                vectors.extend_from_slice(&pool_rows[i]);
+            }
+            models.push(SvmModel {
+                kernel: KernelKind::Rbf { gamma: 0.5 },
+                vectors,
+                d,
+                coef: (0..12).map(|_| rng.gaussian_f32() * 0.3).collect(),
+                bias: 0.05,
+                solver: "bench".into(),
+            });
+            pairs.push((a, b));
+        }
+    }
+    let ovo = OvoModel { classes, pairs, models, train_secs: 0.0 };
+    let ovo_raw = ovo.total_vectors();
+    let server = Server::start(
+        &ovo,
+        Engine::cpu_par(threads),
+        ServeConfig {
+            batch: 256,
+            shards: 2,
+            queue_cap: 8192,
+            max_wait: Duration::from_micros(500),
+        },
+    );
+    let compiled = server.registry().current();
+    println!("{}", compiled.describe());
+    let ovo_union = compiled.packed_vectors();
+    drop(compiled);
+    let ovo_per_client = 400;
+    let (wall, snap) = drive(server, clients, ovo_per_client, d);
+    let ovo_rps = (clients * ovo_per_client) as f64 / wall.as_secs_f64();
+    println!(
+        "{:<34} {:>12.0} {:>10?} {:>10?} {:>10.1} {:>10}",
+        format!("ovo union={ovo_union}/{ovo_raw}"),
+        ovo_rps,
+        snap.p50,
+        snap.p99,
+        snap.mean_batch,
+        snap.fallbacks
+    );
+
+    let json = format!(
+        "{{\n  \"workload\": {{\"binary_b\": 256, \"d\": {d}, \"clients\": {clients}, \
+         \"per_client\": {per_client}}},\n  \"threads\": {threads},\n  \"cases\": [\n{json_cases}\n  ],\n  \
+         \"ovo\": {{\"classes\": {classes}, \"pairs\": 45, \"raw_vectors\": {ovo_raw}, \
+         \"union_vectors\": {ovo_union}, \"req_per_s\": {ovo_rps:.0}, \
+         \"p50_us\": {}, \"p99_us\": {}}}\n}}\n",
+        snap.p50.as_micros(),
+        snap.p99.as_micros(),
+    );
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve.json:\n{json}"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

@@ -1,5 +1,7 @@
 //! Training-job coordination: one place that wires datasets, solvers and
 //! engines together (used by the CLI, the examples and the bench harness).
+//! Serving moved to [`crate::serve`]; `coordinator::serve` re-exports it
+//! for one release.
 
 pub mod serve;
 

@@ -1,274 +1,10 @@
-//! Batched prediction service.
+//! Deprecated location of the serving subsystem.
 //!
-//! The implicit-parallel credo applied to inference: individual prediction
-//! requests are routed into a queue, a batcher thread groups them into
-//! padded tiles, and one engine call per tile computes every margin
-//! (kernel block against the model's expansion vectors + predict). Under
-//! the cpu engines those two calls — `rbf_block` + `predict_block` — run
-//! on the blocked-GEMM substrate (DESIGN.md §GEMM), so batching buys the
-//! same dense-library throughput at serve time that the implicit solvers
-//! get at train time. This mirrors how a deployed WU-SVM would serve
-//! traffic, and exercises the coordinator invariants the property tests
-//! check: every request is answered exactly once, responses match their
-//! requests, batches never exceed the tile size.
+//! The single-threaded demo batcher that lived here grew into the real
+//! serving stack at [`crate::serve`] (versioned model registry, sharded
+//! batchers over a bounded queue, compacted serve-time models, metrics —
+//! DESIGN.md §SERVE). This re-export keeps `coordinator::serve::*` paths
+//! compiling for one release; new code should import `wu_svm::serve`
+//! directly.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::Duration;
-
-use anyhow::Result;
-
-use crate::engine::Engine;
-use crate::kernel::KernelKind;
-use crate::model::SvmModel;
-
-/// A prediction request: features + reply channel.
-struct Request {
-    id: u64,
-    features: Vec<f32>,
-    reply: Sender<Response>,
-}
-
-/// A prediction response.
-#[derive(Debug, Clone, PartialEq)]
-pub struct Response {
-    pub id: u64,
-    pub margin: f32,
-}
-
-/// Server configuration.
-#[derive(Debug, Clone)]
-pub struct ServeConfig {
-    /// Max requests per batch (and engine tile rows).
-    pub batch: usize,
-    /// How long the batcher waits to fill a batch.
-    pub max_wait: Duration,
-}
-
-impl Default for ServeConfig {
-    fn default() -> Self {
-        ServeConfig { batch: 256, max_wait: Duration::from_millis(2) }
-    }
-}
-
-/// Handle for submitting requests.
-#[derive(Clone)]
-pub struct Client {
-    tx: Sender<Request>,
-    next_id: Arc<std::sync::atomic::AtomicU64>,
-}
-
-impl Client {
-    /// Submit one request; returns a receiver for its response.
-    pub fn submit(&self, features: Vec<f32>) -> (u64, Receiver<Response>) {
-        let (rtx, rrx) = channel();
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        // Ignore send errors after shutdown; the receiver will see
-        // disconnection.
-        let _ = self.tx.send(Request { id, features, reply: rtx });
-        (id, rrx)
-    }
-
-    /// Submit and block for the margin.
-    pub fn predict(&self, features: Vec<f32>) -> Result<f32> {
-        let (_, rx) = self.submit(features);
-        Ok(rx.recv()?.margin)
-    }
-}
-
-/// Running server with its worker thread.
-pub struct Server {
-    client: Client,
-    handle: Option<JoinHandle<ServeStats>>,
-    shutdown_tx: Sender<Request>,
-}
-
-/// Counters reported at shutdown.
-#[derive(Debug, Default, Clone)]
-pub struct ServeStats {
-    pub requests: u64,
-    pub batches: u64,
-    pub max_batch: usize,
-}
-
-impl Server {
-    /// Spawn the batcher thread for `model` on `engine`.
-    pub fn start(model: SvmModel, engine: Engine, cfg: ServeConfig) -> Server {
-        let (tx, rx) = channel::<Request>();
-        let shutdown_tx = tx.clone();
-        let handle = std::thread::spawn(move || batcher_loop(model, engine, cfg, rx));
-        Server {
-            client: Client { tx, next_id: Arc::new(std::sync::atomic::AtomicU64::new(0)) },
-            handle: Some(handle),
-            shutdown_tx,
-        }
-    }
-
-    pub fn client(&self) -> Client {
-        self.client.clone()
-    }
-
-    /// Stop the server and return its stats. Safe even while client
-    /// clones are still alive: a sentinel request tells the batcher to
-    /// drain and exit.
-    pub fn stop(mut self) -> ServeStats {
-        let (rtx, _rrx) = channel();
-        let _ = self
-            .shutdown_tx
-            .send(Request { id: SHUTDOWN_ID, features: Vec::new(), reply: rtx });
-        self.handle.take().map(|h| h.join().unwrap()).unwrap_or_default()
-    }
-}
-
-/// Reserved request id that tells the batcher to shut down.
-const SHUTDOWN_ID: u64 = u64::MAX;
-
-fn batcher_loop(model: SvmModel, engine: Engine, cfg: ServeConfig, rx: Receiver<Request>) -> ServeStats {
-    let mut stats = ServeStats::default();
-    let gamma = match model.kernel {
-        KernelKind::Rbf { gamma } => gamma,
-        _ => f32::NAN, // non-RBF served via scalar fallback below
-    };
-    let b = model.num_vectors();
-    let d = model.d;
-    loop {
-        // Block for the first request; then drain up to batch-1 more
-        // within max_wait.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break, // all senders gone
-        };
-        let mut shutdown = false;
-        if first.id == SHUTDOWN_ID {
-            break;
-        }
-        let mut batch = vec![first];
-        let deadline = std::time::Instant::now() + cfg.max_wait;
-        while batch.len() < cfg.batch {
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) if r.id == SHUTDOWN_ID => {
-                    shutdown = true;
-                    break;
-                }
-                Ok(r) => batch.push(r),
-                Err(_) => break,
-            }
-        }
-        stats.requests += batch.len() as u64;
-        stats.batches += 1;
-        stats.max_batch = stats.max_batch.max(batch.len());
-
-        // one engine call for the whole batch (padded to batch rows)
-        let margins: Vec<f32> = if gamma.is_nan() || b == 0 {
-            batch.iter().map(|r| model.decision(&r.features)).collect()
-        } else {
-            let t = batch.len();
-            let mut x = vec![0.0f32; t * d];
-            for (i, r) in batch.iter().enumerate() {
-                x[i * d..(i + 1) * d].copy_from_slice(&r.features);
-            }
-            match engine
-                .rbf_block(&x, t, d, &model.vectors, b, gamma)
-                .and_then(|k| engine.predict_block(&k, t, b, &model.coef))
-            {
-                Ok(mut f) => {
-                    for v in f.iter_mut() {
-                        *v += model.bias;
-                    }
-                    f
-                }
-                Err(_) => batch.iter().map(|r| model.decision(&r.features)).collect(),
-            }
-        };
-        for (r, m) in batch.into_iter().zip(margins) {
-            let _ = r.reply.send(Response { id: r.id, margin: m });
-        }
-        if shutdown {
-            break;
-        }
-    }
-    stats
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn model() -> SvmModel {
-        SvmModel {
-            kernel: KernelKind::Rbf { gamma: 0.5 },
-            vectors: vec![0.0, 0.0, 1.0, 1.0],
-            d: 2,
-            coef: vec![1.0, -1.0],
-            bias: 0.1,
-            solver: "t".into(),
-        }
-    }
-
-    #[test]
-    fn serves_correct_margins() {
-        let m = model();
-        let expect = m.decision(&[0.25, 0.75]);
-        let server = Server::start(m, Engine::cpu_seq(), ServeConfig::default());
-        let client = server.client();
-        let got = client.predict(vec![0.25, 0.75]).unwrap();
-        assert!((got - expect).abs() < 1e-5, "{got} vs {expect}");
-        let stats = server.stop();
-        assert_eq!(stats.requests, 1);
-    }
-
-    #[test]
-    fn every_request_answered_exactly_once() {
-        let server = Server::start(model(), Engine::cpu_par(2), ServeConfig { batch: 16, max_wait: Duration::from_millis(5) });
-        let client = server.client();
-        let pending: Vec<(u64, Receiver<Response>, Vec<f32>)> = (0..200)
-            .map(|i| {
-                let f = vec![(i as f32) / 200.0, 0.5];
-                let (id, rx) = client.submit(f.clone());
-                (id, rx, f)
-            })
-            .collect();
-        let m = model();
-        for (id, rx, f) in pending {
-            let resp = rx.recv().unwrap();
-            assert_eq!(resp.id, id);
-            assert!((resp.margin - m.decision(&f)).abs() < 1e-4);
-            // exactly once: channel now empty & disconnected or empty
-            assert!(rx.try_recv().is_err());
-        }
-        let stats = server.stop();
-        assert_eq!(stats.requests, 200);
-        assert!(stats.max_batch <= 16);
-        assert!(stats.batches >= (200 / 16) as u64);
-    }
-
-    #[test]
-    fn concurrent_clients() {
-        let server = Server::start(model(), Engine::cpu_seq(), ServeConfig::default());
-        let handles: Vec<_> = (0..8)
-            .map(|t| {
-                let c = server.client();
-                std::thread::spawn(move || {
-                    let m = model();
-                    for i in 0..50 {
-                        let f = vec![(t as f32) / 8.0, (i as f32) / 50.0];
-                        let got = c.predict(f.clone()).unwrap();
-                        assert!((got - m.decision(&f)).abs() < 1e-4);
-                    }
-                })
-            })
-            .collect();
-        for h in handles {
-            h.join().unwrap();
-        }
-        let stats = server.stop();
-        assert_eq!(stats.requests, 400);
-    }
-}
+pub use crate::serve::*;

@@ -124,6 +124,35 @@ impl Engine {
         Ok(k)
     }
 
+    /// [`Engine::rbf_block`] with the b-side squared norms supplied by the
+    /// caller — the serve-time entry point. A model registry computes
+    /// `bnorms` once at registration (`gemm::sum_sq` order, so the
+    /// exact-diagonal contract holds), and every batch then skips
+    /// re-deriving them. The xla engine has no norms-supplied artifact and
+    /// routes to the standard kernel (same numbers, norms recomputed on
+    /// device).
+    #[allow(clippy::too_many_arguments)]
+    pub fn rbf_block_pre(
+        &self,
+        x: &[f32],
+        t: usize,
+        d: usize,
+        xb: &[f32],
+        b: usize,
+        gamma: f32,
+        bnorms: &[f32],
+    ) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), t * d);
+        assert_eq!(xb.len(), b * d);
+        assert_eq!(bnorms.len(), b);
+        if self.is_xla() {
+            return self.rbf_block(x, t, d, xb, b, gamma);
+        }
+        let mut k = vec![0.0f32; t * b];
+        linalg::gemm::rbf_blocked_pre(self.threads(), x, t, xb, b, d, gamma, bnorms, &mut k);
+        Ok(k)
+    }
+
     /// Fused squared-hinge statistics for one tile (see kernels/hinge.py).
     pub fn tile_stats(
         &self,
@@ -327,6 +356,24 @@ mod tests {
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0, f32::max);
             assert!(max < 1e-4, "{} differs by {max}", e.name());
+        }
+    }
+
+    #[test]
+    fn rbf_block_pre_matches_rbf_block() {
+        let mut rng = Rng::new(11);
+        let (t, d, b) = (37, 19, 23); // deliberately non-bucket shapes
+        let x = rand_vec(&mut rng, t * d);
+        let xb = rand_vec(&mut rng, b * d);
+        let bnorms: Vec<f32> =
+            (0..b).map(|j| crate::linalg::gemm::sum_sq(&xb[j * d..(j + 1) * d])).collect();
+        for e in [Engine::cpu_seq(), Engine::cpu_par(4)] {
+            let base = e.rbf_block(&x, t, d, &xb, b, 0.8).unwrap();
+            let pre = e.rbf_block_pre(&x, t, d, &xb, b, 0.8, &bnorms).unwrap();
+            assert_eq!(base.len(), pre.len());
+            for (a, w) in pre.iter().zip(&base) {
+                assert_eq!(a.to_bits(), w.to_bits(), "{}", e.name());
+            }
         }
     }
 

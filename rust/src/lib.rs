@@ -15,7 +15,8 @@
 //!   squared-hinge statistics.
 //! * L2 — JAX graphs (`python/compile/model.py`): the five tile ops,
 //!   lowered to HLO text artifacts by `make artifacts`.
-//! * L3 — this crate: datasets, solvers, engines, coordinator, CLI.
+//! * L3 — this crate: datasets, solvers, engines, coordinator, the
+//!   serving subsystem (`serve/`), CLI.
 
 pub mod bench_util;
 pub mod config;
@@ -32,4 +33,5 @@ pub mod pool;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;

@@ -351,14 +351,42 @@ pub fn rbf_blocked(
     gamma: f32,
     out: &mut [f32],
 ) {
+    assert_eq!(xb.len(), b * d);
+    if b == 0 {
+        assert_eq!(out.len(), t * b);
+        return;
+    }
+    let bsq: Vec<f32> = (0..b).map(|j| sum_sq(&xb[j * d..(j + 1) * d])).collect();
+    rbf_blocked_pre(threads, x, t, xb, b, d, gamma, &bsq, out);
+}
+
+/// [`rbf_blocked`] with the b-side squared norms supplied by the caller.
+/// The serve-time entry point: a model registry computes `bsq` once at
+/// registration (`serve::registry`), so the per-batch cost drops to one
+/// GEMM + a-side norms + the fused exp pass. `bsq[j]` must be
+/// `sum_sq(&xb[j*d..(j+1)*d])` — the GEMM's own accumulation order — for
+/// the exact-diagonal contract to survive; any other norms silently
+/// shift every distance. Deterministic for every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn rbf_blocked_pre(
+    threads: usize,
+    x: &[f32],
+    t: usize,
+    xb: &[f32],
+    b: usize,
+    d: usize,
+    gamma: f32,
+    bsq: &[f32],
+    out: &mut [f32],
+) {
     assert_eq!(x.len(), t * d);
     assert_eq!(xb.len(), b * d);
     assert_eq!(out.len(), t * b);
+    assert_eq!(bsq.len(), b);
     if b == 0 {
         return;
     }
     gemm_nt_strided(threads, t, b, d, x, d, 1, xb, d, 1, None, out, b);
-    let bsq: Vec<f32> = (0..b).map(|j| sum_sq(&xb[j * d..(j + 1) * d])).collect();
     pool::parallel_chunks_mut(threads, out, b, |i, row| {
         let xsq = sum_sq(&x[i * d..(i + 1) * d]);
         for (j, slot) in row.iter_mut().enumerate() {
@@ -587,6 +615,34 @@ mod tests {
             let x = randmat(&mut rng, 1, d);
             let c = blocked(1, &x, &x);
             assert_eq!(c.data[0].to_bits(), sum_sq(x.row(0)).to_bits(), "d={d}");
+        }
+    }
+
+    #[test]
+    fn rbf_blocked_pre_is_bit_identical_to_recomputed() {
+        // the serve path supplies registration-time norms; with norms from
+        // sum_sq (the contract) the output must match rbf_blocked bit for
+        // bit, for every thread count
+        let mut rng = Rng::new(109);
+        for &(t, b, d) in &[(7usize, 5usize, 3usize), (33, 16, 257), (64, 8, 64)] {
+            let x: Vec<f32> = (0..t * d).map(|_| rng.gaussian_f32()).collect();
+            let xb: Vec<f32> = (0..b * d).map(|_| rng.gaussian_f32()).collect();
+            let bsq: Vec<f32> = (0..b).map(|j| sum_sq(&xb[j * d..(j + 1) * d])).collect();
+            let mut base = vec![0.0f32; t * b];
+            rbf_blocked(1, &x, t, &xb, b, d, 0.7, &mut base);
+            for &threads in &[1usize, 4] {
+                let mut pre = vec![0.0f32; t * b];
+                rbf_blocked_pre(threads, &x, t, &xb, b, d, 0.7, &bsq, &mut pre);
+                for (a, e) in pre.iter().zip(&base) {
+                    assert_eq!(a.to_bits(), e.to_bits(), "({t},{b},{d}) threads={threads}");
+                }
+            }
+            // diagonal contract survives the precomputed-norms path
+            let mut sym = vec![0.0f32; b * b];
+            rbf_blocked_pre(2, &xb, b, &xb, b, d, 0.7, &bsq, &mut sym);
+            for i in 0..b {
+                assert_eq!(sym[i * b + i], 1.0, "diag {i}");
+            }
         }
     }
 

@@ -5,7 +5,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use wu_svm::config::Config;
-use wu_svm::coordinator::{self, serve, TrainJob};
+use wu_svm::coordinator::{self, TrainJob};
+use wu_svm::serve;
 use wu_svm::data::{libsvm, paper};
 use wu_svm::experiments;
 use wu_svm::metrics::fmt_duration;
@@ -29,6 +30,7 @@ COMMANDS
   bench     table1|scaling|basis|wss|epsstop|memory
             table1: --dataset KEY|all --scale S --methods a,b --max-basis N
   serve     --dataset KEY --scale S [--engine E] [--requests N] [--batch N]
+            [--shards K] [--queue-cap N]  (multiclass datasets serve OvO)
   info      artifact manifest + runtime info
   help      this text
 
@@ -229,6 +231,8 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     let scale = cfg.f64_or("scale", 0.02)?;
     let n_req = cfg.usize_or("requests", 2000)?;
     let batch = cfg.usize_or("batch", 256)?;
+    let shards = cfg.usize_or("shards", 2)?.max(1);
+    let queue_cap = cfg.usize_or("queue-cap", 4096)?;
     let engine_choice = coordinator::EngineChoice::parse(
         &cfg.str_or("engine", "cpu-par"),
         cfg.usize_or("threads", pool::default_threads())?,
@@ -243,37 +247,45 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     };
     println!("training a quick SP-SVM model on {key} (scale {scale})...");
     let (tr, te, spec) = coordinator::load_data(&job)?;
-    anyhow::ensure!(!tr.is_multiclass(), "serve supports binary datasets");
     let engine = coordinator::build_engine(job.engine)?;
-    let r = wu_svm::solvers::spsvm::train(
-        &tr,
-        &wu_svm::solvers::spsvm::SpSvmParams {
-            c: spec.c,
-            gamma: spec.gamma,
-            max_basis: 127,
-            ..Default::default()
-        },
-        &engine,
-    )?;
-    println!("model: {} basis vectors", r.model.num_vectors());
+    let params = wu_svm::solvers::spsvm::SpSvmParams {
+        c: spec.c,
+        gamma: spec.gamma,
+        max_basis: 127,
+        ..Default::default()
+    };
+    // binary datasets register an SvmModel, multiclass an OvO ensemble —
+    // both serve through the same registry + sharded batchers
+    let registry = if tr.is_multiclass() {
+        let ovo = wu_svm::multiclass::OvoModel::train(&tr, |view, _, _| {
+            Ok(wu_svm::solvers::spsvm::train(view, &params, &engine)?.model)
+        })?;
+        println!(
+            "model: {} OvO pairs, {} expansion vectors",
+            ovo.pairs.len(),
+            ovo.total_vectors()
+        );
+        std::sync::Arc::new(serve::ModelRegistry::new(&ovo))
+    } else {
+        let r = wu_svm::solvers::spsvm::train(&tr, &params, &engine)?;
+        println!("model: {} basis vectors", r.model.num_vectors());
+        std::sync::Arc::new(serve::ModelRegistry::new(&r.model))
+    };
+    println!("compiled: {}", registry.current().describe());
 
     let serve_engine = coordinator::build_engine(engine_choice)?;
-    let server = serve::Server::start(
-        r.model,
+    let server = serve::Server::with_registry(
+        registry,
         serve_engine,
-        serve::ServeConfig { batch, ..Default::default() },
+        serve::ServeConfig { batch, shards, queue_cap, ..Default::default() },
     );
     let client = server.client();
     let t0 = std::time::Instant::now();
-    let mut latencies = Vec::with_capacity(n_req);
     for i in 0..n_req {
         let row = te.row(i % te.n).to_vec();
-        let t1 = std::time::Instant::now();
         let _ = client.predict(row)?;
-        latencies.push(t1.elapsed());
     }
     let total = t0.elapsed();
-    latencies.sort();
     let stats = server.stop();
     println!(
         "served {} requests in {} ({:.0} req/s)",
@@ -281,13 +293,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         fmt_duration(total),
         n_req as f64 / total.as_secs_f64()
     );
-    println!(
-        "latency p50 = {:?} p99 = {:?}; batches = {} (max {})",
-        latencies[n_req / 2],
-        latencies[(n_req * 99) / 100],
-        stats.batches,
-        stats.max_batch
-    );
+    println!("{stats}");
     Ok(())
 }
 

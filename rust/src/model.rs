@@ -65,6 +65,13 @@ impl SvmModel {
         let f = std::fs::File::create(path)
             .with_context(|| format!("create {}", path.display()))?;
         let mut w = BufWriter::new(f);
+        self.write_to(&mut w)
+    }
+
+    /// Write the v1 text format to any writer. `save` wraps this; the OvO
+    /// container format ([`crate::multiclass::OvoModel::save`]) embeds one
+    /// block per pair model.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
         writeln!(w, "wu-svm-model v1")?;
         writeln!(w, "solver {}", self.solver)?;
         match self.kernel {
@@ -91,21 +98,25 @@ impl SvmModel {
         let f = std::fs::File::open(path)
             .with_context(|| format!("open {}", path.display()))?;
         let mut lines = std::io::BufReader::new(f).lines();
-        let mut next = || -> Result<String> {
-            lines
-                .next()
-                .transpose()?
-                .context("unexpected end of model file")
-        };
-        let magic = next()?;
+        SvmModel::read_from(&mut lines)
+    }
+
+    /// Read one v1 model block from a line iterator, leaving the iterator
+    /// positioned just past the model's last vector line (so container
+    /// formats can read several blocks back to back).
+    pub fn read_from<I>(lines: &mut I) -> Result<SvmModel>
+    where
+        I: Iterator<Item = std::io::Result<String>>,
+    {
+        let magic = next_line(lines)?;
         if magic.trim() != "wu-svm-model v1" {
             bail!("not a wu-svm model file");
         }
-        let solver = next()?
+        let solver = next_line(lines)?
             .strip_prefix("solver ")
             .context("solver line")?
             .to_string();
-        let kline = next()?;
+        let kline = next_line(lines)?;
         let ktok: Vec<&str> = kline.split_ascii_whitespace().collect();
         let kernel = match ktok.as_slice() {
             ["kernel", "rbf", g] => KernelKind::Rbf { gamma: g.parse()? },
@@ -117,11 +128,11 @@ impl SvmModel {
             },
             _ => bail!("bad kernel line '{kline}'"),
         };
-        let bias: f32 = next()?
+        let bias: f32 = next_line(lines)?
             .strip_prefix("bias ")
             .context("bias line")?
             .parse()?;
-        let dline = next()?;
+        let dline = next_line(lines)?;
         let dtok: Vec<&str> = dline.split_ascii_whitespace().collect();
         let (m, d): (usize, usize) = match dtok.as_slice() {
             ["dims", m, d] => (m.parse()?, d.parse()?),
@@ -130,7 +141,7 @@ impl SvmModel {
         let mut coef = Vec::with_capacity(m);
         let mut vectors = Vec::with_capacity(m * d);
         for _ in 0..m {
-            let line = next()?;
+            let line = next_line(lines)?;
             let mut it = line.split_ascii_whitespace();
             coef.push(it.next().context("coef")?.parse()?);
             let mut cnt = 0;
@@ -144,6 +155,19 @@ impl SvmModel {
         }
         Ok(SvmModel { kernel, vectors, d, coef, bias, solver })
     }
+}
+
+/// Pull the next line out of a model-file iterator or fail with a
+/// uniform truncation error (shared by [`SvmModel::read_from`] and the
+/// OvO container loader).
+pub(crate) fn next_line<I>(lines: &mut I) -> Result<String>
+where
+    I: Iterator<Item = std::io::Result<String>>,
+{
+    lines
+        .next()
+        .transpose()?
+        .context("unexpected end of model file")
 }
 
 #[cfg(test)]
@@ -203,6 +227,29 @@ mod tests {
         assert_eq!(back.solver, "test");
         assert_eq!(back.kernel, m.kernel);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn stream_round_trip_leaves_iterator_past_block() {
+        // two models written back to back into one buffer must read back
+        // as two blocks (the OvO container relies on this positioning)
+        let mut a = model();
+        a.solver = "first".into();
+        let mut b = model();
+        b.solver = "second".into();
+        b.bias = -0.5;
+        let mut buf: Vec<u8> = Vec::new();
+        a.write_to(&mut buf).unwrap();
+        b.write_to(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let mut lines = text.lines().map(|l| Ok(l.to_string()));
+        let ra = SvmModel::read_from(&mut lines).unwrap();
+        let rb = SvmModel::read_from(&mut lines).unwrap();
+        assert_eq!(ra.solver, "first");
+        assert_eq!(rb.solver, "second");
+        assert_eq!(rb.bias, -0.5);
+        assert!(lines.next().is_none());
+        assert!(SvmModel::read_from(&mut std::iter::empty()).is_err());
     }
 
     #[test]

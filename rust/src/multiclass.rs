@@ -8,16 +8,32 @@
 //! share one [`crate::kernel::cache::SharedRowCache`] so the concurrent
 //! subproblems stay within a single kernel-cache byte budget.
 
-use anyhow::Result;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
 
 use crate::data::Dataset;
 use crate::metrics::Stopwatch;
-use crate::model::SvmModel;
+use crate::model::{next_line, SvmModel};
 use crate::pool;
+
+/// LibSVM's vote argmax: most votes wins, ties broken toward the smaller
+/// class id. One definition shared by [`OvoModel::predict`],
+/// [`OvoModel::vote_one`] and the serve registry's packed OvO scorer, so
+/// all three agree exactly.
+pub fn vote_argmax(votes: &[u32]) -> usize {
+    votes
+        .iter()
+        .enumerate()
+        .max_by(|(ia, va), (ib, vb)| va.cmp(vb).then(ib.cmp(ia)))
+        .map(|(i, _)| i)
+        .unwrap()
+}
 
 /// A one-vs-one ensemble: models for every unordered class pair (a < b),
 /// where a positive margin votes for class `a`.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct OvoModel {
     pub classes: usize,
     pub pairs: Vec<(usize, usize)>,
@@ -112,21 +128,94 @@ impl OvoModel {
                 }
             }
         }
-        votes
-            .into_iter()
-            .map(|v| {
-                v.iter()
-                    .enumerate()
-                    .max_by(|(ia, va), (ib, vb)| va.cmp(vb).then(ib.cmp(ia)))
-                    .map(|(i, _)| i)
-                    .unwrap()
-            })
-            .collect()
+        votes.into_iter().map(|v| vote_argmax(&v)).collect()
+    }
+
+    /// Class id (and its vote count) for a single input by pairwise
+    /// voting — the scalar path the serve registry falls back to. Matches
+    /// [`OvoModel::predict`] row for row.
+    pub fn vote_one(&self, x: &[f32]) -> (usize, u32) {
+        let mut votes = vec![0u32; self.classes];
+        for (m, &(a, b)) in self.models.iter().zip(&self.pairs) {
+            if m.decision(x) > 0.0 {
+                votes[a] += 1;
+            } else {
+                votes[b] += 1;
+            }
+        }
+        let c = vote_argmax(&votes);
+        (c, votes[c])
     }
 
     /// Total expansion vectors across all pair models.
     pub fn total_vectors(&self) -> usize {
         self.models.iter().map(|m| m.num_vectors()).sum()
+    }
+
+    /// Save the ensemble in a self-describing text container: a v1 header
+    /// (class count, accumulated train seconds, pair count) followed by
+    /// each pair's label-map line and its embedded [`SvmModel`] v1 block.
+    /// Pair models keep their own kernels — mixed per-pair kernels
+    /// round-trip.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "wu-svm-ovo v1")?;
+        writeln!(w, "classes {}", self.classes)?;
+        writeln!(w, "train_secs {}", self.train_secs)?;
+        writeln!(w, "pairs {}", self.pairs.len())?;
+        for (m, &(a, b)) in self.models.iter().zip(&self.pairs) {
+            writeln!(w, "pair {a} {b}")?;
+            m.write_to(&mut w)?;
+        }
+        Ok(())
+    }
+
+    /// Load an ensemble saved by [`OvoModel::save`].
+    pub fn load(path: &Path) -> Result<OvoModel> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut lines = std::io::BufReader::new(f).lines();
+        if next_line(&mut lines)?.trim() != "wu-svm-ovo v1" {
+            bail!("not a wu-svm ovo model file");
+        }
+        let classes: usize = next_line(&mut lines)?
+            .strip_prefix("classes ")
+            .context("classes line")?
+            .parse()?;
+        let train_secs: f64 = next_line(&mut lines)?
+            .strip_prefix("train_secs ")
+            .context("train_secs line")?
+            .parse()?;
+        let n_pairs: usize = next_line(&mut lines)?
+            .strip_prefix("pairs ")
+            .context("pairs line")?
+            .parse()?;
+        let mut pairs = Vec::with_capacity(n_pairs);
+        let mut models = Vec::with_capacity(n_pairs);
+        for _ in 0..n_pairs {
+            let pline = next_line(&mut lines)?;
+            let ptok: Vec<&str> = pline.split_ascii_whitespace().collect();
+            let (a, b) = match ptok.as_slice() {
+                ["pair", a, b] => (a.parse::<usize>()?, b.parse::<usize>()?),
+                _ => bail!("bad pair line '{pline}'"),
+            };
+            if a >= b || b >= classes {
+                bail!("pair ({a},{b}) out of range for {classes} classes");
+            }
+            pairs.push((a, b));
+            let model = SvmModel::read_from(&mut lines)?;
+            // every pair must score the same feature dimension — a
+            // mismatch would panic at serve time instead of load time
+            if let Some(first) = models.first() {
+                if model.d != first.d {
+                    bail!("pair ({a},{b}) has dim {}, expected {}", model.d, first.d);
+                }
+            }
+            models.push(model);
+        }
+        Ok(OvoModel { classes, pairs, models, train_secs })
     }
 }
 
@@ -196,6 +285,101 @@ mod tests {
         }
         let te = ds.subsample(100, 5);
         assert_eq!(par.predict(&te, 2), seq.predict(&te, 2));
+    }
+
+    #[test]
+    fn save_load_round_trips_per_pair_kernels_and_label_maps() {
+        // deliberately mixed per-pair kernels and a sparse pair list (class
+        // 1 vs 3 missing): everything must survive the text round trip
+        let mk = |kernel: KernelKind, bias: f32, solver: &str| SvmModel {
+            kernel,
+            vectors: vec![0.1, 0.2, 0.9, 0.4],
+            d: 2,
+            coef: vec![0.75, -1.25],
+            bias,
+            solver: solver.into(),
+        };
+        let ovo = OvoModel {
+            classes: 4,
+            pairs: vec![(0, 1), (0, 3), (2, 3)],
+            models: vec![
+                mk(KernelKind::Rbf { gamma: 0.5 }, 0.1, "smo"),
+                mk(KernelKind::Linear, -0.2, "wss"),
+                mk(KernelKind::Poly { degree: 3, gamma: 0.7, coef0: 1.5 }, 0.3, "spsvm"),
+            ],
+            train_secs: 12.25,
+        };
+        let dir = std::env::temp_dir().join("wu_svm_ovo_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ovo.model");
+        ovo.save(&path).unwrap();
+        let back = OvoModel::load(&path).unwrap();
+        assert_eq!(back.classes, 4);
+        assert_eq!(back.pairs, ovo.pairs);
+        assert_eq!(back.train_secs, 12.25);
+        assert_eq!(back.models.len(), 3);
+        for (a, b) in back.models.iter().zip(&ovo.models) {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.coef, b.coef);
+            assert_eq!(a.vectors, b.vectors);
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.solver, b.solver);
+        }
+        // behavioral equality, not just field equality
+        let ds = Dataset::new_multiclass("t", 2, vec![0.3, 0.6, 0.8, 0.1], vec![0, 2]);
+        assert_eq!(back.predict(&ds, 1), ovo.predict(&ds, 1));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage_and_bad_pairs() {
+        let dir = std::env::temp_dir().join("wu_svm_ovo_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.ovo");
+        std::fs::write(&bad, "not an ovo model\n").unwrap();
+        assert!(OvoModel::load(&bad).is_err());
+        std::fs::write(
+            &bad,
+            "wu-svm-ovo v1\nclasses 2\ntrain_secs 0\npairs 1\npair 1 1\n",
+        )
+        .unwrap();
+        assert!(OvoModel::load(&bad).is_err());
+        // mismatched per-pair dims must fail at load, not panic at serve
+        let mk = |d: usize| SvmModel {
+            kernel: KernelKind::Linear,
+            vectors: vec![0.5; d],
+            d,
+            coef: vec![1.0],
+            bias: 0.0,
+            solver: "t".into(),
+        };
+        let mismatched = OvoModel {
+            classes: 3,
+            pairs: vec![(0, 1), (1, 2)],
+            models: vec![mk(2), mk(3)],
+            train_secs: 0.0,
+        };
+        mismatched.save(&bad).unwrap();
+        assert!(OvoModel::load(&bad).is_err());
+        std::fs::remove_file(bad).ok();
+    }
+
+    #[test]
+    fn vote_one_matches_batch_predict() {
+        let ds = three_class(240, 7);
+        let ovo = OvoModel::train(&ds, |view, _, _| {
+            Ok(smo::train(view, KernelKind::Rbf { gamma: 2.0 },
+                          &SmoParams { c: 10.0, ..Default::default() },
+                          &Engine::cpu_seq())?.model)
+        })
+        .unwrap();
+        let te = ds.subsample(40, 3);
+        let batch = ovo.predict(&te, 2);
+        for i in 0..te.n {
+            let (c, votes) = ovo.vote_one(te.row(i));
+            assert_eq!(c, batch[i], "row {i}");
+            assert!(votes >= 1 && votes <= ovo.pairs.len() as u32);
+        }
     }
 
     #[test]

@@ -1,0 +1,573 @@
+//! Sharded batching over a bounded queue with admission control.
+//!
+//! N batcher workers drain one bounded MPMC queue. Each worker blocks
+//! for a first request, fills its batch for at most `max_wait`, snapshots
+//! the registry's current model `Arc` (one coherent version per batch),
+//! and runs one engine call for the whole batch — so with k shards, k
+//! engine calls pipeline concurrently over the pool instead of
+//! serializing behind a single batcher thread.
+//!
+//! Invariants (property-tested in `rust/tests/serve_props.rs`):
+//!
+//! * **Admission control** — a full queue rejects with
+//!   [`SubmitError::Overloaded`] immediately; admitted requests are never
+//!   silently dropped.
+//! * **Exactly once** — every admitted request is answered exactly once,
+//!   including across shutdown: `stop()` closes the queue to new
+//!   submissions, workers drain what was already admitted (the seed's
+//!   batcher broke on its shutdown sentinel and dropped everything queued
+//!   behind it), and any stragglers are answered on the stopping thread.
+//! * **Counted fallback** — an engine error never silently degrades:
+//!   affected requests are scored by the scalar path and counted in
+//!   [`ServeMetrics`] (happy-path tests assert the count is zero).
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::serve::metrics::{ServeMetrics, Snapshot};
+use crate::serve::registry::{CompiledModel, ModelRegistry, Servable};
+use crate::serve::{Output, Response, ServeConfig};
+
+/// Why a submission was not admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is full — shed load now rather than letting the
+    /// backlog (and tail latency) grow without bound.
+    Overloaded,
+    /// The server has been stopped.
+    Closed,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Overloaded => f.write_str("serve queue full (overloaded)"),
+            SubmitError::Closed => f.write_str("server stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A prediction request in flight.
+struct Request {
+    id: u64,
+    features: Vec<f32>,
+    enqueued: Instant,
+    reply: Sender<Response>,
+}
+
+struct QueueInner {
+    q: VecDeque<Request>,
+    shutdown: bool,
+}
+
+/// Bounded MPMC request queue (mutex + condvar; contention is one push
+/// or one batch-pop at a time, far below engine-call cost).
+struct Queue {
+    inner: Mutex<QueueInner>,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl Queue {
+    fn new(cap: usize) -> Queue {
+        Queue {
+            inner: Mutex::new(QueueInner { q: VecDeque::new(), shutdown: false }),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Admit a request, or reject immediately (never blocks).
+    /// Returns the queue depth observed after the push.
+    fn push(&self, req: Request) -> Result<usize, SubmitError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.shutdown {
+            return Err(SubmitError::Closed);
+        }
+        if g.q.len() >= self.cap {
+            return Err(SubmitError::Overloaded);
+        }
+        g.q.push_back(req);
+        let depth = g.q.len();
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(depth)
+    }
+
+    /// Pop one batch: block for a first request, then fill up to `max`
+    /// for at most `max_wait`. Returns `None` only when the queue is
+    /// shut down **and** empty — after `close()`, callers keep getting
+    /// batches until everything admitted has been drained. During
+    /// shutdown the fill wait is skipped so draining is prompt.
+    fn pop_batch(&self, max: usize, max_wait: Duration) -> Option<Vec<Request>> {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.q.is_empty() {
+                break;
+            }
+            if g.shutdown {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+        let mut batch = Vec::with_capacity(max.min(g.q.len()));
+        while batch.len() < max {
+            match g.q.pop_front() {
+                Some(r) => batch.push(r),
+                None => break,
+            }
+        }
+        if batch.len() < max && !g.shutdown {
+            let deadline = Instant::now() + max_wait;
+            loop {
+                while batch.len() < max {
+                    match g.q.pop_front() {
+                        Some(r) => batch.push(r),
+                        None => break,
+                    }
+                }
+                if batch.len() >= max || g.shutdown {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g2, _) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+                g = g2;
+            }
+        }
+        let leftover = !g.q.is_empty();
+        drop(g);
+        if leftover {
+            // a notify may have been consumed by this (now full) batch;
+            // hand the remainder to another shard promptly
+            self.not_empty.notify_one();
+        }
+        Some(batch)
+    }
+
+    /// Refuse new submissions and wake every waiter.
+    fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.shutdown = true;
+        drop(g);
+        self.not_empty.notify_all();
+    }
+
+    /// Pop one straggler (stop-time drain, after workers exited).
+    fn drain_one(&self) -> Option<Request> {
+        self.inner.lock().unwrap().q.pop_front()
+    }
+
+    fn depth(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+}
+
+/// Handle for submitting requests; cheap to clone, usable from any thread.
+#[derive(Clone)]
+pub struct Client {
+    queue: Arc<Queue>,
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<ServeMetrics>,
+    next_id: Arc<AtomicU64>,
+}
+
+/// An admitted request's in-flight response handle.
+pub struct Pending {
+    pub id: u64,
+    rx: Receiver<Response>,
+}
+
+impl Pending {
+    /// Block for the response.
+    pub fn wait(&self) -> Result<Response> {
+        Ok(self.rx.recv()?)
+    }
+
+    /// Non-blocking poll (the exactly-once tests use this to assert no
+    /// second response ever arrives).
+    pub fn try_take(&self) -> Option<Response> {
+        self.rx.try_recv().ok()
+    }
+}
+
+impl Client {
+    /// Submit one request. Rejection (`Overloaded`/`Closed`) is
+    /// immediate — admission control never blocks the caller.
+    pub fn submit(&self, features: Vec<f32>) -> Result<Pending, SubmitError> {
+        assert_eq!(
+            features.len(),
+            self.registry.input_dim(),
+            "feature dim mismatch"
+        );
+        let (tx, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, features, enqueued: Instant::now(), reply: tx };
+        match self.queue.push(req) {
+            Ok(depth) => {
+                self.metrics.on_submit(depth);
+                Ok(Pending { id, rx })
+            }
+            Err(e) => {
+                if e == SubmitError::Overloaded {
+                    self.metrics.on_reject();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit and block for the output (error if rejected or stopped).
+    pub fn predict(&self, features: Vec<f32>) -> Result<Output> {
+        let p = self.submit(features)?;
+        Ok(p.wait()?.output)
+    }
+}
+
+/// Running server: a registry, a bounded queue and its batcher shards.
+pub struct Server {
+    queue: Arc<Queue>,
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<ServeMetrics>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Compile `model` into a fresh single-version registry and serve it.
+    pub fn start(model: &dyn Servable, engine: Engine, cfg: ServeConfig) -> Server {
+        Server::with_registry(Arc::new(ModelRegistry::new(model)), engine, cfg)
+    }
+
+    /// Serve an existing (possibly shared) registry.
+    pub fn with_registry(
+        registry: Arc<ModelRegistry>,
+        engine: Engine,
+        cfg: ServeConfig,
+    ) -> Server {
+        let queue = Arc::new(Queue::new(cfg.queue_cap));
+        let metrics = Arc::new(ServeMetrics::new());
+        let workers = (0..cfg.shards)
+            .map(|s| {
+                let q = queue.clone();
+                let r = registry.clone();
+                let m = metrics.clone();
+                let e = engine.clone();
+                let c = cfg.clone();
+                std::thread::Builder::new()
+                    .name(format!("wu-svm-serve-{s}"))
+                    .spawn(move || worker_loop(&q, &r, &e, &c, &m))
+                    .expect("spawn serve shard")
+            })
+            .collect();
+        Server {
+            queue,
+            registry,
+            metrics,
+            workers,
+            next_id: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn client(&self) -> Client {
+        Client {
+            queue: self.queue.clone(),
+            registry: self.registry.clone(),
+            metrics: self.metrics.clone(),
+            next_id: self.next_id.clone(),
+        }
+    }
+
+    /// The registry backing this server (for out-of-band hot swaps).
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        self.registry.clone()
+    }
+
+    /// Compile and hot-swap a new model version; in-flight batches finish
+    /// on the version they started with. Returns the new version id.
+    pub fn publish(&self, model: &dyn Servable) -> Result<u64> {
+        self.registry.publish(model)
+    }
+
+    /// Live metrics handle.
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        self.metrics.clone()
+    }
+
+    /// Point-in-time counters.
+    pub fn snapshot(&self) -> Snapshot {
+        self.metrics.snapshot(self.queue.depth(), self.registry.version())
+    }
+
+    /// Stop serving: refuse new submissions, let the shards drain every
+    /// admitted request, then answer any stragglers on this thread (only
+    /// possible with `shards == 0`). Every admitted request is answered
+    /// exactly once. Returns the final counters.
+    pub fn stop(mut self) -> Snapshot {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let model = self.registry.current();
+        while let Some(req) = self.queue.drain_one() {
+            let out = model.score_scalar(&req.features);
+            let lat = req.enqueued.elapsed();
+            let _ = req
+                .reply
+                .send(Response { id: req.id, version: model.version, output: out });
+            self.metrics.on_answer(lat);
+        }
+        self.snapshot()
+    }
+}
+
+fn worker_loop(
+    queue: &Queue,
+    registry: &ModelRegistry,
+    engine: &Engine,
+    cfg: &ServeConfig,
+    metrics: &ServeMetrics,
+) {
+    while let Some(batch) = queue.pop_batch(cfg.batch, cfg.max_wait) {
+        // one model snapshot per batch: a hot swap mid-batch never mixes
+        // versions inside a batch, and the load happens strictly after
+        // every request in the batch was admitted
+        let model = registry.current();
+        metrics.on_batch(batch.len());
+        // a panic while scoring (e.g. a malformed model) must not kill
+        // the shard: the poisoned batch's reply senders drop (waiters see
+        // an error, not a hang), the panic is counted, and the shard
+        // lives on to serve the next batch
+        let poisoned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            process_batch(&model, engine, batch, metrics);
+        }))
+        .is_err();
+        if poisoned {
+            metrics.on_panic();
+        }
+    }
+}
+
+fn process_batch(
+    model: &CompiledModel,
+    engine: &Engine,
+    batch: Vec<Request>,
+    metrics: &ServeMetrics,
+) {
+    let t = batch.len();
+    let d = model.d;
+    let mut x = vec![0.0f32; t * d];
+    for (i, r) in batch.iter().enumerate() {
+        x[i * d..(i + 1) * d].copy_from_slice(&r.features);
+    }
+    let outputs = match model.score_batch(engine, &x, t) {
+        Ok(o) => o,
+        Err(_) => {
+            // engine failed (e.g. an xla runtime went away): degrade to
+            // scalar scoring, but never silently — the counter is
+            // asserted zero by every happy-path test
+            metrics.on_fallback(t);
+            batch.iter().map(|r| model.score_scalar(&r.features)).collect()
+        }
+    };
+    for (r, out) in batch.into_iter().zip(outputs) {
+        let lat = r.enqueued.elapsed();
+        let _ = r
+            .reply
+            .send(Response { id: r.id, version: model.version, output: out });
+        metrics.on_answer(lat);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelKind;
+    use crate::model::SvmModel;
+
+    fn model() -> SvmModel {
+        SvmModel {
+            kernel: KernelKind::Rbf { gamma: 0.5 },
+            vectors: vec![0.0, 0.0, 1.0, 1.0],
+            d: 2,
+            coef: vec![1.0, -1.0],
+            bias: 0.1,
+            solver: "t".into(),
+        }
+    }
+
+    #[test]
+    fn serves_correct_margins() {
+        let m = model();
+        let expect = m.decision(&[0.25, 0.75]);
+        let server = Server::start(&m, Engine::cpu_seq(), ServeConfig::default());
+        let client = server.client();
+        let got = client.predict(vec![0.25, 0.75]).unwrap().margin().unwrap();
+        assert!((got - expect).abs() < 1e-5, "{got} vs {expect}");
+        let stats = server.stop();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.fallbacks, 0);
+    }
+
+    #[test]
+    fn every_request_answered_exactly_once() {
+        let m = model();
+        let server = Server::start(
+            &m,
+            Engine::cpu_par(2),
+            ServeConfig {
+                batch: 16,
+                max_wait: Duration::from_millis(5),
+                shards: 2,
+                queue_cap: 4096,
+            },
+        );
+        let client = server.client();
+        let pending: Vec<(Pending, Vec<f32>)> = (0..200)
+            .map(|i| {
+                let f = vec![(i as f32) / 200.0, 0.5];
+                (client.submit(f.clone()).unwrap(), f)
+            })
+            .collect();
+        for (p, f) in pending {
+            let resp = p.wait().unwrap();
+            assert_eq!(resp.id, p.id);
+            assert!((resp.output.margin().unwrap() - m.decision(&f)).abs() < 1e-4);
+            assert!(p.try_take().is_none(), "second response for one request");
+        }
+        let stats = server.stop();
+        assert_eq!(stats.requests, 200);
+        assert_eq!(stats.submitted, 200);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.fallbacks, 0);
+        assert_eq!(stats.panics, 0);
+        assert!(stats.max_batch <= 16);
+        assert!(stats.batches >= 200 / 16);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = Server::start(&model(), Engine::cpu_seq(), ServeConfig::default());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let c = server.client();
+                std::thread::spawn(move || {
+                    let m = model();
+                    for i in 0..50 {
+                        let f = vec![(t as f32) / 8.0, (i as f32) / 50.0];
+                        let got = c.predict(f.clone()).unwrap().margin().unwrap();
+                        assert!((got - m.decision(&f)).abs() < 1e-4);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = server.stop();
+        assert_eq!(stats.requests, 400);
+        assert_eq!(stats.fallbacks, 0);
+    }
+
+    #[test]
+    fn shutdown_drains_already_enqueued_requests() {
+        // regression: the seed's batcher broke on its shutdown sentinel
+        // and dropped every request queued behind it without a response
+        for &shards in &[0usize, 1, 4] {
+            let m = model();
+            let server = Server::start(
+                &m,
+                Engine::cpu_seq(),
+                ServeConfig {
+                    batch: 8,
+                    max_wait: Duration::from_millis(1),
+                    shards,
+                    queue_cap: 4096,
+                },
+            );
+            let client = server.client();
+            let pending: Vec<(Pending, Vec<f32>)> = (0..120)
+                .map(|i| {
+                    let f = vec![(i as f32) / 120.0, 0.25];
+                    (client.submit(f.clone()).unwrap(), f)
+                })
+                .collect();
+            // stop immediately: everything admitted must still be answered
+            let stats = server.stop();
+            assert_eq!(stats.requests, 120, "shards={shards}");
+            for (p, f) in pending {
+                let resp = p.wait().expect("admitted request dropped at shutdown");
+                assert!(
+                    (resp.output.margin().unwrap() - m.decision(&f)).abs() < 1e-4,
+                    "shards={shards}"
+                );
+                assert!(p.try_take().is_none());
+            }
+            // the queue is closed: new submissions fail fast
+            assert_eq!(
+                client.submit(vec![0.0, 0.0]).err(),
+                Some(SubmitError::Closed),
+                "shards={shards}"
+            );
+        }
+    }
+
+    #[test]
+    fn overload_rejects_immediately_instead_of_hanging() {
+        // no workers: the queue fills deterministically to its cap
+        let m = model();
+        let server = Server::start(
+            &m,
+            Engine::cpu_seq(),
+            ServeConfig {
+                batch: 4,
+                max_wait: Duration::from_millis(1),
+                shards: 0,
+                queue_cap: 4,
+            },
+        );
+        let client = server.client();
+        let admitted: Vec<Pending> =
+            (0..4).map(|_| client.submit(vec![0.5, 0.5]).unwrap()).collect();
+        for _ in 0..3 {
+            assert_eq!(
+                client.submit(vec![0.5, 0.5]).err(),
+                Some(SubmitError::Overloaded)
+            );
+        }
+        let stats = server.stop();
+        assert_eq!(stats.rejected, 3);
+        assert_eq!(stats.submitted, 4);
+        assert_eq!(stats.requests, 4, "admitted requests answered at stop");
+        for p in admitted {
+            assert!(p.wait().is_ok());
+        }
+    }
+
+    #[test]
+    fn predict_surfaces_rejection_as_error() {
+        let server = Server::start(
+            &model(),
+            Engine::cpu_seq(),
+            ServeConfig { shards: 0, queue_cap: 1, ..Default::default() },
+        );
+        let client = server.client();
+        let _held = client.submit(vec![0.1, 0.2]).unwrap();
+        let err = client.predict(vec![0.3, 0.4]).unwrap_err();
+        assert!(err.to_string().contains("overloaded"), "{err}");
+        server.stop();
+    }
+}

@@ -1,0 +1,272 @@
+//! Serve-time metrics: lock-free counters plus a log-bucketed latency
+//! histogram, exposed as an immutable [`Snapshot`].
+//!
+//! Everything is a relaxed atomic — recording sits on the batcher hot
+//! path and must cost a handful of nanoseconds, not a lock. The
+//! histogram buckets latency at power-of-two microsecond boundaries
+//! (bucket `i` covers `[2^i, 2^{i+1})` µs), so quantiles read from it
+//! are *upper bounds* that overestimate by at most 2x — the honest
+//! trade for a fixed-size, allocation-free histogram.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Histogram bucket count: bucket `i` covers `[2^i, 2^{i+1})` µs, the
+/// last bucket absorbs the tail (2^31 µs ≈ 36 minutes).
+const BUCKETS: usize = 32;
+
+/// Shared, thread-safe serve counters. One instance per [`super::Server`];
+/// clients record submissions/rejections, batcher shards record batches,
+/// fallbacks and per-request latency.
+pub struct ServeMetrics {
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    answered: AtomicU64,
+    batches: AtomicU64,
+    fallbacks: AtomicU64,
+    panics: AtomicU64,
+    max_batch: AtomicU64,
+    depth_peak: AtomicU64,
+    latency: [AtomicU64; BUCKETS],
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        ServeMetrics {
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            answered: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            fallbacks: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            max_batch: AtomicU64::new(0),
+            depth_peak: AtomicU64::new(0),
+            latency: [ZERO; BUCKETS],
+        }
+    }
+
+    /// A request was admitted; `depth` is the queue depth it observed.
+    pub(crate) fn on_submit(&self, depth: usize) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.depth_peak.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// A request was rejected with `Overloaded`.
+    pub(crate) fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A batch of `size` requests left the queue for the engine.
+    pub(crate) fn on_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.max_batch.fetch_max(size as u64, Ordering::Relaxed);
+    }
+
+    /// `n` requests fell back to scalar scoring after an engine error.
+    pub(crate) fn on_fallback(&self, n: usize) {
+        self.fallbacks.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// A batch panicked while scoring (its waiters were notified by the
+    /// dropped reply senders; the shard survived).
+    pub(crate) fn on_panic(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A response was sent `latency` after its request was enqueued.
+    pub(crate) fn on_answer(&self, latency: Duration) {
+        self.answered.fetch_add(1, Ordering::Relaxed);
+        let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        self.latency[bucket(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Engine-error fallback count so far (asserted zero by happy-path
+    /// tests — an engine failure must never be silent).
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of every counter. `queue_depth` and
+    /// `model_version` are gauges owned by the server, passed through.
+    pub fn snapshot(&self, queue_depth: usize, model_version: u64) -> Snapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (c, a) in counts.iter_mut().zip(self.latency.iter()) {
+            *c = a.load(Ordering::Relaxed);
+        }
+        let total: u64 = counts.iter().sum();
+        let answered = self.answered.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        Snapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            requests: answered,
+            batches,
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            max_batch: self.max_batch.load(Ordering::Relaxed) as usize,
+            mean_batch: if batches == 0 { 0.0 } else { answered as f64 / batches as f64 },
+            queue_depth,
+            queue_depth_peak: self.depth_peak.load(Ordering::Relaxed) as usize,
+            model_version,
+            p50: Duration::from_micros(quantile_us(&counts, total, 0.50)),
+            p99: Duration::from_micros(quantile_us(&counts, total, 0.99)),
+        }
+    }
+}
+
+/// Histogram bucket for a latency of `us` microseconds.
+fn bucket(us: u64) -> usize {
+    let b = 63 - us.max(1).leading_zeros() as usize;
+    b.min(BUCKETS - 1)
+}
+
+/// Upper bound (µs) of the bucket holding the `q`-quantile observation.
+fn quantile_us(counts: &[u64; BUCKETS], total: u64, q: f64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let target = ((total as f64) * q).ceil().max(1.0) as u64;
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return 1u64 << (i + 1);
+        }
+    }
+    1u64 << BUCKETS
+}
+
+/// Immutable copy of the serve counters at one instant.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Requests admitted into the queue.
+    pub submitted: u64,
+    /// Requests rejected with `Overloaded`.
+    pub rejected: u64,
+    /// Requests answered (equals `submitted` once the queue is drained).
+    pub requests: u64,
+    /// Engine batches executed.
+    pub batches: u64,
+    /// Requests scored by the counted scalar fallback after an engine
+    /// error (0 on any healthy run).
+    pub fallbacks: u64,
+    /// Batches whose scoring panicked (waiters notified by the dropped
+    /// reply senders; the shard survived — 0 on any healthy run).
+    pub panics: u64,
+    /// Largest batch observed.
+    pub max_batch: usize,
+    /// Mean batch occupancy (`requests / batches`).
+    pub mean_batch: f64,
+    /// Queue depth when the snapshot was taken.
+    pub queue_depth: usize,
+    /// Peak queue depth observed at submission time.
+    pub queue_depth_peak: usize,
+    /// Registry version serving when the snapshot was taken.
+    pub model_version: u64,
+    /// Latency quantiles from the log-bucketed histogram — bucket upper
+    /// bounds, i.e. overestimates by at most 2x.
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+impl fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "serve: {} answered / {} submitted ({} rejected), {} batches \
+             (mean {:.1}, max {}), {} fallbacks, {} panics, p50 <= {:?}, \
+             p99 <= {:?}, queue {} (peak {}), model v{}",
+            self.requests,
+            self.submitted,
+            self.rejected,
+            self.batches,
+            self.mean_batch,
+            self.max_batch,
+            self.fallbacks,
+            self.panics,
+            self.p50,
+            self.p99,
+            self.queue_depth,
+            self.queue_depth_peak,
+            self.model_version
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket(0), 0);
+        assert_eq!(bucket(1), 0);
+        assert_eq!(bucket(2), 1);
+        assert_eq!(bucket(3), 1);
+        assert_eq!(bucket(4), 2);
+        assert_eq!(bucket(1023), 9);
+        assert_eq!(bucket(1024), 10);
+        assert_eq!(bucket(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_read_bucket_upper_bounds() {
+        let m = ServeMetrics::new();
+        // 99 fast answers (1µs bucket 0) and 1 slow (1000µs bucket 9)
+        for _ in 0..99 {
+            m.on_answer(Duration::from_micros(1));
+        }
+        m.on_answer(Duration::from_micros(1000));
+        let s = m.snapshot(0, 1);
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.p50, Duration::from_micros(2));
+        // p99 target is the 99th observation — still in the fast bucket;
+        // the slow one is the 100th
+        assert_eq!(s.p99, Duration::from_micros(2));
+        m.on_answer(Duration::from_micros(1000));
+        let s = m.snapshot(0, 1);
+        assert_eq!(s.p99, Duration::from_micros(1024));
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let m = ServeMetrics::new();
+        let s = m.snapshot(3, 7);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p50, Duration::ZERO);
+        assert_eq!(s.mean_batch, 0.0);
+        assert_eq!(s.queue_depth, 3);
+        assert_eq!(s.model_version, 7);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = ServeMetrics::new();
+        m.on_submit(5);
+        m.on_submit(2);
+        m.on_reject();
+        m.on_batch(4);
+        m.on_batch(9);
+        m.on_fallback(3);
+        m.on_panic();
+        let s = m.snapshot(0, 1);
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.max_batch, 9);
+        assert_eq!(s.fallbacks, 3);
+        assert_eq!(s.panics, 1);
+        assert_eq!(s.queue_depth_peak, 5);
+        let line = s.to_string();
+        assert!(line.contains("rejected") && line.contains("fallbacks"));
+    }
+}

@@ -1,0 +1,128 @@
+//! Production serving subsystem — the implicit-parallel credo applied to
+//! inference, grown from the single-threaded demo loop that used to live
+//! in `coordinator::serve` (still re-exported there for one release).
+//!
+//! Four pillars (DESIGN.md §SERVE):
+//!
+//! * **Versioned model registry** ([`registry`]) — models are *compiled*
+//!   at registration into an immutable serve-time representation
+//!   (zero-coefficient vectors dropped, duplicate expansion vectors
+//!   merged, rows packed into padded tiles, squared norms precomputed for
+//!   the norms-supplied `Engine::rbf_block_pre` entry point) and
+//!   hot-swapped behind an `Arc`. Both binary [`crate::model::SvmModel`]s
+//!   and multiclass [`crate::multiclass::OvoModel`]s are [`Servable`]; an
+//!   OvO ensemble is served off **one** shared RBF block against the
+//!   deduplicated union of all pairs' support vectors, then every pair is
+//!   scored from that single GEMM.
+//! * **Sharded batching** ([`batcher`]) — N batcher workers drain a
+//!   *bounded* queue, so multiple engine calls pipeline concurrently and
+//!   a full queue rejects with [`SubmitError::Overloaded`] instead of
+//!   queueing without bound (admission control bounds tail latency).
+//! * **Compacted serve-time models** — see registry above; the per-batch
+//!   kernel cost drops to one GEMM + a-side norms + the fused exp pass.
+//! * **Serve metrics** ([`metrics`]) — throughput / batch-occupancy /
+//!   queue-depth counters, engine-fallback counts (never silent), and a
+//!   log-bucketed latency histogram, exposed as a [`Snapshot`].
+//!
+//! **Determinism.** Every per-request output is independent of batch
+//! composition and shard count: the blocked GEMM gives each K row a fixed
+//! accumulation order regardless of how many rows share the tile, so the
+//! same features produce bit-identical margins whether they ride a batch
+//! of 1 or 256, on 1 shard or 8 (property-tested in
+//! `rust/tests/serve_props.rs`).
+
+pub mod batcher;
+pub mod metrics;
+pub mod registry;
+
+pub use batcher::{Client, Pending, Server, SubmitError};
+pub use metrics::{ServeMetrics, Snapshot};
+pub use registry::{CompiledModel, ModelRegistry, Servable};
+
+use std::time::Duration;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max requests per batch (and engine tile rows).
+    pub batch: usize,
+    /// How long a batcher waits to fill a batch after its first request.
+    pub max_wait: Duration,
+    /// Batcher worker shards draining the queue. `0` spawns no workers:
+    /// requests queue up (to `queue_cap`) until [`Server::stop`] drains
+    /// them — deterministic harness for admission-control tests.
+    pub shards: usize,
+    /// Bounded queue capacity; submissions beyond it are rejected with
+    /// [`SubmitError::Overloaded`] rather than queued without bound.
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batch: 256,
+            max_wait: Duration::from_millis(2),
+            shards: 2,
+            queue_cap: 4096,
+        }
+    }
+}
+
+/// One scored prediction: binary models produce margins, OvO ensembles a
+/// voted class id (with its vote count, LibSVM tie-break toward the
+/// smaller class id).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Output {
+    Margin(f32),
+    Class { class: usize, votes: u32 },
+}
+
+impl Output {
+    /// Binary margin, if this is a binary prediction.
+    pub fn margin(&self) -> Option<f32> {
+        match self {
+            Output::Margin(m) => Some(*m),
+            Output::Class { .. } => None,
+        }
+    }
+
+    /// Voted class id, if this is a multiclass prediction.
+    pub fn class(&self) -> Option<usize> {
+        match self {
+            Output::Class { class, .. } => Some(*class),
+            Output::Margin(_) => None,
+        }
+    }
+}
+
+/// A prediction response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    /// Registry version of the model that scored this request. Every
+    /// request in a batch is scored by the same version — a hot-swap
+    /// mid-batch never mixes versions within a batch.
+    pub version: u64,
+    pub output: Output,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_accessors() {
+        let m = Output::Margin(1.5);
+        assert_eq!(m.margin(), Some(1.5));
+        assert_eq!(m.class(), None);
+        let c = Output::Class { class: 3, votes: 7 };
+        assert_eq!(c.class(), Some(3));
+        assert_eq!(c.margin(), None);
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.batch > 0 && cfg.shards > 0 && cfg.queue_cap >= cfg.batch);
+    }
+}

@@ -1,0 +1,614 @@
+//! Versioned model registry: compile once at registration, serve from an
+//! immutable packed representation, hot-swap behind an `Arc`.
+//!
+//! Registration is where serve-time work that would otherwise repeat per
+//! batch happens exactly once:
+//!
+//! * zero-coefficient expansion vectors are dropped and bit-identical
+//!   vectors merged (their coefficients sum — for an OvO ensemble the
+//!   merge runs *across pairs*, so the shared RBF block is computed
+//!   against the deduplicated union of every pair's support vectors);
+//! * surviving vectors are packed into a contiguous matrix padded to the
+//!   GEMM's B-panel width ([`crate::linalg::gemm::NR`]) with zero rows
+//!   and zero coefficients, so serve tiles have no partial micro-panels;
+//! * squared norms are precomputed in [`crate::linalg::gemm::sum_sq`]
+//!   order, feeding the norms-supplied [`crate::engine::Engine::rbf_block_pre`]
+//!   entry point — per batch only the a-side norms are derived.
+//!
+//! Models whose kernels can't share one RBF block (non-RBF, or OvO pairs
+//! with mixed kernels) compile to a scalar representation instead; that
+//! is a *compile-time* property of the model, distinct from the counted
+//! engine-error fallback in the batcher.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::engine::Engine;
+use crate::kernel::KernelKind;
+use crate::linalg::gemm;
+use crate::model::SvmModel;
+use crate::multiclass::{vote_argmax, OvoModel};
+use crate::serve::Output;
+
+/// Anything the registry can compile into a serve-time model.
+pub trait Servable {
+    /// Feature dimension this model scores (fixed per registry).
+    fn input_dim(&self) -> usize;
+    /// Pack/compact into an immutable serve-time representation stamped
+    /// with `version`.
+    fn compile(&self, version: u64) -> CompiledModel;
+}
+
+impl Servable for SvmModel {
+    fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    fn compile(&self, version: u64) -> CompiledModel {
+        compile_binary(self, version)
+    }
+}
+
+impl Servable for OvoModel {
+    fn input_dim(&self) -> usize {
+        self.models.first().map_or(0, |m| m.d)
+    }
+
+    fn compile(&self, version: u64) -> CompiledModel {
+        compile_ovo(self, version)
+    }
+}
+
+/// Versioned registry of one serving lineage: all versions score the same
+/// feature dimension. Reads are an `Arc` clone; publishes compile outside
+/// the lock and swap atomically, so in-flight batches finish on the
+/// version they started with.
+pub struct ModelRegistry {
+    current: RwLock<Arc<CompiledModel>>,
+    next_version: AtomicU64,
+    d: usize,
+}
+
+impl ModelRegistry {
+    /// Create a registry serving `model` as version 1.
+    pub fn new(model: &dyn Servable) -> ModelRegistry {
+        ModelRegistry {
+            current: RwLock::new(Arc::new(model.compile(1))),
+            next_version: AtomicU64::new(2),
+            d: model.input_dim(),
+        }
+    }
+
+    /// Compile `model` and hot-swap it in as the new current version.
+    /// Returns the version id. Fails if the feature dimension differs
+    /// from the registry's lineage. The expensive compile runs outside
+    /// the lock; the version is allocated *inside* the write lock and
+    /// stamped just before the swap, so concurrent publishes always
+    /// leave the highest version live (swap order == version order).
+    pub fn publish(&self, model: &dyn Servable) -> Result<u64> {
+        if model.input_dim() != self.d {
+            bail!(
+                "model input dim {} != registry dim {}",
+                model.input_dim(),
+                self.d
+            );
+        }
+        let mut compiled = model.compile(0);
+        let mut guard = self.current.write().unwrap();
+        let v = self.next_version.fetch_add(1, Ordering::Relaxed);
+        compiled.version = v;
+        *guard = Arc::new(compiled);
+        Ok(v)
+    }
+
+    /// The model currently serving (an `Arc` snapshot: callers score a
+    /// whole batch off one coherent version even across a swap).
+    pub fn current(&self) -> Arc<CompiledModel> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// Version id of the model currently serving.
+    pub fn version(&self) -> u64 {
+        self.current().version
+    }
+
+    /// Feature dimension of this lineage.
+    pub fn input_dim(&self) -> usize {
+        self.d
+    }
+}
+
+/// An immutable, serve-ready model (see module docs for what compiling
+/// does). Shared by every batcher shard via `Arc`.
+pub struct CompiledModel {
+    pub version: u64,
+    /// Feature dimension.
+    pub d: usize,
+    kind: CompiledKind,
+}
+
+enum CompiledKind {
+    Binary(PackedBinary),
+    Ovo(PackedOvo),
+    ScalarBinary(SvmModel),
+    ScalarOvo(OvoModel),
+}
+
+struct PackedBinary {
+    gamma: f32,
+    /// Padded row count (multiple of `gemm::NR`).
+    b: usize,
+    /// Compacted rows before padding.
+    packed: usize,
+    /// `[b x d]` packed expansion vectors (zero rows past `packed`).
+    vectors: Vec<f32>,
+    /// Registration-time squared norms, `sum_sq` order.
+    norms: Vec<f32>,
+    coef: Vec<f32>,
+    bias: f32,
+}
+
+struct PackedOvo {
+    gamma: f32,
+    classes: usize,
+    pairs: Vec<(usize, usize)>,
+    /// Padded union row count (multiple of `gemm::NR`).
+    u: usize,
+    /// Deduplicated union rows before padding.
+    packed: usize,
+    /// Nonzero-coefficient vectors across all pairs before dedup.
+    raw: usize,
+    /// `[u x d]` deduplicated union of all pairs' support vectors.
+    union: Vec<f32>,
+    norms: Vec<f32>,
+    /// Row-major `[pairs x u]`: pair `p`'s coefficients scattered over
+    /// the union (the B operand of the one shared scoring GEMM).
+    coef_t: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+/// Pad a packed row count up to a multiple of the GEMM's B-panel width
+/// so serve tiles have no partial micro-panels. Padded rows are all-zero
+/// features with zero coefficients: their kernel values are multiplied
+/// by 0 and contribute to no margin.
+fn pad_rows(n: usize) -> usize {
+    if n == 0 {
+        0
+    } else {
+        (n + gemm::NR - 1) / gemm::NR * gemm::NR
+    }
+}
+
+/// Fold one model's expansion into the shared dedup store: skip
+/// zero-coefficient rows, merge bit-identical rows, and return each
+/// surviving coefficient's `(store slot, value)`. One definition shared
+/// by the binary and OvO compilers so the dedup rule cannot diverge.
+fn dedup_rows(
+    dedup: &mut HashMap<Vec<u32>, usize>,
+    store: &mut Vec<f32>,
+    d: usize,
+    vectors: &[f32],
+    coef: &[f32],
+) -> Vec<(usize, f32)> {
+    let mut out = Vec::with_capacity(coef.len());
+    for (j, &c) in coef.iter().enumerate() {
+        if c == 0.0 {
+            continue;
+        }
+        let row = &vectors[j * d..(j + 1) * d];
+        let key: Vec<u32> = row.iter().map(|v| v.to_bits()).collect();
+        let next_slot = store.len() / d;
+        let slot = *dedup.entry(key).or_insert_with(|| {
+            store.extend_from_slice(row);
+            next_slot
+        });
+        out.push((slot, c));
+    }
+    out
+}
+
+/// Registration-time squared norms for a packed `[rows x d]` store, in
+/// the GEMM's own accumulation order.
+fn store_norms(store: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    (0..rows).map(|j| gemm::sum_sq(&store[j * d..(j + 1) * d])).collect()
+}
+
+fn compile_binary(m: &SvmModel, version: u64) -> CompiledModel {
+    let kind = match m.kernel {
+        KernelKind::Rbf { gamma } if m.num_vectors() > 0 && m.d > 0 => {
+            let mut dedup: HashMap<Vec<u32>, usize> = HashMap::new();
+            let mut vectors: Vec<f32> = Vec::new();
+            let list = dedup_rows(&mut dedup, &mut vectors, m.d, &m.vectors, &m.coef);
+            let packed = vectors.len() / m.d;
+            let b = pad_rows(packed);
+            vectors.resize(b * m.d, 0.0);
+            let mut coef = vec![0.0f32; b];
+            for &(slot, c) in &list {
+                coef[slot] += c;
+            }
+            let norms = store_norms(&vectors, b, m.d);
+            CompiledKind::Binary(PackedBinary {
+                gamma,
+                b,
+                packed,
+                vectors,
+                norms,
+                coef,
+                bias: m.bias,
+            })
+        }
+        _ => CompiledKind::ScalarBinary(m.clone()),
+    };
+    CompiledModel { version, d: m.d, kind }
+}
+
+fn compile_ovo(m: &OvoModel, version: u64) -> CompiledModel {
+    let d = m.models.first().map_or(0, |sm| sm.d);
+    // the shared-block fast path needs every pair on one RBF kernel
+    let mut uniform = m.models.first().and_then(|sm| match sm.kernel {
+        KernelKind::Rbf { gamma } => Some(gamma),
+        _ => None,
+    });
+    if let Some(g) = uniform {
+        let same = m
+            .models
+            .iter()
+            .all(|sm| sm.d == d && sm.kernel == (KernelKind::Rbf { gamma: g }));
+        if !same || d == 0 {
+            uniform = None;
+        }
+    }
+    let kind = match uniform {
+        Some(gamma) => {
+            let mut dedup: HashMap<Vec<u32>, usize> = HashMap::new();
+            let mut union: Vec<f32> = Vec::new();
+            // per-pair (union slot, coefficient) scatter lists
+            let scatter: Vec<Vec<(usize, f32)>> = m
+                .models
+                .iter()
+                .map(|sm| dedup_rows(&mut dedup, &mut union, d, &sm.vectors, &sm.coef))
+                .collect();
+            let raw = scatter.iter().map(|l| l.len()).sum::<usize>();
+            let packed = union.len() / d;
+            let u = pad_rows(packed);
+            union.resize(u * d, 0.0);
+            let norms = store_norms(&union, u, d);
+            let mut coef_t = vec![0.0f32; m.models.len() * u];
+            for (pi, list) in scatter.iter().enumerate() {
+                for &(slot, c) in list {
+                    coef_t[pi * u + slot] += c;
+                }
+            }
+            CompiledKind::Ovo(PackedOvo {
+                gamma,
+                classes: m.classes,
+                pairs: m.pairs.clone(),
+                u,
+                packed,
+                raw,
+                union,
+                norms,
+                coef_t,
+                bias: m.models.iter().map(|sm| sm.bias).collect(),
+            })
+        }
+        None => CompiledKind::ScalarOvo(m.clone()),
+    };
+    CompiledModel { version, d, kind }
+}
+
+impl CompiledModel {
+    /// Compacted expansion rows actually carried (post-dedup, pre-padding);
+    /// 0 for scalar-compiled models.
+    pub fn packed_vectors(&self) -> usize {
+        match &self.kind {
+            CompiledKind::Binary(pb) => pb.packed,
+            CompiledKind::Ovo(po) => po.packed,
+            _ => 0,
+        }
+    }
+
+    /// Whether this model serves on the packed shared-GEMM fast path.
+    pub fn is_packed(&self) -> bool {
+        matches!(self.kind, CompiledKind::Binary(_) | CompiledKind::Ovo(_))
+    }
+
+    /// One-line description for logs and examples.
+    pub fn describe(&self) -> String {
+        match &self.kind {
+            CompiledKind::Binary(pb) => format!(
+                "v{} binary packed: {} rows (padded {}), d={}",
+                self.version, pb.packed, pb.b, self.d
+            ),
+            CompiledKind::Ovo(po) => format!(
+                "v{} ovo packed: {} pairs share a {}-row union (from {} raw, padded {}), d={}",
+                self.version,
+                po.pairs.len(),
+                po.packed,
+                po.raw,
+                po.u,
+                self.d
+            ),
+            CompiledKind::ScalarBinary(m) => {
+                format!("v{} binary scalar ({} kernel)", self.version, m.kernel.name())
+            }
+            CompiledKind::ScalarOvo(m) => {
+                format!("v{} ovo scalar ({} pairs)", self.version, m.pairs.len())
+            }
+        }
+    }
+
+    /// Score `t` packed feature rows through the engine: one shared
+    /// kernel block per batch (for OvO, one block against the union and
+    /// one GEMM scoring every pair off it). An `Err` means the engine
+    /// failed; the batcher then uses [`CompiledModel::score_scalar`] and
+    /// counts the fallback.
+    pub fn score_batch(&self, engine: &Engine, x: &[f32], t: usize) -> Result<Vec<Output>> {
+        assert_eq!(x.len(), t * self.d);
+        match &self.kind {
+            CompiledKind::Binary(pb) => {
+                let k = engine.rbf_block_pre(x, t, self.d, &pb.vectors, pb.b, pb.gamma, &pb.norms)?;
+                let mut f = engine.predict_block(&k, t, pb.b, &pb.coef)?;
+                for v in f.iter_mut() {
+                    *v += pb.bias;
+                }
+                Ok(f.into_iter().map(Output::Margin).collect())
+            }
+            CompiledKind::Ovo(po) => {
+                let k = engine.rbf_block_pre(x, t, self.d, &po.union, po.u, po.gamma, &po.norms)?;
+                let p = po.pairs.len();
+                let mut fm = vec![0.0f32; t * p];
+                gemm::gemm_nt_strided(
+                    engine.threads(),
+                    t,
+                    p,
+                    po.u,
+                    &k,
+                    po.u,
+                    1,
+                    &po.coef_t,
+                    po.u,
+                    1,
+                    None,
+                    &mut fm,
+                    p,
+                );
+                Ok((0..t)
+                    .map(|i| {
+                        let mut votes = vec![0u32; po.classes];
+                        for (pi, &(a, b)) in po.pairs.iter().enumerate() {
+                            if fm[i * p + pi] + po.bias[pi] > 0.0 {
+                                votes[a] += 1;
+                            } else {
+                                votes[b] += 1;
+                            }
+                        }
+                        let c = vote_argmax(&votes);
+                        Output::Class { class: c, votes: votes[c] }
+                    })
+                    .collect())
+            }
+            CompiledKind::ScalarBinary(m) => Ok((0..t)
+                .map(|i| Output::Margin(m.decision(&x[i * self.d..(i + 1) * self.d])))
+                .collect()),
+            CompiledKind::ScalarOvo(m) => Ok((0..t)
+                .map(|i| {
+                    let (c, v) = m.vote_one(&x[i * self.d..(i + 1) * self.d]);
+                    Output::Class { class: c, votes: v }
+                })
+                .collect()),
+        }
+    }
+
+    /// Engine-free scalar scoring: the batcher's counted fallback on
+    /// engine error and the drain path for worker-less shutdown. Same
+    /// compacted expansion, f64-accumulated like `SvmModel::decision`.
+    pub fn score_scalar(&self, x: &[f32]) -> Output {
+        assert_eq!(x.len(), self.d);
+        match &self.kind {
+            CompiledKind::Binary(pb) => {
+                let mut f = pb.bias as f64;
+                for j in 0..pb.b {
+                    let c = pb.coef[j];
+                    if c != 0.0 {
+                        let d2 = gemm::dist2_lanes(x, &pb.vectors[j * self.d..(j + 1) * self.d]);
+                        f += (c * (-pb.gamma * d2).exp()) as f64;
+                    }
+                }
+                Output::Margin(f as f32)
+            }
+            CompiledKind::Ovo(po) => {
+                let mut votes = vec![0u32; po.classes];
+                for (pi, &(a, b)) in po.pairs.iter().enumerate() {
+                    let mut f = po.bias[pi] as f64;
+                    for j in 0..po.u {
+                        let c = po.coef_t[pi * po.u + j];
+                        if c != 0.0 {
+                            let d2 =
+                                gemm::dist2_lanes(x, &po.union[j * self.d..(j + 1) * self.d]);
+                            f += (c * (-po.gamma * d2).exp()) as f64;
+                        }
+                    }
+                    if f > 0.0 {
+                        votes[a] += 1;
+                    } else {
+                        votes[b] += 1;
+                    }
+                }
+                let c = vote_argmax(&votes);
+                Output::Class { class: c, votes: votes[c] }
+            }
+            CompiledKind::ScalarBinary(m) => Output::Margin(m.decision(x)),
+            CompiledKind::ScalarOvo(m) => {
+                let (c, v) = m.vote_one(x);
+                Output::Class { class: c, votes: v }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_model(rng: &mut Rng, b: usize, d: usize) -> SvmModel {
+        SvmModel {
+            kernel: KernelKind::Rbf { gamma: 0.6 },
+            vectors: (0..b * d).map(|_| rng.uniform_f32()).collect(),
+            d,
+            coef: (0..b).map(|_| rng.gaussian_f32()).collect(),
+            bias: 0.2,
+            solver: "t".into(),
+        }
+    }
+
+    #[test]
+    fn compile_compacts_zero_coefs_and_duplicates() {
+        let mut rng = Rng::new(1);
+        let mut m = rand_model(&mut rng, 10, 3);
+        m.coef[3] = 0.0; // dropped
+        m.coef[7] = 0.0; // dropped
+        // make row 5 a bit-exact duplicate of row 1: coefficients merge
+        let r1: Vec<f32> = m.vectors[3..6].to_vec();
+        m.vectors[15..18].copy_from_slice(&r1);
+        let c = m.compile(1);
+        assert!(c.is_packed());
+        assert_eq!(c.packed_vectors(), 7); // 10 - 2 zeros - 1 duplicate
+        assert!(c.describe().contains("packed"));
+    }
+
+    #[test]
+    fn packed_binary_margins_match_decision() {
+        let mut rng = Rng::new(2);
+        let m = rand_model(&mut rng, 37, 6);
+        let c = m.compile(4);
+        assert_eq!(c.version, 4);
+        let t = 11;
+        let x: Vec<f32> = (0..t * 6).map(|_| rng.uniform_f32()).collect();
+        let outs = c.score_batch(&Engine::cpu_par(3), &x, t).unwrap();
+        for (i, o) in outs.iter().enumerate() {
+            let want = m.decision(&x[i * 6..(i + 1) * 6]);
+            let got = o.margin().unwrap();
+            assert!((got - want).abs() < 1e-5, "row {i}: {got} vs {want}");
+            // scalar fallback path agrees too
+            let sc = c.score_scalar(&x[i * 6..(i + 1) * 6]).margin().unwrap();
+            assert!((sc - want).abs() < 1e-5, "row {i} scalar: {sc} vs {want}");
+        }
+    }
+
+    #[test]
+    fn non_rbf_compiles_to_scalar_and_still_scores() {
+        let m = SvmModel {
+            kernel: KernelKind::Linear,
+            vectors: vec![1.0, 0.0, 0.0, 1.0],
+            d: 2,
+            coef: vec![0.5, -0.25],
+            bias: 0.1,
+            solver: "t".into(),
+        };
+        let c = m.compile(1);
+        assert!(!c.is_packed());
+        let x = [0.4f32, 0.8];
+        let got = c.score_batch(&Engine::cpu_seq(), &x, 1).unwrap()[0];
+        assert!((got.margin().unwrap() - m.decision(&x)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ovo_union_dedups_across_pairs() {
+        // three pairs sharing one pool of 4 distinct vectors: the union
+        // must carry each distinct vector once
+        let pool: Vec<Vec<f32>> = vec![
+            vec![0.0, 0.0],
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 1.0],
+        ];
+        let mk = |ids: &[usize], coefs: &[f32], bias: f32| SvmModel {
+            kernel: KernelKind::Rbf { gamma: 1.0 },
+            vectors: ids.iter().flat_map(|&i| pool[i].clone()).collect(),
+            d: 2,
+            coef: coefs.to_vec(),
+            bias,
+            solver: "t".into(),
+        };
+        let ovo = OvoModel {
+            classes: 3,
+            pairs: vec![(0, 1), (0, 2), (1, 2)],
+            models: vec![
+                mk(&[0, 1, 2], &[1.0, -0.5, 0.25], 0.1),
+                mk(&[1, 2, 3], &[0.7, -0.7, 0.3], -0.2),
+                mk(&[0, 3], &[0.9, -0.9], 0.05),
+            ],
+            train_secs: 0.0,
+        };
+        let c = ovo.compile(1);
+        assert!(c.is_packed());
+        assert_eq!(c.packed_vectors(), 4, "union must dedup 8 raw rows to 4");
+
+        // packed voting matches the scalar ensemble on a grid of queries
+        let queries: Vec<[f32; 2]> = vec![
+            [0.1, 0.1],
+            [0.9, 0.1],
+            [0.1, 0.9],
+            [0.9, 0.9],
+            [0.5, 0.2],
+        ];
+        let mut x = Vec::new();
+        for q in &queries {
+            x.extend_from_slice(q);
+        }
+        let outs = c.score_batch(&Engine::cpu_par(2), &x, queries.len()).unwrap();
+        for (q, o) in queries.iter().zip(&outs) {
+            let (want, _) = ovo.vote_one(q);
+            assert_eq!(o.class().unwrap(), want, "query {q:?}");
+            assert_eq!(c.score_scalar(q).class().unwrap(), want, "scalar {q:?}");
+        }
+    }
+
+    #[test]
+    fn mixed_kernel_ovo_compiles_to_scalar() {
+        let rbf = SvmModel {
+            kernel: KernelKind::Rbf { gamma: 1.0 },
+            vectors: vec![0.0, 0.0],
+            d: 2,
+            coef: vec![1.0],
+            bias: 0.0,
+            solver: "t".into(),
+        };
+        let mut lin = rbf.clone();
+        lin.kernel = KernelKind::Linear;
+        let ovo = OvoModel {
+            classes: 3,
+            pairs: vec![(0, 1), (0, 2)],
+            models: vec![rbf, lin],
+            train_secs: 0.0,
+        };
+        let c = ovo.compile(1);
+        assert!(!c.is_packed());
+        let got = c.score_batch(&Engine::cpu_seq(), &[0.3, 0.4], 1).unwrap()[0];
+        assert_eq!(got.class(), Some(ovo.vote_one(&[0.3, 0.4]).0));
+    }
+
+    #[test]
+    fn registry_swaps_versions_and_rejects_dim_mismatch() {
+        let mut rng = Rng::new(3);
+        let a = rand_model(&mut rng, 8, 4);
+        let reg = ModelRegistry::new(&a);
+        assert_eq!(reg.version(), 1);
+        assert_eq!(reg.input_dim(), 4);
+        // an Arc snapshot taken before a swap keeps its version
+        let old = reg.current();
+        let b = rand_model(&mut rng, 12, 4);
+        let v = reg.publish(&b).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(reg.version(), 2);
+        assert_eq!(old.version, 1, "pre-swap snapshot must stay coherent");
+        let wrong = rand_model(&mut rng, 8, 5);
+        assert!(reg.publish(&wrong).is_err());
+        assert_eq!(reg.version(), 2, "failed publish must not swap");
+    }
+}

@@ -4,7 +4,8 @@
 
 use std::sync::Arc;
 
-use wu_svm::coordinator::{self, run, serve, EngineChoice, Solver, TrainJob};
+use wu_svm::coordinator::{self, run, EngineChoice, Solver, TrainJob};
+use wu_svm::serve;
 use wu_svm::data::{libsvm, paper};
 use wu_svm::engine::Engine;
 use wu_svm::metrics::error_rate;
@@ -182,14 +183,19 @@ fn serving_a_trained_model_end_to_end() {
     )
     .unwrap();
     let expect: Vec<f32> = (0..50).map(|i| r.model.decision(te.row(i))).collect();
-    let server = serve::Server::start(r.model, Engine::cpu_par(2), serve::ServeConfig::default());
+    let server =
+        serve::Server::start(&r.model, Engine::cpu_par(2), serve::ServeConfig::default());
     let client = server.client();
     for i in 0..50 {
-        let got = client.predict(te.row(i).to_vec()).unwrap();
+        let got = client.predict(te.row(i).to_vec()).unwrap().margin().unwrap();
         assert!((got - expect[i]).abs() < 1e-4, "row {i}: {got} vs {}", expect[i]);
     }
     let stats = server.stop();
     assert_eq!(stats.requests, 50);
+    // an engine-error fallback would hide a real failure: happy path
+    // must report zero
+    assert_eq!(stats.fallbacks, 0);
+    assert_eq!(stats.rejected, 0);
 }
 
 #[test]

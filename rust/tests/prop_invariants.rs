@@ -286,46 +286,55 @@ fn prop_spsvm_respects_capacity_and_mask() {
 #[test]
 fn prop_serve_batcher_answers_all_under_random_load() {
     let mut rng = Rng::new(8);
-    for case in 0..10 {
-        let batch = 1 + rng.below(64);
-        let n_req = 1 + rng.below(300);
-        let model = wu_svm::model::SvmModel {
-            kernel: KernelKind::Rbf { gamma: 0.5 },
-            vectors: vec![0.2, 0.8, 0.9, 0.1],
-            d: 2,
-            coef: vec![1.0, -0.5],
-            bias: 0.05,
-            solver: "p".into(),
-        };
-        let server = wu_svm::coordinator::serve::Server::start(
-            model.clone(),
-            Engine::cpu_seq(),
-            wu_svm::coordinator::serve::ServeConfig {
-                batch,
-                max_wait: std::time::Duration::from_micros(200),
-            },
-        );
-        let client = server.client();
-        let pending: Vec<_> = (0..n_req)
-            .map(|_| {
-                let f = vec![rng.uniform_f32(), rng.uniform_f32()];
-                let (id, rx) = client.submit(f.clone());
-                (id, rx, f)
-            })
-            .collect();
-        for (id, rx, f) in pending {
-            let resp = rx.recv().expect("response must arrive");
-            assert_eq!(resp.id, id, "case {case}: response routed to wrong request");
-            let want = model.decision(&f);
-            assert!(
-                (resp.margin - want).abs() < 1e-4,
-                "case {case}: margin {} want {want}",
-                resp.margin
+    for case in 0..4 {
+        for &shards in &[1usize, 2, 4] {
+            let batch = 1 + rng.below(64);
+            let n_req = 1 + rng.below(300);
+            let model = wu_svm::model::SvmModel {
+                kernel: KernelKind::Rbf { gamma: 0.5 },
+                vectors: vec![0.2, 0.8, 0.9, 0.1],
+                d: 2,
+                coef: vec![1.0, -0.5],
+                bias: 0.05,
+                solver: "p".into(),
+            };
+            let server = wu_svm::serve::Server::start(
+                &model,
+                Engine::cpu_seq(),
+                wu_svm::serve::ServeConfig {
+                    batch,
+                    max_wait: std::time::Duration::from_micros(200),
+                    shards,
+                    queue_cap: 4096,
+                },
             );
+            let client = server.client();
+            let pending: Vec<_> = (0..n_req)
+                .map(|_| {
+                    let f = vec![rng.uniform_f32(), rng.uniform_f32()];
+                    let p = client.submit(f.clone()).expect("queue must admit");
+                    (p, f)
+                })
+                .collect();
+            for (p, f) in pending {
+                let resp = p.wait().expect("response must arrive");
+                assert_eq!(
+                    resp.id, p.id,
+                    "case {case}/{shards}: response routed to wrong request"
+                );
+                let want = model.decision(&f);
+                let got = resp.output.margin().unwrap();
+                assert!(
+                    (got - want).abs() < 1e-4,
+                    "case {case}/{shards}: margin {got} want {want}"
+                );
+                assert!(p.try_take().is_none(), "case {case}/{shards}: answered twice");
+            }
+            let stats = server.stop();
+            assert_eq!(stats.requests, n_req as u64, "case {case}/{shards}");
+            assert!(stats.max_batch <= batch, "case {case}/{shards}: batch overflow");
+            assert_eq!(stats.fallbacks, 0, "case {case}/{shards}: silent fallback");
         }
-        let stats = server.stop();
-        assert_eq!(stats.requests, n_req as u64, "case {case}");
-        assert!(stats.max_batch <= batch, "case {case}: batch overflow");
     }
 }
 

@@ -1,0 +1,261 @@
+//! Property tests for the serving subsystem invariants (ISSUE 3):
+//! every admitted request answered exactly once under random load for
+//! k ∈ {1,2,4} batcher shards; overload rejects instead of hanging;
+//! hot-swap mid-traffic never drops or mixes model versions; the
+//! packed/precomputed-norms serve path matches `SvmModel::decision`
+//! within 1e-5; and outputs are bit-identical across shard counts.
+
+use std::sync::Arc;
+
+use wu_svm::engine::Engine;
+use wu_svm::kernel::KernelKind;
+use wu_svm::model::SvmModel;
+use wu_svm::multiclass::OvoModel;
+use wu_svm::rng::Rng;
+use wu_svm::serve::{ModelRegistry, Server, ServeConfig, SubmitError};
+
+fn rand_model(rng: &mut Rng, b: usize, d: usize, gamma: f32, bias: f32) -> SvmModel {
+    SvmModel {
+        kernel: KernelKind::Rbf { gamma },
+        vectors: (0..b * d).map(|_| rng.uniform_f32()).collect(),
+        d,
+        coef: (0..b).map(|_| rng.gaussian_f32() * 0.5).collect(),
+        bias,
+        solver: "prop".into(),
+    }
+}
+
+#[test]
+fn prop_packed_serve_margins_match_decision_within_1e5() {
+    let mut rng = Rng::new(41);
+    for case in 0..3 {
+        // models with duplicate rows and zero coefficients so compaction
+        // is actually exercised
+        let d = 3 + rng.below(8);
+        let b = 5 + rng.below(40);
+        let mut model = rand_model(&mut rng, b, d, 0.4 + rng.uniform_f32(), 0.1);
+        if b >= 4 {
+            let dup: Vec<f32> = model.vectors[..d].to_vec();
+            model.vectors[2 * d..3 * d].copy_from_slice(&dup);
+            model.coef[3] = 0.0;
+        }
+        for &shards in &[1usize, 2, 4] {
+            let server = Server::start(
+                &model,
+                Engine::cpu_par(2),
+                ServeConfig { shards, ..Default::default() },
+            );
+            assert!(server.registry().current().is_packed(), "case {case}");
+            let client = server.client();
+            for i in 0..40 {
+                let f: Vec<f32> = (0..d).map(|_| rng.uniform_f32()).collect();
+                let got = client.predict(f.clone()).unwrap().margin().unwrap();
+                let want = model.decision(&f);
+                assert!(
+                    (got - want).abs() < 1e-5,
+                    "case {case} shards {shards} req {i}: {got} vs {want}"
+                );
+            }
+            let stats = server.stop();
+            assert_eq!(stats.requests, 40, "case {case} shards {shards}");
+            assert_eq!(stats.fallbacks, 0, "case {case} shards {shards}");
+        }
+    }
+}
+
+#[test]
+fn prop_outputs_bit_identical_across_shard_counts() {
+    // the blocked GEMM gives every K row a fixed accumulation order
+    // regardless of batch composition, so the same features must produce
+    // bit-identical margins on 1 shard or 4, batch 1 or 256
+    let mut rng = Rng::new(42);
+    let model = rand_model(&mut rng, 33, 6, 0.8, -0.2);
+    let queries: Vec<Vec<f32>> =
+        (0..64).map(|_| (0..6).map(|_| rng.uniform_f32()).collect()).collect();
+    let cases = [(1usize, 1usize), (1, 256), (4, 16), (4, 256)];
+    let mut runs: Vec<Vec<u32>> = Vec::new();
+    for &(shards, batch) in &cases {
+        let server = Server::start(
+            &model,
+            Engine::cpu_par(2),
+            ServeConfig { shards, batch, ..Default::default() },
+        );
+        let client = server.client();
+        let pending: Vec<_> =
+            queries.iter().map(|q| client.submit(q.clone()).unwrap()).collect();
+        let bits: Vec<u32> = pending
+            .iter()
+            .map(|p| p.wait().unwrap().output.margin().unwrap().to_bits())
+            .collect();
+        server.stop();
+        runs.push(bits);
+    }
+    for (i, bits) in runs.iter().enumerate().skip(1) {
+        assert_eq!(
+            &runs[0], bits,
+            "case {:?} vs {:?}: margins not bit-identical",
+            cases[0], cases[i]
+        );
+    }
+}
+
+#[test]
+fn prop_ovo_served_through_shared_block_matches_batch_predict() {
+    // three well-separated classes, pair models sharing support vectors
+    // (bit-identical rows across pairs) so the union dedup matters
+    let mut rng = Rng::new(43);
+    let centers = [[0.0f32, 0.0], [1.0, 0.0], [0.0, 1.0]];
+    let mk_pair = |a: usize, b: usize| -> SvmModel {
+        // one SV at each class center: positive weight on a, negative on b
+        let mut vectors = Vec::new();
+        vectors.extend_from_slice(&centers[a]);
+        vectors.extend_from_slice(&centers[b]);
+        SvmModel {
+            kernel: KernelKind::Rbf { gamma: 4.0 },
+            vectors,
+            d: 2,
+            coef: vec![1.0, -1.0],
+            bias: 0.0,
+            solver: "prop".into(),
+        }
+    };
+    let ovo = OvoModel {
+        classes: 3,
+        pairs: vec![(0, 1), (0, 2), (1, 2)],
+        models: vec![mk_pair(0, 1), mk_pair(0, 2), mk_pair(1, 2)],
+        train_secs: 0.0,
+    };
+    let compiled = ModelRegistry::new(&ovo).current();
+    assert!(compiled.is_packed());
+    assert_eq!(
+        compiled.packed_vectors(),
+        3,
+        "6 raw SVs across pairs must dedup to the 3 shared centers"
+    );
+    for &shards in &[1usize, 2, 4] {
+        let server = Server::start(
+            &ovo,
+            Engine::cpu_par(2),
+            ServeConfig { shards, ..Default::default() },
+        );
+        let client = server.client();
+        for _ in 0..60 {
+            let c = rng.below(3);
+            let f = vec![
+                centers[c][0] + (rng.uniform_f32() - 0.5) * 0.2,
+                centers[c][1] + (rng.uniform_f32() - 0.5) * 0.2,
+            ];
+            let out = client.predict(f.clone()).unwrap();
+            let (want, _) = ovo.vote_one(&f);
+            assert_eq!(out.class().unwrap(), want, "shards {shards} near class {c}");
+            assert_eq!(want, c, "query near center {c} must classify as {c}");
+        }
+        let stats = server.stop();
+        assert_eq!(stats.fallbacks, 0);
+    }
+}
+
+#[test]
+fn prop_overload_rejects_never_hangs() {
+    let mut rng = Rng::new(44);
+    let model = rand_model(&mut rng, 8, 4, 1.0, 0.0);
+    // no workers: deterministic fill to cap, every submit returns promptly
+    let cap = 1 + rng.below(32);
+    let server = Server::start(
+        &model,
+        Engine::cpu_seq(),
+        ServeConfig { shards: 0, queue_cap: cap, ..Default::default() },
+    );
+    let client = server.client();
+    let mut admitted = Vec::new();
+    let mut rejected = 0u64;
+    for _ in 0..cap + 17 {
+        match client.submit(vec![0.5; 4]) {
+            Ok(p) => admitted.push(p),
+            Err(e) => {
+                assert_eq!(e, SubmitError::Overloaded);
+                rejected += 1;
+            }
+        }
+    }
+    assert_eq!(admitted.len(), cap);
+    assert_eq!(rejected, 17);
+    let stats = server.stop();
+    assert_eq!(stats.rejected, 17);
+    assert_eq!(stats.requests, cap as u64, "admitted requests drain at stop");
+    for p in &admitted {
+        assert!(p.try_take().is_some() || p.wait().is_ok());
+    }
+}
+
+#[test]
+fn prop_hot_swap_mid_traffic_never_drops_or_mixes_versions() {
+    let mut rng = Rng::new(45);
+    let d = 5;
+    let v1 = rand_model(&mut rng, 24, d, 0.7, 10.0); // bias +10: unmistakable
+    let v2 = rand_model(&mut rng, 16, d, 0.7, -10.0); // bias -10
+    let registry = Arc::new(ModelRegistry::new(&v1));
+    let server = Server::with_registry(
+        registry.clone(),
+        Engine::cpu_par(2),
+        ServeConfig { shards: 2, batch: 8, ..Default::default() },
+    );
+    let client = server.client();
+
+    // background traffic across the swap
+    let stop_flag = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let drivers: Vec<_> = (0..3u64)
+        .map(|t| {
+            let c = server.client();
+            let m1 = v1.clone();
+            let m2 = v2.clone();
+            let flag = stop_flag.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                let mut n = 0u64;
+                while !flag.load(std::sync::atomic::Ordering::Relaxed) {
+                    let f: Vec<f32> = (0..d).map(|_| rng.uniform_f32()).collect();
+                    let p = c.submit(f.clone()).expect("admitted");
+                    let resp = p.wait().expect("never dropped");
+                    // the response's claimed version must exactly explain
+                    // its value — a mixed batch could satisfy neither
+                    let want = match resp.version {
+                        1 => m1.decision(&f),
+                        2 => m2.decision(&f),
+                        v => panic!("unknown version {v}"),
+                    };
+                    let got = resp.output.margin().unwrap();
+                    assert!(
+                        (got - want).abs() < 1e-4,
+                        "driver {t}: v{} margin {got} vs {want}",
+                        resp.version
+                    );
+                    n += 1;
+                }
+                n
+            })
+        })
+        .collect();
+
+    // let traffic build, then swap
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let v = registry.publish(&v2).unwrap();
+    assert_eq!(v, 2);
+    // requests submitted after publish() returns must be scored by v2:
+    // the worker snapshots the registry after popping the batch
+    for _ in 0..50 {
+        let f: Vec<f32> = (0..d).map(|_| rng.uniform_f32()).collect();
+        let p = client.submit(f.clone()).unwrap();
+        let resp = p.wait().unwrap();
+        assert_eq!(resp.version, 2, "stale model after swap completed");
+        assert!((resp.output.margin().unwrap() - v2.decision(&f)).abs() < 1e-4);
+    }
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    stop_flag.store(true, std::sync::atomic::Ordering::Relaxed);
+    let driven: u64 = drivers.into_iter().map(|h| h.join().unwrap()).sum();
+    let stats = server.stop();
+    assert_eq!(stats.requests, stats.submitted, "every admitted request answered");
+    assert!(driven > 0);
+    assert_eq!(stats.fallbacks, 0);
+    assert_eq!(stats.model_version, 2);
+}
