@@ -1,8 +1,10 @@
 #!/bin/sh
-# CI entry point. Usage: ./ci.sh [tier1|benchcheck|lint|all]
+# CI entry point. Usage: ./ci.sh [tier1|benchcheck|docs|lint|all]
 # tier1 is the repository's canonical verification (see ROADMAP.md).
 # benchcheck compiles the bench targets without running them, so the
 # harness=false benchmarks (which `cargo test` never builds) can't rot.
+# docs builds the public API docs with warnings denied, so the rustdoc
+# surface (intra-doc links, examples) can't rot either.
 set -eu
 
 mode="${1:-all}"
@@ -16,6 +18,10 @@ benchcheck() {
     cargo bench --no-run
 }
 
+docs() {
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+}
+
 lint() {
     cargo fmt --check
     cargo clippy --all-targets -- -D warnings
@@ -24,14 +30,16 @@ lint() {
 case "$mode" in
     tier1) tier1 ;;
     benchcheck) benchcheck ;;
+    docs) docs ;;
     lint) lint ;;
     all)
         tier1
         benchcheck
+        docs
         lint
         ;;
     *)
-        echo "usage: ./ci.sh [tier1|benchcheck|lint|all]" >&2
+        echo "usage: ./ci.sh [tier1|benchcheck|docs|lint|all]" >&2
         exit 2
         ;;
 esac

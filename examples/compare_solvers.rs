@@ -1,16 +1,32 @@
 //! Explicit vs implicit, head to head on one workload — the paper's §5
-//! comparison in miniature: LibSVM (SMO, single core), LibSVM+OpenMP
-//! (SMO, hand-threaded), GTSVM (WSS-16), SP-SVM (implicit dense-linalg),
-//! and the exact implicit baselines (MU, primal Newton) that hit the
-//! memory/convergence wall.
+//! comparison in miniature, driven entirely through the unified
+//! `Trainer` API: LibSVM (SMO, single core), LibSVM+OpenMP (SMO,
+//! hand-threaded), GTSVM (WSS-16), the exact implicit baselines (MU,
+//! primal Newton) that hit the memory/convergence wall, and SP-SVM on
+//! both the cpu and (when artifacts exist) the AOT-XLA engine.
+//! Every solver runs under the *same* wall-clock budget — the
+//! controlled-comparison discipline the API encodes — and the run ends
+//! with an observer-driven convergence trace (iter, objective, elapsed),
+//! the time-vs-accuracy curve Table-1 end-state numbers can't show.
 //!
 //! Run: `cargo run --release --example compare_solvers -- [dataset] [scale]`
 
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use wu_svm::coordinator::{run, EngineChoice, Solver, TrainJob};
+use wu_svm::coordinator;
+use wu_svm::data::paper;
+use wu_svm::engine::Engine;
+use wu_svm::kernel::KernelKind;
+use wu_svm::metrics::{auc, error_rate};
 use wu_svm::pool;
 use wu_svm::report::{fill_speedups, render_table, Row};
+use wu_svm::solvers::mu::MuParams;
+use wu_svm::solvers::primal::PrimalParams;
+use wu_svm::solvers::smo::SmoParams;
+use wu_svm::solvers::spsvm::SpSvmParams;
+use wu_svm::solvers::wss::WssParams;
+use wu_svm::solvers::{Budget, SolverSpec, TraceObserver, Trainer};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -18,39 +34,123 @@ fn main() -> anyhow::Result<()> {
     let scale: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(0.02);
     let threads = pool::default_threads();
 
-    let cases: Vec<(&str, &str, Solver, EngineChoice)> = vec![
-        ("SC", "LibSVM", Solver::Smo, EngineChoice::CpuSeq),
-        ("MC", "LibSVM", Solver::Smo, EngineChoice::CpuPar(threads)),
-        ("MC", "GTSVM", Solver::Wss, EngineChoice::CpuPar(threads)),
-        ("MC", "MU", Solver::Mu, EngineChoice::CpuPar(threads)),
-        ("MC", "Primal", Solver::Primal, EngineChoice::CpuPar(threads)),
-        ("MC", "SP-SVM", Solver::SpSvm, EngineChoice::CpuPar(threads)),
-        ("XLA", "SP-SVM", Solver::SpSvm, EngineChoice::Xla),
+    let spec = paper::spec(&dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
+    let (train, test) = spec.generate(scale, 1);
+    anyhow::ensure!(!train.is_multiclass(), "pick a binary dataset for this example");
+    println!(
+        "{dataset}: {} train / {} test rows, d = {} (C = {}, gamma = {})",
+        train.n, test.n, train.d, spec.c, spec.gamma
+    );
+
+    let c = spec.c;
+    let kind = KernelKind::Rbf { gamma: spec.gamma };
+    // One shared budget for every contender: comparisons are only
+    // meaningful when all solvers answer "how far did you get in the
+    // same time?" (budget-capped runs carry a `capped` note).
+    let budget = Budget::wall(Duration::from_secs(120));
+
+    let cases: Vec<(&str, &str, SolverSpec, Engine)> = vec![
+        (
+            "SC",
+            "LibSVM",
+            SolverSpec::Smo(SmoParams { c, ..Default::default() }),
+            Engine::cpu_seq(),
+        ),
+        (
+            "MC",
+            "LibSVM",
+            SolverSpec::Smo(SmoParams { c, ..Default::default() }),
+            Engine::cpu_par(threads),
+        ),
+        (
+            "MC",
+            "GTSVM",
+            SolverSpec::Wss(WssParams { c, ..Default::default() }),
+            Engine::cpu_par(threads),
+        ),
+        (
+            "MC",
+            "MU",
+            SolverSpec::Mu(MuParams { c, ..Default::default() }),
+            Engine::cpu_par(threads),
+        ),
+        (
+            "MC",
+            "Primal",
+            SolverSpec::Primal(PrimalParams { c, ..Default::default() }),
+            Engine::cpu_par(threads),
+        ),
+        (
+            "MC",
+            "SP-SVM",
+            SolverSpec::SpSvm(SpSvmParams { c, max_basis: 255, ..Default::default() }),
+            Engine::cpu_par(threads),
+        ),
     ];
+    // the paper's accelerator row: implicit SP-SVM on the AOT-XLA engine
+    // (shows a failed row when artifacts are absent — offline builds)
+    let xla_case = coordinator::shared_runtime().map(|rt| {
+        (
+            "XLA",
+            "SP-SVM",
+            SolverSpec::SpSvm(SpSvmParams { c, max_basis: 255, ..Default::default() }),
+            Engine::xla(rt),
+        )
+    });
+
+    let metric_of = |margins: &[f32]| match spec.metric {
+        paper::Metric::Error => ("error".to_string(), error_rate(margins, &test.y)),
+        paper::Metric::OneMinusAuc => ("1-auc".to_string(), 1.0 - auc(margins, &test.y)),
+    };
 
     let mut rows = Vec::new();
-    for (arch, name, solver, engine) in cases {
-        let job = TrainJob {
-            dataset: dataset.clone(),
-            scale,
-            solver,
-            engine,
-            max_basis: 255,
-            ..Default::default()
+    let all_cases = cases.into_iter().map(Ok).chain(std::iter::once(xla_case));
+    for case in all_cases {
+        let (arch, name, solver_spec, engine) = match case {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("XLA/SP-SVM ... unavailable: {e}");
+                rows.push(Row {
+                    dataset: dataset.clone(),
+                    arch: "XLA".into(),
+                    method: "SP-SVM".into(),
+                    metric_name: "-".into(),
+                    test_metric: f64::NAN,
+                    train_time: Duration::ZERO,
+                    speedup: f64::NAN,
+                    notes: format!("{e}").chars().take(48).collect(),
+                });
+                continue;
+            }
         };
+        let trainer = Trainer::new(solver_spec)
+            .kernel(kind)
+            .engine(engine)
+            .budget(budget.clone());
         eprint!("{arch}/{name} ... ");
-        match run(&job) {
-            Ok(rec) => {
-                eprintln!("{:.2}% in {:?}", rec.test_metric * 100.0, rec.train_time);
+        let t0 = Instant::now();
+        match trainer.train(&train) {
+            Ok(r) => {
+                let train_time = t0.elapsed();
+                let margins = r.model.decision_batch(&test, threads);
+                let (metric_name, test_metric) = metric_of(&margins);
+                eprintln!("{:.2}% in {train_time:?}", test_metric * 100.0);
+                let capped = r
+                    .notes
+                    .iter()
+                    .find(|(k, _)| k == "capped")
+                    .map(|(_, v)| format!(" capped={v}"))
+                    .unwrap_or_default();
                 rows.push(Row {
                     dataset: dataset.clone(),
                     arch: arch.into(),
                     method: name.into(),
-                    metric_name: rec.metric_name,
-                    test_metric: rec.test_metric,
-                    train_time: rec.train_time,
+                    metric_name,
+                    test_metric,
+                    train_time,
                     speedup: 1.0,
-                    notes: format!("m={}", rec.expansion_size),
+                    notes: format!("m={}{capped}", r.model.num_vectors()),
                 });
             }
             Err(e) => {
@@ -71,5 +171,26 @@ fn main() -> anyhow::Result<()> {
     fill_speedups(&mut rows, "LibSVM", "SC");
     println!("\n{}", render_table(&rows));
     println!("(speedups are vs single-core LibSVM on the same rows — the paper's convention)");
+
+    // --- convergence trace: the same API, now observed per iteration ---
+    println!("\nconvergence (explicit SMO vs implicit SP-SVM, decimated):");
+    for (name, solver_spec, every) in [
+        ("smo", SolverSpec::Smo(SmoParams { c, ..Default::default() }), 200usize),
+        (
+            "spsvm",
+            SolverSpec::SpSvm(SpSvmParams { c, max_basis: 255, ..Default::default() }),
+            1,
+        ),
+    ] {
+        let obs = Arc::new(TraceObserver::every(every));
+        let r = Trainer::new(solver_spec)
+            .kernel(kind)
+            .engine(Engine::cpu_par(threads))
+            .budget(budget.clone())
+            .observer(obs.clone())
+            .train(&train)?;
+        println!("-- {name}: {} iters, final objective {:.6}", r.iterations, r.objective);
+        print!("{}", obs.to_tsv());
+    }
     Ok(())
 }

@@ -57,13 +57,8 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let engine = coordinator::build_engine(job.engine)?;
-    let params = wu_svm::solvers::spsvm::SpSvmParams {
-        c: spec.c,
-        gamma: spec.gamma,
-        max_basis: 255,
-        ..Default::default()
-    };
-    let model = wu_svm::solvers::spsvm::train(&train, &params, &engine)?.model;
+    let trainer = job.trainer(&spec, &engine);
+    let model = trainer.train(&train)?.model;
     let server = serve::Server::start(
         &model,
         engine,
@@ -83,9 +78,9 @@ fn main() -> anyhow::Result<()> {
         n_req as f64 / total.as_secs_f64(),
     );
     // hot-swap a retrained (smaller) version mid-service, then keep serving
-    let params2 = wu_svm::solvers::spsvm::SpSvmParams { max_basis: 63, ..params };
-    let engine2 = coordinator::build_engine(job.engine)?;
-    let model2 = wu_svm::solvers::spsvm::train(&train, &params2, &engine2)?.model;
+    let job2 = TrainJob { max_basis: 63, ..job.clone() };
+    let engine2 = coordinator::build_engine(job2.engine)?;
+    let model2 = job2.trainer(&spec, &engine2).train(&train)?.model;
     let v = server.publish(&model2)?;
     println!("hot-swapped to {} (version {v})", server.registry().current().describe());
     for i in 0..n_req.min(500) {

@@ -7,10 +7,12 @@
 use wu_svm::coordinator;
 use wu_svm::data::paper;
 use wu_svm::engine::Engine;
+use wu_svm::kernel::KernelKind;
 use wu_svm::metrics::{fmt_duration, multiclass_error};
 use wu_svm::multiclass::OvoModel;
 use wu_svm::pool;
-use wu_svm::solvers::spsvm::{self, SpSvmParams};
+use wu_svm::solvers::spsvm::SpSvmParams;
+use wu_svm::solvers::{SolverSpec, Trainer};
 
 fn main() -> anyhow::Result<()> {
     let scale: f64 = std::env::args()
@@ -34,24 +36,17 @@ fn main() -> anyhow::Result<()> {
     };
     println!("engine: {}", engine.name());
 
+    // one configured Trainer fans out over all 45 pair subproblems,
+    // sharing a single kernel-row cache budget
+    let trainer = Trainer::new(SolverSpec::SpSvm(SpSvmParams {
+            c: spec.c,
+            max_basis: 127,
+            ..Default::default()
+        }))
+        .kernel(KernelKind::Rbf { gamma: spec.gamma })
+        .engine(engine);
     let t0 = std::time::Instant::now();
-    let mut pair_count = 0;
-    let ovo = OvoModel::train(&train, |view, a, b| {
-        pair_count += 1;
-        eprint!("\r  pair {pair_count}/45 ({a} vs {b}): n = {}    ", view.n);
-        Ok(spsvm::train(
-            view,
-            &SpSvmParams {
-                c: spec.c,
-                gamma: spec.gamma,
-                max_basis: 127,
-                ..Default::default()
-            },
-            &engine,
-        )?
-        .model)
-    })?;
-    eprintln!();
+    let ovo = OvoModel::train_with(&train, &trainer, 512)?;
     let train_time = t0.elapsed();
 
     let pred = ovo.predict(&test, pool::default_threads());

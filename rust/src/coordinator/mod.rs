@@ -1,9 +1,10 @@
 //! Training-job coordination: one place that wires datasets, solvers and
-//! engines together (used by the CLI, the examples and the bench harness).
-//! Serving moved to [`crate::serve`]; `coordinator::serve` re-exports it
-//! for one release.
-
-pub mod serve;
+//! engines together (used by the CLI, the examples and the bench
+//! harness). A [`TrainJob`] compiles to a [`Trainer`]
+//! ([`TrainJob::trainer`]); the only per-solver dispatch left here is
+//! hyperparameter construction in [`TrainJob::solver_spec`] — caches,
+//! thread counts, iteration caps and observers all travel through the
+//! unified API. Serving lives in [`crate::serve`].
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -13,14 +14,12 @@ use anyhow::{bail, Result};
 use crate::config::Config;
 use crate::data::{paper, Dataset};
 use crate::engine::Engine;
-use crate::kernel::cache::SharedRowCache;
 use crate::kernel::KernelKind;
 use crate::metrics::{auc, error_rate, multiclass_error};
-use crate::model::SvmModel;
 use crate::multiclass::OvoModel;
 use crate::pool;
 use crate::runtime::{default_artifacts_dir, XlaRuntime};
-use crate::solvers::common::cache_shards;
+use crate::solvers::api::{Budget, SolverSpec, Trainer};
 use crate::solvers::{mu, primal, smo, spsvm, wss};
 
 /// Which solver to run.
@@ -90,6 +89,10 @@ pub struct TrainJob {
     pub seed: u64,
     /// Cap on training rows (0 = spec size * scale).
     pub max_train: usize,
+    /// Wall-clock training budget in seconds (`--time-budget-secs`).
+    pub time_budget_secs: Option<f64>,
+    /// Iteration budget in the solver's own unit (`--max-iters`).
+    pub max_iters: Option<usize>,
 }
 
 impl Default for TrainJob {
@@ -107,9 +110,34 @@ impl Default for TrainJob {
             cache_mb: 512,
             seed: 1,
             max_train: 0,
+            time_budget_secs: None,
+            max_iters: None,
         }
     }
 }
+
+/// CLI keys [`TrainJob::from_config`] understands (plus the generic
+/// `config`/`save` keys) — the `check_known` allowlist for `wu-svm
+/// train`.
+pub const TRAIN_KEYS: &[&str] = &[
+    "dataset",
+    "scale",
+    "solver",
+    "engine",
+    "threads",
+    "c",
+    "gamma",
+    "eps",
+    "max-basis",
+    "wss-size",
+    "cache-mb",
+    "seed",
+    "max-train",
+    "time-budget-secs",
+    "max-iters",
+    "config",
+    "save",
+];
 
 impl TrainJob {
     /// Build from parsed CLI config.
@@ -128,7 +156,61 @@ impl TrainJob {
         job.cache_mb = cfg.usize_or("cache-mb", job.cache_mb)?;
         job.seed = cfg.u64_or("seed", job.seed)?;
         job.max_train = cfg.usize_or("max-train", 0)?;
+        job.time_budget_secs = cfg.get("time-budget-secs").map(|v| v.parse()).transpose()?;
+        job.max_iters = cfg.get("max-iters").map(|v| v.parse()).transpose()?;
         Ok(job)
+    }
+
+    /// The job's stopping policy: CLI budget keys, or solver defaults.
+    pub fn budget(&self) -> Budget {
+        Budget {
+            max_iters: self.max_iters,
+            wall: self.time_budget_secs.map(Duration::from_secs_f64),
+            target_objective: None,
+        }
+    }
+
+    /// Solver hyperparameters for this job — the one remaining
+    /// per-solver dispatch in the coordinator. Everything environmental
+    /// (engine, kernel, cache, budget) rides on the [`Trainer`] instead.
+    pub fn solver_spec(&self, spec: &paper::PaperSpec) -> SolverSpec {
+        let c = self.c.unwrap_or(spec.c);
+        match self.solver {
+            Solver::Smo => SolverSpec::Smo(smo::SmoParams {
+                c,
+                eps: self.eps.unwrap_or(1e-3),
+                cache_mb: self.cache_mb,
+                ..Default::default()
+            }),
+            Solver::Wss => SolverSpec::Wss(wss::WssParams {
+                c,
+                s: self.wss_size,
+                eps: self.eps.unwrap_or(1e-3),
+                cache_mb: self.cache_mb,
+                ..Default::default()
+            }),
+            Solver::Mu => SolverSpec::Mu(mu::MuParams { c, ..Default::default() }),
+            Solver::Primal => SolverSpec::Primal(primal::PrimalParams {
+                c,
+                ..Default::default()
+            }),
+            Solver::SpSvm => SolverSpec::SpSvm(spsvm::SpSvmParams {
+                c,
+                gamma: self.gamma.unwrap_or(spec.gamma),
+                max_basis: self.max_basis,
+                eps: self.eps.unwrap_or(5e-6),
+                seed: self.seed,
+                ..Default::default()
+            }),
+        }
+    }
+
+    /// Compile the job into a ready-to-run [`Trainer`] on `engine`.
+    pub fn trainer(&self, spec: &paper::PaperSpec, engine: &Engine) -> Trainer {
+        Trainer::new(self.solver_spec(spec))
+            .kernel(KernelKind::Rbf { gamma: self.gamma.unwrap_or(spec.gamma) })
+            .engine(engine.clone())
+            .budget(self.budget())
     }
 }
 
@@ -182,136 +264,19 @@ pub fn load_data(job: &TrainJob) -> Result<(Dataset, Dataset, paper::PaperSpec)>
     Ok((tr, te, spec))
 }
 
-fn train_binary(
-    ds: &Dataset,
-    job: &TrainJob,
-    spec: &paper::PaperSpec,
-    engine: &Engine,
-    shared: Option<(&Arc<SharedRowCache>, u64)>,
-) -> Result<(SvmModel, Vec<(String, String)>)> {
-    let c = job.c.unwrap_or(spec.c);
-    let gamma = job.gamma.unwrap_or(spec.gamma);
-    let kind = KernelKind::Rbf { gamma };
-    let r = match job.solver {
-        // Iteration caps keep pathological (huge-C) configurations bounded
-        // in benches; 50n is far past typical SMO convergence (~2-5n) and a
-        // capped run is flagged in the notes.
-        Solver::Smo => {
-            let p = smo::SmoParams {
-                c,
-                eps: job.eps.unwrap_or(1e-3),
-                cache_mb: job.cache_mb,
-                max_iters: 50 * ds.n,
-                ..Default::default()
-            };
-            match shared {
-                Some((cache, group)) => {
-                    smo::train_cached(ds, kind, &p, engine, cache.clone(), group)?
-                }
-                None => smo::train(ds, kind, &p, engine)?,
-            }
-        }
-        Solver::Wss => {
-            let p = wss::WssParams {
-                c,
-                s: job.wss_size,
-                eps: job.eps.unwrap_or(1e-3),
-                cache_mb: job.cache_mb,
-                max_outer: 10 * ds.n,
-                ..Default::default()
-            };
-            match shared {
-                Some((cache, group)) => {
-                    wss::train_cached(ds, kind, &p, engine, cache.clone(), group)?
-                }
-                None => wss::train(ds, kind, &p, engine)?,
-            }
-        }
-        Solver::Mu => mu::train(
-            ds,
-            kind,
-            &mu::MuParams {
-                c,
-                threads: match job.engine {
-                    EngineChoice::CpuPar(t) => t,
-                    _ => 1,
-                },
-                ..Default::default()
-            },
-        )?,
-        Solver::Primal => primal::train(
-            ds,
-            kind,
-            &primal::PrimalParams {
-                c,
-                threads: match job.engine {
-                    EngineChoice::CpuPar(t) => t,
-                    _ => 1,
-                },
-                ..Default::default()
-            },
-        )?,
-        Solver::SpSvm => spsvm::train(
-            ds,
-            &spsvm::SpSvmParams {
-                c,
-                gamma,
-                max_basis: job.max_basis,
-                eps: job.eps.unwrap_or(5e-6),
-                seed: job.seed,
-                ..Default::default()
-            },
-            engine,
-        )?,
-    };
-    Ok((r.model, r.notes))
-}
-
-/// Train every one-vs-one pair model. On a multithreaded cpu engine the
-/// pairs run concurrently over the pool, all drawing kernel rows from one
-/// shared cache so the combined footprint stays within `job.cache_mb`.
-fn train_ovo(
-    ds: &Dataset,
-    job: &TrainJob,
-    spec: &paper::PaperSpec,
-    engine: &Engine,
-) -> Result<OvoModel> {
-    let threads = engine.threads();
-    let k = ds.num_classes();
-    let n_pairs = k * (k - 1) / 2;
-    if threads > 1 && n_pairs > 1 {
-        let workers = threads.min(n_pairs);
-        // pair-level workers share the thread budget with each pair's own
-        // scan parallelism; the pool bounds total concurrency either way
-        let inner = Engine::cpu_par((threads / workers).max(1));
-        let cache = Arc::new(SharedRowCache::new(
-            job.cache_mb * 1024 * 1024,
-            cache_shards(threads),
-        ));
-        let classes = k as u64;
-        OvoModel::train_parallel(ds, workers, |view, a, b| {
-            let group = a as u64 * classes + b as u64;
-            Ok(train_binary(view, job, spec, &inner, Some((&cache, group)))?.0)
-        })
-    } else {
-        OvoModel::train(ds, |view, _, _| {
-            Ok(train_binary(view, job, spec, engine, None)?.0)
-        })
-    }
-}
-
 /// Run a training job end to end (train + evaluate).
 pub fn run(job: &TrainJob) -> Result<RunRecord> {
     let (train_ds, test_ds, spec) = load_data(job)?;
     let engine = build_engine(job.engine)?;
     let eval_threads = pool::default_threads();
+    let trainer = job.trainer(&spec, &engine);
 
     let t0 = std::time::Instant::now();
     if train_ds.is_multiclass() {
         // OvO: report the *accumulated* per-pair training time (Table-1
         // convention) so sequential and concurrent runs stay comparable;
         // the wall clock of the concurrent run goes in the notes.
-        let ovo = train_ovo(&train_ds, job, &spec, &engine)?;
+        let ovo = OvoModel::train_with(&train_ds, &trainer, job.cache_mb)?;
         let wall = t0.elapsed();
         let train_time = Duration::from_secs_f64(ovo.train_secs);
         let pred = ovo.predict(&test_ds, eval_threads);
@@ -331,7 +296,8 @@ pub fn run(job: &TrainJob) -> Result<RunRecord> {
         });
     }
 
-    let (model, notes) = train_binary(&train_ds, job, &spec, &engine, None)?;
+    let r = trainer.train(&train_ds)?;
+    let (model, notes) = (r.model, r.notes);
     let train_time = t0.elapsed();
     let margins = model.decision_batch(&test_ds, eval_threads);
     let (metric_name, metric) = match spec.metric {
@@ -386,6 +352,56 @@ mod tests {
         assert_eq!(job.solver, Solver::Smo);
         assert_eq!(job.engine, EngineChoice::CpuSeq);
         assert_eq!(job.c, Some(2.5));
+    }
+
+    #[test]
+    fn budget_keys_from_config() {
+        let cfg = Config::from_args(&[
+            "--time-budget-secs".into(),
+            "1.5".into(),
+            "--max-iters".into(),
+            "42".into(),
+        ])
+        .unwrap();
+        let job = TrainJob::from_config(&cfg).unwrap();
+        assert_eq!(job.max_iters, Some(42));
+        assert_eq!(job.time_budget_secs, Some(1.5));
+        let b = job.budget();
+        assert_eq!(b.max_iters, Some(42));
+        assert_eq!(b.wall, Some(Duration::from_secs_f64(1.5)));
+        assert_eq!(b.target_objective, None);
+    }
+
+    #[test]
+    fn train_keys_cover_from_config() {
+        // every key from_config reads must be in the check_known allowlist
+        for k in [
+            "dataset", "scale", "solver", "engine", "threads", "c", "gamma", "eps",
+            "max-basis", "wss-size", "cache-mb", "seed", "max-train",
+            "time-budget-secs", "max-iters",
+        ] {
+            assert!(TRAIN_KEYS.contains(&k), "{k} missing from TRAIN_KEYS");
+        }
+        let cfg = Config::from_args(&["--oops".into(), "1".into()]).unwrap();
+        assert!(cfg.check_known(TRAIN_KEYS).is_err());
+    }
+
+    #[test]
+    fn budgeted_run_is_capped() {
+        let job = TrainJob {
+            dataset: "covertype".into(),
+            scale: 0.003,
+            solver: Solver::Smo,
+            engine: EngineChoice::CpuSeq,
+            max_iters: Some(3),
+            ..Default::default()
+        };
+        let rec = run(&job).unwrap();
+        assert!(
+            rec.notes.iter().any(|(k, v)| k == "capped" && v == "iters"),
+            "notes: {:?}",
+            rec.notes
+        );
     }
 
     #[test]

@@ -2,14 +2,16 @@
 //! (DESIGN.md §6). Shared by the CLI (`wu-svm bench ...`) and the
 //! `cargo bench` targets.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::coordinator::{run, EngineChoice, RunRecord, Solver, TrainJob};
+use crate::coordinator::{build_engine, load_data, run, EngineChoice, RunRecord, Solver, TrainJob};
 use crate::data::paper;
 use crate::pool;
 use crate::report::{fill_speedups, render_sweep, render_table, Row};
+use crate::solvers::TraceObserver;
 
 /// Default bench scale per dataset: sized so the single-core SMO baseline
 /// finishes in minutes, not hours (the *relative* ordering is the paper's
@@ -231,6 +233,46 @@ pub fn run_eps_sweep(dataset: &str, scale: f64, epss: &[f64]) -> Result<String> 
     ))
 }
 
+/// F.convergence — per-iteration `(iter, objective, active, elapsed)`
+/// traces via the [`TraceObserver`], one TSV block per solver: the raw
+/// material of the time-vs-accuracy convergence curves the paper's
+/// Table 1 (end-state numbers only) cannot show. `every` decimates the
+/// trace (1 = keep every iteration).
+pub fn run_convergence(
+    dataset: &str,
+    scale: f64,
+    solvers: &[Solver],
+    every: usize,
+) -> Result<String> {
+    let mut out = String::new();
+    for &solver in solvers {
+        let job = TrainJob {
+            dataset: dataset.into(),
+            scale,
+            solver,
+            engine: EngineChoice::CpuPar(pool::default_threads()),
+            ..Default::default()
+        };
+        let (tr, _, spec) = load_data(&job)?;
+        anyhow::ensure!(
+            !tr.is_multiclass(),
+            "convergence traces are binary-only (dataset '{dataset}' is multiclass)"
+        );
+        let engine = build_engine(job.engine)?;
+        let obs = Arc::new(TraceObserver::every(every));
+        let trainer = job.trainer(&spec, &engine).observer(obs.clone());
+        let name = trainer.solver_name().to_string();
+        let r = trainer.train(&tr)?;
+        out.push_str(&format!(
+            "# F.convergence {name} on {dataset} (scale {scale}): {} iters, final objective {:.6}\n",
+            r.iterations, r.objective
+        ));
+        out.push_str(&obs.to_tsv());
+        out.push('\n');
+    }
+    Ok(out)
+}
+
 /// F.memory — the memory wall for exact implicit methods: bytes required
 /// vs n for MU (2 n^2), full primal (n^2) and SP-SVM (|J| n), plus
 /// whether each method runs under a 2 GB cap.
@@ -307,6 +349,17 @@ mod tests {
         // at n = 1M, MU needs 8 TB -> not ok; SP-SVM a few GB -> ok
         let last = t.lines().last().unwrap();
         assert!(last.contains("0.00000")); // some method fails the cap
+    }
+
+    #[test]
+    fn convergence_trace_produces_points() {
+        let t = run_convergence("adult", 0.01, &[Solver::SpSvm], 1).unwrap();
+        assert!(t.contains("F.convergence spsvm"), "{t}");
+        assert!(t.contains("iter\tobjective\tactive\telapsed_ms"), "{t}");
+        // at least one data row under the header
+        assert!(t.lines().any(|l| l.starts_with("1\t")), "{t}");
+        // multiclass datasets are rejected, not mis-traced
+        assert!(run_convergence("mnist8m", 0.004, &[Solver::SpSvm], 1).is_err());
     }
 
     #[test]

@@ -24,11 +24,13 @@ COMMANDS
             --dataset adult|covertype|kdd99|mitfaces|fd|epsilon|mnist8m
             --solver smo|wss|mu|primal|spsvm   --engine cpu-seq|cpu-par|xla
             --scale 0.05  --c --gamma --eps --max-basis --seed
-            --save model.txt
+            --time-budget-secs T --max-iters N  (training budget)
+            --save model.txt  (unknown --keys are rejected)
   predict   --model model.txt --input data.libsvm [--threads N]
   datagen   --dataset KEY --scale S --out file.libsvm [--test-out f]
-  bench     table1|scaling|basis|wss|epsstop|memory
+  bench     table1|scaling|basis|wss|epsstop|memory|convergence
             table1: --dataset KEY|all --scale S --methods a,b --max-basis N
+            convergence: --dataset KEY --scale S --solvers smo,spsvm --every K
   serve     --dataset KEY --scale S [--engine E] [--requests N] [--batch N]
             [--shards K] [--queue-cap N]  (multiclass datasets serve OvO)
   info      artifact manifest + runtime info
@@ -67,6 +69,7 @@ fn dispatch(args: &[String]) -> Result<()> {
 }
 
 fn cmd_train(cfg: &Config) -> Result<()> {
+    cfg.check_known(coordinator::TRAIN_KEYS)?;
     let job = TrainJob::from_config(cfg)?;
     println!(
         "training {} with {:?} on {:?} (scale {})",
@@ -87,29 +90,17 @@ fn cmd_train(cfg: &Config) -> Result<()> {
         println!("  {k} = {v}");
     }
     if let Some(path) = cfg.get("save") {
-        // retrain path for saving is wasteful; train once more cheaply?
-        // run() already discarded the model, so train again via coordinator
-        // internals would duplicate logic — instead note the limitation.
+        // run() reports metrics but discards the model; retrain through
+        // the same Trainer the run used (works for every solver now).
         let (tr, _, spec) = coordinator::load_data(&job)?;
         if tr.is_multiclass() {
             bail!("--save supports binary datasets");
         }
         let engine = coordinator::build_engine(job.engine)?;
-        let gamma = job.gamma.unwrap_or(spec.gamma);
-        let c = job.c.unwrap_or(spec.c);
-        let r = wu_svm::solvers::spsvm::train(
-            &tr,
-            &wu_svm::solvers::spsvm::SpSvmParams {
-                c,
-                gamma,
-                max_basis: job.max_basis,
-                seed: job.seed,
-                ..Default::default()
-            },
-            &engine,
-        )?;
+        let trainer = job.trainer(&spec, &engine);
+        let r = trainer.train(&tr)?;
         r.model.save(Path::new(path))?;
-        println!("saved SP-SVM model to {path}");
+        println!("saved {} model to {path}", trainer.solver_name());
     }
     Ok(())
 }
@@ -221,7 +212,20 @@ fn cmd_bench(cfg: &Config) -> Result<()> {
                 )
             );
         }
-        other => bail!("unknown bench '{other}' (table1|scaling|basis|wss|epsstop|memory)"),
+        "convergence" => {
+            let ds = cfg.str_or("dataset", "adult");
+            let scale = cfg.f64_or("scale", experiments::default_scale(&ds))?;
+            let every = cfg.usize_or("every", 25)?;
+            let solvers: Vec<wu_svm::coordinator::Solver> = cfg
+                .str_or("solvers", "smo,spsvm")
+                .split(',')
+                .map(|s| wu_svm::coordinator::Solver::parse(s.trim()))
+                .collect::<Result<_>>()?;
+            println!("{}", experiments::run_convergence(&ds, scale, &solvers, every)?);
+        }
+        other => bail!(
+            "unknown bench '{other}' (table1|scaling|basis|wss|epsstop|memory|convergence)"
+        ),
     }
     Ok(())
 }
@@ -248,18 +252,11 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     println!("training a quick SP-SVM model on {key} (scale {scale})...");
     let (tr, te, spec) = coordinator::load_data(&job)?;
     let engine = coordinator::build_engine(job.engine)?;
-    let params = wu_svm::solvers::spsvm::SpSvmParams {
-        c: spec.c,
-        gamma: spec.gamma,
-        max_basis: 127,
-        ..Default::default()
-    };
+    let trainer = job.trainer(&spec, &engine);
     // binary datasets register an SvmModel, multiclass an OvO ensemble —
     // both serve through the same registry + sharded batchers
     let registry = if tr.is_multiclass() {
-        let ovo = wu_svm::multiclass::OvoModel::train(&tr, |view, _, _| {
-            Ok(wu_svm::solvers::spsvm::train(view, &params, &engine)?.model)
-        })?;
+        let ovo = wu_svm::multiclass::OvoModel::train_with(&tr, &trainer, job.cache_mb)?;
         println!(
             "model: {} OvO pairs, {} expansion vectors",
             ovo.pairs.len(),
@@ -267,7 +264,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         );
         std::sync::Arc::new(serve::ModelRegistry::new(&ovo))
     } else {
-        let r = wu_svm::solvers::spsvm::train(&tr, &params, &engine)?;
+        let r = trainer.train(&tr)?;
         println!("model: {} basis vectors", r.model.num_vectors());
         std::sync::Arc::new(serve::ModelRegistry::new(&r.model))
     };

@@ -7,16 +7,23 @@
 //! multicore box trains many pairs at once — pair trainers typically
 //! share one [`crate::kernel::cache::SharedRowCache`] so the concurrent
 //! subproblems stay within a single kernel-cache byte budget.
+//! [`OvoModel::train_with`] packages both behind the unified
+//! [`Trainer`] API: one configured trainer fans out per pair.
 
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::Dataset;
+use crate::engine::Engine;
+use crate::kernel::cache::SharedRowCache;
 use crate::metrics::Stopwatch;
 use crate::model::{next_line, SvmModel};
 use crate::pool;
+use crate::solvers::api::Trainer;
+use crate::solvers::common::cache_shards;
 
 /// LibSVM's vote argmax: most votes wins, ties broken toward the smaller
 /// class id. One definition shared by [`OvoModel::predict`],
@@ -112,6 +119,41 @@ impl OvoModel {
             }
         }
         Ok(OvoModel { classes: k, pairs, models, train_secs })
+    }
+
+    /// Train every pair through one configured [`Trainer`]. On a
+    /// multithreaded engine the pairs run concurrently: pair-level
+    /// workers split the trainer's thread budget, and every pair
+    /// subproblem draws kernel rows from one shared cache of `cache_mb`
+    /// megabytes (group id = pair), so the combined footprint stays
+    /// within a single byte budget. Pair order and `train_secs`
+    /// semantics match [`OvoModel::train`].
+    pub fn train_with(ds: &Dataset, trainer: &Trainer, cache_mb: usize) -> Result<OvoModel> {
+        let threads = trainer.threads();
+        let k = ds.num_classes();
+        let n_pairs = k * (k - 1) / 2;
+        if threads > 1 && n_pairs > 1 {
+            let workers = threads.min(n_pairs);
+            // pair-level workers share the thread budget with each pair's
+            // own scan parallelism; the pool bounds total concurrency
+            let inner = Engine::cpu_par((threads / workers).max(1));
+            let cache = Arc::new(SharedRowCache::new(
+                cache_mb * 1024 * 1024,
+                cache_shards(threads),
+            ));
+            let classes = k as u64;
+            OvoModel::train_parallel(ds, workers, |view, a, b| {
+                let group = a as u64 * classes + b as u64;
+                Ok(trainer
+                    .clone()
+                    .engine(inner.clone())
+                    .shared_cache(cache.clone(), group)
+                    .train(view)?
+                    .model)
+            })
+        } else {
+            OvoModel::train(ds, |view, _, _| Ok(trainer.train(view)?.model))
+        }
     }
 
     /// Predict a class id for each row by pairwise voting (ties broken

@@ -1,6 +1,7 @@
 //! Production serving subsystem — the implicit-parallel credo applied to
 //! inference, grown from the single-threaded demo loop that used to live
-//! in `coordinator::serve` (still re-exported there for one release).
+//! in `coordinator::serve` (that deprecated re-export has been removed;
+//! import `wu_svm::serve` directly).
 //!
 //! Four pillars (DESIGN.md §SERVE):
 //!

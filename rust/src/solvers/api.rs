@@ -1,0 +1,696 @@
+//! The unified training API: one object-safe contract over all five
+//! solvers, plus the [`Trainer`] builder everything routes through.
+//!
+//! The paper's contribution is a *controlled comparison* of explicit
+//! (SMO/WSS) and implicit (MU, Primal, SP-SVM) solvers, and Glasmachers'
+//! "recipe" paper argues such comparisons are only meaningful under
+//! shared budgets. This module is that discipline as a type system:
+//!
+//! * [`SolverDriver`] — the object-safe trait every solver implements.
+//!   A driver reads everything environmental (dataset view, kernel,
+//!   engine, shared cache, budget, observer) from a [`TrainCtx`]; its
+//!   params struct holds only algorithm hyperparameters.
+//! * [`Budget`] — one enforced stopping policy (iteration cap,
+//!   wall-clock, target objective) replacing the per-solver magic caps
+//!   that used to live in the coordinator's dispatch arms. Budgets are
+//!   enforced by a [`BudgetMeter`] the solver ticks once per iteration;
+//!   a budget-terminated run is flagged `capped` in the result notes.
+//! * [`TrainObserver`] — per-iteration `(iter, objective, active,
+//!   elapsed)` events, the raw material of time-vs-accuracy convergence
+//!   curves. The default [`NullObserver`] disables per-iteration
+//!   objective computation entirely, so an unobserved run costs exactly
+//!   what it did before this API existed.
+//! * [`Trainer`] — the builder:
+//!
+//! ```no_run
+//! use std::time::Duration;
+//! use wu_svm::data::Dataset;
+//! use wu_svm::engine::Engine;
+//! use wu_svm::kernel::KernelKind;
+//! use wu_svm::solvers::spsvm::SpSvmParams;
+//! use wu_svm::solvers::{Budget, SolverSpec, Trainer};
+//!
+//! # fn demo(train: &Dataset) -> anyhow::Result<()> {
+//! let result = Trainer::new(SolverSpec::SpSvm(SpSvmParams {
+//!         c: 1.0,
+//!         max_basis: 255,
+//!         ..Default::default()
+//!     }))
+//!     .kernel(KernelKind::Rbf { gamma: 0.5 })
+//!     .engine(Engine::cpu_par(8))
+//!     .budget(Budget::wall(Duration::from_secs(30)).max_iters(10_000))
+//!     .train(train)?;
+//! # let _ = result; Ok(())
+//! # }
+//! ```
+//!
+//! The legacy free functions (`smo::train`, `mu::train`, ...) survive
+//! for one release as thin shims over this path; a conformance test
+//! proves the two are bit-identical per solver.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::engine::Engine;
+use crate::kernel::cache::SharedRowCache;
+use crate::kernel::KernelKind;
+
+use super::common::KernelRows;
+use super::{mu, primal, smo, spsvm, wss, TrainResult};
+
+/// The paper's methodological axis: who parallelizes the heavy math.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// Hand-decomposed dual solvers (SMO, WSS): we parallelize.
+    Explicit,
+    /// Dense-linear-algebra reformulations (MU, Primal, SP-SVM): the
+    /// library (blocked GEMM substrate / XLA) parallelizes.
+    Implicit,
+}
+
+impl Family {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Family::Explicit => "explicit",
+            Family::Implicit => "implicit",
+        }
+    }
+}
+
+/// A shared stopping policy. Every field is optional; what a solver does
+/// when a field is unset is the solver's documented default (e.g. SMO
+/// falls back to [`Budget::smo_default_iters`]). The same `Budget` given
+/// to two solvers means the same thing — the precondition for the
+/// paper's controlled comparisons.
+///
+/// Semantics (all enforced by [`BudgetMeter::tick`], once per finished
+/// iteration, so at least one iteration always runs):
+/// * `max_iters` — hard cap on solver iterations (solver-specific unit:
+///   SMO working-set steps, WSS/SP-SVM outer rounds, MU sweeps, Newton
+///   steps).
+/// * `wall` — wall-clock limit, checked after every iteration.
+/// * `target_objective` — stop once the solver's running objective is
+///   `<=` this value (objectives here are minimized). Under SMO
+///   shrinking the running objective is the active-set approximation.
+///
+/// A run stopped by any of the three carries a `("capped", reason)`
+/// note in its [`TrainResult`], with reason `iters`, `wall` or `target`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Budget {
+    pub max_iters: Option<usize>,
+    pub wall: Option<Duration>,
+    pub target_objective: Option<f64>,
+}
+
+impl Budget {
+    /// No limits beyond the solver defaults.
+    pub fn none() -> Budget {
+        Budget::default()
+    }
+
+    /// Wall-clock budget.
+    pub fn wall(limit: Duration) -> Budget {
+        Budget { wall: Some(limit), ..Budget::default() }
+    }
+
+    /// Iteration budget.
+    pub fn iters(n: usize) -> Budget {
+        Budget { max_iters: Some(n), ..Budget::default() }
+    }
+
+    /// Builder: set the iteration cap.
+    pub fn max_iters(mut self, n: usize) -> Budget {
+        self.max_iters = Some(n);
+        self
+    }
+
+    /// Builder: set the wall-clock limit.
+    pub fn wall_clock(mut self, limit: Duration) -> Budget {
+        self.wall = Some(limit);
+        self
+    }
+
+    /// Builder: stop once the running objective reaches `target`.
+    pub fn target_objective(mut self, target: f64) -> Budget {
+        self.target_objective = Some(target);
+        self
+    }
+
+    /// Default SMO iteration cap for an `n`-row problem: far past
+    /// typical convergence (~2-5n), it only trips on pathological
+    /// (huge-C) configurations. Formerly a magic `50 * n` in the
+    /// coordinator's SMO arm.
+    pub fn smo_default_iters(n: usize) -> usize {
+        50 * n
+    }
+
+    /// Default WSS outer-round cap (formerly the coordinator's
+    /// `10 * n`).
+    pub fn wss_default_iters(n: usize) -> usize {
+        10 * n
+    }
+}
+
+/// Why a [`BudgetMeter`] stopped a run early.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    Iters,
+    Wall,
+    Target,
+}
+
+impl StopReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StopReason::Iters => "iters",
+            StopReason::Wall => "wall",
+            StopReason::Target => "target",
+        }
+    }
+}
+
+/// One per-iteration observation (the row of a convergence curve).
+#[derive(Debug, Clone)]
+pub struct IterEvent {
+    /// Driver name (`"smo"`, `"spsvm"`, ...).
+    pub solver: &'static str,
+    /// 1-based iteration count in the solver's own unit.
+    pub iter: usize,
+    /// Running objective (solver-specific convention; under SMO
+    /// shrinking this is the active-set approximation of the dual).
+    pub objective: f64,
+    /// Size of the solver's working structure: SMO/WSS active or
+    /// support set, SP-SVM basis, MU support set, Primal active hinges.
+    pub active: usize,
+    /// Wall time since training started.
+    pub elapsed: Duration,
+}
+
+/// Receiver of per-iteration events. Implementations must be cheap and
+/// thread-safe — solvers may call from the training thread every
+/// iteration.
+pub trait TrainObserver: Send + Sync {
+    fn on_iter(&self, ev: &IterEvent);
+
+    /// Observers that return `false` (the [`NullObserver`]) let solvers
+    /// skip per-iteration objective computation entirely, keeping the
+    /// unobserved hot loop at its pre-API cost.
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    /// Whether this observer wants the event for iteration `iter`
+    /// (1-based). Decimating observers ([`TraceObserver::every`])
+    /// return `false` for dropped iterations so the meter skips both
+    /// the event *and* the per-iteration objective computation.
+    fn wants(&self, iter: usize) -> bool {
+        let _ = iter;
+        true
+    }
+}
+
+/// The default observer: drops every event, reports itself disabled.
+pub struct NullObserver;
+
+impl TrainObserver for NullObserver {
+    fn on_iter(&self, _ev: &IterEvent) {}
+
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+static NULL_OBSERVER: NullObserver = NullObserver;
+
+/// A recording observer: collects (decimated) events for convergence
+/// plots. `every = 1` keeps everything; `every = k` keeps iterations
+/// 1, k, 2k, ... (the first event is always kept so short runs still
+/// produce a curve).
+pub struct TraceObserver {
+    every: usize,
+    points: Mutex<Vec<IterEvent>>,
+}
+
+impl TraceObserver {
+    pub fn new() -> TraceObserver {
+        TraceObserver::every(1)
+    }
+
+    pub fn every(every: usize) -> TraceObserver {
+        TraceObserver { every: every.max(1), points: Mutex::new(Vec::new()) }
+    }
+
+    /// Drain the recorded events.
+    pub fn take(&self) -> Vec<IterEvent> {
+        std::mem::take(&mut *self.points.lock().unwrap())
+    }
+
+    /// Render the trace as `iter\tobjective\tactive\telapsed_ms` lines
+    /// (with header) without draining it.
+    pub fn to_tsv(&self) -> String {
+        let pts = self.points.lock().unwrap();
+        let mut out = String::from("iter\tobjective\tactive\telapsed_ms\n");
+        for p in pts.iter() {
+            out.push_str(&format!(
+                "{}\t{:.6}\t{}\t{:.3}\n",
+                p.iter,
+                p.objective,
+                p.active,
+                p.elapsed.as_secs_f64() * 1e3
+            ));
+        }
+        out
+    }
+}
+
+impl Default for TraceObserver {
+    fn default() -> Self {
+        TraceObserver::new()
+    }
+}
+
+impl TrainObserver for TraceObserver {
+    fn on_iter(&self, ev: &IterEvent) {
+        if ev.iter == 1 || ev.iter % self.every == 0 {
+            self.points.lock().unwrap().push(ev.clone());
+        }
+    }
+
+    fn wants(&self, iter: usize) -> bool {
+        iter == 1 || iter % self.every == 0
+    }
+}
+
+/// Per-run budget enforcement + event emission. Created from the ctx
+/// ([`TrainCtx::meter`]); the solver calls [`BudgetMeter::tick`] once
+/// after each finished iteration and stops when it returns `false`.
+pub struct BudgetMeter<'a> {
+    solver: &'static str,
+    observer: &'a dyn TrainObserver,
+    events: bool,
+    start: Instant,
+    cap: usize,
+    wall: Option<Duration>,
+    target: Option<f64>,
+    iters: usize,
+    stop: Option<StopReason>,
+}
+
+impl<'a> BudgetMeter<'a> {
+    pub fn new(
+        solver: &'static str,
+        budget: &Budget,
+        observer: &'a dyn TrainObserver,
+        default_cap: usize,
+    ) -> BudgetMeter<'a> {
+        BudgetMeter {
+            solver,
+            observer,
+            events: observer.enabled(),
+            start: Instant::now(),
+            cap: budget.max_iters.unwrap_or(default_cap),
+            wall: budget.wall,
+            target: budget.target_objective,
+            iters: 0,
+            stop: None,
+        }
+    }
+
+    /// Record one finished iteration. `stats` produces the running
+    /// `(objective, active)` pair and is only evaluated when someone
+    /// needs it (an enabled observer that wants this iteration, or a
+    /// target-objective budget) — the unobserved, untargeted path never
+    /// pays for it, and a decimating observer only pays on sampled
+    /// iterations. Returns `false` when the budget is exhausted and the
+    /// solver must stop.
+    pub fn tick(&mut self, stats: impl FnOnce() -> (f64, usize)) -> bool {
+        self.iters += 1;
+        let sampled = self.events && self.observer.wants(self.iters);
+        let (objective, active) = if sampled || self.target.is_some() {
+            stats()
+        } else {
+            (f64::NAN, 0)
+        };
+        let elapsed = if sampled || self.wall.is_some() {
+            self.start.elapsed()
+        } else {
+            Duration::ZERO
+        };
+        if sampled {
+            self.observer.on_iter(&IterEvent {
+                solver: self.solver,
+                iter: self.iters,
+                objective,
+                active,
+                elapsed,
+            });
+        }
+        if self.iters >= self.cap {
+            self.stop = Some(StopReason::Iters);
+            return false;
+        }
+        if self.wall.map_or(false, |w| elapsed >= w) {
+            self.stop = Some(StopReason::Wall);
+            return false;
+        }
+        if self.target.map_or(false, |t| objective <= t) {
+            self.stop = Some(StopReason::Target);
+            return false;
+        }
+        true
+    }
+
+    /// Iterations recorded so far (the value solvers report).
+    pub fn iterations(&self) -> usize {
+        self.iters
+    }
+
+    /// Whether (and why) the budget stopped the run.
+    pub fn stopped_by(&self) -> Option<StopReason> {
+        self.stop
+    }
+
+    /// Append the budget verdict (`capped` note) to a result.
+    pub fn annotate(&self, res: &mut TrainResult) {
+        if let Some(reason) = self.stop {
+            res.note("capped", reason.as_str().to_string());
+        }
+    }
+}
+
+/// Everything environmental a solver needs, in one borrow: the dataset
+/// view, the kernel, the engine that executes heavy ops (and sizes
+/// explicit scan parallelism via [`Engine::threads`]), an optional
+/// shared kernel-row cache (+ group id, for concurrent OvO pair
+/// subproblems under one byte budget), the stopping [`Budget`] and the
+/// iteration observer.
+pub struct TrainCtx<'a> {
+    pub ds: &'a Dataset,
+    pub kind: KernelKind,
+    pub engine: &'a Engine,
+    pub cache: Option<(&'a Arc<SharedRowCache>, u64)>,
+    pub budget: &'a Budget,
+    pub observer: &'a dyn TrainObserver,
+}
+
+impl<'a> TrainCtx<'a> {
+    /// A cached kernel-row provider: the ctx's shared cache when one was
+    /// supplied, else a private cache of `cache_mb` megabytes.
+    pub fn kernel_rows(&self, cache_mb: usize) -> Result<KernelRows> {
+        match self.cache {
+            Some((cache, group)) => KernelRows::with_shared_cache(
+                self.ds,
+                self.kind,
+                self.engine.clone(),
+                cache.clone(),
+                group,
+            ),
+            None => KernelRows::new(self.ds, self.kind, self.engine.clone(), cache_mb),
+        }
+    }
+
+    /// Budget enforcement for this run; `default_cap` is the solver's
+    /// iteration cap when the budget sets none.
+    pub fn meter(&self, solver: &'static str, default_cap: usize) -> BudgetMeter<'a> {
+        BudgetMeter::new(solver, self.budget, self.observer, default_cap)
+    }
+}
+
+/// The object-safe training contract all five solvers implement. The
+/// implementing type is the solver's hyperparameter struct; everything
+/// environmental comes from the [`TrainCtx`].
+pub trait SolverDriver: Send + Sync {
+    /// Stable short name (`"smo"`, `"wss"`, `"mu"`, `"primal"`,
+    /// `"spsvm"`).
+    fn name(&self) -> &str;
+
+    /// Which side of the paper's explicit/implicit axis this solver is.
+    fn family(&self) -> Family;
+
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<TrainResult>;
+}
+
+/// A solver choice with its hyperparameters — what [`Trainer::new`]
+/// takes, and the one remaining place per-solver dispatch happens.
+#[derive(Debug, Clone)]
+pub enum SolverSpec {
+    Smo(smo::SmoParams),
+    Wss(wss::WssParams),
+    Mu(mu::MuParams),
+    Primal(primal::PrimalParams),
+    SpSvm(spsvm::SpSvmParams),
+}
+
+impl SolverSpec {
+    pub fn driver(&self) -> &dyn SolverDriver {
+        match self {
+            SolverSpec::Smo(p) => p,
+            SolverSpec::Wss(p) => p,
+            SolverSpec::Mu(p) => p,
+            SolverSpec::Primal(p) => p,
+            SolverSpec::SpSvm(p) => p,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        self.driver().name()
+    }
+
+    pub fn family(&self) -> Family {
+        self.driver().family()
+    }
+}
+
+/// Builder over the [`SolverDriver`] contract: choose a solver, then an
+/// engine, kernel, budget, shared cache and observer, then
+/// [`Trainer::train`]. Defaults: `cpu-seq` engine, RBF kernel with
+/// `gamma = 1`, empty budget (solver default caps), no shared cache,
+/// [`NullObserver`].
+///
+/// `Trainer` is `Clone`, so one configured instance can fan out across
+/// OvO pair subproblems (see `OvoModel::train_with`) with only the
+/// cache group differing.
+#[derive(Clone)]
+pub struct Trainer {
+    spec: SolverSpec,
+    engine: Engine,
+    kind: KernelKind,
+    budget: Budget,
+    cache: Option<(Arc<SharedRowCache>, u64)>,
+    observer: Option<Arc<dyn TrainObserver>>,
+}
+
+impl Trainer {
+    pub fn new(spec: SolverSpec) -> Trainer {
+        Trainer {
+            spec,
+            engine: Engine::cpu_seq(),
+            kind: KernelKind::Rbf { gamma: 1.0 },
+            budget: Budget::default(),
+            cache: None,
+            observer: None,
+        }
+    }
+
+    /// Engine that executes the heavy ops (and sizes scan parallelism).
+    pub fn engine(mut self, engine: Engine) -> Trainer {
+        self.engine = engine;
+        self
+    }
+
+    /// Kernel function. Solvers that are RBF-only (SP-SVM) reject other
+    /// kinds at [`Trainer::train`] time.
+    pub fn kernel(mut self, kind: KernelKind) -> Trainer {
+        self.kind = kind;
+        self
+    }
+
+    /// Stopping policy (see [`Budget`]).
+    pub fn budget(mut self, budget: Budget) -> Trainer {
+        self.budget = budget;
+        self
+    }
+
+    /// Share a kernel-row cache (and its byte budget) with other
+    /// concurrent trainers; `group` keys this trainer's rows so views of
+    /// different datasets never alias.
+    pub fn shared_cache(mut self, cache: Arc<SharedRowCache>, group: u64) -> Trainer {
+        self.cache = Some((cache, group));
+        self
+    }
+
+    /// Receive per-iteration [`IterEvent`]s (convergence curves).
+    pub fn observer(mut self, observer: Arc<dyn TrainObserver>) -> Trainer {
+        self.observer = Some(observer);
+        self
+    }
+
+    /// Worker threads the configured engine hand-parallelizes over.
+    pub fn threads(&self) -> usize {
+        self.engine.threads()
+    }
+
+    /// The configured solver's stable name.
+    pub fn solver_name(&self) -> &str {
+        self.spec.name()
+    }
+
+    /// Train a binary problem. Multiclass datasets go through
+    /// `OvoModel::train_with`, which fans this trainer out per pair.
+    pub fn train(&self, ds: &Dataset) -> Result<TrainResult> {
+        anyhow::ensure!(
+            !ds.is_multiclass(),
+            "Trainer::train solves binary problems; use OvoModel::train_with for one-vs-one"
+        );
+        let observer: &dyn TrainObserver = match &self.observer {
+            Some(o) => o.as_ref(),
+            None => &NULL_OBSERVER,
+        };
+        let ctx = TrainCtx {
+            ds,
+            kind: self.kind,
+            engine: &self.engine,
+            cache: self.cache.as_ref().map(|(c, g)| (c, *g)),
+            budget: &self.budget,
+            observer,
+        };
+        let driver = self.spec.driver();
+        let mut res = driver.train(&ctx)?;
+        res.note("family", driver.family().as_str().to_string());
+        Ok(res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_builders_compose() {
+        let b = Budget::wall(Duration::from_secs(30)).max_iters(100).target_objective(-5.0);
+        assert_eq!(b.max_iters, Some(100));
+        assert_eq!(b.wall, Some(Duration::from_secs(30)));
+        assert_eq!(b.target_objective, Some(-5.0));
+        assert_eq!(Budget::none(), Budget::default());
+        assert_eq!(Budget::iters(7).max_iters, Some(7));
+        assert_eq!(Budget::smo_default_iters(100), 5000);
+        assert_eq!(Budget::wss_default_iters(100), 1000);
+    }
+
+    #[test]
+    fn meter_enforces_iteration_cap() {
+        let budget = Budget::iters(3);
+        let mut m = BudgetMeter::new("t", &budget, &NULL_OBSERVER, 1000);
+        assert!(m.tick(|| (0.0, 0)));
+        assert!(m.tick(|| (0.0, 0)));
+        assert!(!m.tick(|| (0.0, 0)));
+        assert_eq!(m.iterations(), 3);
+        assert_eq!(m.stopped_by(), Some(StopReason::Iters));
+        let mut res = TrainResult {
+            model: crate::model::SvmModel {
+                kernel: KernelKind::Linear,
+                vectors: vec![],
+                d: 0,
+                coef: vec![],
+                bias: 0.0,
+                solver: "t".into(),
+            },
+            iterations: 3,
+            objective: 0.0,
+            stopwatch: crate::metrics::Stopwatch::new(),
+            notes: vec![],
+        };
+        m.annotate(&mut res);
+        assert!(res.notes.iter().any(|(k, v)| k == "capped" && v == "iters"));
+    }
+
+    #[test]
+    fn meter_uses_default_cap_when_budget_is_empty() {
+        let budget = Budget::default();
+        let mut m = BudgetMeter::new("t", &budget, &NULL_OBSERVER, 2);
+        assert!(m.tick(|| (0.0, 0)));
+        assert!(!m.tick(|| (0.0, 0)));
+        assert_eq!(m.stopped_by(), Some(StopReason::Iters));
+    }
+
+    #[test]
+    fn meter_stops_on_target_objective() {
+        let budget = Budget::default().target_objective(-1.0);
+        let mut m = BudgetMeter::new("t", &budget, &NULL_OBSERVER, 1000);
+        assert!(m.tick(|| (-0.5, 1)));
+        assert!(!m.tick(|| (-1.5, 1)));
+        assert_eq!(m.stopped_by(), Some(StopReason::Target));
+    }
+
+    #[test]
+    fn meter_stops_on_wall_clock() {
+        let budget = Budget::wall(Duration::ZERO);
+        let mut m = BudgetMeter::new("t", &budget, &NULL_OBSERVER, 1000);
+        assert!(!m.tick(|| (0.0, 0)));
+        assert_eq!(m.stopped_by(), Some(StopReason::Wall));
+    }
+
+    #[test]
+    fn meter_skips_stats_without_observer_or_target() {
+        let budget = Budget::iters(10);
+        let mut m = BudgetMeter::new("t", &budget, &NULL_OBSERVER, 1000);
+        // the stats closure must not run on the unobserved path
+        assert!(m.tick(|| panic!("stats computed needlessly")));
+    }
+
+    #[test]
+    fn trace_observer_records_and_decimates() {
+        let obs = TraceObserver::every(10);
+        let budget = Budget::iters(25);
+        let mut m = BudgetMeter::new("t", &budget, &obs, 1000);
+        for _ in 0..25 {
+            let _ = m.tick(|| (-1.0, 7));
+        }
+        let pts = obs.take();
+        // kept: 1 (always), 10, 20
+        assert_eq!(pts.iter().map(|p| p.iter).collect::<Vec<_>>(), vec![1, 10, 20]);
+        assert!(pts.iter().all(|p| p.objective == -1.0 && p.active == 7));
+        assert_eq!(pts[0].solver, "t");
+        assert!(obs.take().is_empty(), "take drains");
+    }
+
+    #[test]
+    fn trace_observer_tsv_has_header_and_rows() {
+        let obs = TraceObserver::new();
+        obs.on_iter(&IterEvent {
+            solver: "t",
+            iter: 1,
+            objective: -2.5,
+            active: 3,
+            elapsed: Duration::from_millis(4),
+        });
+        let tsv = obs.to_tsv();
+        assert!(tsv.starts_with("iter\tobjective\tactive\telapsed_ms\n"));
+        assert!(tsv.contains("1\t-2.500000\t3\t4.000"));
+    }
+
+    #[test]
+    fn solver_spec_names_and_families() {
+        let specs = [
+            (SolverSpec::Smo(Default::default()), "smo", Family::Explicit),
+            (SolverSpec::Wss(Default::default()), "wss", Family::Explicit),
+            (SolverSpec::Mu(Default::default()), "mu", Family::Implicit),
+            (SolverSpec::Primal(Default::default()), "primal", Family::Implicit),
+            (SolverSpec::SpSvm(Default::default()), "spsvm", Family::Implicit),
+        ];
+        for (spec, name, family) in specs {
+            assert_eq!(spec.name(), name);
+            assert_eq!(spec.family(), family);
+        }
+    }
+
+    #[test]
+    fn trainer_rejects_multiclass_datasets() {
+        let ds = Dataset::new_multiclass("t", 1, vec![0.0, 1.0, 2.0], vec![0, 1, 2]);
+        let r = Trainer::new(SolverSpec::Smo(Default::default())).train(&ds);
+        assert!(r.is_err());
+    }
+}

@@ -9,6 +9,15 @@ use crate::data::Dataset;
 use crate::engine::Engine;
 use crate::kernel::{self, cache::SharedRowCache, KernelKind};
 
+/// Running dual objective of the decomposition solvers:
+/// `1/2 a^T Q a - e^T a = 1/2 Σ a_i (G_i - 1)`. Exact when every
+/// gradient entry is fresh (WSS); under SMO shrinking the entries of
+/// shrunk variables are stale, making this the active-set
+/// approximation (exact again after gradient reconstruction).
+pub fn dual_objective(alpha: &[f64], grad: &[f64]) -> f64 {
+    0.5 * alpha.iter().zip(grad).map(|(a, g)| a * (g - 1.0)).sum::<f64>()
+}
+
 /// Padded row-tile view of a dataset for engine calls: X tiles of
 /// [t x d_pad] with validity masks (`rust/DESIGN.md` §Tiling).
 pub struct TiledData {

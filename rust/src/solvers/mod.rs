@@ -10,13 +10,23 @@
 //! * [`primal`] — primal Newton (Chapelle), full kernel.
 //! * [`spsvm`] — sparse primal SVM (Keerthi et al.), the paper's headline
 //!   method (WU-SVM).
+//!
+//! All five implement the object-safe [`SolverDriver`] contract and are
+//! normally driven through the [`Trainer`] builder ([`api`] module);
+//! the per-solver free functions remain as thin shims for one release.
 
+pub mod api;
 pub mod common;
 pub mod mu;
 pub mod primal;
 pub mod smo;
 pub mod spsvm;
 pub mod wss;
+
+pub use api::{
+    Budget, BudgetMeter, Family, IterEvent, NullObserver, SolverDriver, SolverSpec, StopReason,
+    TraceObserver, TrainCtx, TrainObserver, Trainer,
+};
 
 use crate::metrics::Stopwatch;
 use crate::model::SvmModel;

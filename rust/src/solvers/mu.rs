@@ -21,23 +21,26 @@
 use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
+use crate::engine::Engine;
 use crate::kernel::{full_kernel, KernelKind};
 use crate::linalg::{gemv, Matrix};
 use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 
+use super::api::{Family, SolverDriver, SolverSpec, TrainCtx, Trainer};
 use super::TrainResult;
 
-/// Multiplicative-update hyperparameters.
+/// Multiplicative-update hyperparameters. Parallelism comes from the
+/// ctx engine ([`crate::engine::Engine::threads`]), not from here.
 #[derive(Debug, Clone)]
 pub struct MuParams {
     pub c: f32,
+    /// Default sweep cap when the ctx [`super::api::Budget`] sets none.
     pub max_iters: usize,
     /// Stop when the relative objective improvement falls below this.
     pub tol: f64,
     /// Refuse to materialize Q+/Q- beyond this many bytes (both count).
     pub max_kernel_bytes: usize,
-    pub threads: usize,
 }
 
 impl Default for MuParams {
@@ -47,18 +50,48 @@ impl Default for MuParams {
             max_iters: 2000,
             tol: 1e-7,
             max_kernel_bytes: 2 << 30, // 2 GB
-            threads: crate::pool::default_threads(),
         }
     }
 }
 
-/// Train with multiplicative updates.
+impl SolverDriver for MuParams {
+    fn name(&self) -> &str {
+        "mu"
+    }
+
+    fn family(&self) -> Family {
+        Family::Implicit
+    }
+
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<TrainResult> {
+        train_ctx(ctx, self)
+    }
+}
+
+/// Legacy entry point — thin shim over the [`SolverDriver`] path (kept
+/// for one release; prefer [`Trainer`]). Runs on the default-threads
+/// cpu engine, matching the historical `MuParams::threads` default.
 pub fn train(ds: &Dataset, kind: KernelKind, params: &MuParams) -> Result<TrainResult> {
-    assert!(!ds.is_multiclass());
+    Trainer::new(SolverSpec::Mu(params.clone()))
+        .kernel(kind)
+        .engine(Engine::cpu_par(crate::pool::default_threads()))
+        .train(ds)
+}
+
+/// Train with multiplicative updates; parallelism from the ctx engine.
+/// MU has no accelerator path: an xla engine falls back to the cpu
+/// substrate, surfaced as an `engine_fallback` note.
+fn train_ctx(ctx: &TrainCtx<'_>, params: &MuParams) -> Result<TrainResult> {
+    let ds = ctx.ds;
+    let kind = ctx.kind;
+    let threads = ctx.engine.threads();
     let mut sw = Stopwatch::new();
     let n = ds.n;
+    // wall clock starts before the O(n^2) kernel build — MU's dominant
+    // cost — so wall budgets and IterEvent.elapsed cover all of it
+    let mut meter = ctx.meter("mu", params.max_iters);
     // Q+ and Q- both materialize: half the cap each.
-    let k = full_kernel(&kind, ds, params.threads, params.max_kernel_bytes / 2)
+    let k = full_kernel(&kind, ds, threads, params.max_kernel_bytes / 2)
         .map_err(|e| anyhow!(e))?;
     // Q = y y^T * K, split into positive and negative parts (rows are
     // independent — the split streams in parallel like the GEMVs below).
@@ -69,7 +102,7 @@ pub fn train(ds: &Dataset, kind: KernelKind, params: &MuParams) -> Result<TrainR
         let qm_ptr = crate::pool::SendPtr::new(qm.data.as_mut_ptr());
         let y = &ds.y;
         let kref = &k;
-        crate::pool::parallel_for(params.threads, n, 8, |i| {
+        crate::pool::parallel_for(threads, n, 8, |i| {
             let yi = y[i];
             let krow = kref.row(i);
             // SAFETY: row i of each matrix written by exactly one task.
@@ -93,11 +126,9 @@ pub fn train(ds: &Dataset, kind: KernelKind, params: &MuParams) -> Result<TrainR
     let mut qpa = vec![0.0f32; n];
     let mut qma = vec![0.0f32; n];
     let mut last_obj = f64::INFINITY;
-    let mut iters = 0usize;
-    for it in 0..params.max_iters {
-        iters = it + 1;
-        gemv(params.threads, &qp, &a, &mut qpa);
-        gemv(params.threads, &qm, &a, &mut qma);
+    loop {
+        gemv(threads, &qp, &a, &mut qpa);
+        gemv(threads, &qm, &a, &mut qma);
         // objective 1/2 a^T Q a - e^T a, Qa = qpa - qma
         let obj: f64 = (0..n)
             .map(|i| 0.5 * (a[i] * (qpa[i] - qma[i])) as f64 - a[i] as f64)
@@ -108,11 +139,12 @@ pub fn train(ds: &Dataset, kind: KernelKind, params: &MuParams) -> Result<TrainR
             let factor = (1.0 + disc.sqrt()) / denom;
             a[i] = (a[i] * factor).clamp(0.0, c);
         }
-        if (last_obj - obj).abs() < params.tol * obj.abs().max(1.0) {
-            last_obj = obj;
+        let done = (last_obj - obj).abs() < params.tol * obj.abs().max(1.0);
+        last_obj = obj;
+        let cont = meter.tick(|| (obj, a.iter().filter(|&&v| v > 1e-8).count()));
+        if done || !cont {
             break;
         }
-        last_obj = obj;
     }
     sw.lap("iterate");
 
@@ -135,11 +167,15 @@ pub fn train(ds: &Dataset, kind: KernelKind, params: &MuParams) -> Result<TrainR
     };
     let mut res = TrainResult {
         model,
-        iterations: iters,
+        iterations: meter.iterations(),
         objective: last_obj,
         stopwatch: sw,
         notes: vec![],
     };
+    meter.annotate(&mut res);
+    if ctx.engine.is_xla() {
+        res.note("engine_fallback", "cpu (mu has no accelerator path)".to_string());
+    }
     res.note("n_sv", sv.len().to_string());
     res.note("kernel_bytes", (2 * n * n * 4).to_string());
     Ok(res)

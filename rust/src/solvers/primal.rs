@@ -17,22 +17,26 @@
 use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
+use crate::engine::Engine;
 use crate::kernel::{full_kernel, KernelKind};
 use crate::linalg::{dot, gemv, Matrix};
 use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 
+use super::api::{Family, SolverDriver, SolverSpec, TrainCtx, Trainer};
 use super::TrainResult;
 
-/// Primal Newton hyperparameters.
+/// Primal Newton hyperparameters. Parallelism comes from the ctx engine
+/// ([`crate::engine::Engine::threads`]), not from here.
 #[derive(Debug, Clone)]
 pub struct PrimalParams {
     pub c: f32,
+    /// Default Newton-step cap when the ctx [`super::api::Budget`] sets
+    /// none.
     pub max_newton: usize,
     pub cg_iters: usize,
     pub tol: f64,
     pub max_kernel_bytes: usize,
-    pub threads: usize,
 }
 
 impl Default for PrimalParams {
@@ -43,9 +47,32 @@ impl Default for PrimalParams {
             cg_iters: 120,
             tol: 1e-6,
             max_kernel_bytes: 2 << 30,
-            threads: crate::pool::default_threads(),
         }
     }
+}
+
+impl SolverDriver for PrimalParams {
+    fn name(&self) -> &str {
+        "primal"
+    }
+
+    fn family(&self) -> Family {
+        Family::Implicit
+    }
+
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<TrainResult> {
+        train_ctx(ctx, self)
+    }
+}
+
+/// Legacy entry point — thin shim over the [`SolverDriver`] path (kept
+/// for one release; prefer [`Trainer`]). Runs on the default-threads
+/// cpu engine, matching the historical `PrimalParams::threads` default.
+pub fn train(ds: &Dataset, kind: KernelKind, params: &PrimalParams) -> Result<TrainResult> {
+    Trainer::new(SolverSpec::Primal(params.clone()))
+        .kernel(kind)
+        .engine(Engine::cpu_par(crate::pool::default_threads()))
+        .train(ds)
 }
 
 struct State {
@@ -77,13 +104,20 @@ fn eval_state(k: &Matrix, y: &[f32], beta: &[f32], bias: f32, c: f32, threads: u
     State { f, loss, active }
 }
 
-/// Train with primal Newton-CG on the full kernel.
-pub fn train(ds: &Dataset, kind: KernelKind, params: &PrimalParams) -> Result<TrainResult> {
-    assert!(!ds.is_multiclass());
+/// Train with primal Newton-CG on the full kernel; parallelism from the
+/// ctx engine. The full-kernel primal has no accelerator path: an xla
+/// engine falls back to the cpu substrate, surfaced as an
+/// `engine_fallback` note.
+fn train_ctx(ctx: &TrainCtx<'_>, params: &PrimalParams) -> Result<TrainResult> {
+    let ds = ctx.ds;
+    let kind = ctx.kind;
+    let threads = ctx.engine.threads();
     let mut sw = Stopwatch::new();
     let n = ds.n;
-    let threads = params.threads;
     let c = params.c;
+    // wall clock starts before the O(n^2) kernel build so wall budgets
+    // and IterEvent.elapsed cover all of it
+    let mut meter = ctx.meter("primal", params.max_newton);
     let k = full_kernel(&kind, ds, threads, params.max_kernel_bytes).map_err(|e| anyhow!(e))?;
     sw.lap("kernel");
 
@@ -92,11 +126,9 @@ pub fn train(ds: &Dataset, kind: KernelKind, params: &PrimalParams) -> Result<Tr
     let mut bias = 0.0f32;
     let mut scratch = vec![0.0f32; n];
     let mut state = eval_state(&k, y, &beta, bias, c, threads, &mut scratch);
-    let mut newton_iters = 0usize;
 
     let mut converged = false;
-    for _ in 0..params.max_newton {
-        newton_iters += 1;
+    loop {
         // gradient: g = K beta + 2C K_A^T (f - y)_A ; g_bias = 2C sum_A (f - y)
         let mut resid = vec![0.0f32; n]; // a_i (f_i - y_i)
         for i in 0..n {
@@ -185,7 +217,11 @@ pub fn train(ds: &Dataset, kind: KernelKind, params: &PrimalParams) -> Result<Tr
             }
             step *= 0.5;
         }
-        if !accepted || converged {
+        let cont = meter.tick(|| {
+            let n_active = state.active.iter().filter(|&&a| a != 0.0).count();
+            (state.loss, n_active)
+        });
+        if !accepted || converged || !cont {
             break;
         }
     }
@@ -210,11 +246,15 @@ pub fn train(ds: &Dataset, kind: KernelKind, params: &PrimalParams) -> Result<Tr
     };
     let mut res = TrainResult {
         model,
-        iterations: newton_iters,
+        iterations: meter.iterations(),
         objective: state.loss,
         stopwatch: sw,
         notes: vec![],
     };
+    meter.annotate(&mut res);
+    if ctx.engine.is_xla() {
+        res.note("engine_fallback", "cpu (full-kernel primal has no accelerator path)".to_string());
+    }
     res.note("n_sv", sv.len().to_string());
     res.note("kernel_bytes", (n * n * 4).to_string());
     Ok(res)

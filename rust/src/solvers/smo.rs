@@ -38,7 +38,8 @@ use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 use crate::pool::{self, SendPtr};
 
-use super::common::{cache_shards, KernelRows};
+use super::api::{Budget, Family, SolverDriver, SolverSpec, TrainCtx, Trainer};
+use super::common::{dual_objective, KernelRows};
 use super::TrainResult;
 
 const TAU: f64 = 1e-12;
@@ -47,13 +48,14 @@ const TAU: f64 = 1e-12;
 /// identical for every engine.
 const SCAN_CHUNK: usize = 512;
 
-/// SMO hyperparameters.
+/// SMO hyperparameters. Iteration/wall caps come from the ctx
+/// [`Budget`] (default [`Budget::smo_default_iters`]), not from here.
 #[derive(Debug, Clone)]
 pub struct SmoParams {
     pub c: f32,
     /// KKT violation tolerance (LibSVM default 1e-3).
     pub eps: f64,
-    pub max_iters: usize,
+    /// Private kernel-row cache size when the ctx supplies none.
     pub cache_mb: usize,
     /// LibSVM-style active-set shrinking with gradient reconstruction.
     pub shrinking: bool,
@@ -68,11 +70,24 @@ impl Default for SmoParams {
         SmoParams {
             c: 1.0,
             eps: 1e-3,
-            max_iters: 2_000_000,
             cache_mb: 512,
             shrinking: true,
             scan_threads: 0,
         }
+    }
+}
+
+impl SolverDriver for SmoParams {
+    fn name(&self) -> &str {
+        "smo"
+    }
+
+    fn family(&self) -> Family {
+        Family::Explicit
+    }
+
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<TrainResult> {
+        train_ctx(ctx, self)
     }
 }
 
@@ -327,23 +342,22 @@ fn reconstruct_gradient(
     Ok(())
 }
 
-/// Train a binary SVM with SMO on a private kernel-row cache.
+/// Legacy entry point — thin shim over the [`SolverDriver`] path (kept
+/// for one release; prefer [`Trainer`]).
 pub fn train(
     ds: &Dataset,
     kind: KernelKind,
     params: &SmoParams,
     engine: &Engine,
 ) -> Result<TrainResult> {
-    let cache = Arc::new(SharedRowCache::new(
-        params.cache_mb * 1024 * 1024,
-        cache_shards(engine.threads()),
-    ));
-    train_cached(ds, kind, params, engine, cache, 0)
+    Trainer::new(SolverSpec::Smo(params.clone()))
+        .kernel(kind)
+        .engine(engine.clone())
+        .train(ds)
 }
 
-/// Train a binary SVM with SMO, sharing `cache` (and its byte budget)
-/// with other concurrent solvers under the given `cache_group` id — the
-/// one-vs-one training path runs every pair subproblem through one cache.
+/// Legacy shared-cache entry point — thin shim over [`Trainer`] with
+/// [`Trainer::shared_cache`] (kept for one release).
 pub fn train_cached(
     ds: &Dataset,
     kind: KernelKind,
@@ -352,11 +366,26 @@ pub fn train_cached(
     cache: Arc<SharedRowCache>,
     cache_group: u64,
 ) -> Result<TrainResult> {
-    assert!(!ds.is_multiclass(), "use multiclass::train_ovo");
+    Trainer::new(SolverSpec::Smo(params.clone()))
+        .kernel(kind)
+        .engine(engine.clone())
+        .shared_cache(cache, cache_group)
+        .train(ds)
+}
+
+/// Train a binary SVM with SMO; kernel, engine, cache, budget and
+/// observer all come from the ctx.
+fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
+    let ds = ctx.ds;
+    let kind = ctx.kind;
+    let engine = ctx.engine;
     let mut sw = Stopwatch::new();
     let n = ds.n;
     let c = params.c as f64;
-    let mut rows = KernelRows::with_shared_cache(ds, kind, engine.clone(), cache, cache_group)?;
+    // the meter's wall clock starts before any setup work so budgets
+    // and IterEvent.elapsed cover the whole training call
+    let mut meter = ctx.meter("smo", Budget::smo_default_iters(n));
+    let mut rows = ctx.kernel_rows(params.cache_mb)?;
     let scan_threads = if params.scan_threads > 0 {
         params.scan_threads
     } else {
@@ -376,7 +405,6 @@ pub fn train_cached(
     let mut unshrunk_once = false;
     let mut shrink_events = 0usize;
 
-    let mut iters = 0usize;
     // (gmax, i) carried over from the fused update pass of the previous
     // iteration; None forces a standalone i-scan.
     let mut sel: Option<(f64, usize)> = None;
@@ -510,9 +538,8 @@ pub fn train_cached(
         ));
         sw.lap("update");
 
-        iters += 1;
         since_shrink += 1;
-        if iters >= params.max_iters {
+        if !meter.tick(|| (dual_objective(&alpha, &grad), active.len())) {
             break;
         }
     }
@@ -568,7 +595,14 @@ pub fn train_cached(
         bias,
         solver: format!("smo[{}]", engine.name()),
     };
-    let mut res = TrainResult { model, iterations: iters, objective, stopwatch: sw, notes: vec![] };
+    let mut res = TrainResult {
+        model,
+        iterations: meter.iterations(),
+        objective,
+        stopwatch: sw,
+        notes: vec![],
+    };
+    meter.annotate(&mut res);
     res.note("n_sv", sv_idx.len().to_string());
     res.note("cache_hit_rate", format!("{:.3}", rows.hit_rate()));
     res.note("rows_computed", rows.rows_computed.to_string());
@@ -735,10 +769,15 @@ mod tests {
     }
 
     #[test]
-    fn max_iters_caps_work() {
+    fn iteration_budget_caps_work() {
         let ds = xor_dataset(300, 9);
-        let p = SmoParams { c: 10.0, max_iters: 5, ..Default::default() };
-        let r = train(&ds, KernelKind::Rbf { gamma: 8.0 }, &p, &Engine::cpu_seq()).unwrap();
+        let p = SmoParams { c: 10.0, ..Default::default() };
+        let r = Trainer::new(SolverSpec::Smo(p))
+            .kernel(KernelKind::Rbf { gamma: 8.0 })
+            .budget(Budget::iters(5))
+            .train(&ds)
+            .unwrap();
         assert_eq!(r.iterations, 5);
+        assert!(r.notes.iter().any(|(k, v)| k == "capped" && v == "iters"));
     }
 }

@@ -36,6 +36,7 @@ use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 use crate::rng::Rng;
 
+use super::api::{Family, SolverDriver, SolverSpec, TrainCtx, Trainer};
 use super::common::TiledData;
 use super::TrainResult;
 
@@ -43,6 +44,8 @@ use super::TrainResult;
 #[derive(Debug, Clone)]
 pub struct SpSvmParams {
     pub c: f32,
+    /// RBF width used by the legacy [`train`] shim only; the
+    /// [`SolverDriver`] path takes gamma from the ctx kernel.
     pub gamma: f32,
     /// Basis capacity, excluding the bias slot. The engine bucket is the
     /// next b bucket above (max_basis + 1).
@@ -366,13 +369,48 @@ fn reoptimize(st: &mut SpState, engine: &Engine, params: &SpSvmParams, sw: &mut 
     Ok(iters)
 }
 
-/// Train SP-SVM.
+impl SolverDriver for SpSvmParams {
+    fn name(&self) -> &str {
+        "spsvm"
+    }
+
+    fn family(&self) -> Family {
+        Family::Implicit
+    }
+
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<TrainResult> {
+        train_ctx(ctx, self)
+    }
+}
+
+/// Legacy entry point — thin shim over the [`SolverDriver`] path (kept
+/// for one release; prefer [`Trainer`]). The kernel is
+/// `Rbf { gamma: params.gamma }`, the historical convention.
 pub fn train(ds: &Dataset, params: &SpSvmParams, engine: &Engine) -> Result<TrainResult> {
-    assert!(!ds.is_multiclass(), "use multiclass::train_ovo");
+    Trainer::new(SolverSpec::SpSvm(params.clone()))
+        .kernel(KernelKind::Rbf { gamma: params.gamma })
+        .engine(engine.clone())
+        .train(ds)
+}
+
+/// Train SP-SVM. RBF-only: the ctx kernel supplies gamma.
+fn train_ctx(ctx: &TrainCtx<'_>, params: &SpSvmParams) -> Result<TrainResult> {
+    let ds = ctx.ds;
+    let engine = ctx.engine;
+    let gamma = match ctx.kind {
+        KernelKind::Rbf { gamma } => gamma,
+        other => anyhow::bail!("spsvm supports the RBF kernel only (got {})", other.name()),
+    };
     let mut sw = Stopwatch::new();
+    // budget unit = selection+reopt rounds, counted by the meter; every
+    // round grows the basis by at least one vector, so max_basis + 1
+    // bounds the natural round count (the +1 keeps an uncapped run that
+    // exactly fills its basis from being flagged `capped`). The wall
+    // clock starts before tile/state setup.
+    let mut meter = ctx.meter("spsvm", params.max_basis.max(1) + 1);
     let mut st = build_state(ds, engine, params)?;
     let mut rng = Rng::new(params.seed);
-    let kind = KernelKind::Rbf { gamma: params.gamma };
+    let kind = KernelKind::Rbf { gamma };
     let s = params.candidates.min(64);
     let t = st.tiled.t;
     let d_pad = st.tiled.d_pad;
@@ -424,7 +462,7 @@ pub fn train(ds: &Dataset, params: &SpSvmParams, engine: &Engine) -> Result<Trai
             let mut hc = vec![0.0f64; s];
             let mut kc_tiles: Vec<Vec<f32>> = Vec::with_capacity(st.tiled.n_tiles);
             for tile in 0..st.tiled.n_tiles {
-                let kc = engine.rbf_block(&st.tiled.x[tile], t, d_pad, &xc, s, params.gamma)?;
+                let kc = engine.rbf_block(&st.tiled.x[tile], t, d_pad, &xc, s, gamma)?;
                 let y = &st.tiled.y[tile];
                 let m = &st.tiled.m[tile];
                 let f = &st.margins[tile];
@@ -500,7 +538,10 @@ pub fn train(ds: &Dataset, params: &SpSvmParams, engine: &Engine) -> Result<Trai
         newton_total += reoptimize(&mut st, engine, params, &mut sw)?;
         refresh_margins(&mut st, engine)?;
         sw.lap("reopt/margins");
-        let (_, err) = loss_and_err(&st, params.c);
+        let (loss, err) = loss_and_err(&st, params.c);
+        if !meter.tick(|| (loss, st.n_basis())) {
+            break;
+        }
         // paper's stopping rule
         let delta_err = (last_err as f64 - err as f64) / n as f64;
         last_err = err;
@@ -528,14 +569,18 @@ pub fn train(ds: &Dataset, params: &SpSvmParams, engine: &Engine) -> Result<Trai
         solver: format!("spsvm[{}]", engine.name()),
     };
     let (final_loss, final_err) = loss_and_err(&st, params.c);
+    // iterations = budget/observer rounds (matching IterEvent.iter and
+    // Budget::max_iters units); the Newton-step total rides in the notes
     let mut res = TrainResult {
         model,
-        iterations: newton_total,
+        iterations: meter.iterations(),
         objective: final_loss,
         stopwatch: sw,
         notes: vec![],
     };
+    meter.annotate(&mut res);
     res.note("n_basis", nb.to_string());
+    res.note("newton_iters", newton_total.to_string());
     res.note("rounds", rounds.to_string());
     res.note("train_err", format!("{:.4}", final_err as f64 / n as f64));
     res.note("kernel_cache_bytes", (st.tiled.n_tiles * t * st.b * 4).to_string());

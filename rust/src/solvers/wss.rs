@@ -23,7 +23,8 @@ use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 use crate::pool::{self, SendPtr};
 
-use super::common::{cache_shards, KernelRows};
+use super::api::{Budget, Family, SolverDriver, SolverSpec, TrainCtx, Trainer};
+use super::common::{dual_objective, KernelRows};
 use super::TrainResult;
 
 const TAU: f64 = 1e-12;
@@ -31,7 +32,8 @@ const TAU: f64 = 1e-12;
 /// are identical across thread counts).
 const SCAN_CHUNK: usize = 512;
 
-/// Working-set solver hyperparameters.
+/// Working-set solver hyperparameters. Outer-round/wall caps come from
+/// the ctx [`Budget`] (default [`Budget::wss_default_iters`]).
 #[derive(Debug, Clone)]
 pub struct WssParams {
     pub c: f32,
@@ -39,9 +41,9 @@ pub struct WssParams {
     pub s: usize,
     /// Outer KKT tolerance.
     pub eps: f64,
-    pub max_outer: usize,
     /// Inner subproblem sweeps.
     pub max_inner: usize,
+    /// Private kernel-row cache size when the ctx supplies none.
     pub cache_mb: usize,
 }
 
@@ -51,31 +53,42 @@ impl Default for WssParams {
             c: 1.0,
             s: 16,
             eps: 1e-3,
-            max_outer: 200_000,
             max_inner: 300,
             cache_mb: 512,
         }
     }
 }
 
-/// Train a binary SVM by S-variable dual decomposition on a private
-/// kernel-row cache.
+impl SolverDriver for WssParams {
+    fn name(&self) -> &str {
+        "wss"
+    }
+
+    fn family(&self) -> Family {
+        Family::Explicit
+    }
+
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<TrainResult> {
+        train_ctx(ctx, self)
+    }
+}
+
+/// Legacy entry point — thin shim over the [`SolverDriver`] path (kept
+/// for one release; prefer [`Trainer`]).
 pub fn train(
     ds: &Dataset,
     kind: KernelKind,
     params: &WssParams,
     engine: &Engine,
 ) -> Result<TrainResult> {
-    let cache = Arc::new(SharedRowCache::new(
-        params.cache_mb * 1024 * 1024,
-        cache_shards(engine.threads()),
-    ));
-    train_cached(ds, kind, params, engine, cache, 0)
+    Trainer::new(SolverSpec::Wss(params.clone()))
+        .kernel(kind)
+        .engine(engine.clone())
+        .train(ds)
 }
 
-/// Train a binary SVM by S-variable dual decomposition, sharing `cache`
-/// (and its byte budget) with other concurrent solvers under the given
-/// `cache_group` id.
+/// Legacy shared-cache entry point — thin shim over [`Trainer`] with
+/// [`Trainer::shared_cache`] (kept for one release).
 pub fn train_cached(
     ds: &Dataset,
     kind: KernelKind,
@@ -84,13 +97,27 @@ pub fn train_cached(
     cache: Arc<SharedRowCache>,
     cache_group: u64,
 ) -> Result<TrainResult> {
-    assert!(!ds.is_multiclass(), "use multiclass::train_ovo");
+    Trainer::new(SolverSpec::Wss(params.clone()))
+        .kernel(kind)
+        .engine(engine.clone())
+        .shared_cache(cache, cache_group)
+        .train(ds)
+}
+
+/// Train a binary SVM by S-variable dual decomposition; kernel, engine,
+/// cache, budget and observer all come from the ctx.
+fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
+    let ds = ctx.ds;
+    let kind = ctx.kind;
+    let engine = ctx.engine;
     assert!(params.s >= 2);
     let mut sw = Stopwatch::new();
     let n = ds.n;
     let c = params.c as f64;
     let s_max = params.s.min(n);
-    let mut rows = KernelRows::with_shared_cache(ds, kind, engine.clone(), cache, cache_group)?;
+    // wall clock starts before setup so budgets cover the whole call
+    let mut meter = ctx.meter("wss", Budget::wss_default_iters(n));
+    let mut rows = ctx.kernel_rows(params.cache_mb)?;
     let scan_threads = engine.threads();
     sw.lap("setup");
 
@@ -99,7 +126,6 @@ pub fn train_cached(
     let mut alpha = vec![0.0f64; n];
     let mut grad = vec![-1.0f64; n];
 
-    let mut outer = 0usize;
     loop {
         // --- KKT violation scan (chunk-ordered parallel reduction, so the
         // candidate order matches the sequential scan exactly) ---
@@ -300,8 +326,11 @@ pub fn train_cached(
             });
         }
         sw.lap("update");
-        outer += 1;
-        if !changed || outer >= params.max_outer {
+        let cont = meter.tick(|| {
+            let nsv = alpha.iter().filter(|&&a| a > 0.0).count();
+            (dual_objective(&alpha, &grad), nsv)
+        });
+        if !changed || !cont {
             break;
         }
     }
@@ -350,11 +379,12 @@ pub fn train_cached(
     };
     let mut res = TrainResult {
         model,
-        iterations: outer,
+        iterations: meter.iterations(),
         objective,
         stopwatch: sw,
         notes: vec![],
     };
+    meter.annotate(&mut res);
     res.note("n_sv", sv_idx.len().to_string());
     res.note("cache_hit_rate", format!("{:.3}", rows.hit_rate()));
     res.note("rows_computed", rows.rows_computed.to_string());

@@ -1,0 +1,335 @@
+//! Conformance tests for the unified training API (`solvers::api`):
+//!
+//! * Per solver: the new `Trainer` path produces a **bit-identical**
+//!   model (coefficients, vectors, bias, objective) and the same
+//!   iteration count as the legacy free-function entry point it
+//!   replaces. (The legacy functions are now shims over the same
+//!   driver, so these tests guard the *wiring* — kernel/gamma
+//!   pass-through, engine selection, private-vs-shared cache paths —
+//!   not two independent algorithm copies. One deliberate behavior
+//!   change rides on the shims: iteration caps moved from params to
+//!   `Budget`, so direct `smo::train`/`wss::train` callers now get the
+//!   coordinator's 50n/10n default caps instead of the old 2M/200k
+//!   params defaults.)
+//! * `Budget` property tests: iteration and wall-clock budgets always
+//!   terminate, and a budget-terminated run is flagged `capped` in the
+//!   result notes; target-objective budgets stop early.
+//! * The observer stream is consistent with the reported result.
+//! * mu/primal surface their cpu fallback as a note instead of silently
+//!   ignoring an accelerator engine.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use wu_svm::data::Dataset;
+use wu_svm::engine::Engine;
+use wu_svm::kernel::cache::SharedRowCache;
+use wu_svm::kernel::KernelKind;
+use wu_svm::pool;
+use wu_svm::solvers::mu::{self, MuParams};
+use wu_svm::solvers::primal::{self, PrimalParams};
+use wu_svm::solvers::smo::{self, SmoParams};
+use wu_svm::solvers::spsvm::{self, SpSvmParams};
+use wu_svm::solvers::wss::{self, WssParams};
+use wu_svm::solvers::{Budget, SolverSpec, TraceObserver, TrainResult, Trainer};
+
+fn xor_dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = wu_svm::rng::Rng::new(seed);
+    let mut x = Vec::with_capacity(n * 2);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let a = rng.uniform_f32();
+        let b = rng.uniform_f32();
+        x.push(a);
+        x.push(b);
+        y.push(if (a > 0.5) ^ (b > 0.5) { 1.0 } else { -1.0 });
+    }
+    Dataset::new_binary("xor", 2, x, y)
+}
+
+/// Bit-exact equality of everything a model is made of, plus the
+/// iteration count and objective.
+fn assert_bit_identical(old: &TrainResult, new: &TrainResult) {
+    assert_eq!(old.iterations, new.iterations, "iteration counts differ");
+    assert_eq!(old.objective.to_bits(), new.objective.to_bits(), "objectives differ");
+    assert_eq!(old.model.bias.to_bits(), new.model.bias.to_bits(), "biases differ");
+    assert_eq!(old.model.d, new.model.d);
+    assert_eq!(old.model.coef.len(), new.model.coef.len(), "coef counts differ");
+    for (i, (a, b)) in old.model.coef.iter().zip(&new.model.coef).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "coef[{i}] differs");
+    }
+    assert_eq!(old.model.vectors.len(), new.model.vectors.len());
+    for (i, (a, b)) in old.model.vectors.iter().zip(&new.model.vectors).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "vectors[{i}] differs");
+    }
+}
+
+fn capped_as(r: &TrainResult) -> Option<&str> {
+    r.notes.iter().find(|(k, _)| k == "capped").map(|(_, v)| v.as_str())
+}
+
+#[test]
+fn smo_trainer_matches_legacy_entry_point() {
+    let ds = xor_dataset(300, 1);
+    let kind = KernelKind::Rbf { gamma: 8.0 };
+    let p = SmoParams { c: 10.0, ..Default::default() };
+    let old = smo::train(&ds, kind, &p, &Engine::cpu_par(4)).unwrap();
+    let new = Trainer::new(SolverSpec::Smo(p))
+        .kernel(kind)
+        .engine(Engine::cpu_par(4))
+        .train(&ds)
+        .unwrap();
+    assert!(new.iterations > 10, "degenerate run");
+    assert_bit_identical(&old, &new);
+}
+
+#[test]
+fn wss_trainer_matches_legacy_entry_point() {
+    let ds = xor_dataset(250, 3);
+    let kind = KernelKind::Rbf { gamma: 6.0 };
+    let p = WssParams { c: 5.0, ..Default::default() };
+    let old = wss::train(&ds, kind, &p, &Engine::cpu_seq()).unwrap();
+    let new = Trainer::new(SolverSpec::Wss(p))
+        .kernel(kind)
+        .engine(Engine::cpu_seq())
+        .train(&ds)
+        .unwrap();
+    assert_bit_identical(&old, &new);
+}
+
+#[test]
+fn mu_trainer_matches_legacy_entry_point() {
+    let ds = xor_dataset(150, 5);
+    let kind = KernelKind::Rbf { gamma: 4.0 };
+    let p = MuParams { c: 1.0, max_iters: 300, ..Default::default() };
+    // the legacy shim runs on the default-threads cpu engine
+    let engine = Engine::cpu_par(pool::default_threads());
+    let old = mu::train(&ds, kind, &p).unwrap();
+    let new = Trainer::new(SolverSpec::Mu(p)).kernel(kind).engine(engine).train(&ds).unwrap();
+    assert_bit_identical(&old, &new);
+}
+
+#[test]
+fn primal_trainer_matches_legacy_entry_point() {
+    let ds = xor_dataset(180, 7);
+    let kind = KernelKind::Rbf { gamma: 6.0 };
+    let p = PrimalParams { c: 5.0, ..Default::default() };
+    let engine = Engine::cpu_par(pool::default_threads());
+    let old = primal::train(&ds, kind, &p).unwrap();
+    let new = Trainer::new(SolverSpec::Primal(p)).kernel(kind).engine(engine).train(&ds).unwrap();
+    assert_bit_identical(&old, &new);
+}
+
+#[test]
+fn spsvm_trainer_matches_legacy_entry_point() {
+    let ds = xor_dataset(600, 9);
+    let p = SpSvmParams { c: 10.0, gamma: 8.0, max_basis: 31, ..Default::default() };
+    let old = spsvm::train(&ds, &p, &Engine::cpu_par(4)).unwrap();
+    // the driver path takes gamma from the ctx kernel, not the params
+    let new = Trainer::new(SolverSpec::SpSvm(p))
+        .kernel(KernelKind::Rbf { gamma: 8.0 })
+        .engine(Engine::cpu_par(4))
+        .train(&ds)
+        .unwrap();
+    assert_bit_identical(&old, &new);
+}
+
+#[test]
+fn trainer_shared_cache_matches_private_cache() {
+    // ctx-supplied cache plumbing: same bits as a private cache, and the
+    // cache actually serves hits across two trainers sharing it
+    let ds = xor_dataset(200, 11);
+    let kind = KernelKind::Rbf { gamma: 6.0 };
+    let p = SmoParams { c: 5.0, ..Default::default() };
+    let private = Trainer::new(SolverSpec::Smo(p.clone())).kernel(kind).train(&ds).unwrap();
+    let cache = Arc::new(SharedRowCache::new(8 * 1024 * 1024, 4));
+    let a = Trainer::new(SolverSpec::Smo(p.clone()))
+        .kernel(kind)
+        .shared_cache(cache.clone(), 1)
+        .train(&ds)
+        .unwrap();
+    let b = Trainer::new(SolverSpec::Smo(p))
+        .kernel(kind)
+        .shared_cache(cache.clone(), 2)
+        .train(&ds)
+        .unwrap();
+    assert_bit_identical(&private, &a);
+    assert_bit_identical(&private, &b);
+    assert!(cache.hits() > 0, "shared cache never hit");
+}
+
+#[test]
+fn iteration_budget_always_terminates_and_flags_capped() {
+    // property: across solvers and seeds, a small iteration budget stops
+    // the run at exactly the cap and says so in the notes
+    for seed in [21u64, 22, 23] {
+        let ds = xor_dataset(150 + 30 * (seed as usize - 20), seed);
+        let kind = KernelKind::Rbf { gamma: 8.0 };
+        let cases: Vec<(SolverSpec, usize)> = vec![
+            (SolverSpec::Smo(SmoParams { c: 10.0, ..Default::default() }), 4),
+            (SolverSpec::Wss(WssParams { c: 10.0, ..Default::default() }), 3),
+            (SolverSpec::Mu(MuParams { c: 10.0, tol: 0.0, ..Default::default() }), 5),
+            (SolverSpec::SpSvm(SpSvmParams { c: 10.0, max_basis: 63, ..Default::default() }), 2),
+        ];
+        for (spec, cap) in cases {
+            let name = spec.name().to_string();
+            let r = Trainer::new(spec)
+                .kernel(kind)
+                .budget(Budget::iters(cap))
+                .train(&ds)
+                .unwrap();
+            assert_eq!(
+                capped_as(&r),
+                Some("iters"),
+                "{name} seed {seed}: notes {:?}",
+                r.notes
+            );
+        }
+    }
+}
+
+#[test]
+fn wall_budget_always_terminates_and_flags_capped() {
+    // a zero wall budget stops every solver after its first iteration
+    let ds = xor_dataset(300, 31);
+    let kind = KernelKind::Rbf { gamma: 8.0 };
+    let specs = vec![
+        SolverSpec::Smo(SmoParams { c: 10.0, eps: 1e-9, ..Default::default() }),
+        SolverSpec::Wss(WssParams { c: 10.0, eps: 1e-9, ..Default::default() }),
+        SolverSpec::Mu(MuParams { c: 10.0, tol: 0.0, ..Default::default() }),
+        SolverSpec::Primal(PrimalParams { c: 10.0, ..Default::default() }),
+        SolverSpec::SpSvm(SpSvmParams { c: 10.0, max_basis: 63, ..Default::default() }),
+    ];
+    for spec in specs {
+        let name = spec.name().to_string();
+        let r = Trainer::new(spec)
+            .kernel(kind)
+            .budget(Budget::wall(Duration::ZERO))
+            .train(&ds)
+            .unwrap();
+        assert_eq!(capped_as(&r), Some("wall"), "{name}: notes {:?}", r.notes);
+    }
+}
+
+#[test]
+fn target_objective_budget_stops_early() {
+    let ds = xor_dataset(300, 41);
+    let kind = KernelKind::Rbf { gamma: 8.0 };
+    let p = SmoParams { c: 10.0, ..Default::default() };
+    let full = Trainer::new(SolverSpec::Smo(p.clone())).kernel(kind).train(&ds).unwrap();
+    assert!(full.objective < 0.0);
+    // stop halfway down the (negative, decreasing) dual objective
+    let target = full.objective * 0.5;
+    let early = Trainer::new(SolverSpec::Smo(p))
+        .kernel(kind)
+        .budget(Budget::none().target_objective(target))
+        .train(&ds)
+        .unwrap();
+    assert_eq!(capped_as(&early), Some("target"), "notes {:?}", early.notes);
+    assert!(early.iterations < full.iterations);
+    // stopped midway: past the target (within the shrinking
+    // approximation's small drift), but well short of full convergence
+    assert!(early.objective <= target + 0.02 * full.objective.abs());
+    assert!(early.objective > full.objective);
+}
+
+#[test]
+fn observer_trace_is_consistent_with_result() {
+    let ds = xor_dataset(300, 51);
+    let kind = KernelKind::Rbf { gamma: 8.0 };
+    let obs = Arc::new(TraceObserver::new());
+    let r = Trainer::new(SolverSpec::Smo(SmoParams { c: 10.0, ..Default::default() }))
+        .kernel(kind)
+        .observer(obs.clone())
+        .train(&ds)
+        .unwrap();
+    let pts = obs.take();
+    assert_eq!(pts.len(), r.iterations, "one event per iteration");
+    let last = pts.last().unwrap();
+    assert_eq!(last.iter, r.iterations);
+    assert!(pts.iter().all(|p| p.objective.is_finite() && p.solver == "smo"));
+    // iteration numbers strictly increase, elapsed never goes backwards
+    for w in pts.windows(2) {
+        assert!(w[1].iter == w[0].iter + 1);
+        assert!(w[1].elapsed >= w[0].elapsed);
+    }
+    // the SMO dual objective decreases monotonically step to step
+    assert!(last.objective <= pts[0].objective);
+    // observing must not change the trajectory
+    let unobserved = Trainer::new(SolverSpec::Smo(SmoParams { c: 10.0, ..Default::default() }))
+        .kernel(kind)
+        .train(&ds)
+        .unwrap();
+    assert_bit_identical(&unobserved, &r);
+}
+
+#[test]
+fn spsvm_observer_reports_basis_growth() {
+    let ds = xor_dataset(800, 61);
+    let obs = Arc::new(TraceObserver::new());
+    let r = Trainer::new(SolverSpec::SpSvm(SpSvmParams {
+            c: 10.0,
+            max_basis: 31,
+            ..Default::default()
+        }))
+        .kernel(KernelKind::Rbf { gamma: 8.0 })
+        .observer(obs.clone())
+        .train(&ds)
+        .unwrap();
+    let pts = obs.take();
+    assert!(!pts.is_empty());
+    // active = basis size: non-decreasing, capped by max_basis
+    for w in pts.windows(2) {
+        assert!(w[1].active >= w[0].active);
+    }
+    assert!(pts.last().unwrap().active <= 31);
+    assert!(r.model.num_vectors() <= 31);
+}
+
+#[test]
+fn mu_and_primal_surface_engine_fallback_note() {
+    // mu/primal have no accelerator path; with an xla engine they must
+    // say they fell back to cpu instead of silently running there.
+    let Ok(rt) = wu_svm::runtime::XlaRuntime::load(&wu_svm::runtime::default_artifacts_dir())
+    else {
+        eprintln!("skipping: no artifacts (offline build has an xla API stub)");
+        return;
+    };
+    let engine = Engine::xla(Arc::new(rt));
+    let ds = xor_dataset(120, 71);
+    let kind = KernelKind::Rbf { gamma: 4.0 };
+    for spec in [
+        SolverSpec::Mu(MuParams { c: 1.0, ..Default::default() }),
+        SolverSpec::Primal(PrimalParams { c: 1.0, ..Default::default() }),
+    ] {
+        let r = Trainer::new(spec)
+            .kernel(kind)
+            .engine(engine.clone())
+            .train(&ds)
+            .unwrap();
+        let note = r.notes.iter().find(|(k, _)| k == "engine_fallback");
+        assert!(
+            note.is_some_and(|(_, v)| v.starts_with("cpu")),
+            "missing engine_fallback note: {:?}",
+            r.notes
+        );
+    }
+}
+
+#[test]
+fn family_note_records_the_papers_axis() {
+    let ds = xor_dataset(150, 81);
+    let kind = KernelKind::Rbf { gamma: 6.0 };
+    let cases = vec![
+        (SolverSpec::Smo(SmoParams { c: 1.0, ..Default::default() }), "explicit"),
+        (SolverSpec::Mu(MuParams { c: 1.0, ..Default::default() }), "implicit"),
+    ];
+    for (spec, family) in cases {
+        let r = Trainer::new(spec).kernel(kind).train(&ds).unwrap();
+        assert!(
+            r.notes.iter().any(|(k, v)| k == "family" && v == family),
+            "notes {:?}",
+            r.notes
+        );
+    }
+}
