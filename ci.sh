@@ -1,10 +1,14 @@
 #!/bin/sh
-# CI entry point. Usage: ./ci.sh [tier1|benchcheck|docs|lint|all]
+# CI entry point. Usage: ./ci.sh [tier1|benchcheck|benchsmoke|docs|lint|all]
 # tier1 is the repository's canonical verification (see ROADMAP.md).
-# benchcheck compiles the bench targets without running them, so the
-# harness=false benchmarks (which `cargo test` never builds) can't rot.
+# benchcheck compiles the bench targets without running them.
+# benchsmoke validates the checked-in BENCH_*.json records against their
+# embedded schemas, then *runs* every bench target with BENCH_SMOKE=1
+# (seconds-sized workloads, no json overwrite) so bench code paths
+# execute in CI instead of only compiling.
 # docs builds the public API docs with warnings denied, so the rustdoc
 # surface (intra-doc links, examples) can't rot either.
+# lint (rustfmt + clippy -D warnings) is part of the blocking gate.
 set -eu
 
 mode="${1:-all}"
@@ -16,6 +20,11 @@ tier1() {
 
 benchcheck() {
     cargo bench --no-run
+}
+
+benchsmoke() {
+    python3 ci/check_bench_json.py BENCH_*.json
+    BENCH_SMOKE=1 cargo bench
 }
 
 docs() {
@@ -30,16 +39,19 @@ lint() {
 case "$mode" in
     tier1) tier1 ;;
     benchcheck) benchcheck ;;
+    benchsmoke) benchsmoke ;;
     docs) docs ;;
     lint) lint ;;
     all)
+        # benchsmoke builds *and runs* every bench target, subsuming
+        # benchcheck (kept as a standalone fast mode)
         tier1
-        benchcheck
+        benchsmoke
         docs
         lint
         ;;
     *)
-        echo "usage: ./ci.sh [tier1|benchcheck|docs|lint|all]" >&2
+        echo "usage: ./ci.sh [tier1|benchcheck|benchsmoke|docs|lint|all]" >&2
         exit 2
         ;;
 esac

@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Validate checked-in BENCH_*.json records against their embedded schema.
+
+Every bench target emits a machine-readable JSON record whose "schema"
+object documents its fields. A checked-in record is either a real
+measurement (every schema key present) or an honest placeholder
+("status": "not-run" with a "reason"). This gate runs before the smoke
+pass so a malformed or silently-truncated record fails CI.
+
+Usage: check_bench_json.py BENCH_a.json [BENCH_b.json ...]
+"""
+import json
+import sys
+
+
+def check(path: str) -> list:
+    errors = []
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable or invalid JSON: {e}"]
+    schema = doc.get("schema")
+    if not isinstance(schema, dict) or not schema:
+        errors.append(f"{path}: missing embedded 'schema' object")
+        return errors
+    status = doc.get("status")
+    if status == "not-run":
+        if not doc.get("reason"):
+            errors.append(f"{path}: not-run placeholder must carry a 'reason'")
+    elif status is None:
+        # a real measurement: every documented field must be present
+        for key in schema:
+            if key not in doc:
+                errors.append(f"{path}: measurement is missing schema field '{key}'")
+    else:
+        errors.append(f"{path}: unknown status {status!r} (expected absent or 'not-run')")
+    return errors
+
+
+def main(argv: list) -> int:
+    if not argv:
+        print("usage: check_bench_json.py BENCH_*.json", file=sys.stderr)
+        return 2
+    failures = []
+    for path in argv:
+        failures.extend(check(path))
+    for msg in failures:
+        print(f"error: {msg}", file=sys.stderr)
+    if not failures:
+        print(f"bench json ok: {len(argv)} file(s) validated")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -3,7 +3,7 @@
 //!
 //! Run: `cargo bench --bench kernels`
 
-use wu_svm::bench_util::{bench, header};
+use wu_svm::bench_util::{bench, header, smoke, smoke_or};
 use wu_svm::engine::Engine;
 use wu_svm::pool;
 use wu_svm::rng::Rng;
@@ -14,17 +14,23 @@ fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
 }
 
 fn main() {
-    let mut engines: Vec<Engine> = vec![Engine::cpu_seq(), Engine::cpu_par(pool::default_threads())];
+    let mut engines: Vec<Engine> =
+        vec![Engine::cpu_seq(), Engine::cpu_par(pool::default_threads())];
     match XlaRuntime::load(&default_artifacts_dir()) {
         Ok(rt) => engines.push(Engine::xla(std::sync::Arc::new(rt))),
         Err(e) => eprintln!("xla engine unavailable: {e}"),
     }
 
     let mut rng = Rng::new(1);
-    let t = 1024;
+    let t = smoke_or(128, 1024);
+    let shapes: &[(usize, usize)] = if smoke() {
+        &[(64, 64)]
+    } else {
+        &[(64, 64), (128, 256), (512, 512), (2048, 512)]
+    };
 
-    header("rbf_block K[1024 x B] (d features)");
-    for &(d, b) in &[(64usize, 64usize), (128, 256), (512, 512), (2048, 512)] {
+    header(&format!("rbf_block K[{t} x B] (d features)"));
+    for &(d, b) in shapes {
         let x = rand_vec(&mut rng, t * d);
         let xb = rand_vec(&mut rng, b * d);
         for e in &engines {
@@ -35,8 +41,9 @@ fn main() {
         }
     }
 
-    header("tile_stats (fused hinge grad+gram) [1024 x B]");
-    for &b in &[64usize, 256, 512] {
+    let bsizes: &[usize] = if smoke() { &[64] } else { &[64, 256, 512] };
+    header(&format!("tile_stats (fused hinge grad+gram) [{t} x B]"));
+    for &b in bsizes {
         let k = rand_vec(&mut rng, t * b);
         let y: Vec<f32> = (0..t).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
         let m = vec![1.0f32; t];
@@ -50,7 +57,7 @@ fn main() {
     }
 
     header("cg_solve (masked Newton system) [B x B]");
-    for &b in &[64usize, 256, 512] {
+    for &b in bsizes {
         // SPD system
         let a = rand_vec(&mut rng, b * b);
         let mut h = vec![0.0f32; b * b];
@@ -73,7 +80,7 @@ fn main() {
         }
     }
 
-    header("score_tile + predict_block [1024 x {64,256}]");
+    header(&format!("score_tile + predict_block [{t} x {{64,256}}]"));
     {
         let kc = rand_vec(&mut rng, t * 64);
         let r: Vec<f32> = rand_vec(&mut rng, t);
@@ -96,11 +103,11 @@ fn main() {
     // dot-loop GEMM vs the blocked/packed path, plus the rbf_block tile it
     // feeds. Emits machine-readable BENCH_gemm.json for the perf
     // trajectory (rust/EXPERIMENTS.md §GEMM).
-    header("gemm_nt C[4000x512] = A[4000x64] · B[512x64]ᵀ — seed dot-loop vs blocked");
+    header("gemm_nt — seed dot-loop vs blocked");
     {
         use wu_svm::linalg::{gemm_nt, gemm_nt_naive, Matrix};
         let threads = pool::default_threads();
-        let (m, k, n) = (4000usize, 64usize, 512usize);
+        let (m, k, n) = smoke_or((400usize, 64usize, 64usize), (4000, 64, 512));
         let a = Matrix::from_vec(m, k, rand_vec(&mut rng, m * k));
         let b = Matrix::from_vec(n, k, rand_vec(&mut rng, n * k));
         let flops = 2.0 * m as f64 * n as f64 * k as f64;
@@ -121,9 +128,9 @@ fn main() {
         let speedup = s_naive.median.as_secs_f64() / s_blk.median.as_secs_f64().max(1e-12);
         println!("blocked vs seed dot-loop: {speedup:.2}x");
 
-        // rbf_block on a 4000-row tile: the seed's per-pair f64-dot
+        // rbf_block on a large tile: the seed's per-pair f64-dot
         // expansion vs the engine's norms + GEMM + fused-exp path.
-        let (rt, rd, rb) = (4000usize, 64usize, 512usize);
+        let (rt, rd, rb) = smoke_or((400usize, 64usize, 64usize), (4000, 64, 512));
         let x = rand_vec(&mut rng, rt * rd);
         let xb = rand_vec(&mut rng, rb * rd);
         let gamma = 0.5f32;
@@ -158,6 +165,18 @@ fn main() {
         let rbf_speedup = s_rseed.median.as_secs_f64() / s_rblk.median.as_secs_f64().max(1e-12);
         println!("rbf_block blocked vs seed: {rbf_speedup:.2}x   (sink {sink:.3})");
 
+        // embedded schema required by ci/check_bench_json.py (validates
+        // the checked-in copy of this file on every CI run)
+        let schema = "\"schema\": {\n    \
+             \"workload\": \"matrix dims, C[m x n] = A[m x k] . B[n x k]^T\",\n    \
+             \"threads\": \"worker threads used for both paths\",\n    \
+             \"seed_dot_loop_ms\": \"median wall time of gemm_nt_naive\",\n    \
+             \"seed_dot_loop_gflops\": \"2*m*n*k / median time\",\n    \
+             \"blocked_1t_ms\": \"median wall time of blocked gemm_nt, 1 thread\",\n    \
+             \"blocked_ms\": \"median wall time of blocked gemm_nt, all threads\",\n    \
+             \"blocked_gflops\": \"2*m*n*k / median time\",\n    \
+             \"speedup_vs_seed\": \"seed_dot_loop_ms / blocked_ms\",\n    \
+             \"rbf_tile\": \"same comparison for a large rbf_block tile\"\n  }";
         let json = format!(
             "{{\n  \"workload\": {{\"m\": {m}, \"k\": {k}, \"n\": {n}}},\n  \
              \"threads\": {threads},\n  \
@@ -165,7 +184,7 @@ fn main() {
              \"blocked_1t_ms\": {:.3},\n  \"blocked_ms\": {:.3},\n  \
              \"blocked_gflops\": {:.3},\n  \"speedup_vs_seed\": {:.3},\n  \
              \"rbf_tile\": {{\"t\": {rt}, \"d\": {rd}, \"b\": {rb}, \
-             \"seed_ms\": {:.3}, \"blocked_ms\": {:.3}, \"speedup\": {:.3}}}\n}}\n",
+             \"seed_ms\": {:.3}, \"blocked_ms\": {:.3}, \"speedup\": {:.3}}},\n  {schema}\n}}\n",
             s_naive.median.as_secs_f64() * 1e3,
             gflops(s_naive.median),
             s_b1.median.as_secs_f64() * 1e3,
@@ -176,9 +195,13 @@ fn main() {
             s_rblk.median.as_secs_f64() * 1e3,
             rbf_speedup,
         );
-        match std::fs::write("BENCH_gemm.json", &json) {
-            Ok(()) => println!("wrote BENCH_gemm.json:\n{json}"),
-            Err(e) => eprintln!("could not write BENCH_gemm.json: {e}"),
+        if smoke() {
+            println!("BENCH_SMOKE=1: skipping BENCH_gemm.json (not a measurement)");
+        } else {
+            match std::fs::write("BENCH_gemm.json", &json) {
+                Ok(()) => println!("wrote BENCH_gemm.json:\n{json}"),
+                Err(e) => eprintln!("could not write BENCH_gemm.json: {e}"),
+            }
         }
     }
 }

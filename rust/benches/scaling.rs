@@ -5,6 +5,7 @@
 //!
 //! Run: `cargo bench --bench scaling [-- --dataset covertype --scale 0.01]`
 
+use wu_svm::bench_util::{smoke, smoke_or};
 use wu_svm::config::Config;
 use wu_svm::experiments;
 use wu_svm::pool;
@@ -13,15 +14,18 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let cfg = Config::from_args(&args).unwrap();
     let dataset = cfg.str_or("dataset", "covertype");
-    let scale = cfg.f64_or("scale", 0.01).unwrap();
+    let scale = cfg.f64_or("scale", smoke_or(0.002, 0.01)).unwrap();
 
     let max_t = pool::default_threads();
-    let mut threads = vec![1usize, 2, 4];
-    if max_t >= 8 {
-        threads.push(8);
-    }
-    if max_t > 8 {
-        threads.push(max_t);
+    let mut threads = vec![1usize, 2];
+    if !smoke() {
+        threads.push(4);
+        if max_t >= 8 {
+            threads.push(8);
+        }
+        if max_t > 8 {
+            threads.push(max_t);
+        }
     }
 
     match experiments::run_scaling(&dataset, scale, &threads) {
@@ -29,7 +33,8 @@ fn main() {
         Err(e) => eprintln!("scaling failed: {e:#}"),
     }
 
-    match experiments::run_basis_sweep(&dataset, scale, &[15, 31, 63, 127, 255]) {
+    let basis: &[usize] = if smoke() { &[15, 31] } else { &[15, 31, 63, 127, 255] };
+    match experiments::run_basis_sweep(&dataset, scale, basis) {
         Ok(t) => println!("{t}"),
         Err(e) => eprintln!("basis sweep failed: {e:#}"),
     }

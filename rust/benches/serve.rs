@@ -6,7 +6,7 @@
 
 use std::time::{Duration, Instant};
 
-use wu_svm::bench_util::header;
+use wu_svm::bench_util::{header, smoke, smoke_or};
 use wu_svm::engine::Engine;
 use wu_svm::kernel::KernelKind;
 use wu_svm::model::SvmModel;
@@ -54,8 +54,8 @@ fn main() {
     let mut rng = Rng::new(7);
     let d = 64;
     let model = rand_model(&mut rng, 256, d);
-    let clients = 8;
-    let per_client = 1500;
+    let clients = smoke_or(2, 8);
+    let per_client = smoke_or(60, 1500);
     let total_req = (clients * per_client) as f64;
 
     header(&format!(
@@ -66,8 +66,10 @@ fn main() {
         "case", "req/s", "p50<=", "p99<=", "mean", "fallback"
     );
     let mut json_cases = String::new();
-    for &shards in &[1usize, 2, 4] {
-        for &batch in &[32usize, 256] {
+    let shard_list: &[usize] = if smoke() { &[1, 2] } else { &[1, 2, 4] };
+    let batch_list: &[usize] = if smoke() { &[32] } else { &[32, 256] };
+    for &shards in shard_list {
+        for &batch in batch_list {
             let server = Server::start(
                 &model,
                 Engine::cpu_par(threads),
@@ -155,7 +157,7 @@ fn main() {
     println!("{}", compiled.describe());
     let ovo_union = compiled.packed_vectors();
     drop(compiled);
-    let ovo_per_client = 400;
+    let ovo_per_client = smoke_or(30, 400);
     let (wall, snap) = drive(server, clients, ovo_per_client, d);
     let ovo_rps = (clients * ovo_per_client) as f64 / wall.as_secs_f64();
     println!(
@@ -168,15 +170,26 @@ fn main() {
         snap.fallbacks
     );
 
+    // embedded schema required by ci/check_bench_json.py (validates the
+    // checked-in copy of this file on every CI run)
+    let schema = "\"schema\": {\n    \
+         \"workload\": \"packed binary model size, feature dim, closed-loop client count\",\n    \
+         \"threads\": \"pool worker threads\",\n    \
+         \"cases\": \"per (shards, batch): throughput, p50/p99 upper bounds (us), occupancy, fallbacks\",\n    \
+         \"ovo\": \"45-pair ensemble served off one deduplicated union block\"\n  }";
     let json = format!(
         "{{\n  \"workload\": {{\"binary_b\": 256, \"d\": {d}, \"clients\": {clients}, \
          \"per_client\": {per_client}}},\n  \"threads\": {threads},\n  \"cases\": [\n{json_cases}\n  ],\n  \
          \"ovo\": {{\"classes\": {classes}, \"pairs\": 45, \"raw_vectors\": {ovo_raw}, \
          \"union_vectors\": {ovo_union}, \"req_per_s\": {ovo_rps:.0}, \
-         \"p50_us\": {}, \"p99_us\": {}}}\n}}\n",
+         \"p50_us\": {}, \"p99_us\": {}}},\n  {schema}\n}}\n",
         snap.p50.as_micros(),
         snap.p99.as_micros(),
     );
+    if smoke() {
+        println!("BENCH_SMOKE=1: skipping BENCH_serve.json (not a measurement)");
+        return;
+    }
     match std::fs::write("BENCH_serve.json", &json) {
         Ok(()) => println!("wrote BENCH_serve.json:\n{json}"),
         Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),

@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench solvers [-- --scale 0.02]`
 
-use wu_svm::bench_util::{bench_once, header};
+use wu_svm::bench_util::{bench_once, header, smoke, smoke_or};
 use wu_svm::config::Config;
 use wu_svm::coordinator::{run, EngineChoice, Solver, TrainJob};
 use wu_svm::experiments;
@@ -13,7 +13,7 @@ use wu_svm::pool;
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let cfg = Config::from_args(&args).unwrap();
-    let scale = cfg.f64_or("scale", 0.01).unwrap();
+    let scale = cfg.f64_or("scale", smoke_or(0.002, 0.01)).unwrap();
     let dataset = cfg.str_or("dataset", "covertype");
     let threads = pool::default_threads();
 
@@ -66,7 +66,7 @@ fn main() {
             sparsity: 0.0,
             pos_frac: 0.5,
         };
-        let ds = generate(&spec, 4000, 42, "smo-bench");
+        let ds = generate(&spec, smoke_or(600, 4000), 42, "smo-bench");
         let kind = KernelKind::Rbf { gamma: 1.0 };
         let engine = Engine::cpu_par(threads);
         let seed_params = SmoParams {
@@ -91,7 +91,8 @@ fn main() {
 
     // F.wss ablation (cpu engine so it runs without artifacts)
     header("F.wss: working-set size (GTSVM's 16 vs SMO's 2)");
-    for s in [2usize, 4, 8, 16, 32] {
+    let wss_sizes: &[usize] = if smoke() { &[2, 16] } else { &[2, 4, 8, 16, 32] };
+    for &s in wss_sizes {
         let job = TrainJob {
             dataset: dataset.clone(),
             scale,
@@ -110,7 +111,8 @@ fn main() {
 
     // F.epsstop ablation
     header("F.epsstop: SP-SVM stopping threshold");
-    match experiments::run_eps_sweep(&dataset, scale, &[1e-3, 1e-4, 1e-5, 5e-6]) {
+    let epss: &[f64] = if smoke() { &[1e-3] } else { &[1e-3, 1e-4, 1e-5, 5e-6] };
+    match experiments::run_eps_sweep(&dataset, scale, epss) {
         Ok(t) => println!("{t}"),
         Err(e) => eprintln!("eps sweep failed: {e}"),
     }

@@ -1,0 +1,133 @@
+//! Sparse substrate benchmarks: the SpMM-backed kernel paths against the
+//! densified baseline on 90%-zero data — the workload shape of the
+//! paper's sparse sources (kdd99, adult, rcv1-class). Emits
+//! machine-readable `BENCH_sparse.json` (rust/EXPERIMENTS.md §SPARSE).
+//!
+//! Run: `cargo bench --bench sparse [-- --n 4000 --d 512 --sparsity 0.9]`
+
+use wu_svm::bench_util::{bench, header, smoke, smoke_or};
+use wu_svm::config::Config;
+use wu_svm::data::synth::{generate, SynthSpec};
+use wu_svm::data::{libsvm, Format};
+use wu_svm::kernel::{kernel_block, KernelKind};
+use wu_svm::pool;
+use wu_svm::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let cfg = Config::from_args(&args).unwrap();
+    let n = cfg.usize_or("n", smoke_or(256, 4000)).unwrap();
+    let d = cfg.usize_or("d", smoke_or(64, 512)).unwrap();
+    let b = cfg.usize_or("b", 64).unwrap();
+    let sparsity = cfg.f64_or("sparsity", 0.9).unwrap();
+    let threads = pool::default_threads();
+    let runs = smoke_or(2, 7);
+
+    let spec = SynthSpec {
+        d,
+        classes: 2,
+        clusters: 8,
+        sigma: 0.1,
+        flip: 0.02,
+        sparsity,
+        pos_frac: 0.5,
+    };
+    let dense = generate(&spec, n, 42, "sparse-bench");
+    let csr = dense.clone().with_format(Format::Csr);
+    println!(
+        "workload: n={n} d={d} b={b}, measured sparsity {:.1}% ({} threads)",
+        dense.sparsity() * 100.0,
+        threads
+    );
+    println!(
+        "design bytes: dense {} vs csr {} ({:.2}x smaller)",
+        dense.bytes(),
+        csr.bytes(),
+        dense.bytes() as f64 / csr.bytes().max(1) as f64
+    );
+
+    // ---- the tentpole comparison: one rbf kernel block K[n x b] of the
+    // whole training set against a working-set-sized basis, densified
+    // packed-GEMM route vs CSR SpMM route ----
+    header(&format!("kernel_block rbf K[{n} x {b}] — densified vs SpMM"));
+    let mut rng = Rng::new(7);
+    let ri: Vec<usize> = (0..n).collect();
+    let ci: Vec<usize> = (0..b).map(|_| rng.below(n)).collect();
+    let kind = KernelKind::Rbf { gamma: 0.5 };
+    let mut out = vec![0.0f32; n * b];
+    let s_dense = bench(&format!("dense kernel_block [{threads}t]"), 1, runs, || {
+        kernel_block(&kind, &dense, &ri, &ci, threads, &mut out);
+    });
+    println!("{}", s_dense.row());
+    let s_csr = bench(&format!("csr kernel_block [{threads}t]"), 1, runs, || {
+        kernel_block(&kind, &csr, &ri, &ci, threads, &mut out);
+    });
+    println!("{}", s_csr.row());
+    let block_speedup = s_dense.median.as_secs_f64() / s_csr.median.as_secs_f64().max(1e-12);
+    println!("csr kernel_block vs densified: {block_speedup:.2}x");
+
+    // agreement check rides along so a broken fast path can't post a win
+    let mut kd = vec![0.0f32; n * b];
+    let mut ks = vec![0.0f32; n * b];
+    kernel_block(&kind, &dense, &ri, &ci, threads, &mut kd);
+    kernel_block(&kind, &csr, &ri, &ci, threads, &mut ks);
+    let dmax = kd.iter().zip(&ks).map(|(a, c)| (a - c).abs()).fold(0.0f32, f32::max);
+    assert!(dmax <= 1e-6, "csr block diverged from dense by {dmax}");
+    println!("max |dense - csr| = {dmax:.2e}");
+
+    // ---- ingestion: the streaming chunk-parallel parser, CSR vs densify ----
+    header("libsvm parse (streaming chunked-parallel)");
+    let dir = std::env::temp_dir().join("wu_svm_sparse_bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.libsvm");
+    libsvm::write_file(&dense, &path).unwrap();
+    let s_parse_csr = bench("parse -> csr", 1, runs, || {
+        let ds = libsvm::read_file_with(&path, d, Format::Csr).unwrap();
+        assert_eq!(ds.n, n);
+    });
+    println!("{}", s_parse_csr.row());
+    let s_parse_dense = bench("parse -> dense", 1, runs, || {
+        let ds = libsvm::read_file_with(&path, d, Format::Dense).unwrap();
+        assert_eq!(ds.n, n);
+    });
+    println!("{}", s_parse_dense.row());
+    std::fs::remove_file(&path).ok();
+
+    if smoke() {
+        println!("BENCH_SMOKE=1: skipping BENCH_sparse.json (not a measurement)");
+        return;
+    }
+    // the embedded schema is required by ci/check_bench_json.py, which
+    // validates the checked-in copy of this file on every CI run
+    let schema = "\"schema\": {\n    \
+         \"workload\": \"kernel block dims: K[n x b] over d features at the given zero fraction\",\n    \
+         \"threads\": \"worker threads used for both paths\",\n    \
+         \"dense_block_ms\": \"median wall time of kernel_block on the densified dataset\",\n    \
+         \"csr_block_ms\": \"median wall time of kernel_block on the CSR dataset (SpMM path)\",\n    \
+         \"block_speedup\": \"dense_block_ms / csr_block_ms\",\n    \
+         \"max_abs_diff\": \"max |dense - csr| over the block\",\n    \
+         \"dense_bytes\": \"design-matrix footprint stored dense\",\n    \
+         \"csr_bytes\": \"design-matrix footprint stored CSR\",\n    \
+         \"parse_csr_ms\": \"median libsvm parse time building CSR directly\",\n    \
+         \"parse_dense_ms\": \"median libsvm parse time densifying on load\"\n  }";
+    let json = format!(
+        "{{\n  \"workload\": {{\"n\": {n}, \"d\": {d}, \"b\": {b}, \"sparsity\": {:.3}}},\n  \
+         \"threads\": {threads},\n  \
+         \"dense_block_ms\": {:.3},\n  \"csr_block_ms\": {:.3},\n  \
+         \"block_speedup\": {:.3},\n  \"max_abs_diff\": {dmax:e},\n  \
+         \"dense_bytes\": {},\n  \"csr_bytes\": {},\n  \
+         \"parse_csr_ms\": {:.3},\n  \"parse_dense_ms\": {:.3},\n  {schema}\n}}\n",
+        dense.sparsity(),
+        s_dense.median.as_secs_f64() * 1e3,
+        s_csr.median.as_secs_f64() * 1e3,
+        block_speedup,
+        dense.bytes(),
+        csr.bytes(),
+        s_parse_csr.median.as_secs_f64() * 1e3,
+        s_parse_dense.median.as_secs_f64() * 1e3,
+    );
+    match std::fs::write("BENCH_sparse.json", &json) {
+        Ok(()) => println!("wrote BENCH_sparse.json:\n{json}"),
+        Err(e) => eprintln!("could not write BENCH_sparse.json: {e}"),
+    }
+}

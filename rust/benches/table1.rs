@@ -10,6 +10,7 @@
 //! sized so the whole table finishes in tens of minutes. The recorded
 //! output lives in EXPERIMENTS.md.
 
+use wu_svm::bench_util::{smoke, smoke_or};
 use wu_svm::config::Config;
 use wu_svm::data::paper;
 use wu_svm::experiments;
@@ -18,8 +19,8 @@ use wu_svm::report;
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let cfg = Config::from_args(&args).unwrap();
-    let dataset = cfg.str_or("dataset", "all");
-    let max_basis = cfg.usize_or("max-basis", 255).unwrap();
+    let dataset = cfg.str_or("dataset", smoke_or("adult", "all"));
+    let max_basis = cfg.usize_or("max-basis", smoke_or(31, 255)).unwrap();
     let methods: Vec<String> = cfg
         .get("methods")
         .map(|m| m.split(',').map(|s| s.trim().to_string()).collect())
@@ -33,9 +34,8 @@ fn main() {
 
     let mut all = Vec::new();
     for k in keys {
-        let scale = cfg
-            .f64_or("scale", experiments::default_scale(&k))
-            .unwrap();
+        let scale_default = if smoke() { 0.004 } else { experiments::default_scale(&k) };
+        let scale = cfg.f64_or("scale", scale_default).unwrap();
         eprintln!("=== {k} (scale {scale}) ===");
         match experiments::run_table1_dataset(&k, scale, max_basis, &methods) {
             Ok(rows) => {

@@ -98,6 +98,23 @@ pub fn header(title: &str) {
     );
 }
 
+/// Whether this run is the CI smoke pass (`BENCH_SMOKE=1`): bench
+/// targets shrink to seconds-sized workloads so their *code paths*
+/// execute in CI, and they skip overwriting the checked-in BENCH_*.json
+/// records (smoke numbers are not measurements).
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// `full` normally, `tiny` under `BENCH_SMOKE=1`.
+pub fn smoke_or<T>(tiny: T, full: T) -> T {
+    if smoke() {
+        tiny
+    } else {
+        full
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -3,49 +3,154 @@
 //! `label idx:val idx:val ...` per line, 1-based indices. This is the
 //! format every dataset in the paper ships in; our synthetic analogs can
 //! round-trip through it so real downloads drop in unchanged.
+//!
+//! Parsing is **streaming and chunk-parallel**: lines are read in
+//! batches, each batch is tokenized in parallel on the pool, and the
+//! parsed rows are appended to a [`CsrBuilder`] in input order — the
+//! design matrix is built in CSR directly, so a 90%-sparse source never
+//! materializes its dense form unless [`Format::Dense`] asks for it.
+//!
+//! Real downloads are messy; the parser normalizes or rejects the common
+//! defects instead of silently mis-reading them: CRLF endings and
+//! trailing `# comment` text are stripped, ranking `qid:` qualifiers are
+//! skipped, descending indices are sorted, and duplicate indices are an
+//! error (two conflicting values for one feature have no right answer).
 
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::Dataset;
+use super::sparse::CsrBuilder;
+use super::{Dataset, Design, Format};
+use crate::pool;
 
-/// Parse libsvm text. Labels may be real classes (multiclass) or +/-1.
-/// `d_hint` pads/validates dimensionality (0 = infer from max index).
-pub fn parse<R: BufRead>(reader: R, name: &str, d_hint: usize) -> Result<Dataset> {
-    let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
-    let mut labels: Vec<f64> = Vec::new();
+/// Lines tokenized per parallel batch.
+const CHUNK_LINES: usize = 4096;
+
+/// One successfully parsed data line.
+struct ParsedLine {
+    label: f64,
+    /// 0-based `(col, value)` pairs, strictly ascending columns.
+    feats: Vec<(u32, f32)>,
+    /// Highest 1-based index seen, including explicit zeros (zeros are
+    /// dropped from `feats` but still pin the dimensionality).
+    max_idx: usize,
+}
+
+/// Tokenize one line. `Ok(None)` = blank or comment-only line.
+fn parse_line(line: &str, lineno: usize) -> Result<Option<ParsedLine>> {
+    // trailing "# comment" (and whole-line comments) are not data
+    let line = line.split('#').next().unwrap_or("");
+    let line = line.trim(); // also strips the \r of CRLF endings
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_ascii_whitespace();
+    let label: f64 = parts
+        .next()
+        .context("missing label")?
+        .parse()
+        .with_context(|| format!("bad label on line {lineno}"))?;
+    let mut feats: Vec<(u32, f32)> = Vec::new();
     let mut max_idx = 0usize;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+    let mut sorted = true;
+    for tok in parts {
+        if tok.starts_with("qid:") {
+            // ranking-task qualifier (svmlight extension): not a feature
             continue;
         }
-        let mut parts = line.split_ascii_whitespace();
-        let lab: f64 = parts
-            .next()
-            .context("missing label")?
+        let (i, v) = tok
+            .split_once(':')
+            .with_context(|| format!("bad feature '{tok}' line {lineno}"))?;
+        let i: usize = i
             .parse()
-            .with_context(|| format!("bad label on line {}", lineno + 1))?;
-        let mut feats = Vec::new();
-        for tok in parts {
-            let (i, v) = tok
-                .split_once(':')
-                .with_context(|| format!("bad feature '{tok}' line {}", lineno + 1))?;
-            let i: usize = i.parse()?;
-            if i == 0 {
-                bail!("libsvm indices are 1-based (line {})", lineno + 1);
-            }
-            let v: f32 = v.parse()?;
-            max_idx = max_idx.max(i);
-            feats.push((i - 1, v));
+            .with_context(|| format!("bad feature index '{i}' line {lineno}"))?;
+        if i == 0 {
+            bail!("libsvm indices are 1-based (line {lineno})");
         }
-        rows.push(feats);
-        labels.push(lab);
+        if i > u32::MAX as usize {
+            bail!("feature index {i} exceeds the u32 index space (line {lineno})");
+        }
+        // f32 parsing covers scientific notation ("1.5e-3") natively
+        let v: f32 = v
+            .parse()
+            .with_context(|| format!("bad feature value '{v}' line {lineno}"))?;
+        max_idx = max_idx.max(i);
+        let col = (i - 1) as u32;
+        if let Some(&(prev, _)) = feats.last() {
+            if col <= prev {
+                sorted = false;
+            }
+        }
+        // explicit zeros ride along so duplicate detection sees them
+        // (CsrBuilder drops them at append time)
+        feats.push((col, v));
     }
-    if rows.is_empty() {
+    if !sorted {
+        // descending/unordered indices: normalize to CSR's sorted order
+        feats.sort_unstable_by_key(|&(c, _)| c);
+    }
+    for w in feats.windows(2) {
+        if w[0].0 == w[1].0 {
+            bail!(
+                "duplicate feature index {} on line {lineno}",
+                w[0].0 as usize + 1
+            );
+        }
+    }
+    Ok(Some(ParsedLine { label, feats, max_idx }))
+}
+
+/// Parse libsvm text into the requested storage [`Format`]. Labels may be
+/// real classes (multiclass) or +/-1. `d_hint` pads/validates
+/// dimensionality (0 = infer from max index).
+pub fn parse_with<R: BufRead>(
+    reader: R,
+    name: &str,
+    d_hint: usize,
+    format: Format,
+) -> Result<Dataset> {
+    let threads = pool::default_threads();
+    let mut builder = CsrBuilder::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut max_idx = 0usize;
+    let mut batch: Vec<(usize, String)> = Vec::with_capacity(CHUNK_LINES);
+    let mut lines = reader.lines();
+    let mut lineno = 0usize;
+    let mut done = false;
+    while !done {
+        batch.clear();
+        while batch.len() < CHUNK_LINES {
+            match lines.next() {
+                Some(line) => {
+                    lineno += 1;
+                    batch.push((lineno, line?));
+                }
+                None => {
+                    done = true;
+                    break;
+                }
+            }
+        }
+        if batch.is_empty() {
+            break;
+        }
+        // tokenize the batch in parallel, append in input order
+        let batch_ref = &batch;
+        let parsed = pool::parallel_map(threads, batch.len(), |k| {
+            let (no, line) = &batch_ref[k];
+            parse_line(line, *no)
+        });
+        for row in parsed {
+            if let Some(p) = row? {
+                max_idx = max_idx.max(p.max_idx);
+                builder.push_row(&p.feats);
+                labels.push(p.label);
+            }
+        }
+    }
+    if labels.is_empty() {
         bail!("empty libsvm file");
     }
     let d = if d_hint > 0 {
@@ -56,14 +161,18 @@ pub fn parse<R: BufRead>(reader: R, name: &str, d_hint: usize) -> Result<Dataset
     } else {
         max_idx
     };
-
-    let n = rows.len();
-    let mut x = vec![0.0f32; n * d];
-    for (r, feats) in rows.iter().enumerate() {
-        for &(j, v) in feats {
-            x[r * d + j] = v;
+    let csr = builder.finish(d);
+    let design = match format {
+        Format::Dense => Design::Dense(csr.to_dense()),
+        Format::Csr => Design::Sparse(csr),
+        Format::Auto => {
+            if csr.density() <= super::AUTO_SPARSE_THRESHOLD {
+                Design::Sparse(csr)
+            } else {
+                Design::Dense(csr.to_dense())
+            }
         }
-    }
+    };
 
     // Binary iff labels take exactly the values {-1, +1} (or {0, 1}).
     let mut uniq: Vec<f64> = labels.clone();
@@ -76,29 +185,41 @@ pub fn parse<R: BufRead>(reader: R, name: &str, d_hint: usize) -> Result<Dataset
             .into_iter()
             .map(|v| if v > 0.0 { 1.0 } else { -1.0 })
             .collect();
-        Ok(Dataset::new_binary(name, d, x, y))
+        Ok(Dataset::binary_with_design(name, design, y))
     } else {
         // map sorted unique labels to 0..k
         let ids = labels
             .into_iter()
             .map(|v| uniq.binary_search_by(|u| u.partial_cmp(&v).unwrap()).unwrap())
             .collect();
-        Ok(Dataset::new_multiclass(name, d, x, ids))
+        Ok(Dataset::multiclass_with_design(name, design, ids))
     }
 }
 
-/// Read a libsvm file from disk.
-pub fn read_file(path: &Path, d_hint: usize) -> Result<Dataset> {
+/// [`parse_with`] densifying on load (the seed behavior, kept for the
+/// existing call sites; sparse-aware callers pass a [`Format`]).
+pub fn parse<R: BufRead>(reader: R, name: &str, d_hint: usize) -> Result<Dataset> {
+    parse_with(reader, name, d_hint, Format::Dense)
+}
+
+/// Read a libsvm file from disk into the requested storage format.
+pub fn read_file_with(path: &Path, d_hint: usize, format: Format) -> Result<Dataset> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("open {}", path.display()))?;
     let name = path
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "dataset".into());
-    parse(std::io::BufReader::new(f), &name, d_hint)
+    parse_with(std::io::BufReader::new(f), &name, d_hint, format)
 }
 
-/// Write a dataset in libsvm format (zeros omitted).
+/// Read a libsvm file from disk, densified (the seed behavior).
+pub fn read_file(path: &Path, d_hint: usize) -> Result<Dataset> {
+    read_file_with(path, d_hint, Format::Dense)
+}
+
+/// Write a dataset in libsvm format (zeros omitted; CSR designs stream
+/// their stored entries directly).
 pub fn write_file(ds: &Dataset, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
@@ -109,9 +230,19 @@ pub fn write_file(ds: &Dataset, path: &Path) -> Result<()> {
         } else {
             write!(w, "{}", if ds.y[i] > 0.0 { "+1" } else { "-1" })?;
         }
-        for (j, &v) in ds.row(i).iter().enumerate() {
-            if v != 0.0 {
-                write!(w, " {}:{}", j + 1, v)?;
+        match ds.csr() {
+            Some(c) => {
+                let (cols, vals) = c.row(i);
+                for (&j, &v) in cols.iter().zip(vals) {
+                    write!(w, " {}:{}", j as usize + 1, v)?;
+                }
+            }
+            None => {
+                for (j, &v) in ds.row(i).iter().enumerate() {
+                    if v != 0.0 {
+                        write!(w, " {}:{}", j + 1, v)?;
+                    }
+                }
             }
         }
         writeln!(w)?;
@@ -172,6 +303,96 @@ mod tests {
     }
 
     #[test]
+    fn trailing_comment_stripped() {
+        let ds = parse(Cursor::new("+1 1:0.5 2:1.0 # row from fold 3\n-1 1:1\n"), "t", 0)
+            .unwrap();
+        assert_eq!((ds.n, ds.d), (2, 2));
+        assert_eq!(ds.row(0), &[0.5, 1.0]);
+    }
+
+    #[test]
+    fn qid_tokens_skipped() {
+        let ds = parse(Cursor::new("+1 qid:3 1:0.5 2:1.0\n-1 qid:4 1:1\n"), "t", 0).unwrap();
+        assert_eq!((ds.n, ds.d), (2, 2));
+        assert_eq!(ds.row(0), &[0.5, 1.0]);
+        assert_eq!(ds.row(1), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn duplicate_index_rejected() {
+        let err = parse(Cursor::new("+1 2:1 2:3\n"), "t", 0).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+        // duplicates hidden behind descending order are caught too
+        assert!(parse(Cursor::new("+1 3:1 1:2 3:4\n"), "t", 0).is_err());
+        // ...and so are duplicates where one value is an explicit zero
+        assert!(parse(Cursor::new("+1 2:0 2:3\n"), "t", 0).is_err());
+        assert!(parse(Cursor::new("+1 2:3 2:0\n"), "t", 0).is_err());
+    }
+
+    #[test]
+    fn descending_indices_normalized() {
+        let ds = parse(Cursor::new("+1 3:3.0 1:1.0 2:2.0\n"), "t", 0).unwrap();
+        assert_eq!(ds.row(0), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn scientific_notation_values() {
+        let ds = parse(Cursor::new("+1 1:1.5e-3 2:-2E2 3:1e0\n-1 1:1\n"), "t", 0).unwrap();
+        assert_eq!(ds.row(0), &[1.5e-3, -200.0, 1.0]);
+    }
+
+    #[test]
+    fn crlf_line_endings() {
+        let ds = parse(Cursor::new("+1 1:0.5 2:1.5\r\n-1 1:1\r\n"), "t", 0).unwrap();
+        assert_eq!((ds.n, ds.d), (2, 2));
+        assert_eq!(ds.row(0), &[0.5, 1.5]);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn explicit_zero_pins_dimensionality() {
+        let ds = parse(Cursor::new("+1 1:1 5:0\n-1 1:2\n"), "t", 0).unwrap();
+        assert_eq!(ds.d, 5);
+    }
+
+    #[test]
+    fn csr_format_matches_dense_parse() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n+1 1:1 4:0.25\n";
+        let dense = parse_with(Cursor::new(text), "t", 0, Format::Dense).unwrap();
+        let csr = parse_with(Cursor::new(text), "t", 0, Format::Csr).unwrap();
+        assert!(csr.is_sparse() && !dense.is_sparse());
+        assert_eq!(csr.csr().unwrap().to_dense().data, dense.dense_x());
+        assert_eq!(csr.y, dense.y);
+        // this sample is 5/12 dense (41.7% > the 25% threshold): auto
+        // keeps it dense...
+        let auto_dense = parse_with(Cursor::new(text), "t", 0, Format::Auto).unwrap();
+        assert!(!auto_dense.is_sparse());
+        // ...while a 2/16-dense sample (12.5%) goes csr
+        let auto = parse_with(Cursor::new("+1 1:1\n-1 8:1\n"), "t", 0, Format::Auto).unwrap();
+        assert!(auto.is_sparse());
+        // ...and dense for a fully dense source
+        let auto2 = parse_with(Cursor::new("+1 1:1 2:2\n-1 1:3 2:4\n"), "t", 0, Format::Auto)
+            .unwrap();
+        assert!(!auto2.is_sparse());
+    }
+
+    #[test]
+    fn chunked_parse_spans_batches() {
+        // more lines than one parallel batch, parsed in order
+        let mut text = String::new();
+        for i in 0..(super::CHUNK_LINES + 100) {
+            text.push_str(&format!("{} 1:{}\n", if i % 2 == 0 { "+1" } else { "-1" }, i + 1));
+        }
+        let ds = parse_with(Cursor::new(text), "t", 0, Format::Csr).unwrap();
+        assert_eq!(ds.n, super::CHUNK_LINES + 100);
+        let mut buf = [0.0f32; 1];
+        ds.row_into(super::CHUNK_LINES + 50, &mut buf);
+        assert_eq!(buf[0], (super::CHUNK_LINES + 51) as f32);
+        assert_eq!(ds.y[0], 1.0);
+        assert_eq!(ds.y[1], -1.0);
+    }
+
+    #[test]
     fn round_trip_through_file() {
         let dir = std::env::temp_dir().join("wu_svm_libsvm_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -184,8 +405,13 @@ mod tests {
         );
         write_file(&ds, &path).unwrap();
         let back = read_file(&path, 3).unwrap();
-        assert_eq!(back.x, ds.x);
+        assert_eq!(back.dense_x(), ds.dense_x());
         assert_eq!(back.y, ds.y);
+        // CSR write/read round-trips through the same file format
+        let sp = ds.clone().with_format(Format::Csr);
+        write_file(&sp, &path).unwrap();
+        let back2 = read_file_with(&path, 3, Format::Csr).unwrap();
+        assert_eq!(back2.csr().unwrap(), sp.csr().unwrap());
         std::fs::remove_file(path).ok();
     }
 }

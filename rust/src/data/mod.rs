@@ -1,14 +1,24 @@
-//! Dataset substrate: dense row-major design matrices with labels.
+//! Dataset substrate: design matrices (dense row-major **or** CSR) with
+//! labels.
 //!
-//! The paper's datasets are stored dense on the accelerator (GPU SVM and
-//! SP-SVM both "store the inputs in dense format"); we mirror that. Sparse
-//! sources (libsvm format, the kdd99-like generator) densify on load.
+//! The paper's accelerated solvers store inputs dense, but its benchmark
+//! *sources* are dominated by sparse libsvm files (adult, web, rcv1 at
+//! d ≈ 47k) that cannot densify at full n. A [`Dataset`] therefore
+//! carries a [`Design`]: `Dense(Matrix)` (the seed representation, the
+//! packed-GEMM fast path) or `Sparse(CsrMatrix)` (never densified; the
+//! SpMM fast path — see `rust/DESIGN.md` §SPARSE). Kernel evaluation,
+//! tiling, prediction and serving all dispatch on the design; solvers
+//! are unaware of the distinction.
 
 pub mod libsvm;
 pub mod paper;
+pub mod sparse;
 pub mod synth;
 
+use crate::linalg::Matrix;
 use crate::rng::Rng;
+
+pub use sparse::{CsrMatrix, Design, Format, AUTO_SPARSE_THRESHOLD};
 
 /// A labeled dataset. `labels` are {-1,+1} for binary tasks; multiclass
 /// tasks keep class ids in `class_ids` and derive pairwise binary views.
@@ -16,8 +26,8 @@ use crate::rng::Rng;
 pub struct Dataset {
     pub n: usize,
     pub d: usize,
-    /// Row-major n x d feature matrix.
-    pub x: Vec<f32>,
+    /// The design matrix (dense or CSR — see module docs).
+    pub design: Design,
     /// Binary labels in {-1.0, +1.0} (for multiclass: -1 placeholder).
     pub y: Vec<f32>,
     /// Multiclass ids (empty for binary tasks).
@@ -29,28 +39,123 @@ impl Dataset {
     pub fn new_binary(name: &str, d: usize, x: Vec<f32>, y: Vec<f32>) -> Self {
         assert_eq!(x.len() % d, 0);
         let n = x.len() / d;
-        assert_eq!(y.len(), n);
-        debug_assert!(y.iter().all(|&v| v == 1.0 || v == -1.0));
-        Dataset { n, d, x, y, class_ids: Vec::new(), name: name.to_string() }
+        Dataset::binary_with_design(name, Design::Dense(Matrix::from_vec(n, d, x)), y)
     }
 
     pub fn new_multiclass(name: &str, d: usize, x: Vec<f32>, class_ids: Vec<usize>) -> Self {
         assert_eq!(x.len() % d, 0);
         let n = x.len() / d;
-        assert_eq!(class_ids.len(), n);
-        Dataset {
-            n,
-            d,
-            x,
-            y: vec![-1.0; n],
+        Dataset::multiclass_with_design(
+            name,
+            Design::Dense(Matrix::from_vec(n, d, x)),
             class_ids,
-            name: name.to_string(),
+        )
+    }
+
+    /// Binary dataset over an explicit design (the CSR ingestion path).
+    pub fn binary_with_design(name: &str, design: Design, y: Vec<f32>) -> Self {
+        let (n, d) = (design.rows(), design.cols());
+        assert_eq!(y.len(), n);
+        debug_assert!(y.iter().all(|&v| v == 1.0 || v == -1.0));
+        Dataset { n, d, design, y, class_ids: Vec::new(), name: name.to_string() }
+    }
+
+    /// Multiclass dataset over an explicit design.
+    pub fn multiclass_with_design(name: &str, design: Design, class_ids: Vec<usize>) -> Self {
+        let (n, d) = (design.rows(), design.cols());
+        assert_eq!(class_ids.len(), n);
+        Dataset { n, d, design, y: vec![-1.0; n], class_ids, name: name.to_string() }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.design.is_sparse()
+    }
+
+    /// The CSR design, if this dataset is sparse.
+    pub fn csr(&self) -> Option<&CsrMatrix> {
+        match &self.design {
+            Design::Sparse(c) => Some(c),
+            Design::Dense(_) => None,
         }
     }
 
+    /// The dense row-major feature block. Panics on sparse datasets —
+    /// callers that must handle both use [`Dataset::row_into`] /
+    /// [`Dataset::gather_rows`] or dispatch on [`Dataset::csr`].
+    #[inline]
+    pub fn dense_x(&self) -> &[f32] {
+        match &self.design {
+            Design::Dense(m) => &m.data,
+            Design::Sparse(_) => panic!("dense feature access on sparse dataset '{}'", self.name),
+        }
+    }
+
+    /// Row i of a dense dataset (panics on sparse — see
+    /// [`Dataset::dense_x`]).
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.x[i * self.d..(i + 1) * self.d]
+        let d = self.d;
+        &self.dense_x()[i * d..(i + 1) * d]
+    }
+
+    /// Copy row i (densified if needed) into `out` (`out.len() >= d`;
+    /// any tail past `d` is zeroed).
+    pub fn row_into(&self, i: usize, out: &mut [f32]) {
+        assert!(out.len() >= self.d);
+        match &self.design {
+            Design::Dense(m) => {
+                out[..self.d].copy_from_slice(m.row(i));
+                for v in out[self.d..].iter_mut() {
+                    *v = 0.0;
+                }
+            }
+            Design::Sparse(c) => c.densify_row_into(i, out),
+        }
+    }
+
+    /// Densified copies of the given rows, row-major `idx.len() x d`
+    /// (model extraction: support/basis vectors are stored dense).
+    pub fn gather_rows(&self, idx: &[usize]) -> Vec<f32> {
+        let d = self.d;
+        let mut out = vec![0.0f32; idx.len() * d];
+        match &self.design {
+            Design::Dense(m) => {
+                for (q, &i) in idx.iter().enumerate() {
+                    out[q * d..(q + 1) * d].copy_from_slice(m.row(i));
+                }
+            }
+            Design::Sparse(c) => {
+                for (q, &i) in idx.iter().enumerate() {
+                    c.densify_row_into(i, &mut out[q * d..(q + 1) * d]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Convert to the requested [`Format`] (no-op when already there;
+    /// `Auto` applies the [`AUTO_SPARSE_THRESHOLD`] density rule).
+    pub fn with_format(mut self, format: Format) -> Dataset {
+        let sparse = self.is_sparse();
+        match format {
+            Format::Dense if sparse => {
+                let m = match &self.design {
+                    Design::Sparse(c) => c.to_dense(),
+                    Design::Dense(_) => unreachable!(),
+                };
+                self.design = Design::Dense(m);
+            }
+            Format::Csr if !sparse => {
+                let csr = CsrMatrix::from_dense(self.n, self.d, self.dense_x());
+                self.design = Design::Sparse(csr);
+            }
+            Format::Auto if !sparse && self.sparsity() >= 1.0 - AUTO_SPARSE_THRESHOLD => {
+                let csr = CsrMatrix::from_dense(self.n, self.d, self.dense_x());
+                self.design = Design::Sparse(csr);
+            }
+            _ => {}
+        }
+        self
     }
 
     pub fn is_multiclass(&self) -> bool {
@@ -63,6 +168,8 @@ impl Dataset {
 
     /// Scale every feature to [0, 1] (paper §5 "Datasets"). Returns the
     /// per-feature (min, max) used, so test sets can reuse train scaling.
+    /// Dense-only: min-max shifting would densify a sparse design (real
+    /// libsvm sources ship pre-scaled).
     pub fn scale_unit(&mut self) -> Vec<(f32, f32)> {
         let mut ranges = vec![(f32::INFINITY, f32::NEG_INFINITY); self.d];
         for i in 0..self.n {
@@ -75,11 +182,16 @@ impl Dataset {
         ranges
     }
 
-    /// Apply previously computed per-feature (min, max) scaling.
+    /// Apply previously computed per-feature (min, max) scaling
+    /// (dense-only, like [`Dataset::scale_unit`]).
     pub fn apply_scaling(&mut self, ranges: &[(f32, f32)]) {
         assert_eq!(ranges.len(), self.d);
+        let d = self.d;
+        let Design::Dense(m) = &mut self.design else {
+            panic!("scaling would densify sparse dataset '{}'", self.name);
+        };
         for i in 0..self.n {
-            let row = &mut self.x[i * self.d..(i + 1) * self.d];
+            let row = &mut m.data[i * d..(i + 1) * d];
             for (v, &(lo, hi)) in row.iter_mut().zip(ranges) {
                 let span = hi - lo;
                 *v = if span > 0.0 { (*v - lo) / span } else { 0.0 };
@@ -97,13 +209,21 @@ impl Dataset {
         self.select(&idx)
     }
 
-    /// Row-index selection.
+    /// Row-index selection (format-preserving).
     pub fn select(&self, idx: &[usize]) -> Dataset {
-        let mut x = Vec::with_capacity(idx.len() * self.d);
+        let design = match &self.design {
+            Design::Dense(m) => {
+                let mut x = Vec::with_capacity(idx.len() * self.d);
+                for &i in idx {
+                    x.extend_from_slice(m.row(i));
+                }
+                Design::Dense(Matrix::from_vec(idx.len(), self.d, x))
+            }
+            Design::Sparse(c) => Design::Sparse(c.select(idx)),
+        };
         let mut y = Vec::with_capacity(idx.len());
         let mut cls = Vec::new();
         for &i in idx {
-            x.extend_from_slice(self.row(i));
             y.push(self.y[i]);
             if self.is_multiclass() {
                 cls.push(self.class_ids[i]);
@@ -112,7 +232,7 @@ impl Dataset {
         Dataset {
             n: idx.len(),
             d: self.d,
-            x,
+            design,
             y,
             class_ids: cls,
             name: self.name.clone(),
@@ -130,11 +250,16 @@ impl Dataset {
 
     /// Fraction of exactly-zero entries (sparsity, kdd99-like is ~90%).
     pub fn sparsity(&self) -> f64 {
-        if self.x.is_empty() {
+        if self.n == 0 || self.d == 0 {
             return 0.0;
         }
-        let z = self.x.iter().filter(|&&v| v == 0.0).count();
-        z as f64 / self.x.len() as f64
+        let total = self.n * self.d;
+        let nonzero = match &self.design {
+            Design::Dense(m) => m.data.iter().filter(|&&v| v != 0.0).count(),
+            // stored values are nonzero by construction
+            Design::Sparse(c) => c.nnz(),
+        };
+        (total - nonzero) as f64 / total as f64
     }
 
     /// Positive-class fraction (class-imbalance check, mitfaces-like).
@@ -163,7 +288,7 @@ impl Dataset {
 
     /// Approximate in-memory footprint in bytes.
     pub fn bytes(&self) -> usize {
-        self.x.len() * 4 + self.y.len() * 4 + self.class_ids.len() * 8
+        self.design.bytes() + self.y.len() * 4 + self.class_ids.len() * 8
     }
 }
 
@@ -207,7 +332,7 @@ mod tests {
     fn constant_feature_scales_to_zero() {
         let mut ds = Dataset::new_binary("c", 1, vec![5.0, 5.0], vec![1.0, -1.0]);
         ds.scale_unit();
-        assert_eq!(ds.x, vec![0.0, 0.0]);
+        assert_eq!(ds.dense_x(), &[0.0, 0.0]);
     }
 
     #[test]
@@ -254,5 +379,58 @@ mod tests {
     fn num_classes_counts() {
         let ds = Dataset::new_multiclass("m", 1, vec![0.0; 3], vec![0, 4, 2]);
         assert_eq!(ds.num_classes(), 5);
+    }
+
+    #[test]
+    fn format_round_trip_preserves_values() {
+        let ds = Dataset::new_binary(
+            "f",
+            3,
+            vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.5, 0.0],
+            vec![1.0, -1.0, 1.0],
+        );
+        let sp = ds.clone().with_format(Format::Csr);
+        assert!(sp.is_sparse());
+        assert_eq!(sp.csr().unwrap().nnz(), 3);
+        assert!((sp.sparsity() - ds.sparsity()).abs() < 1e-12);
+        let back = sp.clone().with_format(Format::Dense);
+        assert!(!back.is_sparse());
+        assert_eq!(back.dense_x(), ds.dense_x());
+        // auto picks csr at ~67% zeros (threshold 75% sparsity)... this
+        // one is 6/9 = 66.7% zeros < 75%: stays dense
+        assert!(!ds.clone().with_format(Format::Auto).is_sparse());
+    }
+
+    #[test]
+    fn sparse_select_and_row_into() {
+        let ds = Dataset::new_binary(
+            "f",
+            3,
+            vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.5, 0.0],
+            vec![1.0, -1.0, 1.0],
+        )
+        .with_format(Format::Csr);
+        let sel = ds.select(&[2, 0]);
+        assert!(sel.is_sparse());
+        assert_eq!(sel.y, vec![1.0, 1.0]);
+        let mut buf = [9.0f32; 4];
+        sel.row_into(0, &mut buf);
+        assert_eq!(buf, [0.0, 0.5, 0.0, 0.0]);
+        assert_eq!(ds.gather_rows(&[0, 2]), vec![1.0, 0.0, 2.0, 0.0, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn sparse_ovo_view_stays_sparse() {
+        let ds = Dataset::new_multiclass(
+            "m",
+            2,
+            vec![1.0, 0.0, 0.0, 2.0, 3.0, 0.0, 0.0, 4.0],
+            vec![0, 1, 0, 2],
+        )
+        .with_format(Format::Csr);
+        let v = ds.ovo_view(0, 2);
+        assert!(v.is_sparse());
+        assert_eq!(v.n, 3);
+        assert_eq!(v.y, vec![1.0, 1.0, -1.0]);
     }
 }

@@ -166,6 +166,29 @@ pub fn spec(key: &str) -> Option<PaperSpec> {
 }
 
 impl PaperSpec {
+    /// A spec for an external libsvm file (CLI `--input`): carries the
+    /// hyperparameter defaults (`C = 1`, `gamma = 1/d` — the libsvm
+    /// convention) and the error metric; [`PaperSpec::generate`] is never
+    /// called for these.
+    pub fn external(d: usize, classes: usize) -> PaperSpec {
+        PaperSpec {
+            key: "file",
+            paper_n: 0,
+            n_train: 0,
+            n_test: 0,
+            d,
+            classes,
+            c: 1.0,
+            gamma: 1.0 / d.max(1) as f32,
+            metric: Metric::Error,
+            paper_error: f64::NAN,
+            flip: 0.0,
+            sparsity: 0.0,
+            pos_frac: 0.5,
+            clusters: 1,
+        }
+    }
+
     fn synth_spec(&self) -> SynthSpec {
         SynthSpec {
             d: self.d,
@@ -258,7 +281,9 @@ mod tests {
         let s = spec("covertype").unwrap();
         let (tr, te) = s.generate(0.01, 5);
         // quick sanity: means within a tolerance of each other
-        let mean = |ds: &Dataset| ds.x.iter().map(|&v| v as f64).sum::<f64>() / ds.x.len() as f64;
+        let mean = |ds: &Dataset| {
+            ds.dense_x().iter().map(|&v| v as f64).sum::<f64>() / ds.dense_x().len() as f64
+        };
         assert!((mean(&tr) - mean(&te)).abs() < 0.05);
     }
 }

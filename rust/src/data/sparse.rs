@@ -1,0 +1,436 @@
+//! Compressed-sparse-row storage — the sparse half of the [`Design`]
+//! substrate (DESIGN.md §SPARSE).
+//!
+//! The paper's benchmark suite is dominated by sparse sources (adult,
+//! web, kdd99, rcv1-class data at d ≈ 47k); a dense `n x d` design
+//! matrix cannot hold them at full n. [`CsrMatrix`] keeps the classic
+//! row-ptr / col-idx / value triplet plus one derived array the kernel
+//! paths rely on: per-row squared norms accumulated in **the same
+//! KC-chunked order as [`crate::linalg::gemm::sum_sq`]** (zeros contribute identity
+//! adds, so the chunked sparse sum is bit-identical to the dense one).
+//! That is what lets the SpMM-backed RBF path (`linalg::spmm`) keep the
+//! exact-diagonal contract the dense path has.
+//!
+//! Column indices are `u32` (rcv1's d ≈ 47k fits with room to spare) and
+//! stored strictly ascending per row; explicit zeros are dropped at
+//! construction — they change no dot product, no norm, and no chunk
+//! boundary semantics.
+
+use crate::linalg::gemm::KC;
+
+/// Density at or below which `Format::Auto` (and the serve registry)
+/// choose CSR over dense storage. At 25% stored entries the CSR triplet
+/// (8 bytes/nnz + row pointers) already beats the dense 4 bytes/element,
+/// and the SpMM wins grow from there.
+pub const AUTO_SPARSE_THRESHOLD: f64 = 0.25;
+
+/// How a design matrix is stored: the axis [`super::Dataset`], the
+/// solvers' tile views and the serve registry all dispatch on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Design {
+    /// Row-major dense `n x d` (the seed's only representation).
+    Dense(crate::linalg::Matrix),
+    /// CSR, for sparse sources that must never densify on load.
+    Sparse(CsrMatrix),
+}
+
+impl Design {
+    pub fn rows(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.rows,
+            Design::Sparse(c) => c.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.cols,
+            Design::Sparse(c) => c.cols,
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Design::Sparse(_))
+    }
+
+    /// Approximate in-memory footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.data.len() * 4,
+            Design::Sparse(c) => c.bytes(),
+        }
+    }
+}
+
+/// Requested storage for a parsed/generated dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Format {
+    /// Densify (the seed behavior).
+    Dense,
+    /// Build CSR, never densify.
+    Csr,
+    /// CSR iff density <= [`AUTO_SPARSE_THRESHOLD`].
+    #[default]
+    Auto,
+}
+
+impl Format {
+    pub fn parse(s: &str) -> anyhow::Result<Format> {
+        Ok(match s {
+            "dense" => Format::Dense,
+            "csr" | "sparse" => Format::Csr,
+            "auto" => Format::Auto,
+            _ => anyhow::bail!("unknown format '{s}' (dense|csr|auto)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Format::Dense => "dense",
+            Format::Csr => "csr",
+            Format::Auto => "auto",
+        }
+    }
+}
+
+/// A compressed-sparse-row `rows x cols` f32 matrix (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// `row_ptr[i]..row_ptr[i+1]` indexes row i's entries (len rows + 1).
+    pub row_ptr: Vec<usize>,
+    /// Column of each stored value, strictly ascending per row.
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+    /// Per-row Σ v², accumulated in [`crate::linalg::gemm::sum_sq`]'s
+    /// KC-chunk order — the RBF paths' exact-diagonal contract depends
+    /// on this.
+    pub sum_sq: Vec<f32>,
+}
+
+/// Σ v² over one sorted sparse row in `gemm::sum_sq`'s accumulation
+/// order: partials reset at every KC column boundary, partials added to
+/// the total in column order (zero columns are identity adds, so this
+/// equals the dense chunked sum bit for bit).
+fn chunked_sum_sq(cols: &[u32], vals: &[f32]) -> f32 {
+    let mut total = 0.0f32;
+    let mut partial = 0.0f32;
+    let mut boundary = KC as u32;
+    for (&c, &v) in cols.iter().zip(vals) {
+        if c >= boundary {
+            total += partial;
+            partial = 0.0;
+            boundary = (c / KC as u32 + 1) * KC as u32;
+        }
+        partial += v * v;
+    }
+    total + partial
+}
+
+/// Incremental CSR assembly (the streaming libsvm parser appends one
+/// parsed row at a time; `finish` seals the column count and norms).
+pub struct CsrBuilder {
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl CsrBuilder {
+    pub fn new() -> CsrBuilder {
+        CsrBuilder { cols: 0, row_ptr: vec![0], col_idx: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Append one row given `(col, value)` pairs with strictly ascending
+    /// columns (the parser guarantees this). Zero values are dropped.
+    pub fn push_row(&mut self, entries: &[(u32, f32)]) {
+        debug_assert!(entries.windows(2).all(|w| w[0].0 < w[1].0));
+        for &(c, v) in entries {
+            if v != 0.0 {
+                self.col_idx.push(c);
+                self.vals.push(v);
+                self.cols = self.cols.max(c as usize + 1);
+            }
+        }
+        self.row_ptr.push(self.col_idx.len());
+    }
+
+    pub fn rows(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Seal into a [`CsrMatrix`]. `cols` must cover every stored index
+    /// (0 = infer from the data).
+    pub fn finish(self, cols: usize) -> CsrMatrix {
+        let cols = if cols == 0 { self.cols } else { cols };
+        assert!(cols >= self.cols, "cols {cols} < max stored index {}", self.cols);
+        let rows = self.row_ptr.len() - 1;
+        let sum_sq = (0..rows)
+            .map(|i| {
+                let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                chunked_sum_sq(&self.col_idx[lo..hi], &self.vals[lo..hi])
+            })
+            .collect();
+        CsrMatrix {
+            rows,
+            cols,
+            row_ptr: self.row_ptr,
+            col_idx: self.col_idx,
+            vals: self.vals,
+            sum_sq,
+        }
+    }
+}
+
+impl Default for CsrBuilder {
+    fn default() -> Self {
+        CsrBuilder::new()
+    }
+}
+
+impl CsrMatrix {
+    /// Compress a row-major dense `rows x cols` slice (zeros dropped).
+    pub fn from_dense(rows: usize, cols: usize, x: &[f32]) -> CsrMatrix {
+        assert_eq!(x.len(), rows * cols);
+        assert!(cols <= u32::MAX as usize, "column count exceeds u32 index space");
+        let mut b = CsrBuilder::new();
+        let mut entries: Vec<(u32, f32)> = Vec::new();
+        for r in 0..rows {
+            entries.clear();
+            for (c, &v) in x[r * cols..(r + 1) * cols].iter().enumerate() {
+                if v != 0.0 {
+                    entries.push((c as u32, v));
+                }
+            }
+            b.push_row(&entries);
+        }
+        b.finish(cols)
+    }
+
+    /// An empty matrix with `rows` all-empty rows.
+    pub fn empty(rows: usize, cols: usize) -> CsrMatrix {
+        CsrMatrix {
+            rows,
+            cols,
+            row_ptr: vec![0; rows + 1],
+            col_idx: Vec::new(),
+            vals: Vec::new(),
+            sum_sq: vec![0.0; rows],
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Stored-entry fraction (1.0 = fully dense).
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Approximate in-memory footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.row_ptr.len() * 8
+            + self.col_idx.len() * 4
+            + self.vals.len() * 4
+            + self.sum_sq.len() * 4
+    }
+
+    /// Row i's `(columns, values)` slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Scatter row i into a dense buffer (`out.len() >= cols`; the tail
+    /// past `cols` is zeroed too, so padded tile rows come out clean).
+    pub fn densify_row_into(&self, i: usize, out: &mut [f32]) {
+        assert!(out.len() >= self.cols);
+        for v in out.iter_mut() {
+            *v = 0.0;
+        }
+        let (cols, vals) = self.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            out[c as usize] = v;
+        }
+    }
+
+    /// Decompress to a row-major dense matrix.
+    pub fn to_dense(&self) -> crate::linalg::Matrix {
+        let mut m = crate::linalg::Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let row = m.row_mut(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                row[c as usize] = v;
+            }
+        }
+        m
+    }
+
+    /// Gather the given rows into a new matrix (row order = `idx` order).
+    pub fn select(&self, idx: &[usize]) -> CsrMatrix {
+        let nnz: usize = idx.iter().map(|&i| self.row_ptr[i + 1] - self.row_ptr[i]).sum();
+        let mut row_ptr = Vec::with_capacity(idx.len() + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        let mut sum_sq = Vec::with_capacity(idx.len());
+        row_ptr.push(0);
+        for &i in idx {
+            let (c, v) = self.row(i);
+            col_idx.extend_from_slice(c);
+            vals.extend_from_slice(v);
+            row_ptr.push(col_idx.len());
+            sum_sq.push(self.sum_sq[i]);
+        }
+        CsrMatrix { rows: idx.len(), cols: self.cols, row_ptr, col_idx, vals, sum_sq }
+    }
+
+    /// Same matrix with `rows` extended by trailing all-zero rows (tile
+    /// padding: empty rows cost one pointer each, no values).
+    pub fn pad_rows(&self, rows: usize) -> CsrMatrix {
+        assert!(rows >= self.rows);
+        let mut out = self.clone();
+        out.row_ptr.resize(rows + 1, *self.row_ptr.last().unwrap());
+        out.sum_sq.resize(rows, 0.0);
+        out.rows = rows;
+        out
+    }
+
+    /// Dot of row i with a dense vector, accumulated in the same
+    /// KC-chunk order as [`CsrMatrix::sum_sq`] / the SpMM — so
+    /// `dot(i, densified row i)` equals `sum_sq[i]` bit for bit.
+    pub fn row_dot_dense(&self, i: usize, x: &[f32]) -> f32 {
+        assert!(x.len() >= self.cols);
+        let (cols, vals) = self.row(i);
+        let mut total = 0.0f32;
+        let mut partial = 0.0f32;
+        let mut boundary = KC as u32;
+        for (&c, &v) in cols.iter().zip(vals) {
+            if c >= boundary {
+                total += partial;
+                partial = 0.0;
+                boundary = (c / KC as u32 + 1) * KC as u32;
+            }
+            partial += v * x[c as usize];
+        }
+        total + partial
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::rng::Rng;
+
+    fn rand_sparse_dense(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Vec<f32> {
+        (0..rows * cols)
+            .map(|_| if rng.bernoulli(density) { rng.gaussian_f32() } else { 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let mut rng = Rng::new(1);
+        for &(r, c) in &[(1usize, 1usize), (7, 13), (40, 300), (5, 0)] {
+            let x = rand_sparse_dense(&mut rng, r, c, 0.2);
+            let csr = CsrMatrix::from_dense(r, c, &x);
+            assert_eq!(csr.to_dense().data, x, "({r},{c})");
+        }
+    }
+
+    #[test]
+    fn sum_sq_matches_gemm_sum_sq_bitwise() {
+        // including rows that span KC chunk boundaries
+        let mut rng = Rng::new(2);
+        for &cols in &[3usize, 255, 256, 257, 700] {
+            let x = rand_sparse_dense(&mut rng, 4, cols, 0.3);
+            let csr = CsrMatrix::from_dense(4, cols, &x);
+            for i in 0..4 {
+                let want = gemm::sum_sq(&x[i * cols..(i + 1) * cols]);
+                assert_eq!(csr.sum_sq[i].to_bits(), want.to_bits(), "cols={cols} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_dot_dense_matches_sum_sq_on_self() {
+        let mut rng = Rng::new(3);
+        let cols = 600;
+        let x = rand_sparse_dense(&mut rng, 6, cols, 0.15);
+        let csr = CsrMatrix::from_dense(6, cols, &x);
+        let mut buf = vec![0.0f32; cols];
+        for i in 0..6 {
+            csr.densify_row_into(i, &mut buf);
+            assert_eq!(csr.row_dot_dense(i, &buf).to_bits(), csr.sum_sq[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn select_gathers_rows_and_norms() {
+        let mut rng = Rng::new(4);
+        let x = rand_sparse_dense(&mut rng, 10, 20, 0.4);
+        let csr = CsrMatrix::from_dense(10, 20, &x);
+        let sel = csr.select(&[7, 0, 7]);
+        assert_eq!(sel.rows, 3);
+        let d = sel.to_dense();
+        assert_eq!(d.row(0), &x[7 * 20..8 * 20]);
+        assert_eq!(d.row(1), &x[..20]);
+        assert_eq!(d.row(2), d.row(0));
+        assert_eq!(sel.sum_sq[0].to_bits(), csr.sum_sq[7].to_bits());
+    }
+
+    #[test]
+    fn pad_rows_appends_empty_rows() {
+        let csr = CsrMatrix::from_dense(2, 3, &[1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        let p = csr.pad_rows(5);
+        assert_eq!(p.rows, 5);
+        assert_eq!(p.nnz(), csr.nnz());
+        let (c, v) = p.row(4);
+        assert!(c.is_empty() && v.is_empty());
+        assert_eq!(p.sum_sq[4], 0.0);
+        let mut buf = [9.0f32; 3];
+        p.densify_row_into(3, &mut buf);
+        assert_eq!(buf, [0.0; 3]);
+    }
+
+    #[test]
+    fn builder_drops_explicit_zeros() {
+        let mut b = CsrBuilder::new();
+        b.push_row(&[(0, 1.0), (2, 0.0), (5, -2.0)]);
+        b.push_row(&[]);
+        let m = b.finish(0);
+        assert_eq!((m.rows, m.cols, m.nnz()), (2, 6, 2));
+        assert_eq!(m.row(0), (&[0u32, 5][..], &[1.0f32, -2.0][..]));
+        assert!((m.density() - 2.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn format_parses() {
+        assert_eq!(Format::parse("csr").unwrap(), Format::Csr);
+        assert_eq!(Format::parse("dense").unwrap(), Format::Dense);
+        assert_eq!(Format::parse("auto").unwrap(), Format::Auto);
+        assert!(Format::parse("nope").is_err());
+        assert_eq!(Format::Csr.name(), "csr");
+    }
+
+    #[test]
+    fn design_reports_shape_and_kind() {
+        let d = Design::Sparse(CsrMatrix::from_dense(2, 3, &[0.0; 6]));
+        assert!(d.is_sparse());
+        assert_eq!((d.rows(), d.cols()), (2, 3));
+        let m = Design::Dense(crate::linalg::Matrix::zeros(4, 5));
+        assert!(!m.is_sparse());
+        assert_eq!(m.bytes(), 80);
+    }
+}

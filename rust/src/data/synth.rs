@@ -155,16 +155,16 @@ mod tests {
         let spec = SynthSpec::default();
         let a = generate(&spec, 200, 7, "a");
         let b = generate(&spec, 200, 7, "b");
-        assert_eq!(a.x, b.x);
+        assert_eq!(a.dense_x(), b.dense_x());
         assert_eq!(a.y, b.y);
         let c = generate(&spec, 200, 8, "c");
-        assert_ne!(a.x, c.x);
+        assert_ne!(a.dense_x(), c.dense_x());
     }
 
     #[test]
     fn features_in_unit_cube() {
         let ds = generate(&SynthSpec::default(), 500, 1, "u");
-        assert!(ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(ds.dense_x().iter().all(|&v| (0.0..=1.0).contains(&v)));
     }
 
     #[test]

@@ -124,6 +124,38 @@ impl Engine {
         Ok(k)
     }
 
+    /// [`Engine::rbf_block`] over a CSR row range: `K[t x b]` for rows
+    /// `[row0, row0 + t)` of a sparse design against a dense `b x d`
+    /// block (rows past `a.rows` are all-zero tile padding). CPU engines
+    /// route through the row-blocked SpMM (`linalg::spmm`, deterministic
+    /// for every thread count, exact RBF diagonals — DESIGN.md §SPARSE).
+    /// The xla engine has no sparse artifact: it densifies the row range
+    /// and runs the standard kernel (same numbers, dense memory cost).
+    pub fn rbf_block_csr(
+        &self,
+        a: &crate::data::CsrMatrix,
+        row0: usize,
+        t: usize,
+        xb: &[f32],
+        b: usize,
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        let d = a.cols;
+        assert_eq!(xb.len(), b * d);
+        if self.is_xla() {
+            let mut dense = vec![0.0f32; t * d];
+            for r in 0..t {
+                if row0 + r < a.rows {
+                    a.densify_row_into(row0 + r, &mut dense[r * d..(r + 1) * d]);
+                }
+            }
+            return self.rbf_block(&dense, t, d, xb, b, gamma);
+        }
+        let mut k = vec![0.0f32; t * b];
+        linalg::spmm::rbf_csr_blocked(self.threads(), a, row0, t, xb, b, gamma, &mut k);
+        Ok(k)
+    }
+
     /// [`Engine::rbf_block`] with the b-side squared norms supplied by the
     /// caller — the serve-time entry point. A model registry computes
     /// `bnorms` once at registration (`gemm::sum_sq` order, so the
@@ -226,7 +258,14 @@ impl Engine {
     }
 
     /// Masked damped CG solve (see model.py cg_solve for the convention).
-    pub fn cg_solve(&self, h: &[f32], b: usize, g: &[f32], bmask: &[f32], reg: f32) -> Result<Vec<f32>> {
+    pub fn cg_solve(
+        &self,
+        h: &[f32],
+        b: usize,
+        g: &[f32],
+        bmask: &[f32],
+        reg: f32,
+    ) -> Result<Vec<f32>> {
         assert_eq!(h.len(), b * b);
         assert_eq!(g.len(), b);
         assert_eq!(bmask.len(), b);
@@ -251,7 +290,14 @@ impl Engine {
     }
 
     /// Candidate-scoring accumulators for one tile.
-    pub fn score_tile(&self, kc: &[f32], t: usize, s: usize, r: &[f32], a: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+    pub fn score_tile(
+        &self,
+        kc: &[f32],
+        t: usize,
+        s: usize,
+        r: &[f32],
+        a: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
         assert_eq!(kc.len(), t * s);
         assert_eq!(r.len(), t);
         assert_eq!(a.len(), t);
@@ -391,9 +437,11 @@ mod tests {
             assert!((s.loss - base.loss).abs() / base.loss.max(1.0) < 1e-3,
                 "{} loss {} vs {}", e.name(), s.loss, base.loss);
             assert_eq!(s.nerr, base.nerr, "{}", e.name());
-            let gmax: f32 = s.grad.iter().zip(&base.grad).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+            let gmax: f32 =
+                s.grad.iter().zip(&base.grad).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
             assert!(gmax < 2e-2, "{} grad diff {gmax}", e.name());
-            let hmax: f32 = s.hess.iter().zip(&base.hess).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+            let hmax: f32 =
+                s.hess.iter().zip(&base.hess).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
             assert!(hmax < 0.5, "{} hess diff {hmax}", e.name());
         }
     }
@@ -447,6 +495,31 @@ mod tests {
             let df: f32 = f.iter().zip(&f0).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
             assert!(df < 1e-2, "{}: {df}", e.name());
         }
+    }
+
+    #[test]
+    fn rbf_block_csr_matches_dense_bitwise() {
+        use crate::data::CsrMatrix;
+        let mut rng = Rng::new(12);
+        let (t, d, b) = (40, 300, 6);
+        let x: Vec<f32> = (0..t * d)
+            .map(|_| if rng.bernoulli(0.1) { rng.uniform_f32() } else { 0.0 })
+            .collect();
+        let xb = rand_vec(&mut rng, b * d);
+        let csr = CsrMatrix::from_dense(t, d, &x);
+        for e in [Engine::cpu_seq(), Engine::cpu_par(4)] {
+            let dense = e.rbf_block(&x, t, d, &xb, b, 0.6).unwrap();
+            let sparse = e.rbf_block_csr(&csr, 0, t, &xb, b, 0.6).unwrap();
+            for (a, w) in sparse.iter().zip(&dense) {
+                assert_eq!(a.to_bits(), w.to_bits(), "{}", e.name());
+            }
+        }
+        // padded row range past a.rows scores like zero rows
+        let pad = Engine::cpu_seq().rbf_block_csr(&csr, t - 2, 4, &xb, b, 0.6).unwrap();
+        let mut zrows = x[(t - 2) * d..].to_vec();
+        zrows.resize(4 * d, 0.0);
+        let want = Engine::cpu_seq().rbf_block(&zrows, 4, d, &xb, b, 0.6).unwrap();
+        assert_eq!(pad, want);
     }
 
     #[test]

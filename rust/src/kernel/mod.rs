@@ -7,11 +7,17 @@
 //! issue every iteration), and whole blocks route through the packed
 //! GEMM itself: gather, one `A·Bᵀ` cross-product call, then a fused
 //! per-kind transform — the same formulation `Engine::rbf_block` uses.
+//!
+//! Storage dispatch happens here: datasets with a CSR design route the
+//! same row/block shapes through the SpMM substrate (`linalg::spmm`,
+//! DESIGN.md §SPARSE) — the row side stays sparse, only the small
+//! column-index side (working set / basis / candidates) densifies — so
+//! every solver inherits the sparse fast path with no API change.
 
 pub mod cache;
 
-use crate::data::Dataset;
-use crate::linalg::gemm;
+use crate::data::{CsrMatrix, Dataset, Design};
+use crate::linalg::{gemm, spmm};
 use crate::pool;
 use crate::pool::SendPtr;
 
@@ -59,9 +65,34 @@ impl KernelKind {
 
 /// Compute one kernel row k(x_i, .) against every row of `ds` into `out`.
 /// `threads = 1` is the LibSVM single-core path; more threads is the
-/// LibSVM+OpenMP path (the paper's most basic speedup).
+/// LibSVM+OpenMP path (the paper's most basic speedup). Sparse designs
+/// evaluate each pair in O(nnz_j) via the chunk-ordered CSR dot — the
+/// diagonal entry still cancels to an exact RBF 1.0 — and are
+/// deterministic for every thread count like the dense path.
 pub fn kernel_row(kind: &KernelKind, ds: &Dataset, i: usize, threads: usize, out: &mut [f32]) {
     assert_eq!(out.len(), ds.n);
+    if let Design::Sparse(csr) = &ds.design {
+        let mut xi = vec![0.0f32; ds.d];
+        csr.densify_row_into(i, &mut xi);
+        let xi_sq = csr.sum_sq[i];
+        pool::parallel_chunks_mut(threads, out, 256, |c, slice| {
+            for (off, slot) in slice.iter_mut().enumerate() {
+                let j = c * 256 + off;
+                let dot = csr.row_dot_dense(j, &xi);
+                *slot = match *kind {
+                    KernelKind::Rbf { gamma } => {
+                        let d2 = (xi_sq + csr.sum_sq[j] - 2.0 * dot).max(0.0);
+                        (-gamma * d2).exp()
+                    }
+                    KernelKind::Linear => dot,
+                    KernelKind::Poly { degree, gamma, coef0 } => {
+                        (gamma * dot + coef0).powi(degree)
+                    }
+                };
+            }
+        });
+        return;
+    }
     let xi: Vec<f32> = ds.row(i).to_vec();
     let out_ptr = SendPtr::new(out.as_mut_ptr());
     pool::parallel_for(threads, ds.n, 256, |j| {
@@ -71,13 +102,17 @@ pub fn kernel_row(kind: &KernelKind, ds: &Dataset, i: usize, threads: usize, out
 }
 
 /// Dense kernel block K[rows x cols] for row indices `ri` against column
-/// indices `ci` (row-major into `out`). Routed through the packed GEMM:
-/// gather the index sets into contiguous staging blocks (skipped when an
-/// index set is the identity prefix — the `full_kernel` case), compute
-/// the cross-product block with one blocked `A·Bᵀ`, then apply the
-/// kernel's scalar transform in a fused parallel row pass. RBF norms use
-/// the GEMM's accumulation order (`gemm::sum_sq`), so diagonal entries
-/// of a symmetric block come out as exactly 1.0.
+/// indices `ci` (row-major into `out`). Dense designs route through the
+/// packed GEMM: gather the index sets into contiguous staging blocks
+/// (skipped when an index set is the identity prefix — the `full_kernel`
+/// case), compute the cross-product block with one blocked `A·Bᵀ`, then
+/// apply the kernel's scalar transform in a fused parallel row pass.
+/// Sparse designs keep the row side in CSR and route through the
+/// row-blocked SpMM (`linalg::spmm`); only the `ci` side (working set /
+/// basis — small by construction) densifies. Either way RBF norms use
+/// the substrate's own accumulation order, so diagonal entries of a
+/// symmetric block come out as exactly 1.0, and output is bit-identical
+/// for every thread count.
 pub fn kernel_block(
     kind: &KernelKind,
     ds: &Dataset,
@@ -91,6 +126,26 @@ pub fn kernel_block(
     if m == 0 || n == 0 {
         return;
     }
+    let is_prefix = |idx: &[usize]| idx.iter().enumerate().all(|(q, &i)| q == i);
+    if let Design::Sparse(csr) = &ds.design {
+        let sub_store;
+        let acsr: &CsrMatrix = if is_prefix(ri) {
+            csr
+        } else {
+            sub_store = csr.select(ri);
+            &sub_store
+        };
+        // Densify the ci side in column blocks: with ci = all rows of a
+        // wide sparse dataset (the `full_kernel` case, rcv1-class d), a
+        // one-shot gather would materialize the whole n x d dense matrix
+        // (plus the SpMM's d x n transpose) that CSR storage exists to
+        // avoid. Staging is capped at ~32 MB per buffer; column blocks
+        // change no per-element accumulation, so values stay
+        // bit-identical to the unblocked call.
+        let bw = n.min(((32 << 20) / (4 * d.max(1))).max(16));
+        kernel_block_csr(kind, acsr, m, csr, ci, threads, bw, out);
+        return;
+    }
     let gather = |idx: &[usize]| -> Vec<f32> {
         let mut g = vec![0.0f32; idx.len() * d];
         for (q, &i) in idx.iter().enumerate() {
@@ -98,17 +153,16 @@ pub fn kernel_block(
         }
         g
     };
-    let is_prefix = |idx: &[usize]| idx.iter().enumerate().all(|(q, &i)| q == i);
     let a_store;
     let am: &[f32] = if is_prefix(ri) {
-        &ds.x[..m * d]
+        &ds.dense_x()[..m * d]
     } else {
         a_store = gather(ri);
         &a_store
     };
     let b_store;
     let bm: &[f32] = if is_prefix(ci) {
-        &ds.x[..n * d]
+        &ds.dense_x()[..n * d]
     } else {
         b_store = gather(ci);
         &b_store
@@ -126,6 +180,53 @@ pub fn kernel_block(
                 }
             });
         }
+    }
+}
+
+/// The sparse arm of [`kernel_block`]: rows `[0, m)` of `acsr` against
+/// the `ci` rows of `src`, densified `bw` columns at a time (see the
+/// call site for why). Split out so tests can force small `bw` values.
+#[allow(clippy::too_many_arguments)]
+fn kernel_block_csr(
+    kind: &KernelKind,
+    acsr: &CsrMatrix,
+    m: usize,
+    src: &CsrMatrix,
+    ci: &[usize],
+    threads: usize,
+    bw: usize,
+    out: &mut [f32],
+) {
+    let (n, d) = (ci.len(), acsr.cols);
+    let bw = bw.clamp(1, n.max(1));
+    let mut bm = vec![0.0f32; bw * d];
+    let mut tmp = vec![0.0f32; m * bw];
+    let mut c0 = 0usize;
+    while c0 < n {
+        let cw = bw.min(n - c0);
+        for (q, &j) in ci[c0..c0 + cw].iter().enumerate() {
+            src.densify_row_into(j, &mut bm[q * d..(q + 1) * d]);
+        }
+        let bm_blk = &bm[..cw * d];
+        let tmp_blk = &mut tmp[..m * cw];
+        match *kind {
+            KernelKind::Rbf { gamma } => {
+                spmm::rbf_csr_blocked(threads, acsr, 0, m, bm_blk, cw, gamma, tmp_blk);
+            }
+            KernelKind::Linear => spmm::csr_gemm_nt(threads, acsr, 0, m, bm_blk, cw, tmp_blk),
+            KernelKind::Poly { degree, gamma, coef0 } => {
+                spmm::csr_gemm_nt(threads, acsr, 0, m, bm_blk, cw, tmp_blk);
+                pool::parallel_chunks_mut(threads, tmp_blk, cw, |_r, row| {
+                    for slot in row.iter_mut() {
+                        *slot = (gamma * *slot + coef0).powi(degree);
+                    }
+                });
+            }
+        }
+        for r in 0..m {
+            out[r * n + c0..r * n + c0 + cw].copy_from_slice(&tmp_blk[r * cw..(r + 1) * cw]);
+        }
+        c0 += cw;
     }
 }
 
@@ -269,6 +370,105 @@ mod tests {
                 assert_eq!(k1[i * 70 + j].to_bits(), k1[j * 70 + i].to_bits());
             }
         }
+    }
+
+    fn sparse_dataset(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * d)
+            .map(|_| if rng.bernoulli(0.1) { rng.uniform_f32() } else { 0.0 })
+            .collect();
+        let y: Vec<f32> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        Dataset::new_binary("t", d, x, y)
+    }
+
+    #[test]
+    fn sparse_kernel_block_bit_identical_to_dense() {
+        // the SpMM path's KC-chunked accumulation matches the packed
+        // GEMM's per-element order, and zeros are identity adds — so CSR
+        // storage changes no bit of any kernel block (DESIGN.md §SPARSE)
+        let dense = sparse_dataset(60, 300, 11); // spans a KC boundary
+        let sparse = dense.clone().with_format(crate::data::Format::Csr);
+        let ri: Vec<usize> = (0..60).collect(); // identity prefix
+        let ci = [3usize, 0, 59, 17, 17, 8];
+        let gathered = [5usize, 1, 44]; // non-prefix row gather
+        for kind in [
+            KernelKind::Rbf { gamma: 0.7 },
+            KernelKind::Linear,
+            KernelKind::Poly { degree: 3, gamma: 0.5, coef0: 1.0 },
+        ] {
+            let mut kd = vec![0.0; ri.len() * ci.len()];
+            let mut ks = vec![0.0; ri.len() * ci.len()];
+            kernel_block(&kind, &dense, &ri, &ci, 4, &mut kd);
+            kernel_block(&kind, &sparse, &ri, &ci, 4, &mut ks);
+            for (a, b) in ks.iter().zip(&kd) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", kind.name());
+            }
+            let mut gd = vec![0.0; gathered.len() * ci.len()];
+            let mut gs = vec![0.0; gathered.len() * ci.len()];
+            kernel_block(&kind, &dense, &gathered, &ci, 2, &mut gd);
+            kernel_block(&kind, &sparse, &gathered, &ci, 2, &mut gs);
+            assert_eq!(gd, gs, "{} gather", kind.name());
+        }
+    }
+
+    #[test]
+    fn sparse_kernel_block_thread_count_deterministic() {
+        let ds = sparse_dataset(70, 40, 12).with_format(crate::data::Format::Csr);
+        let kind = KernelKind::Rbf { gamma: 1.3 };
+        let idx: Vec<usize> = (0..70).collect();
+        let mut k1 = vec![0.0; 70 * 70];
+        kernel_block(&kind, &ds, &idx, &idx, 1, &mut k1);
+        for threads in [2usize, 8] {
+            let mut kt = vec![0.0; 70 * 70];
+            kernel_block(&kind, &ds, &idx, &idx, threads, &mut kt);
+            assert_eq!(k1, kt, "threads {threads}");
+        }
+        for i in 0..70 {
+            assert_eq!(k1[i * 70 + i], 1.0, "diag {i}");
+        }
+    }
+
+    #[test]
+    fn sparse_column_blocking_changes_no_bit() {
+        // small forced block widths must reproduce the one-shot call
+        // exactly — the memory-bounded full_kernel path depends on it
+        let ds = sparse_dataset(40, 90, 14).with_format(crate::data::Format::Csr);
+        let csr = ds.csr().unwrap();
+        let ci = [7usize, 0, 33, 12, 25, 25, 39, 2, 18];
+        for kind in [
+            KernelKind::Rbf { gamma: 0.7 },
+            KernelKind::Linear,
+            KernelKind::Poly { degree: 2, gamma: 0.4, coef0: 0.5 },
+        ] {
+            let mut whole = vec![0.0; 40 * ci.len()];
+            kernel_block_csr(&kind, csr, 40, csr, &ci, 4, ci.len(), &mut whole);
+            for bw in [1usize, 2, 4] {
+                let mut blocked = vec![0.0; 40 * ci.len()];
+                kernel_block_csr(&kind, csr, 40, csr, &ci, 4, bw, &mut blocked);
+                assert_eq!(whole, blocked, "{} bw={bw}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_kernel_row_close_to_eval_with_exact_diag() {
+        let dense = sparse_dataset(80, 33, 13);
+        let sparse = dense.clone().with_format(crate::data::Format::Csr);
+        for kind in [KernelKind::Rbf { gamma: 0.9 }, KernelKind::Linear] {
+            let mut rs = vec![0.0; 80];
+            kernel_row(&kind, &sparse, 17, 4, &mut rs);
+            for j in 0..80 {
+                let e = kind.eval(dense.row(17), dense.row(j));
+                assert!((rs[j] - e).abs() < 1e-5, "{} j={j}: {} vs {e}", kind.name(), rs[j]);
+            }
+            // thread-count invariance
+            let mut r1 = vec![0.0; 80];
+            kernel_row(&kind, &sparse, 17, 1, &mut r1);
+            assert_eq!(rs, r1);
+        }
+        let mut row = vec![0.0; 80];
+        kernel_row(&KernelKind::Rbf { gamma: 0.9 }, &sparse, 17, 2, &mut row);
+        assert_eq!(row[17], 1.0, "sparse RBF self-similarity must be exactly 1");
     }
 
     #[test]

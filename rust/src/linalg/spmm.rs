@@ -1,0 +1,322 @@
+//! Row-blocked CSR x dense-transpose SpMM — the sparse counterpart of
+//! the packed GEMM in [`super::gemm`] (DESIGN.md §SPARSE).
+//!
+//! The shape every sparse kernel block needs is `C[t x b] = A · Bᵀ`
+//! where A is t CSR rows of the design matrix (the tile / working set /
+//! whole training set) and B is a small dense `b x d` block (basis
+//! vectors, candidates, query batch). B is repacked once per call into
+//! its transpose `Bᵀ[d x b]`, so the inner loop is a pure axpy: for each
+//! stored `(col, v)` of a CSR row, `acc[0..b] += v * Bᵀ[col][0..b]` —
+//! contiguous, vectorizable, and O(nnz · b) instead of O(t · d · b).
+//!
+//! **Determinism.** Parallelism is over row blocks: every output row is
+//! owned by exactly one task and accumulated sequentially in stored
+//! (ascending-column) order, so the result is bit-identical for every
+//! thread count — the same contract as the dense substrate.
+//!
+//! **Exact diagonals.** Accumulation is chunked at `KC` column
+//! boundaries exactly like [`gemm::sum_sq`] (a partial per chunk, chunks
+//! added in order; all-zero chunks are identity adds). Therefore the
+//! cross product of a row with its own densified copy reproduces
+//! `CsrMatrix::sum_sq` bit for bit, `‖x‖² + ‖x‖² - 2·x·x` cancels to an
+//! exact 0, and RBF diagonals come out exactly 1.0 — the same contract
+//! the dense `rbf_blocked` documents.
+
+use crate::data::sparse::CsrMatrix;
+use crate::linalg::gemm::{self, KC};
+use crate::pool;
+
+/// Rows of C owned by one parallel task.
+const RB: usize = 8;
+
+/// Repack a row-major `b x d` block into its transpose `d x b` so the
+/// SpMM inner loop streams contiguous length-b panels. Each output row
+/// is written by exactly one task (deterministic trivially).
+fn pack_bt(threads: usize, bm: &[f32], b: usize, d: usize) -> Vec<f32> {
+    assert_eq!(bm.len(), b * d);
+    let mut bt = vec![0.0f32; d * b];
+    pool::parallel_chunks_mut(threads, &mut bt, b, |p, row| {
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = bm[j * d + p];
+        }
+    });
+    bt
+}
+
+/// `C[t x b] = A[row0..row0+t] · Bᵀ` with A in CSR and B dense row-major
+/// `b x d` (`d = a.cols`). Rows at or past `a.rows` are treated as empty
+/// (all-zero tile padding). Bit-identical for every `threads` value.
+pub fn csr_gemm_nt(
+    threads: usize,
+    a: &CsrMatrix,
+    row0: usize,
+    t: usize,
+    bm: &[f32],
+    b: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), t * b);
+    if t == 0 || b == 0 {
+        return;
+    }
+    assert_eq!(bm.len(), b * a.cols);
+    let bt = pack_bt(threads, bm, b, a.cols);
+    csr_gemm_nt_packed(threads, a, row0, t, &bt, b, out);
+}
+
+/// [`csr_gemm_nt`] over an already-transposed `d x b` B block (callers
+/// that reuse one B across several A tiles pack it once).
+pub fn csr_gemm_nt_packed(
+    threads: usize,
+    a: &CsrMatrix,
+    row0: usize,
+    t: usize,
+    bt: &[f32],
+    b: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), t * b);
+    if t == 0 || b == 0 {
+        return;
+    }
+    assert_eq!(bt.len(), a.cols * b);
+    pool::parallel_chunks_mut(threads, out, RB * b, |blk, slice| {
+        let mut partial = vec![0.0f32; b];
+        let rows_here = slice.len() / b;
+        for local in 0..rows_here {
+            let r = row0 + blk * RB + local;
+            let total = &mut slice[local * b..(local + 1) * b];
+            total.iter_mut().for_each(|v| *v = 0.0);
+            if r >= a.rows {
+                continue;
+            }
+            let (cols, vals) = a.row(r);
+            let mut boundary = KC as u32;
+            let mut dirty = false;
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c >= boundary {
+                    if dirty {
+                        for (tv, pv) in total.iter_mut().zip(partial.iter_mut()) {
+                            *tv += *pv;
+                            *pv = 0.0;
+                        }
+                        dirty = false;
+                    }
+                    boundary = (c / KC as u32 + 1) * KC as u32;
+                }
+                let panel = &bt[c as usize * b..(c as usize + 1) * b];
+                for (pv, bv) in partial.iter_mut().zip(panel) {
+                    *pv += v * bv;
+                }
+                dirty = true;
+            }
+            if dirty {
+                for (tv, pv) in total.iter_mut().zip(partial.iter_mut()) {
+                    *tv += *pv;
+                    *pv = 0.0;
+                }
+            }
+        }
+    });
+}
+
+/// Sparse-A RBF block: `K[t x b] = exp(-gamma · max(0, ‖aᵢ‖² + ‖bⱼ‖² -
+/// 2·aᵢ·bⱼ))` for CSR rows `[row0, row0 + t)` against a dense `b x d`
+/// block. The a-side norms are the CSR's precomputed [`CsrMatrix::sum_sq`]
+/// (padding rows past `a.rows` count as zero norms, matching the dense
+/// zero-row tiles); the b-side norms use [`gemm::sum_sq`] like the dense
+/// path. Deterministic for every thread count; symmetric-block diagonals
+/// are exactly 1.0 (module docs).
+pub fn rbf_csr_blocked(
+    threads: usize,
+    a: &CsrMatrix,
+    row0: usize,
+    t: usize,
+    xb: &[f32],
+    b: usize,
+    gamma: f32,
+    out: &mut [f32],
+) {
+    let d = a.cols;
+    let bsq: Vec<f32> = (0..b).map(|j| gemm::sum_sq(&xb[j * d..(j + 1) * d])).collect();
+    rbf_csr_blocked_pre(threads, a, row0, t, xb, b, gamma, &bsq, out);
+}
+
+/// [`rbf_csr_blocked`] with the b-side squared norms supplied by the
+/// caller (they must be in `gemm::sum_sq` order for the exact-diagonal
+/// contract to survive).
+#[allow(clippy::too_many_arguments)]
+pub fn rbf_csr_blocked_pre(
+    threads: usize,
+    a: &CsrMatrix,
+    row0: usize,
+    t: usize,
+    xb: &[f32],
+    b: usize,
+    gamma: f32,
+    bsq: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), t * b);
+    assert_eq!(bsq.len(), b);
+    if t == 0 || b == 0 {
+        return;
+    }
+    csr_gemm_nt(threads, a, row0, t, xb, b, out);
+    pool::parallel_chunks_mut(threads, out, b, |i, row| {
+        let r = row0 + i;
+        let asq = if r < a.rows { a.sum_sq[r] } else { 0.0 };
+        for (j, slot) in row.iter_mut().enumerate() {
+            let d2 = (asq + bsq[j] - 2.0 * *slot).max(0.0);
+            *slot = (-gamma * d2).exp();
+        }
+    });
+}
+
+/// Dense-queries x sparse-vectors RBF block — the serve-time shape:
+/// `K[t x b] = exp(-gamma·d²(xᵢ, svⱼ))` for a dense query batch
+/// `x[t x d]` against a CSR matrix of b support vectors, with the SV
+/// norms precomputed at registration (`CsrMatrix::sum_sq` order). The
+/// cross products run through the same SpMM with the operands swapped
+/// (`Kᵀ = SV · Xᵀ`); the fused exp pass transposes back, so `out` is the
+/// usual row-major `t x b`. Deterministic for every thread count.
+pub fn rbf_dense_csr_pre(
+    threads: usize,
+    x: &[f32],
+    t: usize,
+    sv: &CsrMatrix,
+    gamma: f32,
+    out: &mut [f32],
+) {
+    let b = sv.rows;
+    assert_eq!(x.len(), t * sv.cols);
+    assert_eq!(out.len(), t * b);
+    if t == 0 || b == 0 {
+        return;
+    }
+    let mut kt = vec![0.0f32; b * t];
+    csr_gemm_nt(threads, sv, 0, b, x, t, &mut kt);
+    let d = sv.cols;
+    pool::parallel_chunks_mut(threads, out, b, |i, row| {
+        let xsq = gemm::sum_sq(&x[i * d..(i + 1) * d]);
+        for (j, slot) in row.iter_mut().enumerate() {
+            let d2 = (xsq + sv.sum_sq[j] - 2.0 * kt[j * t + i]).max(0.0);
+            *slot = (-gamma * d2).exp();
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm_nt_naive, Matrix};
+    use crate::rng::Rng;
+
+    fn rand_sparse(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> (Vec<f32>, CsrMatrix) {
+        let x: Vec<f32> = (0..rows * cols)
+            .map(|_| if rng.bernoulli(density) { rng.gaussian_f32() } else { 0.0 })
+            .collect();
+        let csr = CsrMatrix::from_dense(rows, cols, &x);
+        (x, csr)
+    }
+
+    #[test]
+    fn spmm_matches_naive_reference() {
+        let mut rng = Rng::new(1);
+        for &(t, b, d) in &[(1usize, 1usize, 1usize), (13, 7, 300), (40, 9, 257), (33, 16, 64)] {
+            let (xa, csr) = rand_sparse(&mut rng, t, d, 0.2);
+            let bm: Vec<f32> = (0..b * d).map(|_| rng.gaussian_f32()).collect();
+            let mut out = vec![0.0f32; t * b];
+            csr_gemm_nt(4, &csr, 0, t, &bm, b, &mut out);
+            let a = Matrix::from_vec(t, d, xa);
+            let bmat = Matrix::from_vec(b, d, bm);
+            let mut e = Matrix::zeros(t, b);
+            gemm_nt_naive(1, &a, &bmat, &mut e);
+            for (g, w) in out.iter().zip(&e.data) {
+                assert!((g - w).abs() < 1e-3 * (d as f32).sqrt(), "({t},{b},{d}): {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(2);
+        let (_, csr) = rand_sparse(&mut rng, 300, 520, 0.1);
+        let bm: Vec<f32> = (0..24 * 520).map(|_| rng.gaussian_f32()).collect();
+        let mut base = vec![0.0f32; 300 * 24];
+        csr_gemm_nt(1, &csr, 0, 300, &bm, 24, &mut base);
+        for &threads in &[2usize, 8] {
+            let mut got = vec![0.0f32; 300 * 24];
+            csr_gemm_nt(threads, &csr, 0, 300, &bm, 24, &mut got);
+            for (g, w) in got.iter().zip(&base) {
+                assert_eq!(g.to_bits(), w.to_bits(), "threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn padded_rows_are_zero_and_offsets_work() {
+        let mut rng = Rng::new(3);
+        let (x, csr) = rand_sparse(&mut rng, 10, 40, 0.3);
+        let bm: Vec<f32> = (0..5 * 40).map(|_| rng.gaussian_f32()).collect();
+        // rows [6, 14): 4 real rows then 4 past-the-end rows
+        let mut out = vec![7.0f32; 8 * 5];
+        csr_gemm_nt(2, &csr, 6, 8, &bm, 5, &mut out);
+        let a = Matrix::from_vec(10, 40, x);
+        let bmat = Matrix::from_vec(5, 40, bm);
+        let mut e = Matrix::zeros(10, 5);
+        gemm_nt_naive(1, &a, &bmat, &mut e);
+        for r in 0..4 {
+            for j in 0..5 {
+                assert!((out[r * 5 + j] - e.at(6 + r, j)).abs() < 1e-3);
+            }
+        }
+        assert!(out[4 * 5..].iter().all(|&v| v == 0.0), "padding rows must zero");
+    }
+
+    #[test]
+    fn rbf_diag_exactly_one_and_matches_dense_path() {
+        let mut rng = Rng::new(4);
+        for &(n, d) in &[(20usize, 300usize), (33, 64), (9, 700)] {
+            let (x, csr) = rand_sparse(&mut rng, n, d, 0.15);
+            let mut sp = vec![0.0f32; n * n];
+            rbf_csr_blocked(3, &csr, 0, n, &x, n, 0.7, &mut sp);
+            for i in 0..n {
+                assert_eq!(sp[i * n + i], 1.0, "({n},{d}) diag {i}");
+            }
+            let mut dn = vec![0.0f32; n * n];
+            gemm::rbf_blocked(3, &x, n, &x, n, d, 0.7, &mut dn);
+            for (a, b) in sp.iter().zip(&dn) {
+                assert!((a - b).abs() < 1e-6, "({n},{d}): {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_csr_serve_path_matches_sparse_a_path() {
+        let mut rng = Rng::new(5);
+        let (sv_dense, sv) = rand_sparse(&mut rng, 17, 90, 0.2);
+        let x: Vec<f32> = (0..11 * 90).map(|_| rng.uniform_f32()).collect();
+        let mut serve = vec![0.0f32; 11 * 17];
+        rbf_dense_csr_pre(4, &x, 11, &sv, 0.5, &mut serve);
+        // reference: dense queries vs densified SVs through the dense path
+        let mut want = vec![0.0f32; 11 * 17];
+        gemm::rbf_blocked(1, &x, 11, &sv_dense, 17, 90, 0.5, &mut want);
+        for (a, b) in serve.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // thread-count determinism
+        let mut one = vec![0.0f32; 11 * 17];
+        rbf_dense_csr_pre(1, &x, 11, &sv, 0.5, &mut one);
+        assert_eq!(serve, one);
+    }
+
+    #[test]
+    fn empty_shapes_are_fine() {
+        let csr = CsrMatrix::empty(0, 5);
+        let mut out = vec![];
+        csr_gemm_nt(4, &csr, 0, 0, &[1.0; 15], 3, &mut out);
+        let mut out2 = vec![];
+        rbf_csr_blocked(4, &csr, 0, 0, &[], 0, 1.0, &mut out2);
+    }
+}

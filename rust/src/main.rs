@@ -22,15 +22,21 @@ USAGE: wu-svm <command> [--flags]
 COMMANDS
   train     train one model
             --dataset adult|covertype|kdd99|mitfaces|fd|epsilon|mnist8m
+            --input data.libsvm [--test-input t.libsvm]  (real files; else
+              a generated analog of --dataset; default test = 80/20 split)
+            --format dense|csr|auto  (design-matrix storage; auto picks
+              CSR at <= 25% density; files default auto, analogs dense)
             --solver smo|wss|mu|primal|spsvm   --engine cpu-seq|cpu-par|xla
             --scale 0.05  --c --gamma --eps --max-basis --seed
             --time-budget-secs T --max-iters N  (training budget)
             --save model.txt  (unknown --keys are rejected)
   predict   --model model.txt --input data.libsvm [--threads N]
+            [--format dense|csr|auto]
   datagen   --dataset KEY --scale S --out file.libsvm [--test-out f]
-  bench     table1|scaling|basis|wss|epsstop|memory|convergence
+  bench     table1|scaling|basis|wss|epsstop|memory|convergence|sparse
             table1: --dataset KEY|all --scale S --methods a,b --max-basis N
             convergence: --dataset KEY --scale S --solvers smo,spsvm --every K
+            sparse: --dataset kdd99 --scale S --solver spsvm  (csr vs dense)
   serve     --dataset KEY --scale S [--engine E] [--requests N] [--batch N]
             [--shards K] [--queue-cap N]  (multiclass datasets serve OvO)
   info      artifact manifest + runtime info
@@ -71,9 +77,14 @@ fn dispatch(args: &[String]) -> Result<()> {
 fn cmd_train(cfg: &Config) -> Result<()> {
     cfg.check_known(coordinator::TRAIN_KEYS)?;
     let job = TrainJob::from_config(cfg)?;
+    let source = job.input.clone().unwrap_or_else(|| job.dataset.clone());
     println!(
-        "training {} with {:?} on {:?} (scale {})",
-        job.dataset, job.solver, job.engine, job.scale
+        "training {} with {:?} on {:?} (scale {}, format {})",
+        source,
+        job.solver,
+        job.engine,
+        job.scale,
+        job.format.name()
     );
     let rec = coordinator::run(&job)?;
     println!(
@@ -109,8 +120,9 @@ fn cmd_predict(cfg: &Config) -> Result<()> {
     let model_path = cfg.get("model").ok_or_else(|| anyhow::anyhow!("--model required"))?;
     let input = cfg.get("input").ok_or_else(|| anyhow::anyhow!("--input required"))?;
     let threads = cfg.usize_or("threads", pool::default_threads())?;
+    let format = wu_svm::data::Format::parse(&cfg.str_or("format", "auto"))?;
     let model = SvmModel::load(Path::new(model_path))?;
-    let ds = libsvm::read_file(Path::new(input), model.d)?;
+    let ds = libsvm::read_file_with(Path::new(input), model.d, format)?;
     let t0 = std::time::Instant::now();
     let margins = model.decision_batch(&ds, threads);
     let dt = t0.elapsed();
@@ -223,8 +235,14 @@ fn cmd_bench(cfg: &Config) -> Result<()> {
                 .collect::<Result<_>>()?;
             println!("{}", experiments::run_convergence(&ds, scale, &solvers, every)?);
         }
+        "sparse" => {
+            let ds = cfg.str_or("dataset", "kdd99");
+            let scale = cfg.f64_or("scale", experiments::default_scale(&ds))?;
+            let solver = wu_svm::coordinator::Solver::parse(&cfg.str_or("solver", "spsvm"))?;
+            println!("{}", experiments::run_sparse_compare(&ds, scale, solver)?);
+        }
         other => bail!(
-            "unknown bench '{other}' (table1|scaling|basis|wss|epsstop|memory|convergence)"
+            "unknown bench '{other}' (table1|scaling|basis|wss|epsstop|memory|convergence|sparse)"
         ),
     }
     Ok(())
@@ -295,7 +313,11 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_info() -> Result<()> {
-    println!("wu-svm {} ({} threads available)", env!("CARGO_PKG_VERSION"), pool::default_threads());
+    println!(
+        "wu-svm {} ({} threads available)",
+        env!("CARGO_PKG_VERSION"),
+        pool::default_threads()
+    );
     match coordinator::shared_runtime() {
         Ok(rt) => {
             println!("artifacts: tile_t = {}, s_cand = {}", rt.tile_t(), rt.s_cand());

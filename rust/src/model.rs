@@ -46,9 +46,23 @@ impl SvmModel {
         f as f32
     }
 
-    /// Margins for every row of a dataset (threaded).
+    /// Margins for every row of a dataset (threaded). Sparse designs
+    /// densify row chunks into a per-task buffer; row order is fixed, so
+    /// the output is identical for every thread count either way.
     pub fn decision_batch(&self, ds: &Dataset, threads: usize) -> Vec<f32> {
         assert_eq!(ds.d, self.d);
+        if ds.is_sparse() {
+            const CHUNK: usize = 64;
+            let mut out = vec![0.0f32; ds.n];
+            pool::parallel_chunks_mut(threads, &mut out, CHUNK, |c, slice| {
+                let mut buf = vec![0.0f32; self.d];
+                for (off, slot) in slice.iter_mut().enumerate() {
+                    ds.row_into(c * CHUNK + off, &mut buf);
+                    *slot = self.decision(&buf);
+                }
+            });
+            return out;
+        }
         pool::parallel_map(threads, ds.n, |i| self.decision(ds.row(i)))
     }
 

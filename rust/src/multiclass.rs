@@ -292,7 +292,8 @@ mod tests {
     #[test]
     fn classifies_well_separated_classes() {
         let tr = three_class(600, 2);
-        let te = three_class(300, 2); // same centers (same seed), new draw? same seed -> same data; use subsample
+        // same centers (same seed), new draw? same seed -> same data; subsample
+        let te = three_class(300, 2);
         let te = te.subsample(200, 9);
         let ovo = OvoModel::train(&tr, |view, _, _| {
             Ok(smo::train(view, KernelKind::Rbf { gamma: 2.0 },

@@ -41,12 +41,27 @@ impl<T> SendPtr<T> {
     }
 }
 
-/// Number of worker threads to use by default (live cores, capped).
+/// Number of worker threads to use by default: the `POOL_THREADS` env
+/// var when set (how CI pins both extremes of the thread axis to
+/// exercise the bit-identical-across-thread-counts contracts), else the
+/// live core count, capped. Read once — the pool sizes itself off the
+/// first call.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(32)
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("POOL_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n.min(32);
+                }
+            }
+            eprintln!("warning: ignoring invalid POOL_THREADS='{v}'");
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(32)
+    })
 }
 
 /// Erased borrow of a submitter's drain closure. Only dereferenced while

@@ -62,7 +62,12 @@ pub fn fill_speedups(rows: &mut [Row], baseline_method: &str, baseline_arch: &st
 }
 
 /// Render a simple two-column sweep (ablation figures).
-pub fn render_sweep(title: &str, xlabel: &str, ylabels: &[&str], points: &[(f64, Vec<f64>)]) -> String {
+pub fn render_sweep(
+    title: &str,
+    xlabel: &str,
+    ylabels: &[&str],
+    points: &[(f64, Vec<f64>)],
+) -> String {
     let mut out = format!("== {title} ==\n{:<12}", xlabel);
     for y in ylabels {
         out.push_str(&format!(" {:>14}", y));

@@ -87,7 +87,14 @@ impl Manifest {
 
     /// Smallest bucket of `op` with t >= min_t, d >= min_d, b >= min_b,
     /// s >= min_s (0 requirements match anything).
-    pub fn lookup(&self, op: &str, min_t: usize, min_d: usize, min_b: usize, min_s: usize) -> Option<&Entry> {
+    pub fn lookup(
+        &self,
+        op: &str,
+        min_t: usize,
+        min_d: usize,
+        min_b: usize,
+        min_s: usize,
+    ) -> Option<&Entry> {
         self.by_op.get(op)?.iter().find(|e| {
             (min_t == 0 || e.t >= min_t)
                 && (min_d == 0 || e.d >= min_d)

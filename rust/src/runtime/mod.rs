@@ -136,12 +136,22 @@ impl XlaRuntime {
     }
 
     /// Look up the smallest fitting bucket (see `Manifest::lookup`).
-    pub fn lookup(&self, op: &str, min_t: usize, min_d: usize, min_b: usize, min_s: usize) -> Result<Entry> {
+    pub fn lookup(
+        &self,
+        op: &str,
+        min_t: usize,
+        min_d: usize,
+        min_b: usize,
+        min_s: usize,
+    ) -> Result<Entry> {
         self.manifest
             .lookup(op, min_t, min_d, min_b, min_s)
             .cloned()
             .with_context(|| {
-                format!("no artifact for {op} (t>={min_t}, d>={min_d}, b>={min_b}, s>={min_s}); re-run `make artifacts`")
+                format!(
+                    "no artifact for {op} (t>={min_t}, d>={min_d}, b>={min_b}, \
+                     s>={min_s}); re-run `make artifacts`"
+                )
             })
     }
 

@@ -19,6 +19,14 @@
 //! with mixed kernels) compile to a scalar representation instead; that
 //! is a *compile-time* property of the model, distinct from the counted
 //! engine-error fallback in the batcher.
+//!
+//! The packed store is a [`Design`]: expansion vectors whose post-dedup
+//! density is at or below [`AUTO_SPARSE_THRESHOLD`] compile to CSR and
+//! serve through the dense-queries x sparse-vectors SpMM path
+//! (`spmm::rbf_dense_csr_pre`, norms precomputed in registration order);
+//! denser stores keep the NR-padded packed-GEMM route. Models trained on
+//! rcv1-class sparse data keep their memory and bandwidth wins at serve
+//! time.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -26,9 +34,10 @@ use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Result};
 
+use crate::data::{CsrMatrix, Design, AUTO_SPARSE_THRESHOLD};
 use crate::engine::Engine;
 use crate::kernel::KernelKind;
-use crate::linalg::gemm;
+use crate::linalg::{gemm, spmm, Matrix};
 use crate::model::SvmModel;
 use crate::multiclass::{vote_argmax, OvoModel};
 use crate::serve::Output;
@@ -139,13 +148,16 @@ enum CompiledKind {
 
 struct PackedBinary {
     gamma: f32,
-    /// Padded row count (multiple of `gemm::NR`).
+    /// Store row count (padded to `gemm::NR` for dense stores; exact for
+    /// CSR stores — the SpMM has no panel-width requirement).
     b: usize,
     /// Compacted rows before padding.
     packed: usize,
-    /// `[b x d]` packed expansion vectors (zero rows past `packed`).
-    vectors: Vec<f32>,
-    /// Registration-time squared norms, `sum_sq` order.
+    /// `[b x d]` packed expansion vectors, dense or CSR (module docs).
+    store: Design,
+    /// Registration-time squared norms for the *dense* store path
+    /// (`sum_sq` order); empty for CSR stores, which carry their norms
+    /// internally (`CsrMatrix::sum_sq`).
     norms: Vec<f32>,
     coef: Vec<f32>,
     bias: f32,
@@ -155,19 +167,82 @@ struct PackedOvo {
     gamma: f32,
     classes: usize,
     pairs: Vec<(usize, usize)>,
-    /// Padded union row count (multiple of `gemm::NR`).
+    /// Union store row count (padded to `gemm::NR` for dense stores).
     u: usize,
     /// Deduplicated union rows before padding.
     packed: usize,
     /// Nonzero-coefficient vectors across all pairs before dedup.
     raw: usize,
-    /// `[u x d]` deduplicated union of all pairs' support vectors.
-    union: Vec<f32>,
+    /// `[u x d]` deduplicated union of all pairs' support vectors,
+    /// dense or CSR (module docs).
+    store: Design,
+    /// Dense-store squared norms (`sum_sq` order); empty for CSR.
     norms: Vec<f32>,
     /// Row-major `[pairs x u]`: pair `p`'s coefficients scattered over
     /// the union (the B operand of the one shared scoring GEMM).
     coef_t: Vec<f32>,
     bias: Vec<f32>,
+}
+
+/// Pack a compacted `packed x d` row block into the serve-time store:
+/// CSR when its density is at or below [`AUTO_SPARSE_THRESHOLD`]
+/// (b = packed, norms empty — they live in the CSR), else the NR-padded
+/// dense block (b = padded, norms in `sum_sq` order). Returns
+/// `(store, b, norms)`.
+fn pack_store(mut vectors: Vec<f32>, packed: usize, d: usize) -> (Design, usize, Vec<f32>) {
+    let nonzero = vectors.iter().filter(|&&v| v != 0.0).count();
+    let dense_cells = (packed * d).max(1);
+    if packed > 0 && (nonzero as f64 / dense_cells as f64) <= AUTO_SPARSE_THRESHOLD {
+        // norms live inside the CSR (`sum_sq`); no separate copy to drift
+        let csr = CsrMatrix::from_dense(packed, d, &vectors);
+        return (Design::Sparse(csr), packed, Vec::new());
+    }
+    let b = pad_rows(packed);
+    vectors.resize(b * d, 0.0);
+    let norms = store_norms(&vectors, b, d);
+    (Design::Dense(Matrix::from_vec(b, d, vectors)), b, norms)
+}
+
+/// One `K[t x b]` RBF block of a dense query batch against the packed
+/// store, with registration-time b-side norms — dense stores take the
+/// norms-supplied packed-GEMM entry point, CSR stores the SpMM one.
+#[allow(clippy::too_many_arguments)]
+fn store_rbf_block(
+    engine: &Engine,
+    store: &Design,
+    norms: &[f32],
+    x: &[f32],
+    t: usize,
+    d: usize,
+    b: usize,
+    gamma: f32,
+) -> Result<Vec<f32>> {
+    match store {
+        Design::Dense(m) => engine.rbf_block_pre(x, t, d, &m.data, b, gamma, norms),
+        Design::Sparse(csr) => {
+            // the xla engine has no sparse artifact; run the SpMM on the
+            // cpu pool at full width rather than engine.threads() (which
+            // is 1 for xla) — output is thread-count independent anyway
+            let threads = if engine.is_xla() {
+                crate::pool::default_threads()
+            } else {
+                engine.threads()
+            };
+            let mut k = vec![0.0f32; t * b];
+            spmm::rbf_dense_csr_pre(threads, x, t, csr, gamma, &mut k);
+            Ok(k)
+        }
+    }
+}
+
+/// Scalar (engine-free) RBF distance of a dense query to store row `j`.
+fn store_dist2(store: &Design, d: usize, j: usize, x: &[f32], xsq: f32) -> f32 {
+    match store {
+        Design::Dense(m) => gemm::dist2_lanes(x, &m.data[j * d..(j + 1) * d]),
+        Design::Sparse(csr) => {
+            (xsq + csr.sum_sq[j] - 2.0 * csr.row_dot_dense(j, x)).max(0.0)
+        }
+    }
 }
 
 /// Pad a packed row count up to a multiple of the GEMM's B-panel width
@@ -223,18 +298,16 @@ fn compile_binary(m: &SvmModel, version: u64) -> CompiledModel {
             let mut vectors: Vec<f32> = Vec::new();
             let list = dedup_rows(&mut dedup, &mut vectors, m.d, &m.vectors, &m.coef);
             let packed = vectors.len() / m.d;
-            let b = pad_rows(packed);
-            vectors.resize(b * m.d, 0.0);
+            let (store, b, norms) = pack_store(vectors, packed, m.d);
             let mut coef = vec![0.0f32; b];
             for &(slot, c) in &list {
                 coef[slot] += c;
             }
-            let norms = store_norms(&vectors, b, m.d);
             CompiledKind::Binary(PackedBinary {
                 gamma,
                 b,
                 packed,
-                vectors,
+                store,
                 norms,
                 coef,
                 bias: m.bias,
@@ -273,9 +346,7 @@ fn compile_ovo(m: &OvoModel, version: u64) -> CompiledModel {
                 .collect();
             let raw = scatter.iter().map(|l| l.len()).sum::<usize>();
             let packed = union.len() / d;
-            let u = pad_rows(packed);
-            union.resize(u * d, 0.0);
-            let norms = store_norms(&union, u, d);
+            let (store, u, norms) = pack_store(union, packed, d);
             let mut coef_t = vec![0.0f32; m.models.len() * u];
             for (pi, list) in scatter.iter().enumerate() {
                 for &(slot, c) in list {
@@ -289,7 +360,7 @@ fn compile_ovo(m: &OvoModel, version: u64) -> CompiledModel {
                 u,
                 packed,
                 raw,
-                union,
+                store,
                 norms,
                 coef_t,
                 bias: m.models.iter().map(|sm| sm.bias).collect(),
@@ -316,16 +387,30 @@ impl CompiledModel {
         matches!(self.kind, CompiledKind::Binary(_) | CompiledKind::Ovo(_))
     }
 
+    /// Whether the packed store compiled to CSR (sparse serve path).
+    pub fn is_sparse_store(&self) -> bool {
+        match &self.kind {
+            CompiledKind::Binary(pb) => pb.store.is_sparse(),
+            CompiledKind::Ovo(po) => po.store.is_sparse(),
+            _ => false,
+        }
+    }
+
     /// One-line description for logs and examples.
     pub fn describe(&self) -> String {
         match &self.kind {
             CompiledKind::Binary(pb) => format!(
-                "v{} binary packed: {} rows (padded {}), d={}",
-                self.version, pb.packed, pb.b, self.d
+                "v{} binary packed[{}]: {} rows (store {}), d={}",
+                self.version,
+                if pb.store.is_sparse() { "csr" } else { "dense" },
+                pb.packed,
+                pb.b,
+                self.d
             ),
             CompiledKind::Ovo(po) => format!(
-                "v{} ovo packed: {} pairs share a {}-row union (from {} raw, padded {}), d={}",
+                "v{} ovo packed[{}]: {} pairs share a {}-row union (from {} raw, store {}), d={}",
                 self.version,
+                if po.store.is_sparse() { "csr" } else { "dense" },
                 po.pairs.len(),
                 po.packed,
                 po.raw,
@@ -350,7 +435,8 @@ impl CompiledModel {
         assert_eq!(x.len(), t * self.d);
         match &self.kind {
             CompiledKind::Binary(pb) => {
-                let k = engine.rbf_block_pre(x, t, self.d, &pb.vectors, pb.b, pb.gamma, &pb.norms)?;
+                let k =
+                    store_rbf_block(engine, &pb.store, &pb.norms, x, t, self.d, pb.b, pb.gamma)?;
                 let mut f = engine.predict_block(&k, t, pb.b, &pb.coef)?;
                 for v in f.iter_mut() {
                     *v += pb.bias;
@@ -358,7 +444,8 @@ impl CompiledModel {
                 Ok(f.into_iter().map(Output::Margin).collect())
             }
             CompiledKind::Ovo(po) => {
-                let k = engine.rbf_block_pre(x, t, self.d, &po.union, po.u, po.gamma, &po.norms)?;
+                let k =
+                    store_rbf_block(engine, &po.store, &po.norms, x, t, self.d, po.u, po.gamma)?;
                 let p = po.pairs.len();
                 let mut fm = vec![0.0f32; t * p];
                 gemm::gemm_nt_strided(
@@ -410,25 +497,26 @@ impl CompiledModel {
         assert_eq!(x.len(), self.d);
         match &self.kind {
             CompiledKind::Binary(pb) => {
+                let xsq = gemm::sum_sq(x);
                 let mut f = pb.bias as f64;
                 for j in 0..pb.b {
                     let c = pb.coef[j];
                     if c != 0.0 {
-                        let d2 = gemm::dist2_lanes(x, &pb.vectors[j * self.d..(j + 1) * self.d]);
+                        let d2 = store_dist2(&pb.store, self.d, j, x, xsq);
                         f += (c * (-pb.gamma * d2).exp()) as f64;
                     }
                 }
                 Output::Margin(f as f32)
             }
             CompiledKind::Ovo(po) => {
+                let xsq = gemm::sum_sq(x);
                 let mut votes = vec![0u32; po.classes];
                 for (pi, &(a, b)) in po.pairs.iter().enumerate() {
                     let mut f = po.bias[pi] as f64;
                     for j in 0..po.u {
                         let c = po.coef_t[pi * po.u + j];
                         if c != 0.0 {
-                            let d2 =
-                                gemm::dist2_lanes(x, &po.union[j * self.d..(j + 1) * self.d]);
+                            let d2 = store_dist2(&po.store, self.d, j, x, xsq);
                             f += (c * (-po.gamma * d2).exp()) as f64;
                         }
                     }
@@ -498,6 +586,44 @@ mod tests {
             let sc = c.score_scalar(&x[i * 6..(i + 1) * 6]).margin().unwrap();
             assert!((sc - want).abs() < 1e-5, "row {i} scalar: {sc} vs {want}");
         }
+    }
+
+    #[test]
+    fn sparse_vectors_compile_to_csr_store_and_match_decision() {
+        let mut rng = Rng::new(9);
+        let (b, d) = (20usize, 120usize);
+        let m = SvmModel {
+            kernel: KernelKind::Rbf { gamma: 0.5 },
+            vectors: (0..b * d)
+                .map(|_| if rng.bernoulli(0.1) { rng.uniform_f32() } else { 0.0 })
+                .collect(),
+            d,
+            coef: (0..b).map(|_| rng.gaussian_f32()).collect(),
+            bias: -0.15,
+            solver: "t".into(),
+        };
+        let c = m.compile(3);
+        assert!(c.is_packed());
+        assert!(c.is_sparse_store(), "10%-dense vectors must pack to csr");
+        assert!(c.describe().contains("csr"), "{}", c.describe());
+        let t = 9;
+        let x: Vec<f32> = (0..t * d).map(|_| rng.uniform_f32()).collect();
+        for e in [Engine::cpu_seq(), Engine::cpu_par(3)] {
+            let outs = c.score_batch(&e, &x, t).unwrap();
+            for (i, o) in outs.iter().enumerate() {
+                let want = m.decision(&x[i * d..(i + 1) * d]);
+                let got = o.margin().unwrap();
+                assert!((got - want).abs() < 1e-5, "row {i}: {got} vs {want}");
+            }
+        }
+        for i in 0..t {
+            let q = &x[i * d..(i + 1) * d];
+            let sc = c.score_scalar(q).margin().unwrap();
+            assert!((sc - m.decision(q)).abs() < 1e-5, "scalar row {i}");
+        }
+        // a dense model still packs dense
+        let dense = rand_model(&mut rng, 8, 4).compile(1);
+        assert!(!dense.is_sparse_store());
     }
 
     #[test]

@@ -20,14 +20,24 @@ pub fn dual_objective(alpha: &[f64], grad: &[f64]) -> f64 {
 
 /// Padded row-tile view of a dataset for engine calls: X tiles of
 /// [t x d_pad] with validity masks (`rust/DESIGN.md` §Tiling).
+///
+/// Sparse designs keep their tiles in CSR (one padded matrix, empty
+/// trailing rows) instead of materializing dense `x` tiles; tile kernel
+/// blocks then run on the SpMM substrate via [`TiledData::rbf_block`].
+/// The xla engine needs dense bucket-shaped operands, so its callers use
+/// [`TiledData::densified`].
 pub struct TiledData {
     pub t: usize,
     pub d: usize,
     pub d_pad: usize,
     pub n: usize,
     pub n_tiles: usize,
-    /// Per tile: t*d_pad features (padded rows zero).
+    /// Per tile: t*d_pad features (padded rows zero). Empty when the
+    /// tiles live in [`TiledData::sparse`] instead.
     pub x: Vec<Vec<f32>>,
+    /// CSR tiles (`n_tiles * t` rows, trailing padding rows empty);
+    /// `None` for dense tiles.
+    pub sparse: Option<crate::data::CsrMatrix>,
     /// Per tile: labels (padding 1.0, masked out).
     pub y: Vec<Vec<f32>>,
     /// Per tile: validity mask.
@@ -35,14 +45,57 @@ pub struct TiledData {
 }
 
 impl TiledData {
+    /// Design-aware tiling: dense datasets get dense tiles, sparse
+    /// datasets stay in CSR (requires `d_pad == ds.d` — the cpu engines'
+    /// convention; the xla path uses [`TiledData::densified`]).
     pub fn new(ds: &Dataset, t: usize, d_pad: usize) -> TiledData {
+        if let Some(csr) = ds.csr() {
+            assert_eq!(
+                d_pad, ds.d,
+                "sparse tiles take no feature padding (use TiledData::densified)"
+            );
+            let n_tiles = (ds.n + t - 1) / t;
+            let (y, m) = Self::label_tiles(ds, t, n_tiles);
+            return TiledData {
+                t,
+                d: ds.d,
+                d_pad,
+                n: ds.n,
+                n_tiles,
+                x: Vec::new(),
+                sparse: Some(csr.pad_rows(n_tiles * t)),
+                y,
+                m,
+            };
+        }
+        Self::densified(ds, t, d_pad)
+    }
+
+    /// Dense tiles regardless of the design (the xla path: artifacts
+    /// take dense bucket-shaped operands only).
+    pub fn densified(ds: &Dataset, t: usize, d_pad: usize) -> TiledData {
         assert!(d_pad >= ds.d);
         let n_tiles = (ds.n + t - 1) / t;
         let mut x = Vec::with_capacity(n_tiles);
+        for tile in 0..n_tiles {
+            let mut xt = vec![0.0f32; t * d_pad];
+            for r in 0..t {
+                let i = tile * t + r;
+                if i >= ds.n {
+                    break;
+                }
+                ds.row_into(i, &mut xt[r * d_pad..(r + 1) * d_pad]);
+            }
+            x.push(xt);
+        }
+        let (y, m) = Self::label_tiles(ds, t, n_tiles);
+        TiledData { t, d: ds.d, d_pad, n: ds.n, n_tiles, x, sparse: None, y, m }
+    }
+
+    fn label_tiles(ds: &Dataset, t: usize, n_tiles: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
         let mut y = Vec::with_capacity(n_tiles);
         let mut m = Vec::with_capacity(n_tiles);
         for tile in 0..n_tiles {
-            let mut xt = vec![0.0f32; t * d_pad];
             let mut yt = vec![1.0f32; t];
             let mut mt = vec![0.0f32; t];
             for r in 0..t {
@@ -50,15 +103,13 @@ impl TiledData {
                 if i >= ds.n {
                     break;
                 }
-                xt[r * d_pad..r * d_pad + ds.d].copy_from_slice(ds.row(i));
                 yt[r] = ds.y[i];
                 mt[r] = 1.0;
             }
-            x.push(xt);
             y.push(yt);
             m.push(mt);
         }
-        TiledData { t, d: ds.d, d_pad, n: ds.n, n_tiles, x, y, m }
+        (y, m)
     }
 
     /// Global row index -> (tile, row-in-tile).
@@ -69,9 +120,31 @@ impl TiledData {
 
     /// Copy row `i`'s padded features into `out` (length d_pad).
     pub fn copy_row(&self, i: usize, out: &mut [f32]) {
-        let (tile, r) = self.locate(i);
-        out[..self.d_pad]
-            .copy_from_slice(&self.x[tile][r * self.d_pad..(r + 1) * self.d_pad]);
+        match &self.sparse {
+            Some(csr) => csr.densify_row_into(i, &mut out[..self.d_pad]),
+            None => {
+                let (tile, r) = self.locate(i);
+                out[..self.d_pad]
+                    .copy_from_slice(&self.x[tile][r * self.d_pad..(r + 1) * self.d_pad]);
+            }
+        }
+    }
+
+    /// `K[t x b]` of one tile against a dense `b x d_pad` block through
+    /// the engine — the storage-dispatch point that gives tile solvers
+    /// (SP-SVM) the sparse fast path with no call-site change.
+    pub fn rbf_block(
+        &self,
+        engine: &Engine,
+        tile: usize,
+        xb: &[f32],
+        b: usize,
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        match &self.sparse {
+            Some(csr) => engine.rbf_block_csr(csr, tile * self.t, self.t, xb, b, gamma),
+            None => engine.rbf_block(&self.x[tile], self.t, self.d_pad, xb, b, gamma),
+        }
     }
 }
 
@@ -127,10 +200,24 @@ impl KernelRows {
         cache: Arc<SharedRowCache>,
         group: u64,
     ) -> Result<KernelRows> {
-        let diag = (0..ds.n).map(|i| kind.self_eval(ds.row(i))).collect();
+        let diag = match kind {
+            // K_ii = 1 for RBF without touching the row (sparse-friendly)
+            KernelKind::Rbf { .. } => vec![1.0f32; ds.n],
+            _ => {
+                let mut buf = vec![0.0f32; ds.d];
+                (0..ds.n)
+                    .map(|i| {
+                        ds.row_into(i, &mut buf);
+                        kind.self_eval(&buf)
+                    })
+                    .collect()
+            }
+        };
         let (tiled, bucket_b) = if engine.is_xla() {
             let (rt, gamma_ok) = match (&engine.kind, kind) {
-                (crate::engine::EngineKind::Xla { runtime }, KernelKind::Rbf { .. }) => (runtime.clone(), true),
+                (crate::engine::EngineKind::Xla { runtime }, KernelKind::Rbf { .. }) => {
+                    (runtime.clone(), true)
+                }
                 (crate::engine::EngineKind::Xla { runtime }, _) => (runtime.clone(), false),
                 _ => unreachable!(),
             };
@@ -147,7 +234,7 @@ impl KernelRows {
                 .b_buckets()
                 .first()
                 .ok_or_else(|| anyhow::anyhow!("no b buckets"))?;
-            (Some(TiledData::new(ds, t, d_pad)), b)
+            (Some(TiledData::densified(ds, t, d_pad)), b)
         } else {
             (None, 0)
         };
@@ -207,7 +294,8 @@ impl KernelRows {
                 {
                     let mut views: Vec<&mut [f32]> =
                         bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
-                    xla_fill_rows(&self.engine, &self.kind, tiled, self.bucket_b, &ids, &mut views)?;
+                    let b = self.bucket_b;
+                    xla_fill_rows(&self.engine, &self.kind, tiled, b, &ids, &mut views)?;
                 }
                 for ((slot, i), buf) in misses.into_iter().zip(bufs) {
                     self.rows_computed += 1;
@@ -329,7 +417,8 @@ mod tests {
 
     #[test]
     fn xla_rows_match_cpu() {
-        let Ok(rt) = crate::runtime::XlaRuntime::load(&crate::runtime::default_artifacts_dir()) else {
+        let artifacts = crate::runtime::default_artifacts_dir();
+        let Ok(rt) = crate::runtime::XlaRuntime::load(&artifacts) else {
             eprintln!("skipping: no artifacts");
             return;
         };

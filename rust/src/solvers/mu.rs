@@ -149,12 +149,8 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &MuParams) -> Result<TrainResult> {
     sw.lap("iterate");
 
     let sv: Vec<usize> = (0..n).filter(|&i| a[i] > 1e-8).collect();
-    let mut vectors = Vec::with_capacity(sv.len() * ds.d);
-    let mut coef = Vec::with_capacity(sv.len());
-    for &i in &sv {
-        vectors.extend_from_slice(ds.row(i));
-        coef.push(a[i] * ds.y[i]);
-    }
+    let vectors = ds.gather_rows(&sv);
+    let coef: Vec<f32> = sv.iter().map(|&i| a[i] * ds.y[i]).collect();
     sw.lap("finalize");
 
     let model = SvmModel {
@@ -234,8 +230,10 @@ mod tests {
         // a similar objective region.
         let ds = blobs(150, 3);
         let kind = KernelKind::Rbf { gamma: 4.0 };
-        let s = smo::train(&ds, kind, &smo::SmoParams { c: 1.0, ..Default::default() }, &Engine::cpu_seq()).unwrap();
-        let m = train(&ds, kind, &MuParams { c: 1.0, max_iters: 400, ..Default::default() }).unwrap();
+        let sp = smo::SmoParams { c: 1.0, ..Default::default() };
+        let s = smo::train(&ds, kind, &sp, &Engine::cpu_seq()).unwrap();
+        let mp = MuParams { c: 1.0, max_iters: 400, ..Default::default() };
+        let m = train(&ds, kind, &mp).unwrap();
         // MU drops the equality constraint (no bias), so its optimum can
         // differ from SMO's in either direction — but it must land in the
         // same objective region...

@@ -83,7 +83,15 @@ struct State {
     active: Vec<f32>,
 }
 
-fn eval_state(k: &Matrix, y: &[f32], beta: &[f32], bias: f32, c: f32, threads: usize, reg: &mut Vec<f32>) -> State {
+fn eval_state(
+    k: &Matrix,
+    y: &[f32],
+    beta: &[f32],
+    bias: f32,
+    c: f32,
+    threads: usize,
+    reg: &mut Vec<f32>,
+) -> State {
     let n = y.len();
     let mut f = vec![0.0f32; n];
     gemv(threads, k, beta, &mut f);
@@ -228,12 +236,8 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &PrimalParams) -> Result<TrainResult> {
     sw.lap("newton");
 
     let sv: Vec<usize> = (0..n).filter(|&i| beta[i].abs() > 1e-7).collect();
-    let mut vectors = Vec::with_capacity(sv.len() * ds.d);
-    let mut coef = Vec::with_capacity(sv.len());
-    for &i in &sv {
-        vectors.extend_from_slice(ds.row(i));
-        coef.push(beta[i]);
-    }
+    let vectors = ds.gather_rows(&sv);
+    let coef: Vec<f32> = sv.iter().map(|&i| beta[i]).collect();
     sw.lap("finalize");
 
     let model = SvmModel {
@@ -301,7 +305,8 @@ mod tests {
         let ds = xor_dataset(300, 2);
         let te = xor_dataset(300, 3);
         let kind = KernelKind::Rbf { gamma: 8.0 };
-        let a = smo::train(&ds, kind, &smo::SmoParams { c: 10.0, ..Default::default() }, &Engine::cpu_seq()).unwrap();
+        let sp = smo::SmoParams { c: 10.0, ..Default::default() };
+        let a = smo::train(&ds, kind, &sp, &Engine::cpu_seq()).unwrap();
         let b = train(&ds, kind, &PrimalParams { c: 10.0, ..Default::default() }).unwrap();
         let ea = error_rate(&a.model.decision_batch(&te, 2), &te.y);
         let eb = error_rate(&b.model.decision_batch(&te, 2), &te.y);

@@ -579,12 +579,8 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
 
     // --- extract support vectors ---
     let sv_idx: Vec<usize> = (0..n).filter(|&t| alpha[t] > 0.0).collect();
-    let mut vectors = Vec::with_capacity(sv_idx.len() * ds.d);
-    let mut coef = Vec::with_capacity(sv_idx.len());
-    for &t in &sv_idx {
-        vectors.extend_from_slice(ds.row(t));
-        coef.push((alpha[t] * y[t]) as f32);
-    }
+    let vectors = ds.gather_rows(&sv_idx);
+    let coef: Vec<f32> = sv_idx.iter().map(|&t| (alpha[t] * y[t]) as f32).collect();
     sw.lap("finalize");
 
     let model = SvmModel {
@@ -646,7 +642,8 @@ mod tests {
     fn solves_xor_with_rbf() {
         let ds = xor_dataset(300, 1);
         let kind = KernelKind::Rbf { gamma: 8.0 };
-        let r = train(&ds, kind, &SmoParams { c: 10.0, ..Default::default() }, &Engine::cpu_seq()).unwrap();
+        let params = SmoParams { c: 10.0, ..Default::default() };
+        let r = train(&ds, kind, &params, &Engine::cpu_seq()).unwrap();
         let margins = r.model.decision_batch(&ds, 2);
         let err = error_rate(&margins, &ds.y);
         assert!(err < 0.05, "train error {err}");
@@ -715,7 +712,10 @@ mod tests {
                     r.objective,
                     base.objective
                 );
-                assert_eq!(r.iterations, base.iterations, "shrinking={shrinking} threads={threads}");
+                assert_eq!(
+                    r.iterations, base.iterations,
+                    "shrinking={shrinking} threads={threads}"
+                );
                 assert_eq!(nsv(&r), nsv(&base), "shrinking={shrinking} threads={threads}");
             }
         }

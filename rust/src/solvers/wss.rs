@@ -361,12 +361,8 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
             .sum::<f64>();
 
     let sv_idx: Vec<usize> = (0..n).filter(|&t| alpha[t] > 0.0).collect();
-    let mut vectors = Vec::with_capacity(sv_idx.len() * ds.d);
-    let mut coef = Vec::with_capacity(sv_idx.len());
-    for &t in &sv_idx {
-        vectors.extend_from_slice(ds.row(t));
-        coef.push((alpha[t] * y[t]) as f32);
-    }
+    let vectors = ds.gather_rows(&sv_idx);
+    let coef: Vec<f32> = sv_idx.iter().map(|&t| (alpha[t] * y[t]) as f32).collect();
     sw.lap("finalize");
 
     let model = SvmModel {
@@ -429,8 +425,10 @@ mod tests {
     fn matches_smo_objective() {
         let ds = xor_dataset(200, 13);
         let kind = KernelKind::Rbf { gamma: 6.0 };
-        let a = smo::train(&ds, kind, &smo::SmoParams { c: 5.0, ..Default::default() }, &Engine::cpu_seq()).unwrap();
-        let b = train(&ds, kind, &WssParams { c: 5.0, ..Default::default() }, &Engine::cpu_seq()).unwrap();
+        let sp = smo::SmoParams { c: 5.0, ..Default::default() };
+        let a = smo::train(&ds, kind, &sp, &Engine::cpu_seq()).unwrap();
+        let wp = WssParams { c: 5.0, ..Default::default() };
+        let b = train(&ds, kind, &wp, &Engine::cpu_seq()).unwrap();
         // both solve the same strictly convex-ish dual to eps: objectives close
         let rel = (a.objective - b.objective).abs() / a.objective.abs().max(1.0);
         assert!(rel < 5e-3, "smo {} vs wss {}", a.objective, b.objective);
@@ -440,8 +438,10 @@ mod tests {
     fn fewer_outer_iterations_than_smo() {
         let ds = xor_dataset(400, 17);
         let kind = KernelKind::Rbf { gamma: 8.0 };
-        let a = smo::train(&ds, kind, &smo::SmoParams { c: 10.0, ..Default::default() }, &Engine::cpu_seq()).unwrap();
-        let b = train(&ds, kind, &WssParams { c: 10.0, s: 16, ..Default::default() }, &Engine::cpu_seq()).unwrap();
+        let sp = smo::SmoParams { c: 10.0, ..Default::default() };
+        let a = smo::train(&ds, kind, &sp, &Engine::cpu_seq()).unwrap();
+        let wp = WssParams { c: 10.0, s: 16, ..Default::default() };
+        let b = train(&ds, kind, &wp, &Engine::cpu_seq()).unwrap();
         assert!(
             b.iterations * 4 < a.iterations,
             "wss {} vs smo {} iterations",
@@ -454,7 +454,8 @@ mod tests {
     fn working_set_size_two_behaves_like_smo() {
         let ds = xor_dataset(150, 19);
         let kind = KernelKind::Rbf { gamma: 6.0 };
-        let r = train(&ds, kind, &WssParams { c: 2.0, s: 2, ..Default::default() }, &Engine::cpu_seq()).unwrap();
+        let wp = WssParams { c: 2.0, s: 2, ..Default::default() };
+        let r = train(&ds, kind, &wp, &Engine::cpu_seq()).unwrap();
         let margins = r.model.decision_batch(&ds, 2);
         assert!(error_rate(&margins, &ds.y) < 0.08);
     }

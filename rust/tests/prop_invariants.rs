@@ -67,12 +67,12 @@ fn prop_scale_unit_bounds_and_idempotence() {
         );
         ds.scale_unit();
         assert!(
-            ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)),
+            ds.dense_x().iter().all(|&v| (0.0..=1.0).contains(&v)),
             "case {case}: out of unit interval"
         );
-        let before = ds.x.clone();
+        let before = ds.dense_x().to_vec();
         ds.scale_unit(); // idempotent on already-scaled data
-        for (a, b) in before.iter().zip(&ds.x) {
+        for (a, b) in before.iter().zip(ds.dense_x()) {
             assert!((a - b).abs() < 1e-6, "case {case}: not idempotent");
         }
     }
