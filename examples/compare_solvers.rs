@@ -2,8 +2,9 @@
 //! comparison in miniature, driven entirely through the unified
 //! `Trainer` API: LibSVM (SMO, single core), LibSVM+OpenMP (SMO,
 //! hand-threaded), GTSVM (WSS-16), the exact implicit baselines (MU,
-//! primal Newton) that hit the memory/convergence wall, and SP-SVM on
-//! both the cpu and (when artifacts exist) the AOT-XLA engine.
+//! primal Newton) that hit the memory/convergence wall, SP-SVM on
+//! both the cpu and (when artifacts exist) the AOT-XLA engine, and
+//! LS-SVM on a rank-256 ICF operator (the approximate-implicit row).
 //! Every solver runs under the *same* wall-clock budget — the
 //! controlled-comparison discipline the API encodes — and the run ends
 //! with an observer-driven convergence trace (iter, objective, elapsed),
@@ -21,6 +22,7 @@ use wu_svm::kernel::KernelKind;
 use wu_svm::metrics::{auc, error_rate};
 use wu_svm::pool;
 use wu_svm::report::{fill_speedups, render_table, Row};
+use wu_svm::solvers::lssvm::LsSvmParams;
 use wu_svm::solvers::mu::MuParams;
 use wu_svm::solvers::primal::PrimalParams;
 use wu_svm::solvers::smo::SmoParams;
@@ -85,6 +87,14 @@ fn main() -> anyhow::Result<()> {
             "MC",
             "SP-SVM",
             SolverSpec::SpSvm(SpSvmParams { c, max_basis: 255, ..Default::default() }),
+            Engine::cpu_par(threads),
+        ),
+        // the approximate-implicit contender: LS-SVM on a rank-256 ICF
+        // operator — the one solver here that never sees the exact kernel
+        (
+            "MC",
+            "LS-SVM",
+            SolverSpec::LsSvm(LsSvmParams { c, ..Default::default() }),
             Engine::cpu_par(threads),
         ),
     ];

@@ -1,0 +1,131 @@
+//! Low-rank kernel-operator benchmarks: pivoted-ICF factorization cost,
+//! operator matvec against the exact tiled route, and the LS-SVM solve
+//! it unlocks — the memory/time trade the approximate-implicit path
+//! buys (rust/EXPERIMENTS.md §LOWRANK). Emits machine-readable
+//! `BENCH_lowrank.json`.
+//!
+//! Run: `cargo bench --bench lowrank [-- --n 8000 --d 64 --rank 256]`
+
+use wu_svm::bench_util::{bench, header, smoke, smoke_or};
+use wu_svm::config::Config;
+use wu_svm::data::synth::{generate, SynthSpec};
+use wu_svm::kernel::operator::{ExactTiled, KernelOperator, LowRank, LowRankConfig};
+use wu_svm::kernel::KernelKind;
+use wu_svm::pool;
+use wu_svm::rng::Rng;
+use wu_svm::solvers::lssvm::{self, LsSvmParams};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let cfg = Config::from_args(&args).unwrap();
+    let n = cfg.usize_or("n", smoke_or(400, 8000)).unwrap();
+    let d = cfg.usize_or("d", 64).unwrap();
+    let rank = cfg.usize_or("rank", smoke_or(32, 256)).unwrap();
+    let threads = pool::default_threads();
+    let runs = smoke_or(2, 7);
+
+    let spec = SynthSpec {
+        d,
+        classes: 2,
+        clusters: 8,
+        sigma: 0.1,
+        flip: 0.02,
+        sparsity: 0.0,
+        pos_frac: 0.5,
+    };
+    let ds = generate(&spec, n, 42, "lowrank-bench");
+    let kind = KernelKind::Rbf { gamma: 0.5 };
+    println!("workload: n={n} d={d} rank={rank} ({threads} threads)");
+
+    // ---- factorization: the one-off cost of the rank-r operator ----
+    header(&format!("pivoted ICF build (n={n}, r={rank})"));
+    let s_build = bench(&format!("icf build [{threads}t]"), 1, runs, || {
+        let op = LowRank::icf(&kind, &ds, threads, rank, 1e-9);
+        assert!(op.rank() > 0);
+    });
+    println!("{}", s_build.row());
+    let op = LowRank::icf(&kind, &ds, threads, rank, 1e-9);
+    let tiled = ExactTiled::new(kind, &ds, threads);
+    let exact_bytes = 4 * n * n;
+    let bytes_ratio = op.memory_bytes() as f64 / exact_bytes as f64;
+    println!(
+        "operator {} bytes vs exact {exact_bytes} ({:.2}% — residual trace {:.2e})",
+        op.memory_bytes(),
+        bytes_ratio * 100.0,
+        op.residual_frac()
+    );
+
+    // ---- the per-iteration primitive: K v, O(n r) vs O(n^2 d) ----
+    header("operator matvec — rank-r G Gᵀ v vs exact tiled");
+    let mut rng = Rng::new(7);
+    let v: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+    let mut out = vec![0.0f32; n];
+    let s_low = bench(&format!("lowrank matvec [{threads}t]"), 1, runs, || {
+        op.matvec(&v, &mut out);
+    });
+    println!("{}", s_low.row());
+    let s_tiled = bench(&format!("tiled matvec [{threads}t]"), 1, runs, || {
+        tiled.matvec(&v, &mut out);
+    });
+    println!("{}", s_tiled.row());
+    let matvec_speedup = s_tiled.median.as_secs_f64() / s_low.median.as_secs_f64().max(1e-12);
+    println!("lowrank matvec vs exact tiled: {matvec_speedup:.2}x");
+
+    // ---- end to end: the LS-SVM solve the operator exists for ----
+    header("lssvm train — rank-r operator vs exact kernel");
+    let lp = LsSvmParams {
+        c: 1.0,
+        lowrank: Some(LowRankConfig::icf(rank)),
+        ..Default::default()
+    };
+    let s_ls_low = bench("lssvm lowrank", 1, runs, || {
+        lssvm::train(&ds, kind, &lp).unwrap();
+    });
+    println!("{}", s_ls_low.row());
+    let ep = LsSvmParams { c: 1.0, lowrank: None, ..Default::default() };
+    let s_ls_exact = bench("lssvm exact", 1, runs, || {
+        lssvm::train(&ds, kind, &ep).unwrap();
+    });
+    println!("{}", s_ls_exact.row());
+
+    if smoke() {
+        println!("BENCH_SMOKE=1: skipping BENCH_lowrank.json (not a measurement)");
+        return;
+    }
+    // the embedded schema is required by ci/check_bench_json.py, which
+    // validates the checked-in copy of this file on every CI run
+    let schema = "\"schema\": {\n    \
+         \"workload\": \"n training rows, d features, ICF rank r\",\n    \
+         \"threads\": \"worker threads used for every path\",\n    \
+         \"icf_build_ms\": \"median wall time of the rank-r pivoted incomplete Cholesky\",\n    \
+         \"lowrank_matvec_ms\": \"median K v time through the rank-r operator (2 GEMVs)\",\n    \
+         \"tiled_matvec_ms\": \"median K v time through the exact tiled operator\",\n    \
+         \"matvec_speedup\": \"tiled_matvec_ms / lowrank_matvec_ms\",\n    \
+         \"op_bytes\": \"rank-r operator footprint (G plus the diagonal)\",\n    \
+         \"exact_bytes\": \"4 n^2 — the materialized exact kernel\",\n    \
+         \"bytes_ratio\": \"op_bytes / exact_bytes\",\n    \
+         \"residual_frac\": \"kernel trace fraction the factorization left unexplained\",\n    \
+         \"lssvm_lowrank_ms\": \"median LS-SVM train time on the rank-r operator\",\n    \
+         \"lssvm_exact_ms\": \"median LS-SVM train time on the exact kernel\"\n  }";
+    let json = format!(
+        "{{\n  \"workload\": {{\"n\": {n}, \"d\": {d}, \"rank\": {rank}}},\n  \
+         \"threads\": {threads},\n  \
+         \"icf_build_ms\": {:.3},\n  \
+         \"lowrank_matvec_ms\": {:.3},\n  \"tiled_matvec_ms\": {:.3},\n  \
+         \"matvec_speedup\": {:.3},\n  \
+         \"op_bytes\": {},\n  \"exact_bytes\": {exact_bytes},\n  \
+         \"bytes_ratio\": {bytes_ratio:.5},\n  \"residual_frac\": {:e},\n  \
+         \"lssvm_lowrank_ms\": {:.3},\n  \"lssvm_exact_ms\": {:.3},\n  {schema}\n}}\n",
+        s_build.median.as_secs_f64() * 1e3,
+        s_low.median.as_secs_f64() * 1e3,
+        s_tiled.median.as_secs_f64() * 1e3,
+        op.memory_bytes(),
+        op.residual_frac(),
+        s_ls_low.median.as_secs_f64() * 1e3,
+        s_ls_exact.median.as_secs_f64() * 1e3,
+    );
+    match std::fs::write("BENCH_lowrank.json", &json) {
+        Ok(()) => println!("wrote BENCH_lowrank.json:\n{json}"),
+        Err(e) => eprintln!("could not write BENCH_lowrank.json: {e}"),
+    }
+}

@@ -19,8 +19,9 @@ use crate::metrics::{auc, error_rate, multiclass_error};
 use crate::multiclass::OvoModel;
 use crate::pool;
 use crate::runtime::{default_artifacts_dir, XlaRuntime};
+use crate::kernel::operator::LowRankConfig;
 use crate::solvers::api::{Budget, SolverSpec, Trainer};
-use crate::solvers::{mu, primal, smo, spsvm, wss};
+use crate::solvers::{lssvm, mu, primal, smo, spsvm, wss};
 
 /// Which solver to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,6 +31,7 @@ pub enum Solver {
     Mu,
     Primal,
     SpSvm,
+    LsSvm,
 }
 
 impl Solver {
@@ -40,7 +42,8 @@ impl Solver {
             "mu" => Solver::Mu,
             "primal" => Solver::Primal,
             "spsvm" | "wusvm" => Solver::SpSvm,
-            _ => bail!("unknown solver '{s}' (smo|wss|mu|primal|spsvm)"),
+            "lssvm" | "plssvm" => Solver::LsSvm,
+            _ => bail!("unknown solver '{s}' (smo|wss|mu|primal|spsvm|lssvm)"),
         })
     }
 }
@@ -85,6 +88,10 @@ pub struct TrainJob {
     pub eps: Option<f64>,
     pub max_basis: usize,
     pub wss_size: usize,
+    /// Pivoted-ICF rank for implicit solvers (`--rank`; 0 = exact).
+    pub rank: Option<usize>,
+    /// Nyström landmark count (`--landmarks`; excludes `--rank`).
+    pub landmarks: Option<usize>,
     pub cache_mb: usize,
     pub seed: u64,
     /// Cap on training rows (0 = spec size * scale).
@@ -118,6 +125,8 @@ impl Default for TrainJob {
             eps: None,
             max_basis: 255,
             wss_size: 16,
+            rank: None,
+            landmarks: None,
             cache_mb: 512,
             seed: 1,
             max_train: 0,
@@ -144,6 +153,8 @@ pub const TRAIN_KEYS: &[&str] = &[
     "eps",
     "max-basis",
     "wss-size",
+    "rank",
+    "landmarks",
     "cache-mb",
     "seed",
     "max-train",
@@ -170,6 +181,23 @@ impl TrainJob {
         job.eps = cfg.get("eps").map(|v| v.parse()).transpose()?;
         job.max_basis = cfg.usize_or("max-basis", job.max_basis)?;
         job.wss_size = cfg.usize_or("wss-size", job.wss_size)?;
+        job.rank = cfg.get("rank").map(|v| v.parse()).transpose()?;
+        job.landmarks = cfg.get("landmarks").map(|v| v.parse()).transpose()?;
+        if job.rank.is_some() && job.landmarks.is_some() {
+            bail!(
+                "--rank and --landmarks are mutually exclusive \
+                 (--rank = pivoted-ICF width, --landmarks = Nystrom landmark count)"
+            );
+        }
+        if matches!(job.solver, Solver::Smo | Solver::Wss)
+            && (job.rank.is_some() || job.landmarks.is_some())
+        {
+            bail!(
+                "--rank/--landmarks only apply to the implicit family — {:?} computes \
+                 exact kernel rows; drop the flag or pick --solver mu|primal|spsvm|lssvm",
+                job.solver
+            );
+        }
         job.cache_mb = cfg.usize_or("cache-mb", job.cache_mb)?;
         job.seed = cfg.u64_or("seed", job.seed)?;
         job.max_train = cfg.usize_or("max-train", 0)?;
@@ -182,6 +210,18 @@ impl TrainJob {
         let fmt_default = if job.input.is_some() { "auto" } else { "dense" };
         job.format = Format::parse(&cfg.str_or("format", fmt_default))?;
         Ok(job)
+    }
+
+    /// Low-rank operator request from the CLI flags: `--landmarks M`
+    /// picks Nyström, `--rank R` picks pivoted ICF, `--rank 0` forces
+    /// the exact path, neither flag leaves the solver's default.
+    fn lowrank(&self) -> Option<LowRankConfig> {
+        match (self.rank, self.landmarks) {
+            (_, Some(m)) => Some(LowRankConfig::nystrom(m)),
+            (Some(0), _) => None,
+            (Some(r), _) => Some(LowRankConfig::icf(r)),
+            (None, None) => None,
+        }
     }
 
     /// The job's stopping policy: CLI budget keys, or solver defaults.
@@ -212,9 +252,14 @@ impl TrainJob {
                 cache_mb: self.cache_mb,
                 ..Default::default()
             }),
-            Solver::Mu => SolverSpec::Mu(mu::MuParams { c, ..Default::default() }),
+            Solver::Mu => SolverSpec::Mu(mu::MuParams {
+                c,
+                lowrank: self.lowrank(),
+                ..Default::default()
+            }),
             Solver::Primal => SolverSpec::Primal(primal::PrimalParams {
                 c,
+                lowrank: self.lowrank(),
                 ..Default::default()
             }),
             Solver::SpSvm => SolverSpec::SpSvm(spsvm::SpSvmParams {
@@ -223,6 +268,18 @@ impl TrainJob {
                 max_basis: self.max_basis,
                 eps: self.eps.unwrap_or(5e-6),
                 seed: self.seed,
+                lowrank: self.lowrank(),
+                ..Default::default()
+            }),
+            // lssvm defaults to rank-256 ICF; `--rank 0` opts into the
+            // exact memory-capped path.
+            Solver::LsSvm => SolverSpec::LsSvm(lssvm::LsSvmParams {
+                c,
+                lowrank: match (self.rank, self.landmarks) {
+                    (Some(0), _) => None,
+                    (None, None) => Some(LowRankConfig::icf(256)),
+                    _ => self.lowrank(),
+                },
                 ..Default::default()
             }),
         }
@@ -367,6 +424,8 @@ mod tests {
     fn solver_and_engine_parsing() {
         assert_eq!(Solver::parse("libsvm").unwrap(), Solver::Smo);
         assert_eq!(Solver::parse("wusvm").unwrap(), Solver::SpSvm);
+        assert_eq!(Solver::parse("lssvm").unwrap(), Solver::LsSvm);
+        assert_eq!(Solver::parse("plssvm").unwrap(), Solver::LsSvm);
         assert!(Solver::parse("nope").is_err());
         assert_eq!(EngineChoice::parse("mc", 4).unwrap(), EngineChoice::CpuPar(4));
         assert_eq!(EngineChoice::parse("xla", 4).unwrap(), EngineChoice::Xla);
@@ -396,6 +455,38 @@ mod tests {
     }
 
     #[test]
+    fn lowrank_flags_from_config() {
+        let cfg = |args: &[&str]| {
+            Config::from_args(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+        };
+        // --rank on an implicit solver -> ICF of that width
+        let job =
+            TrainJob::from_config(&cfg(&["--solver", "primal", "--rank", "64"])).unwrap();
+        assert_eq!(job.lowrank(), Some(LowRankConfig::icf(64)));
+        // --landmarks -> Nystrom
+        let job =
+            TrainJob::from_config(&cfg(&["--solver", "lssvm", "--landmarks", "32"])).unwrap();
+        assert_eq!(job.lowrank(), Some(LowRankConfig::nystrom(32)));
+        // --rank 0 -> exact, even on lssvm (which defaults to ICF 256)
+        let job = TrainJob::from_config(&cfg(&["--solver", "lssvm", "--rank", "0"])).unwrap();
+        assert_eq!(job.lowrank(), None);
+        match job.solver_spec(&paper::spec("adult").unwrap()) {
+            SolverSpec::LsSvm(p) => assert!(p.lowrank.is_none()),
+            other => panic!("expected lssvm spec, got {}", other.driver().name()),
+        }
+        // both flags at once is a contradiction
+        let err = TrainJob::from_config(&cfg(&[
+            "--solver", "mu", "--rank", "8", "--landmarks", "8",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
+        // explicit-family solvers compute exact rows; the flag is an error
+        let err =
+            TrainJob::from_config(&cfg(&["--solver", "smo", "--rank", "64"])).unwrap_err();
+        assert!(err.to_string().contains("implicit family"), "{err}");
+    }
+
+    #[test]
     fn budget_keys_from_config() {
         let cfg = Config::from_args(&[
             "--time-budget-secs".into(),
@@ -418,7 +509,7 @@ mod tests {
         // every key from_config reads must be in the check_known allowlist
         for k in [
             "dataset", "scale", "solver", "engine", "threads", "c", "gamma", "eps",
-            "max-basis", "wss-size", "cache-mb", "seed", "max-train",
+            "max-basis", "wss-size", "rank", "landmarks", "cache-mb", "seed", "max-train",
             "time-budget-secs", "max-iters",
         ] {
             assert!(TRAIN_KEYS.contains(&k), "{k} missing from TRAIN_KEYS");

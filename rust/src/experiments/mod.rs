@@ -339,6 +339,51 @@ pub fn run_sparse_compare(dataset: &str, scale: f64, solver: Solver) -> Result<S
     Ok(out)
 }
 
+/// F.rank — LS-SVM accuracy and operator memory vs ICF rank
+/// (EXPERIMENTS.md §LOWRANK). Row 0 is the exact-kernel baseline
+/// (`--rank 0`); each sweep row trains the same data on a rank-r pivoted
+/// incomplete Cholesky operator and reports the test metric, wall time,
+/// the operator's own `memory_bytes` in MB, and that footprint as a
+/// fraction of the n^2 exact kernel.
+pub fn run_rank_curve(dataset: &str, scale: f64, ranks: &[usize]) -> Result<String> {
+    let mut points = Vec::new();
+    let mut n_train = 0usize;
+    for &r in std::iter::once(&0usize).chain(ranks) {
+        let job = TrainJob {
+            dataset: dataset.into(),
+            scale,
+            solver: Solver::LsSvm,
+            engine: EngineChoice::CpuPar(pool::default_threads()),
+            rank: Some(r),
+            ..Default::default()
+        };
+        let rec = run(&job)?;
+        n_train = rec.n_train;
+        let exact_bytes = (rec.n_train * rec.n_train * 4) as f64;
+        let op_bytes: f64 = rec
+            .notes
+            .iter()
+            .find(|(k, _)| k == "operator_bytes")
+            .and_then(|(_, v)| v.parse().ok())
+            .unwrap_or(exact_bytes);
+        points.push((
+            r as f64,
+            vec![
+                rec.test_metric,
+                rec.train_time.as_secs_f64(),
+                op_bytes / 1e6,
+                op_bytes / exact_bytes,
+            ],
+        ));
+    }
+    Ok(render_sweep(
+        &format!("F.rank lssvm on {dataset} (scale {scale}, n = {n_train}; rank 0 = exact)"),
+        "rank",
+        &["test_metric", "time_s", "op_mb", "vs_exact"],
+        &points,
+    ))
+}
+
 /// F.memory — the memory wall for exact implicit methods: bytes required
 /// vs n for MU (2 n^2), full primal (n^2) and SP-SVM (|J| n), plus
 /// whether each method runs under a 2 GB cap.
@@ -438,6 +483,16 @@ mod tests {
         assert!(t.contains("max |margin_dense - margin_csr|"), "{t}");
         // multiclass datasets are rejected, not mis-compared
         assert!(run_sparse_compare("mnist8m", 0.004, Solver::SpSvm).is_err());
+    }
+
+    #[test]
+    fn rank_curve_runs_exact_and_lowrank() {
+        let t = run_rank_curve("adult", 0.01, &[16]).unwrap();
+        assert!(t.contains("F.rank lssvm"), "{t}");
+        assert!(t.contains("op_mb"), "{t}");
+        // one exact row (rank 0) + one sweep row
+        assert!(t.lines().any(|l| l.starts_with("0")), "{t}");
+        assert!(t.lines().any(|l| l.starts_with("16")), "{t}");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! every solver inherits the sparse fast path with no API change.
 
 pub mod cache;
+pub mod operator;
 
 use crate::data::{CsrMatrix, Dataset, Design};
 use crate::linalg::{gemm, spmm};

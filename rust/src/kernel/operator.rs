@@ -1,0 +1,484 @@
+//! Kernel access behind an object-safe operator (DESIGN.md §LOWRANK).
+//!
+//! The implicit solvers (`mu`, `primal`, `spsvm`, `lssvm`) never touch
+//! kernel tiles directly any more: they consume a `&dyn KernelOperator`
+//! and see only `matvec` / `block` / `diag`. Four implementations:
+//!
+//! * [`ExactDense`] — the full n × n matrix, materialized once
+//!   (memory-capped, the pre-refactor MU/Primal behavior).
+//! * [`ExactTiled`] — streaming exact kernel over the dense GEMM path;
+//!   only a `row_tile × n` staging buffer is resident.
+//! * [`ExactCsr`] — the same streaming operator for sparse designs
+//!   (CSR SpMM path under [`kernel_block`]).
+//! * [`LowRank`] — K ≈ G Gᵀ via pivoted ICF or Nyström landmarks
+//!   ([`crate::linalg::lowrank`]); `matvec` is two skinny GEMVs at
+//!   O(n·r) memory and per-iteration cost — the paper's approximate
+//!   implicit regime.
+//!
+//! Every implementation inherits the substrate determinism contract:
+//! outputs are bit-identical across thread counts, and the exact
+//! operators agree bit-for-bit with each other because [`kernel_block`]
+//! values are independent of tile shape (per-element accumulation
+//! order is fixed — DESIGN.md §GEMM).
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::data::{Dataset, Design};
+use crate::linalg::{gemm, gemm_nt, gemv, gemv_t, lowrank, Matrix};
+
+use super::{full_kernel, kernel_block, KernelKind};
+
+/// Object-safe view of an n × n SPD kernel matrix.
+pub trait KernelOperator: Send + Sync {
+    /// Number of training points (the operator is n × n).
+    fn n(&self) -> usize;
+    /// out = K v. Bit-identical for every thread count.
+    fn matvec(&self, v: &[f32], out: &mut [f32]);
+    /// Row-major `|ri| × |ci|` block of K.
+    fn block(&self, ri: &[usize], ci: &[usize], out: &mut [f32]);
+    /// The operator's own diagonal — exact K_ii for the exact
+    /// operators, `||g_i||²` for [`LowRank`].
+    fn diag(&self, out: &mut [f32]);
+    /// Bytes held resident (materialized matrix / factor / staging).
+    fn memory_bytes(&self) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// Exact kernel diagonal K_ii for any design.
+pub fn kernel_diag(kind: &KernelKind, ds: &Dataset, out: &mut [f32]) {
+    assert_eq!(out.len(), ds.n);
+    match &ds.design {
+        Design::Dense(_) => {
+            for i in 0..ds.n {
+                out[i] = kind.self_eval(ds.row(i));
+            }
+        }
+        Design::Sparse(csr) => match *kind {
+            KernelKind::Rbf { .. } => out.fill(1.0),
+            KernelKind::Linear => out.copy_from_slice(&csr.sum_sq),
+            KernelKind::Poly { degree, gamma, coef0 } => {
+                for i in 0..ds.n {
+                    out[i] = (gamma * csr.sum_sq[i] + coef0).powi(degree);
+                }
+            }
+        },
+    }
+}
+
+/// Staging-tile height targeting ~32 MB of `row_tile × n` buffer.
+fn default_row_tile(n: usize) -> usize {
+    ((32 << 20) / (4 * n.max(1))).max(8).min(n.max(1))
+}
+
+// ---------------------------------------------------------------- exact
+
+/// The fully materialized kernel matrix (memory-capped).
+pub struct ExactDense {
+    k: Matrix,
+    threads: usize,
+}
+
+impl ExactDense {
+    /// Materialize the full kernel; refuses above `max_bytes` with the
+    /// same "memory wall" diagnostic as [`full_kernel`].
+    pub fn build(
+        kind: &KernelKind,
+        ds: &Dataset,
+        threads: usize,
+        max_bytes: usize,
+    ) -> Result<Self> {
+        let k = full_kernel(kind, ds, threads, max_bytes).map_err(|e| anyhow!(e))?;
+        Ok(ExactDense { k, threads })
+    }
+
+    /// Wrap an already-built n × n matrix.
+    pub fn from_matrix(k: Matrix, threads: usize) -> Self {
+        assert_eq!(k.rows, k.cols);
+        ExactDense { k, threads }
+    }
+
+    /// The materialized matrix (MU's Q± split streams its rows).
+    pub fn matrix(&self) -> &Matrix {
+        &self.k
+    }
+}
+
+impl KernelOperator for ExactDense {
+    fn n(&self) -> usize {
+        self.k.rows
+    }
+
+    fn matvec(&self, v: &[f32], out: &mut [f32]) {
+        gemv(self.threads, &self.k, v, out);
+    }
+
+    fn block(&self, ri: &[usize], ci: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), ri.len() * ci.len());
+        let s = ci.len();
+        for (q, &i) in ri.iter().enumerate() {
+            let row = self.k.row(i);
+            for (slot, &j) in out[q * s..(q + 1) * s].iter_mut().zip(ci) {
+                *slot = row[j];
+            }
+        }
+    }
+
+    fn diag(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.k.rows);
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = self.k.at(i, i);
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.k.rows * self.k.cols * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "exact-dense"
+    }
+}
+
+/// Streaming exact operator over the dense/sparse tile producer
+/// [`kernel_block`]: nothing n × n is ever resident.
+pub struct ExactTiled<'a> {
+    ds: &'a Dataset,
+    kind: KernelKind,
+    threads: usize,
+    row_tile: usize,
+}
+
+impl<'a> ExactTiled<'a> {
+    pub fn new(kind: KernelKind, ds: &'a Dataset, threads: usize) -> Self {
+        let row_tile = default_row_tile(ds.n);
+        ExactTiled { ds, kind, threads, row_tile }
+    }
+}
+
+impl KernelOperator for ExactTiled<'_> {
+    fn n(&self) -> usize {
+        self.ds.n
+    }
+
+    fn matvec(&self, v: &[f32], out: &mut [f32]) {
+        let n = self.ds.n;
+        assert_eq!(v.len(), n);
+        assert_eq!(out.len(), n);
+        let all: Vec<usize> = (0..n).collect();
+        let mut buf = vec![0.0f32; self.row_tile.min(n) * n];
+        let mut start = 0;
+        // sequential tile loop; each tile's values and the GEMV over it
+        // are tile-shape-independent per element, so out matches the
+        // materialized path bit-for-bit.
+        while start < n {
+            let m = self.row_tile.min(n - start);
+            let ri = &all[start..start + m];
+            kernel_block(&self.kind, self.ds, ri, &all, self.threads, &mut buf[..m * n]);
+            gemm::gemv_blocked(
+                self.threads,
+                m,
+                n,
+                &buf[..m * n],
+                n,
+                v,
+                &mut out[start..start + m],
+            );
+            start += m;
+        }
+    }
+
+    fn block(&self, ri: &[usize], ci: &[usize], out: &mut [f32]) {
+        kernel_block(&self.kind, self.ds, ri, ci, self.threads, out);
+    }
+
+    fn diag(&self, out: &mut [f32]) {
+        kernel_diag(&self.kind, self.ds, out);
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.row_tile.min(self.ds.n) * self.ds.n * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "exact-tiled"
+    }
+}
+
+/// [`ExactTiled`] restricted to sparse designs — the tile producer
+/// routes through the CSR SpMM path, whose output is bit-identical to
+/// the dense path by the substrate contract.
+pub struct ExactCsr<'a>(ExactTiled<'a>);
+
+impl<'a> ExactCsr<'a> {
+    pub fn new(kind: KernelKind, ds: &'a Dataset, threads: usize) -> Result<Self> {
+        ensure!(
+            ds.is_sparse(),
+            "exact-csr operator needs a sparse design (dataset '{}' is dense)",
+            ds.name
+        );
+        Ok(ExactCsr(ExactTiled::new(kind, ds, threads)))
+    }
+}
+
+impl KernelOperator for ExactCsr<'_> {
+    fn n(&self) -> usize {
+        self.0.n()
+    }
+
+    fn matvec(&self, v: &[f32], out: &mut [f32]) {
+        self.0.matvec(v, out)
+    }
+
+    fn block(&self, ri: &[usize], ci: &[usize], out: &mut [f32]) {
+        self.0.block(ri, ci, out)
+    }
+
+    fn diag(&self, out: &mut [f32]) {
+        self.0.diag(out)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.0.memory_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "exact-csr"
+    }
+}
+
+// -------------------------------------------------------------- lowrank
+
+/// K ≈ G Gᵀ: the paper's approximate implicit regime. `matvec` is
+/// `G (Gᵀ v)` — two skinny GEMVs, O(n·r) flops and bytes.
+pub struct LowRank {
+    g: Matrix,
+    diag: Vec<f32>,
+    residual_frac: f64,
+    threads: usize,
+    method: &'static str,
+}
+
+impl LowRank {
+    /// Pivoted incomplete Cholesky factor of the kernel
+    /// ([`lowrank::icf`]); kernel columns stream through
+    /// [`kernel_block`] on demand.
+    pub fn icf(kind: &KernelKind, ds: &Dataset, threads: usize, rank: usize, tol: f64) -> Self {
+        let n = ds.n;
+        let mut dg = vec![0.0f32; n];
+        kernel_diag(kind, ds, &mut dg);
+        let all: Vec<usize> = (0..n).collect();
+        let f = lowrank::icf(threads, &dg, rank, tol, |p, col| {
+            kernel_block(kind, ds, &all, &[p], threads, col)
+        });
+        LowRank::from_factor(f, threads, "icf")
+    }
+
+    /// Nyström factor over evenly spread landmark rows
+    /// ([`lowrank::nystrom`]); deterministic landmark choice, shared
+    /// escalating-ridge regularization of the landmark Gram.
+    pub fn nystrom(
+        kind: &KernelKind,
+        ds: &Dataset,
+        threads: usize,
+        landmarks: usize,
+    ) -> Result<Self> {
+        let n = ds.n;
+        let m = landmarks.min(n).max(1);
+        let lm: Vec<usize> = (0..m).map(|j| j * n / m).collect();
+        let all: Vec<usize> = (0..n).collect();
+        let mut c = Matrix::zeros(n, m);
+        kernel_block(kind, ds, &all, &lm, threads, &mut c.data);
+        let mut w = Matrix::zeros(m, m);
+        kernel_block(kind, ds, &lm, &lm, threads, &mut w.data);
+        let mut dg = vec![0.0f32; n];
+        kernel_diag(kind, ds, &mut dg);
+        let f = lowrank::nystrom(threads, &dg, &c, &w, 1e-6, lm)
+            .map_err(|e| anyhow!("nystrom landmark factorization failed: {e}"))?;
+        Ok(LowRank::from_factor(f, threads, "nystrom"))
+    }
+
+    pub fn from_factor(f: lowrank::LowRankFactor, threads: usize, method: &'static str) -> Self {
+        let n = f.g.rows;
+        let mut diag = vec![0.0f32; n];
+        for (i, slot) in diag.iter_mut().enumerate() {
+            *slot = gemm::sum_sq(f.g.row(i));
+        }
+        LowRank { g: f.g, diag, residual_frac: f.residual_frac, threads, method }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.g.cols
+    }
+
+    /// `trace(K - G Gᵀ) / trace(K)` at factorization stop.
+    pub fn residual_frac(&self) -> f64 {
+        self.residual_frac
+    }
+}
+
+impl KernelOperator for LowRank {
+    fn n(&self) -> usize {
+        self.g.rows
+    }
+
+    fn matvec(&self, v: &[f32], out: &mut [f32]) {
+        assert_eq!(v.len(), self.g.rows);
+        assert_eq!(out.len(), self.g.rows);
+        if self.g.cols == 0 {
+            out.fill(0.0);
+            return;
+        }
+        let mut t = vec![0.0f32; self.g.cols];
+        gemv_t(self.threads, &self.g, v, &mut t);
+        gemv(self.threads, &self.g, &t, out);
+    }
+
+    fn block(&self, ri: &[usize], ci: &[usize], out: &mut [f32]) {
+        let (m, s, r) = (ri.len(), ci.len(), self.g.cols);
+        assert_eq!(out.len(), m * s);
+        if r == 0 {
+            out.fill(0.0);
+            return;
+        }
+        let mut a = Matrix::zeros(m, r);
+        for (q, &i) in ri.iter().enumerate() {
+            a.data[q * r..(q + 1) * r].copy_from_slice(self.g.row(i));
+        }
+        let mut b = Matrix::zeros(s, r);
+        for (q, &j) in ci.iter().enumerate() {
+            b.data[q * r..(q + 1) * r].copy_from_slice(self.g.row(j));
+        }
+        let mut c = Matrix::zeros(m, s);
+        gemm_nt(self.threads, &a, &b, &mut c);
+        out.copy_from_slice(&c.data);
+    }
+
+    fn diag(&self, out: &mut [f32]) {
+        out.copy_from_slice(&self.diag);
+    }
+
+    fn memory_bytes(&self) -> usize {
+        (self.g.data.len() + self.diag.len()) * 4
+    }
+
+    fn name(&self) -> &'static str {
+        self.method
+    }
+}
+
+// ---------------------------------------------------------------- build
+
+/// Low-rank request carried by the implicit solvers' params.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LowRankConfig {
+    /// Factor width r: ICF pivot budget or Nyström landmark count.
+    pub rank: usize,
+    /// Nyström landmark sampling instead of pivoted ICF.
+    pub nystrom: bool,
+    /// ICF stop: residual trace ≤ `tol` × initial trace.
+    pub tol: f64,
+}
+
+impl LowRankConfig {
+    pub fn icf(rank: usize) -> Self {
+        LowRankConfig { rank, nystrom: false, tol: 1e-6 }
+    }
+
+    pub fn nystrom(rank: usize) -> Self {
+        LowRankConfig { rank, nystrom: true, tol: 1e-6 }
+    }
+}
+
+/// Build the operator a solver asked for: `Some(cfg)` → [`LowRank`],
+/// `None` → the exact streaming operator matching the design
+/// ([`ExactCsr`] for sparse, [`ExactTiled`] for dense).
+pub fn build<'a>(
+    kind: &KernelKind,
+    ds: &'a Dataset,
+    threads: usize,
+    cfg: Option<LowRankConfig>,
+) -> Result<Box<dyn KernelOperator + 'a>> {
+    match cfg {
+        Some(c) if c.nystrom => Ok(Box::new(LowRank::nystrom(kind, ds, threads, c.rank)?)),
+        Some(c) => Ok(Box::new(LowRank::icf(kind, ds, threads, c.rank, c.tol))),
+        None if ds.is_sparse() => Ok(Box::new(ExactCsr::new(*kind, ds, threads)?)),
+        None => Ok(Box::new(ExactTiled::new(*kind, ds, threads))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn blobs(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let pos = rng.bernoulli(0.5);
+            let c = if pos { 0.7 } else { 0.3 };
+            for _ in 0..d {
+                x.push(c + 0.1 * rng.gaussian_f32());
+            }
+            y.push(if pos { 1.0 } else { -1.0 });
+        }
+        Dataset::new_binary("blobs", d, x, y)
+    }
+
+    #[test]
+    fn dense_and_tiled_matvec_bitwise_equal() {
+        let ds = blobs(97, 5, 31);
+        let kind = KernelKind::Rbf { gamma: 2.0 };
+        let dense = ExactDense::build(&kind, &ds, 4, usize::MAX).unwrap();
+        let tiled = ExactTiled { row_tile: 16, ..ExactTiled::new(kind, &ds, 4) };
+        let mut rng = Rng::new(32);
+        let v: Vec<f32> = (0..ds.n).map(|_| rng.gaussian_f32()).collect();
+        let mut a = vec![0.0f32; ds.n];
+        let mut b = vec![0.0f32; ds.n];
+        dense.matvec(&v, &mut a);
+        tiled.matvec(&v, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lowrank_block_consistent_with_matvec() {
+        let ds = blobs(60, 3, 33);
+        let kind = KernelKind::Rbf { gamma: 1.5 };
+        let op = LowRank::icf(&kind, &ds, 2, 60, 0.0);
+        // K e_j column via block must match matvec against e_j
+        let all: Vec<usize> = (0..ds.n).collect();
+        let j = 17;
+        let mut col = vec![0.0f32; ds.n];
+        op.block(&all, &[j], &mut col);
+        let mut e = vec![0.0f32; ds.n];
+        e[j] = 1.0;
+        let mut mv = vec![0.0f32; ds.n];
+        op.matvec(&e, &mut mv);
+        for (a, b) in col.iter().zip(&mv) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn build_dispatches_on_design_and_config() {
+        let ds = blobs(40, 3, 34);
+        let kind = KernelKind::Rbf { gamma: 1.0 };
+        assert_eq!(build(&kind, &ds, 1, None).unwrap().name(), "exact-tiled");
+        let lr = build(&kind, &ds, 1, Some(LowRankConfig::icf(8))).unwrap();
+        assert_eq!(lr.name(), "icf");
+        let ny = build(&kind, &ds, 1, Some(LowRankConfig::nystrom(8))).unwrap();
+        assert_eq!(ny.name(), "nystrom");
+        let sp = blobs(40, 3, 34).with_format(crate::data::Format::Csr);
+        assert_eq!(build(&kind, &sp, 1, None).unwrap().name(), "exact-csr");
+    }
+
+    #[test]
+    fn lowrank_memory_is_fraction_of_exact() {
+        let ds = blobs(2000, 4, 35);
+        let kind = KernelKind::Rbf { gamma: 1.0 };
+        let op = LowRank::icf(&kind, &ds, 4, 64, 0.0);
+        let exact = ds.n * ds.n * 4;
+        assert!(op.memory_bytes() * 10 < exact, "{} vs {}", op.memory_bytes(), exact);
+    }
+}

@@ -1,7 +1,14 @@
 //! Conjugate-gradient SPD solver (CPU counterpart of the `cg_solve`
 //! artifact; used by the CpuSeq/CpuPar engines and the primal baseline).
+//!
+//! One loop body serves every caller: [`run`] is parameterized by an
+//! apply closure, and the masked matrix solve ([`solve_masked`]) and
+//! the kernel-operator solve ([`solve_operator`], the LS-SVM normal
+//! equations) are thin shells around it — identical update arithmetic,
+//! so the refactor changes no bits.
 
 use super::{dot, gemv, Matrix};
+use crate::kernel::operator::KernelOperator;
 
 /// Result of a CG solve.
 #[derive(Debug, Clone)]
@@ -11,36 +18,18 @@ pub struct CgResult {
     pub residual: f32,
 }
 
-/// Solve (M (H + reg I) M + (I-M)) x = M g by conjugate gradient, where
-/// M = diag(mask). Mirrors the masked-system convention of the XLA
-/// `cg_solve` artifact exactly (model.py) so engines are interchangeable.
-pub fn solve_masked(
-    threads: usize,
-    h: &Matrix,
-    g: &[f32],
-    mask: &[f32],
-    reg: f32,
+/// The CG loop over an abstract SPD apply. `tol` bounds the *squared*
+/// residual norm, matching the historical convention of this module.
+pub fn run(
+    apply: &mut dyn FnMut(&[f32], &mut Vec<f32>),
+    b: &[f32],
     max_iters: usize,
     tol: f32,
 ) -> CgResult {
-    let n = h.rows;
-    assert_eq!(h.cols, n);
-    assert_eq!(g.len(), n);
-    assert_eq!(mask.len(), n);
-
-    let apply = |v: &[f32], out: &mut Vec<f32>| {
-        // out = (M (H + reg I) M + (I-M)) v
-        let mv: Vec<f32> = v.iter().zip(mask).map(|(a, m)| a * m).collect();
-        gemv(threads, h, &mv, out);
-        for i in 0..n {
-            out[i] = mask[i] * (out[i] + reg * mv[i]) + (1.0 - mask[i]) * v[i];
-        }
-    };
-
-    let b: Vec<f32> = g.iter().zip(mask).map(|(a, m)| a * m).collect();
+    let n = b.len();
     let mut x = vec![0.0f32; n];
-    let mut r = b.clone();
-    let mut p = b.clone();
+    let mut r = b.to_vec();
+    let mut p = b.to_vec();
     let mut rs = dot(&r, &r);
     let mut ap = vec![0.0f32; n];
     let mut iters = 0;
@@ -63,10 +52,62 @@ pub fn solve_masked(
         }
         rs = rs_new;
     }
-    for i in 0..n {
-        x[i] *= mask[i];
-    }
     CgResult { x, iters, residual: rs.sqrt() }
+}
+
+/// Solve (M (H + reg I) M + (I-M)) x = M g by conjugate gradient, where
+/// M = diag(mask). Mirrors the masked-system convention of the XLA
+/// `cg_solve` artifact exactly (model.py) so engines are interchangeable.
+pub fn solve_masked(
+    threads: usize,
+    h: &Matrix,
+    g: &[f32],
+    mask: &[f32],
+    reg: f32,
+    max_iters: usize,
+    tol: f32,
+) -> CgResult {
+    let n = h.rows;
+    assert_eq!(h.cols, n);
+    assert_eq!(g.len(), n);
+    assert_eq!(mask.len(), n);
+
+    let mut apply = |v: &[f32], out: &mut Vec<f32>| {
+        // out = (M (H + reg I) M + (I-M)) v
+        let mv: Vec<f32> = v.iter().zip(mask).map(|(a, m)| a * m).collect();
+        gemv(threads, h, &mv, out);
+        for i in 0..n {
+            out[i] = mask[i] * (out[i] + reg * mv[i]) + (1.0 - mask[i]) * v[i];
+        }
+    };
+
+    let b: Vec<f32> = g.iter().zip(mask).map(|(a, m)| a * m).collect();
+    let mut res = run(&mut apply, &b, max_iters, tol);
+    for i in 0..n {
+        res.x[i] *= mask[i];
+    }
+    res
+}
+
+/// Solve (K + reg I) x = g against any [`KernelOperator`] — with a
+/// low-rank operator this is the O(n·r)-per-iteration regularized
+/// normal-equations solve LS-SVM runs on.
+pub fn solve_operator(
+    op: &dyn KernelOperator,
+    g: &[f32],
+    reg: f32,
+    max_iters: usize,
+    tol: f32,
+) -> CgResult {
+    let n = op.n();
+    assert_eq!(g.len(), n);
+    let mut apply = |v: &[f32], out: &mut Vec<f32>| {
+        op.matvec(v, out);
+        for i in 0..n {
+            out[i] += reg * v[i];
+        }
+    };
+    run(&mut apply, g, max_iters, tol)
 }
 
 /// Plain SPD solve (mask of ones).
@@ -154,6 +195,20 @@ mod tests {
         assert!(r.iters <= 2);
         for v in &r.x {
             assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn operator_solve_matches_matrix_solve() {
+        let mut rng = Rng::new(14);
+        let h = spd(&mut rng, 32);
+        let g: Vec<f32> = (0..32).map(|_| rng.gaussian_f32()).collect();
+        let op = crate::kernel::operator::ExactDense::from_matrix(h.clone(), 1);
+        let a = solve(1, &h, &g, 1e-3, 200, 1e-12);
+        let b = solve_operator(&op, &g, 1e-3, 200, 1e-12);
+        assert_eq!(a.iters, b.iters);
+        for (x, y) in a.x.iter().zip(&b.x) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
         }
     }
 

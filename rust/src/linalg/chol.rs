@@ -78,21 +78,41 @@ pub fn solve_with_factor(l: &Matrix, b: &[f32]) -> Vec<f32> {
     x.into_iter().map(|v| v as f32).collect()
 }
 
-/// One-shot SPD solve with ridge fallback: tries A, then A + reg I with
-/// increasing reg until the factorization succeeds.
-pub fn solve_ridge(a: &Matrix, b: &[f32], mut reg: f32) -> Result<Vec<f32>, CholError> {
-    for _ in 0..8 {
+/// Factor A + reg I with escalating jitter: on a `NotPd` failure the
+/// ridge is multiplied by 10 (floored at 1e-6) and the factorization is
+/// retried, up to `tries` attempts. Returns the factor together with
+/// the ridge that succeeded. This is the one retry policy shared by
+/// [`solve_ridge`], the Nyström landmark factorization
+/// ([`super::lowrank`]) and the LS-SVM regularizer, so they cannot
+/// drift apart.
+pub fn factor_ridge(a: &Matrix, reg: f32, tries: usize) -> Result<(Matrix, f32), CholError> {
+    let mut reg = reg;
+    let mut last = CholError::NotPd(0, 0.0);
+    for _ in 0..tries.max(1) {
         let mut aa = a.clone();
         for i in 0..aa.rows {
             let v = aa.at(i, i) + reg;
             aa.set(i, i, v);
         }
         match factor(&aa) {
-            Ok(l) => return Ok(solve_with_factor(&l, b)),
-            Err(_) => reg = (reg * 10.0).max(1e-6),
+            Ok(l) => return Ok((l, reg)),
+            Err(e) => {
+                last = e;
+                reg = (reg * 10.0).max(1e-6);
+            }
         }
     }
-    factor(a).map(|l| solve_with_factor(&l, b))
+    Err(last)
+}
+
+/// One-shot SPD solve with ridge fallback: tries A + reg I with
+/// increasing reg ([`factor_ridge`]) until the factorization succeeds,
+/// then falls back to a bare attempt so the original error surfaces.
+pub fn solve_ridge(a: &Matrix, b: &[f32], reg: f32) -> Result<Vec<f32>, CholError> {
+    match factor_ridge(a, reg, 8) {
+        Ok((l, _)) => Ok(solve_with_factor(&l, b)),
+        Err(_) => factor(a).map(|l| solve_with_factor(&l, b)),
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +171,18 @@ mod tests {
         let x = solve_ridge(&a, &[2.0, 2.0], 1e-4).unwrap();
         // residual small under the ridge
         assert!((x[0] + x[1] - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn factor_ridge_escalates_and_reports_reg() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]); // rank 1
+        let (_, reg) = factor_ridge(&a, 0.0, 8).unwrap();
+        assert!(reg >= 1e-6, "escalated ridge, got {reg}");
+        // an SPD input succeeds on the first try with the ridge unchanged
+        let mut rng = Rng::new(9);
+        let s = spd(&mut rng, 10);
+        let (_, reg0) = factor_ridge(&s, 0.0, 8).unwrap();
+        assert_eq!(reg0, 0.0);
     }
 
     #[test]

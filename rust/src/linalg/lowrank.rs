@@ -1,0 +1,300 @@
+//! Low-rank PSD factorizations: K ≈ G Gᵀ with G ∈ ℝ^{n×r}, r ≪ n.
+//!
+//! Two constructions back the `LowRank` kernel operator
+//! (`kernel::operator`):
+//!
+//! * **Pivoted incomplete Cholesky (ICF)** — the PSVM construction: at
+//!   step k pick the row with the largest residual diagonal, append the
+//!   corresponding (projected, scaled) kernel column to G, and stop when
+//!   the residual trace falls below `tol` × the initial trace or the
+//!   rank budget is spent. Approximation error is exactly the residual
+//!   trace: `trace(K - G Gᵀ) = Σ_i d_i ≥ 0`.
+//! * **Nyström landmarks** — G = C · L⁻ᵀ for C = K[:, L], W = K[L, L]
+//!   = L Lᵀ, so G Gᵀ = C W⁻¹ Cᵀ. W is regularized through the shared
+//!   escalating-ridge policy ([`chol::factor_ridge`]).
+//!
+//! Both are data-agnostic: kernel entries arrive through caller-supplied
+//! inputs (the operator layer owns dataset plumbing), keeping `linalg`
+//! free of data-layer dependencies. Both honor the substrate determinism
+//! contract (DESIGN.md §LOWRANK): pivots are chosen by a sequential
+//! first-max scan, and every parallel loop partitions elements without
+//! changing any element's accumulation order, so factors are
+//! bit-identical across thread counts.
+
+use super::{chol, Matrix};
+use crate::pool;
+
+/// A rank-`r` factor of an n × n PSD matrix.
+#[derive(Debug, Clone)]
+pub struct LowRankFactor {
+    /// n × r row-major factor; `r` is the rank actually built (ICF may
+    /// stop early on the trace test).
+    pub g: Matrix,
+    /// Residual diagonal trace at stop, as a fraction of the initial
+    /// trace — the relative approximation error in the trace norm.
+    pub residual_frac: f64,
+    /// ICF pivot rows / Nyström landmark rows, in selection order.
+    pub pivots: Vec<usize>,
+}
+
+impl LowRankFactor {
+    pub fn rank(&self) -> usize {
+        self.g.cols
+    }
+}
+
+/// out[i] = Σ_j w[j] · cols[j][i]. The j-loop is innermost and always
+/// ascending, so each element's accumulation order is fixed no matter
+/// how the i-range is partitioned across threads.
+fn project(threads: usize, cols: &[Vec<f32>], w: &[f32], out: &mut [f32]) {
+    if cols.is_empty() {
+        out.fill(0.0);
+        return;
+    }
+    const CHUNK: usize = 2048;
+    pool::parallel_chunks_mut(threads, out, CHUNK, |c, slice| {
+        let base = c * CHUNK;
+        slice.fill(0.0);
+        for (col, &wj) in cols.iter().zip(w) {
+            let src = &col[base..base + slice.len()];
+            for (o, &s) in slice.iter_mut().zip(src) {
+                *o += wj * s;
+            }
+        }
+    });
+}
+
+/// Pivoted incomplete Cholesky with diagonal-trace stopping.
+///
+/// `diag` holds the exact diagonal K_ii; `column(p, buf)` must fill
+/// `buf` with kernel column p (length n, deterministically). Builds at
+/// most `rank` columns, stopping early once the residual trace drops to
+/// `tol` × the initial trace.
+pub fn icf(
+    threads: usize,
+    diag: &[f32],
+    rank: usize,
+    tol: f64,
+    mut column: impl FnMut(usize, &mut [f32]),
+) -> LowRankFactor {
+    let n = diag.len();
+    let rank = rank.min(n).max(1);
+    let mut d: Vec<f64> = diag.iter().map(|&v| v as f64).collect();
+    let trace0: f64 = d.iter().sum::<f64>();
+    let trace0 = trace0.max(f64::MIN_POSITIVE);
+    let mut cols: Vec<Vec<f32>> = Vec::with_capacity(rank);
+    let mut pivots: Vec<usize> = Vec::with_capacity(rank);
+    let mut kcol = vec![0.0f32; n];
+    let mut proj = vec![0.0f32; n];
+    for _ in 0..rank {
+        // deterministic pivot: first index attaining the max residual
+        let mut p = 0;
+        for i in 1..n {
+            if d[i] > d[p] {
+                p = i;
+            }
+        }
+        let dp = d[p];
+        if dp <= tol * trace0 {
+            break;
+        }
+        column(p, &mut kcol);
+        let w: Vec<f32> = cols.iter().map(|c| c[p]).collect();
+        project(threads, &cols, &w, &mut proj);
+        let root = dp.sqrt();
+        let inv = (1.0 / root) as f32;
+        let mut g = vec![0.0f32; n];
+        for i in 0..n {
+            g[i] = (kcol[i] - proj[i]) * inv;
+        }
+        g[p] = root as f32;
+        for i in 0..n {
+            d[i] -= g[i] as f64 * g[i] as f64;
+        }
+        d[p] = 0.0;
+        pivots.push(p);
+        cols.push(g);
+    }
+    // pack the column list into the row-major n × r factor
+    let r = cols.len();
+    let mut gm = Matrix::zeros(n, r);
+    for (j, c) in cols.iter().enumerate() {
+        for i in 0..n {
+            gm.data[i * r + j] = c[i];
+        }
+    }
+    let resid: f64 = d.iter().map(|v| v.max(0.0)).sum();
+    LowRankFactor { g: gm, residual_frac: resid / trace0, pivots }
+}
+
+/// Nyström factor from the landmark cross block C = K[:, L] (n × m) and
+/// landmark Gram W = K[L, L] (m × m). Rows of G solve independently
+/// (sequential forward substitution per row, f64 accumulation like
+/// [`chol::solve_with_factor`]), so the factor is bit-identical across
+/// thread counts. `diag` (exact K_ii) is only used to report the
+/// residual trace fraction.
+pub fn nystrom(
+    threads: usize,
+    diag: &[f32],
+    c: &Matrix,
+    w: &Matrix,
+    jitter: f32,
+    pivots: Vec<usize>,
+) -> Result<LowRankFactor, chol::CholError> {
+    let n = c.rows;
+    let m = c.cols;
+    assert_eq!(w.rows, m);
+    assert_eq!(w.cols, m);
+    assert_eq!(diag.len(), n);
+    let (l, _reg) = chol::factor_ridge(w, jitter, 8)?;
+    let mut g = Matrix::zeros(n, m);
+    let lref = &l;
+    pool::parallel_chunks_mut(threads, &mut g.data, m, |i, row| {
+        let crow = c.row(i);
+        let mut y = vec![0.0f64; m];
+        for a in 0..m {
+            let mut v = crow[a] as f64;
+            for k in 0..a {
+                v -= lref.at(a, k) as f64 * y[k];
+            }
+            y[a] = v / lref.at(a, a) as f64;
+        }
+        for (dst, v) in row.iter_mut().zip(&y) {
+            *dst = *v as f32;
+        }
+    });
+    let trace0: f64 = diag.iter().map(|&v| v as f64).sum();
+    let trace0 = trace0.max(f64::MIN_POSITIVE);
+    let mut resid = 0.0f64;
+    for i in 0..n {
+        let row = g.row(i);
+        let mut s = 0.0f64;
+        for &v in row {
+            s += v as f64 * v as f64;
+        }
+        resid += (diag[i] as f64 - s).max(0.0);
+    }
+    Ok(LowRankFactor { g, residual_frac: resid / trace0, pivots })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm_nt;
+    use crate::rng::Rng;
+
+    /// Random PSD matrix B Bᵀ with a mild diagonal boost.
+    fn psd(rng: &mut Rng, n: usize, inner: usize) -> Matrix {
+        let b = Matrix::from_vec(
+            n,
+            inner,
+            (0..n * inner).map(|_| rng.gaussian_f32()).collect(),
+        );
+        let mut a = Matrix::zeros(n, n);
+        gemm_nt(1, &b, &b, &mut a);
+        for i in 0..n {
+            a.set(i, i, a.at(i, i) + 0.1);
+        }
+        a
+    }
+
+    fn reconstruction_err(a: &Matrix, g: &Matrix) -> f32 {
+        let n = a.rows;
+        let mut worst = 0.0f32;
+        for i in 0..n {
+            for j in 0..n {
+                let mut e = 0.0f64;
+                for k in 0..g.cols {
+                    e += g.at(i, k) as f64 * g.at(j, k) as f64;
+                }
+                worst = worst.max((a.at(i, j) - e as f32).abs());
+            }
+        }
+        worst
+    }
+
+    fn diag_of(a: &Matrix) -> Vec<f32> {
+        (0..a.rows).map(|i| a.at(i, i)).collect()
+    }
+
+    fn col_closure(a: &Matrix) -> impl FnMut(usize, &mut [f32]) + '_ {
+        move |p: usize, buf: &mut [f32]| {
+            for i in 0..a.rows {
+                buf[i] = a.at(i, p);
+            }
+        }
+    }
+
+    #[test]
+    fn icf_full_rank_reconstructs() {
+        let mut rng = Rng::new(21);
+        let a = psd(&mut rng, 24, 24);
+        let f = icf(1, &diag_of(&a), 24, 0.0, col_closure(&a));
+        assert!(
+            reconstruction_err(&a, &f.g) < 1e-3,
+            "err {}",
+            reconstruction_err(&a, &f.g)
+        );
+        assert!(f.residual_frac < 1e-6);
+    }
+
+    #[test]
+    fn icf_truncates_on_trace_and_improves_with_rank() {
+        let mut rng = Rng::new(22);
+        // numerically rank-8 matrix: ICF should stop well short of n
+        let a = psd(&mut rng, 40, 8);
+        let f = icf(1, &diag_of(&a), 40, 1e-8, col_closure(&a));
+        assert!(f.rank() < 40, "rank {}", f.rank());
+        let f4 = icf(1, &diag_of(&a), 4, 0.0, col_closure(&a));
+        let f8 = icf(1, &diag_of(&a), 8, 0.0, col_closure(&a));
+        assert!(f8.residual_frac <= f4.residual_frac + 1e-12);
+    }
+
+    #[test]
+    fn icf_bits_stable_across_threads() {
+        let mut rng = Rng::new(23);
+        let a = psd(&mut rng, 64, 16);
+        let d = diag_of(&a);
+        let f1 = icf(1, &d, 16, 0.0, col_closure(&a));
+        let f8 = icf(8, &d, 16, 0.0, col_closure(&a));
+        assert_eq!(f1.pivots, f8.pivots);
+        assert_eq!(f1.g.data, f8.g.data);
+    }
+
+    #[test]
+    fn nystrom_all_landmarks_reconstructs() {
+        let mut rng = Rng::new(24);
+        let a = psd(&mut rng, 20, 20);
+        let pivots: Vec<usize> = (0..20).collect();
+        let w = a.clone();
+        let f = nystrom(1, &diag_of(&a), &a, &w, 0.0, pivots).unwrap();
+        assert!(
+            reconstruction_err(&a, &f.g) < 1e-2,
+            "err {}",
+            reconstruction_err(&a, &f.g)
+        );
+    }
+
+    #[test]
+    fn nystrom_bits_stable_across_threads() {
+        let mut rng = Rng::new(25);
+        let a = psd(&mut rng, 48, 12);
+        let d = diag_of(&a);
+        let lm: Vec<usize> = (0..12).map(|j| j * 4).collect();
+        let mut c = Matrix::zeros(48, 12);
+        let mut w = Matrix::zeros(12, 12);
+        for i in 0..48 {
+            for (jj, &j) in lm.iter().enumerate() {
+                c.set(i, jj, a.at(i, j));
+            }
+        }
+        for (ii, &i) in lm.iter().enumerate() {
+            for (jj, &j) in lm.iter().enumerate() {
+                w.set(ii, jj, a.at(i, j));
+            }
+        }
+        let f1 = nystrom(1, &d, &c, &w, 1e-6, lm.clone()).unwrap();
+        let f8 = nystrom(8, &d, &c, &w, 1e-6, lm).unwrap();
+        assert_eq!(f1.g.data, f8.g.data);
+    }
+}

@@ -13,6 +13,7 @@
 pub mod chol;
 pub mod cg;
 pub mod gemm;
+pub mod lowrank;
 pub mod spmm;
 
 use crate::pool;

@@ -26,17 +26,23 @@ COMMANDS
               a generated analog of --dataset; default test = 80/20 split)
             --format dense|csr|auto  (design-matrix storage; auto picks
               CSR at <= 25% density; files default auto, analogs dense)
-            --solver smo|wss|mu|primal|spsvm   --engine cpu-seq|cpu-par|xla
+            --solver smo|wss|mu|primal|spsvm|lssvm  --engine cpu-seq|cpu-par|xla
             --scale 0.05  --c --gamma --eps --max-basis --seed
+            --rank R       (implicit solvers: pivoted-ICF kernel rank;
+              0 = exact; lssvm defaults to 256)
+            --landmarks M  (Nystrom landmarks instead of ICF)
             --time-budget-secs T --max-iters N  (training budget)
             --save model.txt  (unknown --keys are rejected)
   predict   --model model.txt --input data.libsvm [--threads N]
             [--format dense|csr|auto]
   datagen   --dataset KEY --scale S --out file.libsvm [--test-out f]
-  bench     table1|scaling|basis|wss|epsstop|memory|convergence|sparse
+  bench     table1|scaling|basis|wss|epsstop|memory|convergence|sparse|
+            rank-curve
             table1: --dataset KEY|all --scale S --methods a,b --max-basis N
             convergence: --dataset KEY --scale S --solvers smo,spsvm --every K
             sparse: --dataset kdd99 --scale S --solver spsvm  (csr vs dense)
+            rank-curve: --dataset KEY --scale S --ranks 16,32,64,128,256
+              (lssvm accuracy/memory vs ICF rank, exact baseline at rank 0)
   serve     --dataset KEY --scale S [--engine E] [--requests N] [--batch N]
             [--shards K] [--queue-cap N]  (multiclass datasets serve OvO)
   info      artifact manifest + runtime info
@@ -241,8 +247,19 @@ fn cmd_bench(cfg: &Config) -> Result<()> {
             let solver = wu_svm::coordinator::Solver::parse(&cfg.str_or("solver", "spsvm"))?;
             println!("{}", experiments::run_sparse_compare(&ds, scale, solver)?);
         }
+        "rank-curve" => {
+            let ds = cfg.str_or("dataset", "adult");
+            let scale = cfg.f64_or("scale", experiments::default_scale(&ds))?;
+            let ranks: Vec<usize> = cfg
+                .str_or("ranks", "16,32,64,128,256")
+                .split(',')
+                .map(|s| s.trim().parse::<usize>())
+                .collect::<std::result::Result<_, _>>()?;
+            println!("{}", experiments::run_rank_curve(&ds, scale, &ranks)?);
+        }
         other => bail!(
-            "unknown bench '{other}' (table1|scaling|basis|wss|epsstop|memory|convergence|sparse)"
+            "unknown bench '{other}' (table1|scaling|basis|wss|epsstop|memory|\
+             convergence|sparse|rank-curve)"
         ),
     }
     Ok(())

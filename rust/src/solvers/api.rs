@@ -59,7 +59,7 @@ use crate::kernel::cache::SharedRowCache;
 use crate::kernel::KernelKind;
 
 use super::common::KernelRows;
-use super::{mu, primal, smo, spsvm, wss, TrainResult};
+use super::{lssvm, mu, primal, smo, spsvm, wss, TrainResult};
 
 /// The paper's methodological axis: who parallelizes the heavy math.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -424,7 +424,7 @@ impl<'a> TrainCtx<'a> {
 /// environmental comes from the [`TrainCtx`].
 pub trait SolverDriver: Send + Sync {
     /// Stable short name (`"smo"`, `"wss"`, `"mu"`, `"primal"`,
-    /// `"spsvm"`).
+    /// `"spsvm"`, `"lssvm"`).
     fn name(&self) -> &str;
 
     /// Which side of the paper's explicit/implicit axis this solver is.
@@ -442,6 +442,7 @@ pub enum SolverSpec {
     Mu(mu::MuParams),
     Primal(primal::PrimalParams),
     SpSvm(spsvm::SpSvmParams),
+    LsSvm(lssvm::LsSvmParams),
 }
 
 impl SolverSpec {
@@ -452,6 +453,7 @@ impl SolverSpec {
             SolverSpec::Mu(p) => p,
             SolverSpec::Primal(p) => p,
             SolverSpec::SpSvm(p) => p,
+            SolverSpec::LsSvm(p) => p,
         }
     }
 
@@ -680,6 +682,7 @@ mod tests {
             (SolverSpec::Mu(Default::default()), "mu", Family::Implicit),
             (SolverSpec::Primal(Default::default()), "primal", Family::Implicit),
             (SolverSpec::SpSvm(Default::default()), "spsvm", Family::Implicit),
+            (SolverSpec::LsSvm(Default::default()), "lssvm", Family::Implicit),
         ];
         for (spec, name, family) in specs {
             assert_eq!(spec.name(), name);

@@ -10,13 +10,18 @@
 //! * [`primal`] — primal Newton (Chapelle), full kernel.
 //! * [`spsvm`] — sparse primal SVM (Keerthi et al.), the paper's headline
 //!   method (WU-SVM).
+//! * [`lssvm`] — least-squares SVM (PLSSVM style): one CG solve on the
+//!   low-rank normal equations over a `KernelOperator`.
 //!
-//! All five implement the object-safe [`SolverDriver`] contract and are
+//! All six implement the object-safe [`SolverDriver`] contract and are
 //! normally driven through the [`Trainer`] builder ([`api`] module);
 //! the per-solver free functions remain as thin shims for one release.
+//! The implicit family reaches the kernel only through
+//! [`crate::kernel::operator::KernelOperator`] — exact or low-rank.
 
 pub mod api;
 pub mod common;
+pub mod lssvm;
 pub mod mu;
 pub mod primal;
 pub mod smo;

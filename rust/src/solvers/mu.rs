@@ -22,7 +22,8 @@ use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
 use crate::engine::Engine;
-use crate::kernel::{full_kernel, KernelKind};
+use crate::kernel::operator::{build as build_operator, ExactDense, KernelOperator, LowRankConfig};
+use crate::kernel::KernelKind;
 use crate::linalg::{gemv, Matrix};
 use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
@@ -41,6 +42,11 @@ pub struct MuParams {
     pub tol: f64,
     /// Refuse to materialize Q+/Q- beyond this many bytes (both count).
     pub max_kernel_bytes: usize,
+    /// `Some` streams Q± off a low-rank kernel factor instead of the
+    /// exact kernel. Q± still materialize (the MU memory wall stands —
+    /// that is the paper's point about this method); only the kernel
+    /// source changes.
+    pub lowrank: Option<LowRankConfig>,
 }
 
 impl Default for MuParams {
@@ -50,6 +56,7 @@ impl Default for MuParams {
             max_iters: 2000,
             tol: 1e-7,
             max_kernel_bytes: 2 << 30, // 2 GB
+            lowrank: None,
         }
     }
 }
@@ -90,35 +97,61 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &MuParams) -> Result<TrainResult> {
     // wall clock starts before the O(n^2) kernel build — MU's dominant
     // cost — so wall budgets and IterEvent.elapsed cover all of it
     let mut meter = ctx.meter("mu", params.max_iters);
-    // Q+ and Q- both materialize: half the cap each.
-    let k = full_kernel(&kind, ds, threads, params.max_kernel_bytes / 2)
-        .map_err(|e| anyhow!(e))?;
-    // Q = y y^T * K, split into positive and negative parts (rows are
-    // independent — the split streams in parallel like the GEMVs below).
+    // Q+ and Q- both materialize whatever the kernel source: the MU
+    // memory wall is 2·n² and the cap applies to it directly.
+    let need = 2 * n * n * 4;
+    if need > params.max_kernel_bytes {
+        return Err(anyhow!(
+            "mu needs {need} bytes for Q+/Q- > cap {} — the O(n^2) memory wall (n = {n})",
+            params.max_kernel_bytes
+        ));
+    }
+    // Kernel values arrive through the operator abstraction: the exact
+    // materialized matrix by default (half the cap each for Q±), or a
+    // low-rank G·Gᵀ factor when params ask for one.
+    let op: Box<dyn KernelOperator + '_> = match params.lowrank {
+        None => Box::new(ExactDense::build(&kind, ds, threads, params.max_kernel_bytes / 2)?),
+        Some(cfg) => build_operator(&kind, ds, threads, Some(cfg))?,
+    };
+    let op_name = op.name();
+    let op_bytes = op.memory_bytes();
+    // Q = y y^T * K, split into positive and negative parts. Rows
+    // stream through op.block in chunks; within a chunk the split runs
+    // in parallel (rows are independent) like the GEMVs below.
     let mut qp = Matrix::zeros(n, n);
     let mut qm = Matrix::zeros(n, n);
     {
-        let qp_ptr = crate::pool::SendPtr::new(qp.data.as_mut_ptr());
-        let qm_ptr = crate::pool::SendPtr::new(qm.data.as_mut_ptr());
+        let all: Vec<usize> = (0..n).collect();
+        let chunk = 256.min(n);
+        let mut buf = vec![0.0f32; chunk * n];
         let y = &ds.y;
-        let kref = &k;
-        crate::pool::parallel_for(threads, n, 8, |i| {
-            let yi = y[i];
-            let krow = kref.row(i);
-            // SAFETY: row i of each matrix written by exactly one task.
-            let qpr = unsafe { std::slice::from_raw_parts_mut(qp_ptr.get().add(i * n), n) };
-            let qmr = unsafe { std::slice::from_raw_parts_mut(qm_ptr.get().add(i * n), n) };
-            for j in 0..n {
-                let q = yi * y[j] * krow[j];
-                if q >= 0.0 {
-                    qpr[j] = q;
-                } else {
-                    qmr[j] = -q;
+        let mut start = 0;
+        while start < n {
+            let m = chunk.min(n - start);
+            op.block(&all[start..start + m], &all, &mut buf[..m * n]);
+            let qp_ptr = crate::pool::SendPtr::new(qp.data.as_mut_ptr());
+            let qm_ptr = crate::pool::SendPtr::new(qm.data.as_mut_ptr());
+            let bufref = &buf;
+            crate::pool::parallel_for(threads, m, 8, |r| {
+                let i = start + r;
+                let yi = y[i];
+                let krow = &bufref[r * n..(r + 1) * n];
+                // SAFETY: row i of each matrix written by exactly one task.
+                let qpr = unsafe { std::slice::from_raw_parts_mut(qp_ptr.get().add(i * n), n) };
+                let qmr = unsafe { std::slice::from_raw_parts_mut(qm_ptr.get().add(i * n), n) };
+                for j in 0..n {
+                    let q = yi * y[j] * krow[j];
+                    if q >= 0.0 {
+                        qpr[j] = q;
+                    } else {
+                        qmr[j] = -q;
+                    }
                 }
-            }
-        });
+            });
+            start += m;
+        }
     }
-    drop(k);
+    drop(op);
     sw.lap("kernel");
 
     let c = params.c;
@@ -174,6 +207,8 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &MuParams) -> Result<TrainResult> {
     }
     res.note("n_sv", sv.len().to_string());
     res.note("kernel_bytes", (2 * n * n * 4).to_string());
+    res.note("operator", op_name.to_string());
+    res.note("operator_bytes", op_bytes.to_string());
     Ok(res)
 }
 
@@ -241,6 +276,26 @@ mod tests {
         assert!(rel < 0.5, "mu {} smo {}", m.objective, s.objective);
         // ...and it burns through many full-matrix iterations doing so
         assert!(m.iterations > 50);
+    }
+
+    #[test]
+    fn lowrank_operator_close_to_exact() {
+        let ds = blobs(150, 5);
+        let kind = KernelKind::Rbf { gamma: 4.0 };
+        let base = MuParams { c: 10.0, max_iters: 400, ..Default::default() };
+        let exact = train(&ds, kind, &base).unwrap();
+        let lr = train(
+            &ds,
+            kind,
+            &MuParams { lowrank: Some(LowRankConfig::icf(40)), ..base },
+        )
+        .unwrap();
+        let m_exact = exact.model.decision_batch(&ds, 2);
+        let m_lr = lr.model.decision_batch(&ds, 2);
+        let e0 = error_rate(&m_exact, &ds.y);
+        let e1 = error_rate(&m_lr, &ds.y);
+        assert!(e1 < e0 + 0.03, "exact {e0} lowrank {e1}");
+        assert!(lr.notes.iter().any(|(k, v)| k == "operator" && v == "icf"));
     }
 
     #[test]

@@ -14,12 +14,13 @@
 //! The bias is folded in as an extra constant-1 "kernel column", matching
 //! the SP-SVM convention.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::engine::Engine;
-use crate::kernel::{full_kernel, KernelKind};
-use crate::linalg::{dot, gemv, Matrix};
+use crate::kernel::operator::{build as build_operator, ExactDense, KernelOperator, LowRankConfig};
+use crate::kernel::KernelKind;
+use crate::linalg::dot;
 use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 
@@ -37,6 +38,10 @@ pub struct PrimalParams {
     pub cg_iters: usize,
     pub tol: f64,
     pub max_kernel_bytes: usize,
+    /// `Some` runs every K·v against a low-rank G·Gᵀ factor — O(n·r)
+    /// memory, the paper's approximate implicit regime — instead of the
+    /// materialized exact kernel.
+    pub lowrank: Option<LowRankConfig>,
 }
 
 impl Default for PrimalParams {
@@ -47,6 +52,7 @@ impl Default for PrimalParams {
             cg_iters: 120,
             tol: 1e-6,
             max_kernel_bytes: 2 << 30,
+            lowrank: None,
         }
     }
 }
@@ -84,22 +90,21 @@ struct State {
 }
 
 fn eval_state(
-    k: &Matrix,
+    op: &dyn KernelOperator,
     y: &[f32],
     beta: &[f32],
     bias: f32,
     c: f32,
-    threads: usize,
-    reg: &mut Vec<f32>,
+    reg: &mut [f32],
 ) -> State {
     let n = y.len();
     let mut f = vec![0.0f32; n];
-    gemv(threads, k, beta, &mut f);
+    op.matvec(beta, &mut f);
     for v in f.iter_mut() {
         *v += bias;
     }
     // reg term 1/2 beta^T K beta = 1/2 beta . (f - bias)
-    gemv(threads, k, beta, reg);
+    op.matvec(beta, reg);
     let mut loss = 0.5 * dot(beta, reg) as f64;
     let mut active = vec![0.0f32; n];
     for i in 0..n {
@@ -126,14 +131,20 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &PrimalParams) -> Result<TrainResult> {
     // wall clock starts before the O(n^2) kernel build so wall budgets
     // and IterEvent.elapsed cover all of it
     let mut meter = ctx.meter("primal", params.max_newton);
-    let k = full_kernel(&kind, ds, threads, params.max_kernel_bytes).map_err(|e| anyhow!(e))?;
+    // Kernel access goes through the operator abstraction: exact
+    // materialized (memory-capped) by default, or a low-rank factor.
+    let op: Box<dyn KernelOperator + '_> = match params.lowrank {
+        None => Box::new(ExactDense::build(&kind, ds, threads, params.max_kernel_bytes)?),
+        Some(cfg) => build_operator(&kind, ds, threads, Some(cfg))?,
+    };
+    let op = op.as_ref();
     sw.lap("kernel");
 
     let y = &ds.y;
     let mut beta = vec![0.0f32; n];
     let mut bias = 0.0f32;
     let mut scratch = vec![0.0f32; n];
-    let mut state = eval_state(&k, y, &beta, bias, c, threads, &mut scratch);
+    let mut state = eval_state(op, y, &beta, bias, c, &mut scratch);
 
     let mut converged = false;
     loop {
@@ -143,9 +154,9 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &PrimalParams) -> Result<TrainResult> {
             resid[i] = state.active[i] * (state.f[i] - y[i]);
         }
         let mut kres = vec![0.0f32; n];
-        gemv(threads, &k, &resid, &mut kres); // K is symmetric
+        op.matvec(&resid, &mut kres); // K is symmetric
         let mut kbeta = vec![0.0f32; n];
-        gemv(threads, &k, &beta, &mut kbeta);
+        op.matvec(&beta, &mut kbeta);
         let g: Vec<f32> = (0..n).map(|i| kbeta[i] + 2.0 * c * kres[i]).collect();
         let g_bias: f32 = 2.0 * c * resid.iter().sum::<f32>();
 
@@ -163,11 +174,11 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &PrimalParams) -> Result<TrainResult> {
                      kv: &mut Vec<f32>,
                      av: &mut Vec<f32>,
                      kav: &mut Vec<f32>| {
-            gemv(threads, &k, v, kv);
+            op.matvec(v, kv);
             for i in 0..n {
                 av[i] = state.active[i] * (kv[i] + vb);
             }
-            gemv(threads, &k, av, kav);
+            op.matvec(av, kav);
             for i in 0..n {
                 out[i] = kv[i] + 2.0 * c * kav[i] + 1e-6 * v[i];
             }
@@ -212,7 +223,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &PrimalParams) -> Result<TrainResult> {
         for _ in 0..8 {
             let nb: Vec<f32> = (0..n).map(|i| beta[i] + step * x[i]).collect();
             let nbias = bias + step * xb;
-            let ns = eval_state(&k, y, &nb, nbias, c, threads, &mut scratch);
+            let ns = eval_state(op, y, &nb, nbias, c, &mut scratch);
             if ns.loss < state.loss {
                 beta = nb;
                 bias = nbias;
@@ -260,7 +271,8 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &PrimalParams) -> Result<TrainResult> {
         res.note("engine_fallback", "cpu (full-kernel primal has no accelerator path)".to_string());
     }
     res.note("n_sv", sv.len().to_string());
-    res.note("kernel_bytes", (n * n * 4).to_string());
+    res.note("kernel_bytes", op.memory_bytes().to_string());
+    res.note("operator", op.name().to_string());
     Ok(res)
 }
 
@@ -311,6 +323,24 @@ mod tests {
         let ea = error_rate(&a.model.decision_batch(&te, 2), &te.y);
         let eb = error_rate(&b.model.decision_batch(&te, 2), &te.y);
         assert!((ea - eb).abs() < 0.04, "smo {ea} vs primal {eb}");
+    }
+
+    #[test]
+    fn lowrank_operator_close_to_exact() {
+        let ds = xor_dataset(250, 6);
+        let kind = KernelKind::Rbf { gamma: 8.0 };
+        let base = PrimalParams { c: 10.0, ..Default::default() };
+        let exact = train(&ds, kind, &base).unwrap();
+        let lr = train(
+            &ds,
+            kind,
+            &PrimalParams { lowrank: Some(LowRankConfig::icf(64)), ..base },
+        )
+        .unwrap();
+        let e0 = error_rate(&exact.model.decision_batch(&ds, 2), &ds.y);
+        let e1 = error_rate(&lr.model.decision_batch(&ds, 2), &ds.y);
+        assert!(e1 < e0 + 0.05, "exact {e0} lowrank {e1}");
+        assert!(lr.notes.iter().any(|(k, v)| k == "operator" && v == "icf"));
     }
 
     #[test]

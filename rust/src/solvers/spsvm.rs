@@ -31,6 +31,7 @@ use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::engine::Engine;
+use crate::kernel::operator::{build as build_operator, KernelOperator, LowRankConfig};
 use crate::kernel::KernelKind;
 use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
@@ -60,6 +61,10 @@ pub struct SpSvmParams {
     /// Newton iterations per re-optimization.
     pub max_newton: usize,
     pub seed: u64,
+    /// `Some` sources candidate-scoring tiles and K_JJ from a low-rank
+    /// G·Gᵀ factor (cpu engines only; the accelerator tile path is
+    /// exact and sits below the operator layer).
+    pub lowrank: Option<LowRankConfig>,
 }
 
 impl Default for SpSvmParams {
@@ -73,6 +78,7 @@ impl Default for SpSvmParams {
             eps: 5e-6,
             max_newton: 8,
             seed: 0x5b5b,
+            lowrank: None,
         }
     }
 }
@@ -257,6 +263,33 @@ fn loss_and_err(st: &SpState, c: f32) -> (f64, usize) {
     (loss, nerr)
 }
 
+/// Candidate-scoring tile `K[t × s]` of one padded tile against the
+/// candidate rows, through the kernel operator. Real rows come from
+/// `op.block` (tiles are contiguous row ranges); padded tail rows and
+/// unused candidate columns stay zero — every downstream consumer
+/// (score_tile, tile_stats, loss_and_err) masks them out via the tile
+/// validity mask / `a_t = r_t = 0`, so a zero fill is exact.
+fn cross_tile(
+    op: &dyn KernelOperator,
+    tiled: &TiledData,
+    tile: usize,
+    cand: &[usize],
+    s: usize,
+) -> Vec<f32> {
+    let t = tiled.t;
+    let start = tile * t;
+    let m_real = t.min(op.n() - start);
+    let ri: Vec<usize> = (start..start + m_real).collect();
+    let nc = cand.len();
+    let mut tmp = vec![0.0f32; m_real * nc];
+    op.block(&ri, cand, &mut tmp);
+    let mut kc = vec![0.0f32; t * s];
+    for r in 0..m_real {
+        kc[r * s..r * s + nc].copy_from_slice(&tmp[r * nc..(r + 1) * nc]);
+    }
+    kc
+}
+
 /// Refresh cached margins from the kernel tiles (one predict per tile).
 fn refresh_margins(st: &mut SpState, engine: &Engine) -> Result<()> {
     for tile in 0..st.tiled.n_tiles {
@@ -422,6 +455,22 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SpSvmParams) -> Result<TrainResult> {
     let mut st = build_state(ds, engine, params)?;
     let mut rng = Rng::new(params.seed);
     let kind = KernelKind::Rbf { gamma };
+    // Kernel access for candidate scoring and K_JJ: cpu engines go
+    // through the operator layer (exact streaming by default, low-rank
+    // G·Gᵀ when params ask); the xla engine keeps its bucket-shaped
+    // artifact tile path, which lives below the operator abstraction
+    // (ROADMAP item 3 slots the accelerator under it).
+    let op: Option<Box<dyn KernelOperator + '_>> = if engine.is_xla() {
+        anyhow::ensure!(
+            params.lowrank.is_none(),
+            "spsvm low-rank (--rank/--landmarks) runs on the cpu engines only \
+             (the accelerator tile path is exact)"
+        );
+        None
+    } else {
+        Some(build_operator(&kind, ds, engine.threads(), params.lowrank)?)
+    };
+    let lowrank_on = params.lowrank.is_some();
     let s = params.candidates.min(64);
     let t = st.tiled.t;
     let d_pad = st.tiled.d_pad;
@@ -473,7 +522,10 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SpSvmParams) -> Result<TrainResult> {
             let mut hc = vec![0.0f64; s];
             let mut kc_tiles: Vec<Vec<f32>> = Vec::with_capacity(st.tiled.n_tiles);
             for tile in 0..st.tiled.n_tiles {
-                let kc = st.tiled.rbf_block(engine, tile, &xc, s, gamma)?;
+                let kc = match &op {
+                    Some(op) => cross_tile(op.as_ref(), &st.tiled, tile, &cand, s),
+                    None => st.tiled.rbf_block(engine, tile, &xc, s, gamma)?,
+                };
                 let y = &st.tiled.y[tile];
                 let m = &st.tiled.m[tile];
                 let f = &st.margins[tile];
@@ -526,17 +578,35 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SpSvmParams) -> Result<TrainResult> {
                     kt[r * st.b + slot] = kc[r * s + q];
                 }
             }
-            // K_JJ extension (tiny: |J| kernel evals on the CPU)
+            // K_JJ extension (tiny: |J| kernel entries). The low-rank
+            // path sources them from the operator so the restricted
+            // primal optimizes one consistent G·Gᵀ surrogate; exact
+            // paths keep the direct per-pair evaluation.
             let xi = &st.xb[slot * d_pad..(slot + 1) * d_pad];
             for (other_pos, &other_idx) in st.basis_idx.clone().iter().enumerate() {
-                let _ = other_idx;
                 let oslot = other_pos + 1;
-                let xo = &st.xb[oslot * d_pad..(oslot + 1) * d_pad];
-                let v = kind.eval(xi, xo);
+                let v = match (&op, lowrank_on) {
+                    (Some(op), true) => {
+                        let mut buf = [0.0f32; 1];
+                        op.block(&[i], &[other_idx], &mut buf);
+                        buf[0]
+                    }
+                    _ => {
+                        let xo = &st.xb[oslot * d_pad..(oslot + 1) * d_pad];
+                        kind.eval(xi, xo)
+                    }
+                };
                 st.kjj[slot * st.b + oslot] = v;
                 st.kjj[oslot * st.b + slot] = v;
             }
-            st.kjj[slot * st.b + slot] = 1.0;
+            st.kjj[slot * st.b + slot] = match (&op, lowrank_on) {
+                (Some(op), true) => {
+                    let mut buf = [0.0f32; 1];
+                    op.block(&[i], &[i], &mut buf);
+                    buf[0]
+                }
+                _ => 1.0,
+            };
             st.bmask[slot] = 1.0;
             st.basis_idx.push(i);
             added_this_phase += 1;
@@ -595,6 +665,10 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SpSvmParams) -> Result<TrainResult> {
     res.note("rounds", rounds.to_string());
     res.note("train_err", format!("{:.4}", final_err as f64 / n as f64));
     res.note("kernel_cache_bytes", (st.tiled.n_tiles * t * st.b * 4).to_string());
+    if let Some(op) = &op {
+        res.note("operator", op.name().to_string());
+        res.note("operator_bytes", op.memory_bytes().to_string());
+    }
     Ok(res)
 }
 
@@ -659,6 +733,21 @@ mod tests {
         let es = error_rate(&small.model.decision_batch(&ds, 2), &ds.y);
         let el = error_rate(&large.model.decision_batch(&ds, 2), &ds.y);
         assert!(el <= es + 0.01, "small {es} vs large {el}");
+    }
+
+    #[test]
+    fn lowrank_operator_close_to_exact() {
+        let ds = xor_dataset(900, 37);
+        let exact = train(&ds, &params(8.0, 10.0, 31), &Engine::cpu_seq()).unwrap();
+        let p = SpSvmParams {
+            lowrank: Some(LowRankConfig::icf(96)),
+            ..params(8.0, 10.0, 31)
+        };
+        let lr = train(&ds, &p, &Engine::cpu_seq()).unwrap();
+        let e0 = error_rate(&exact.model.decision_batch(&ds, 2), &ds.y);
+        let e1 = error_rate(&lr.model.decision_batch(&ds, 2), &ds.y);
+        assert!(e1 < e0 + 0.05, "exact {e0} lowrank {e1}");
+        assert!(lr.notes.iter().any(|(k, v)| k == "operator" && v == "icf"));
     }
 
     #[test]
