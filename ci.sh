@@ -1,11 +1,15 @@
 #!/bin/sh
-# CI entry point. Usage: ./ci.sh [tier1|benchcheck|benchsmoke|docs|lint|all]
+# CI entry point. Usage: ./ci.sh [tier1|benchcheck|benchsmoke|benchmeasure|docs|lint|all]
 # tier1 is the repository's canonical verification (see ROADMAP.md).
 # benchcheck compiles the bench targets without running them.
 # benchsmoke validates the checked-in BENCH_*.json records against their
-# embedded schemas, then *runs* every bench target with BENCH_SMOKE=1
-# (seconds-sized workloads, no json overwrite) so bench code paths
-# execute in CI instead of only compiling.
+# embedded schemas and ratio floors, then *runs* every bench target with
+# BENCH_SMOKE=1 (seconds-sized workloads, no json overwrite) so bench
+# code paths execute in CI instead of only compiling.
+# benchmeasure runs the full bench workloads (minutes, release-built),
+# which overwrite BENCH_*.json with measured records, then holds those
+# records to the ratio floors in ci/check_bench_json.py — the measured
+# regression gate (rust/EXPERIMENTS.md §SIMD).
 # docs builds the public API docs with warnings denied, so the rustdoc
 # surface (intra-doc links, examples) can't rot either.
 # lint (rustfmt + clippy -D warnings) is part of the blocking gate.
@@ -27,6 +31,11 @@ benchsmoke() {
     BENCH_SMOKE=1 cargo bench
 }
 
+benchmeasure() {
+    cargo bench
+    python3 ci/check_bench_json.py BENCH_*.json
+}
+
 docs() {
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 }
@@ -40,18 +49,20 @@ case "$mode" in
     tier1) tier1 ;;
     benchcheck) benchcheck ;;
     benchsmoke) benchsmoke ;;
+    benchmeasure) benchmeasure ;;
     docs) docs ;;
     lint) lint ;;
     all)
         # benchsmoke builds *and runs* every bench target, subsuming
-        # benchcheck (kept as a standalone fast mode)
+        # benchcheck (kept as a standalone fast mode); benchmeasure is
+        # the separate full-workload gate — minutes, not part of `all`
         tier1
         benchsmoke
         docs
         lint
         ;;
     *)
-        echo "usage: ./ci.sh [tier1|benchcheck|benchsmoke|docs|lint|all]" >&2
+        echo "usage: ./ci.sh [tier1|benchcheck|benchsmoke|benchmeasure|docs|lint|all]" >&2
         exit 2
         ;;
 esac

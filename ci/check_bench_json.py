@@ -1,16 +1,49 @@
 #!/usr/bin/env python3
-"""Validate checked-in BENCH_*.json records against their embedded schema.
+"""Validate BENCH_*.json records: schema shape plus measured-ratio floors.
 
 Every bench target emits a machine-readable JSON record whose "schema"
-object documents its fields. A checked-in record is either a real
-measurement (every schema key present) or an honest placeholder
-("status": "not-run" with a "reason"). This gate runs before the smoke
-pass so a malformed or silently-truncated record fails CI.
+object documents its fields. A record is either a real measurement
+(every schema key present) or an honest placeholder ("status":
+"not-run" with a "reason"). On top of the shape check, measured records
+are held to the performance floors the repo claims in its EXPERIMENTS
+notes — a checked-in "measurement" that regressed below them fails CI:
+
+  BENCH_gemm.json    speedup_vs_seed >= 2.0       (blocked GEMM vs seed dot-loop)
+                     simd_microkernel.speedup >= 1.5   when backend != "scalar"
+  BENCH_sparse.json  block_speedup >= 2.0         (CSR SpMM route vs densified, 90% sparsity)
+
+Ratio floors are skipped for not-run placeholders (nothing was
+measured), and backend-conditional floors are skipped when the record
+says the process ran on the scalar backend — a scalar-only host can't
+demonstrate a SIMD speedup and must not fake one. Measured records must
+name their backend so the ratios are interpretable.
 
 Usage: check_bench_json.py BENCH_a.json [BENCH_b.json ...]
 """
 import json
+import os
 import sys
+
+# basename -> list of (dotted field path, floor, needs_simd_backend)
+RATIO_RULES = {
+    "BENCH_gemm.json": [
+        ("speedup_vs_seed", 2.0, False),
+        ("simd_microkernel.speedup", 1.5, True),
+    ],
+    "BENCH_sparse.json": [
+        ("block_speedup", 2.0, False),
+    ],
+}
+
+
+def lookup(doc: dict, dotted: str):
+    """Resolve a dotted path like 'simd_microkernel.speedup'; None if absent."""
+    node = doc
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
 
 
 def check(path: str) -> list:
@@ -26,15 +59,35 @@ def check(path: str) -> list:
         return errors
     status = doc.get("status")
     if status == "not-run":
+        # honest placeholder: shape only, no ratios to hold it to
         if not doc.get("reason"):
             errors.append(f"{path}: not-run placeholder must carry a 'reason'")
-    elif status is None:
-        # a real measurement: every documented field must be present
-        for key in schema:
-            if key not in doc:
-                errors.append(f"{path}: measurement is missing schema field '{key}'")
-    else:
+        return errors
+    if status is not None:
         errors.append(f"{path}: unknown status {status!r} (expected absent or 'not-run')")
+        return errors
+
+    # a real measurement: every documented field must be present
+    for key in schema:
+        if key not in doc:
+            errors.append(f"{path}: measurement is missing schema field '{key}'")
+    backend = doc.get("backend")
+    if not isinstance(backend, str) or not backend:
+        errors.append(f"{path}: measurement must name its 'backend' (scalar | avx2+fma | neon)")
+        backend = "scalar"  # treat as scalar so only unconditional floors apply
+
+    for dotted, floor, needs_simd in RATIO_RULES.get(os.path.basename(path), []):
+        if needs_simd and backend == "scalar":
+            print(f"note: {path}: {dotted} floor skipped (scalar backend)")
+            continue
+        value = lookup(doc, dotted)
+        if not isinstance(value, (int, float)):
+            errors.append(f"{path}: measurement is missing ratio field '{dotted}'")
+        elif value < floor:
+            errors.append(
+                f"{path}: {dotted} = {value:.3f} is below the {floor:.2f}x floor "
+                f"(backend {backend}) — performance regression or a broken fast path"
+            )
     return errors
 
 
@@ -48,7 +101,7 @@ def main(argv: list) -> int:
     for msg in failures:
         print(f"error: {msg}", file=sys.stderr)
     if not failures:
-        print(f"bench json ok: {len(argv)} file(s) validated")
+        print(f"bench json ok: {len(argv)} file(s) validated (schema + ratio floors)")
     return 1 if failures else 0
 
 

@@ -165,26 +165,67 @@ fn main() {
         let rbf_speedup = s_rseed.median.as_secs_f64() / s_rblk.median.as_secs_f64().max(1e-12);
         println!("rbf_block blocked vs seed: {rbf_speedup:.2}x   (sink {sink:.3})");
 
+        // ---- the dispatch layer measured directly: the same packed
+        // panels through the forced-scalar 8x8 micro-kernel vs the
+        // detected backend's — the per-tile primitive every GEMM number
+        // above is built from (DESIGN.md §SIMD) ----
+        use wu_svm::linalg::gemm::{MR, NR};
+        use wu_svm::linalg::simd::{self, Backend};
+        let be = simd::active();
+        header(&format!("simd 8x8 micro-kernel — scalar vs {}", be.name()));
+        let kc = 256usize;
+        let calls = smoke_or(500, 20_000);
+        let mut pa = rand_vec(&mut rng, kc * MR);
+        let pb = rand_vec(&mut rng, kc * NR);
+        let mut mk_sink = 0.0f32;
+        let s_mk_scalar = bench(&format!("microkernel kc={kc} [scalar]"), 1, 7, || {
+            for it in 0..calls {
+                // touch the panel so the pure call cannot be hoisted
+                pa[0] = it as f32 * 1e-7;
+                mk_sink += std::hint::black_box(Backend::Scalar.microkernel_8x8(&pa, &pb, kc))[0];
+            }
+        });
+        println!("{}", s_mk_scalar.row());
+        let s_mk_simd = bench(&format!("microkernel kc={kc} [{}]", be.name()), 1, 7, || {
+            for it in 0..calls {
+                pa[0] = it as f32 * 1e-7;
+                mk_sink += std::hint::black_box(be.microkernel_8x8(&pa, &pb, kc))[0];
+            }
+        });
+        println!("{}", s_mk_simd.row());
+        let mk_speedup =
+            s_mk_scalar.median.as_secs_f64() / s_mk_simd.median.as_secs_f64().max(1e-12);
+        println!(
+            "micro-kernel {} vs forced scalar: {mk_speedup:.2}x   (sink {mk_sink:.3})",
+            be.name()
+        );
+
         // embedded schema required by ci/check_bench_json.py (validates
         // the checked-in copy of this file on every CI run)
         let schema = "\"schema\": {\n    \
              \"workload\": \"matrix dims, C[m x n] = A[m x k] . B[n x k]^T\",\n    \
              \"threads\": \"worker threads used for both paths\",\n    \
+             \"backend\": \"SIMD backend the measured process dispatched to (scalar | avx2+fma | neon)\",\n    \
              \"seed_dot_loop_ms\": \"median wall time of gemm_nt_naive\",\n    \
              \"seed_dot_loop_gflops\": \"2*m*n*k / median time\",\n    \
              \"blocked_1t_ms\": \"median wall time of blocked gemm_nt, 1 thread\",\n    \
              \"blocked_ms\": \"median wall time of blocked gemm_nt, all threads\",\n    \
              \"blocked_gflops\": \"2*m*n*k / median time\",\n    \
              \"speedup_vs_seed\": \"seed_dot_loop_ms / blocked_ms\",\n    \
-             \"rbf_tile\": \"same comparison for a large rbf_block tile\"\n  }";
+             \"rbf_tile\": \"same comparison for a large rbf_block tile\",\n    \
+             \"simd_microkernel\": \"forced-scalar vs detected-backend 8x8 micro-kernel on identical packed panels\"\n  }";
         let json = format!(
             "{{\n  \"workload\": {{\"m\": {m}, \"k\": {k}, \"n\": {n}}},\n  \
              \"threads\": {threads},\n  \
+             \"backend\": \"{}\",\n  \
              \"seed_dot_loop_ms\": {:.3},\n  \"seed_dot_loop_gflops\": {:.3},\n  \
              \"blocked_1t_ms\": {:.3},\n  \"blocked_ms\": {:.3},\n  \
              \"blocked_gflops\": {:.3},\n  \"speedup_vs_seed\": {:.3},\n  \
              \"rbf_tile\": {{\"t\": {rt}, \"d\": {rd}, \"b\": {rb}, \
-             \"seed_ms\": {:.3}, \"blocked_ms\": {:.3}, \"speedup\": {:.3}}},\n  {schema}\n}}\n",
+             \"seed_ms\": {:.3}, \"blocked_ms\": {:.3}, \"speedup\": {:.3}}},\n  \
+             \"simd_microkernel\": {{\"kc\": {kc}, \"calls\": {calls}, \
+             \"scalar_ms\": {:.3}, \"simd_ms\": {:.3}, \"speedup\": {:.3}}},\n  {schema}\n}}\n",
+            be.name(),
             s_naive.median.as_secs_f64() * 1e3,
             gflops(s_naive.median),
             s_b1.median.as_secs_f64() * 1e3,
@@ -194,6 +235,9 @@ fn main() {
             s_rseed.median.as_secs_f64() * 1e3,
             s_rblk.median.as_secs_f64() * 1e3,
             rbf_speedup,
+            s_mk_scalar.median.as_secs_f64() * 1e3,
+            s_mk_simd.median.as_secs_f64() * 1e3,
+            mk_speedup,
         );
         if smoke() {
             println!("BENCH_SMOKE=1: skipping BENCH_gemm.json (not a measurement)");

@@ -71,6 +71,35 @@ fn main() {
     let matvec_speedup = s_tiled.median.as_secs_f64() / s_low.median.as_secs_f64().max(1e-12);
     println!("lowrank matvec vs exact tiled: {matvec_speedup:.2}x");
 
+    // ---- the dispatch layer under both matvec routes: the lane dot
+    // primitive, forced scalar vs the detected backend (DESIGN.md §SIMD) ----
+    use wu_svm::linalg::simd::{self, Backend};
+    let be = simd::active();
+    header(&format!("lane dot primitive — scalar vs {}", be.name()));
+    let dlen = smoke_or(4096, 1 << 16);
+    let calls = smoke_or(200, 2_000);
+    let mut xv: Vec<f32> = (0..dlen).map(|_| rng.gaussian_f32()).collect();
+    let yv: Vec<f32> = (0..dlen).map(|_| rng.gaussian_f32()).collect();
+    let mut dot_sink = 0.0f32;
+    let s_dot_scalar = bench(&format!("dot len={dlen} [scalar]"), 1, runs, || {
+        for it in 0..calls {
+            // touch the input so the pure call cannot be hoisted
+            xv[0] = it as f32 * 1e-7;
+            dot_sink += std::hint::black_box(Backend::Scalar.dot(&xv, &yv));
+        }
+    });
+    println!("{}", s_dot_scalar.row());
+    let s_dot_simd = bench(&format!("dot len={dlen} [{}]", be.name()), 1, runs, || {
+        for it in 0..calls {
+            xv[0] = it as f32 * 1e-7;
+            dot_sink += std::hint::black_box(be.dot(&xv, &yv));
+        }
+    });
+    println!("{}", s_dot_simd.row());
+    let dot_simd_speedup =
+        s_dot_scalar.median.as_secs_f64() / s_dot_simd.median.as_secs_f64().max(1e-12);
+    println!("dot {} vs forced scalar: {dot_simd_speedup:.2}x   (sink {dot_sink:.3})", be.name());
+
     // ---- end to end: the LS-SVM solve the operator exists for ----
     header("lssvm train — rank-r operator vs exact kernel");
     let lp = LsSvmParams {
@@ -97,10 +126,14 @@ fn main() {
     let schema = "\"schema\": {\n    \
          \"workload\": \"n training rows, d features, ICF rank r\",\n    \
          \"threads\": \"worker threads used for every path\",\n    \
+         \"backend\": \"SIMD backend the measured process dispatched to (scalar | avx2+fma | neon)\",\n    \
          \"icf_build_ms\": \"median wall time of the rank-r pivoted incomplete Cholesky\",\n    \
          \"lowrank_matvec_ms\": \"median K v time through the rank-r operator (2 GEMVs)\",\n    \
          \"tiled_matvec_ms\": \"median K v time through the exact tiled operator\",\n    \
          \"matvec_speedup\": \"tiled_matvec_ms / lowrank_matvec_ms\",\n    \
+         \"dot_scalar_ms\": \"median lane-dot batch time with the forced-scalar flavor\",\n    \
+         \"dot_simd_ms\": \"median lane-dot batch time on the detected backend\",\n    \
+         \"dot_simd_speedup\": \"dot_scalar_ms / dot_simd_ms (1.0 on scalar-only hosts)\",\n    \
          \"op_bytes\": \"rank-r operator footprint (G plus the diagonal)\",\n    \
          \"exact_bytes\": \"4 n^2 — the materialized exact kernel\",\n    \
          \"bytes_ratio\": \"op_bytes / exact_bytes\",\n    \
@@ -110,15 +143,22 @@ fn main() {
     let json = format!(
         "{{\n  \"workload\": {{\"n\": {n}, \"d\": {d}, \"rank\": {rank}}},\n  \
          \"threads\": {threads},\n  \
+         \"backend\": \"{}\",\n  \
          \"icf_build_ms\": {:.3},\n  \
          \"lowrank_matvec_ms\": {:.3},\n  \"tiled_matvec_ms\": {:.3},\n  \
          \"matvec_speedup\": {:.3},\n  \
+         \"dot_scalar_ms\": {:.3},\n  \"dot_simd_ms\": {:.3},\n  \
+         \"dot_simd_speedup\": {:.3},\n  \
          \"op_bytes\": {},\n  \"exact_bytes\": {exact_bytes},\n  \
          \"bytes_ratio\": {bytes_ratio:.5},\n  \"residual_frac\": {:e},\n  \
          \"lssvm_lowrank_ms\": {:.3},\n  \"lssvm_exact_ms\": {:.3},\n  {schema}\n}}\n",
+        be.name(),
         s_build.median.as_secs_f64() * 1e3,
         s_low.median.as_secs_f64() * 1e3,
         s_tiled.median.as_secs_f64() * 1e3,
+        s_dot_scalar.median.as_secs_f64() * 1e3,
+        s_dot_simd.median.as_secs_f64() * 1e3,
+        dot_simd_speedup,
         op.memory_bytes(),
         op.residual_frac(),
         s_ls_low.median.as_secs_f64() * 1e3,

@@ -175,14 +175,17 @@ fn main() {
     let schema = "\"schema\": {\n    \
          \"workload\": \"packed binary model size, feature dim, closed-loop client count\",\n    \
          \"threads\": \"pool worker threads\",\n    \
+         \"backend\": \"SIMD backend the measured process dispatched to (scalar | avx2+fma | neon)\",\n    \
          \"cases\": \"per (shards, batch): throughput, p50/p99 upper bounds (us), occupancy, fallbacks\",\n    \
          \"ovo\": \"45-pair ensemble served off one deduplicated union block\"\n  }";
     let json = format!(
         "{{\n  \"workload\": {{\"binary_b\": 256, \"d\": {d}, \"clients\": {clients}, \
-         \"per_client\": {per_client}}},\n  \"threads\": {threads},\n  \"cases\": [\n{json_cases}\n  ],\n  \
+         \"per_client\": {per_client}}},\n  \"threads\": {threads},\n  \
+         \"backend\": \"{}\",\n  \"cases\": [\n{json_cases}\n  ],\n  \
          \"ovo\": {{\"classes\": {classes}, \"pairs\": 45, \"raw_vectors\": {ovo_raw}, \
          \"union_vectors\": {ovo_union}, \"req_per_s\": {ovo_rps:.0}, \
          \"p50_us\": {}, \"p99_us\": {}}},\n  {schema}\n}}\n",
+        wu_svm::linalg::simd::active().name(),
         snap.p50.as_micros(),
         snap.p99.as_micros(),
     );

@@ -75,6 +75,39 @@ fn main() {
     assert!(dmax <= 1e-6, "csr block diverged from dense by {dmax}");
     println!("max |dense - csr| = {dmax:.2e}");
 
+    // ---- the dispatch layer on the sparse path, measured directly:
+    // the same raw SpMM through the forced-scalar axpy vs the detected
+    // backend's (DESIGN.md §SIMD) ----
+    use wu_svm::data::sparse::Design;
+    use wu_svm::linalg::simd::{self, Backend};
+    use wu_svm::linalg::spmm;
+    let be = simd::active();
+    header(&format!("raw SpMM C[{n} x {b}] — scalar vs {}", be.name()));
+    let csr_mat = match &csr.design {
+        Design::Sparse(m) => m,
+        Design::Dense(_) => unreachable!("csr dataset is CSR by construction"),
+    };
+    let bm: Vec<f32> = {
+        let mut v = vec![0.0f32; b * d];
+        let mut r2 = Rng::new(11);
+        for slot in v.iter_mut() {
+            *slot = r2.gaussian_f32();
+        }
+        v
+    };
+    let mut sp_out = vec![0.0f32; n * b];
+    let s_sp_scalar = bench(&format!("spmm [scalar {threads}t]"), 1, runs, || {
+        spmm::csr_gemm_nt_with(Backend::Scalar, threads, csr_mat, 0, n, &bm, b, &mut sp_out);
+    });
+    println!("{}", s_sp_scalar.row());
+    let s_sp_simd = bench(&format!("spmm [{} {threads}t]", be.name()), 1, runs, || {
+        spmm::csr_gemm_nt_with(be, threads, csr_mat, 0, n, &bm, b, &mut sp_out);
+    });
+    println!("{}", s_sp_simd.row());
+    let spmm_simd_speedup =
+        s_sp_scalar.median.as_secs_f64() / s_sp_simd.median.as_secs_f64().max(1e-12);
+    println!("spmm {} vs forced scalar: {spmm_simd_speedup:.2}x", be.name());
+
     // ---- ingestion: the streaming chunk-parallel parser, CSR vs densify ----
     header("libsvm parse (streaming chunked-parallel)");
     let dir = std::env::temp_dir().join("wu_svm_sparse_bench");
@@ -102,27 +135,38 @@ fn main() {
     let schema = "\"schema\": {\n    \
          \"workload\": \"kernel block dims: K[n x b] over d features at the given zero fraction\",\n    \
          \"threads\": \"worker threads used for both paths\",\n    \
+         \"backend\": \"SIMD backend the measured process dispatched to (scalar | avx2+fma | neon)\",\n    \
          \"dense_block_ms\": \"median wall time of kernel_block on the densified dataset\",\n    \
          \"csr_block_ms\": \"median wall time of kernel_block on the CSR dataset (SpMM path)\",\n    \
          \"block_speedup\": \"dense_block_ms / csr_block_ms\",\n    \
          \"max_abs_diff\": \"max |dense - csr| over the block\",\n    \
          \"dense_bytes\": \"design-matrix footprint stored dense\",\n    \
          \"csr_bytes\": \"design-matrix footprint stored CSR\",\n    \
+         \"spmm_scalar_ms\": \"median raw SpMM time with the forced-scalar axpy\",\n    \
+         \"spmm_simd_ms\": \"median raw SpMM time on the detected backend\",\n    \
+         \"spmm_simd_speedup\": \"spmm_scalar_ms / spmm_simd_ms (1.0 on scalar-only hosts)\",\n    \
          \"parse_csr_ms\": \"median libsvm parse time building CSR directly\",\n    \
          \"parse_dense_ms\": \"median libsvm parse time densifying on load\"\n  }";
     let json = format!(
         "{{\n  \"workload\": {{\"n\": {n}, \"d\": {d}, \"b\": {b}, \"sparsity\": {:.3}}},\n  \
          \"threads\": {threads},\n  \
+         \"backend\": \"{}\",\n  \
          \"dense_block_ms\": {:.3},\n  \"csr_block_ms\": {:.3},\n  \
          \"block_speedup\": {:.3},\n  \"max_abs_diff\": {dmax:e},\n  \
          \"dense_bytes\": {},\n  \"csr_bytes\": {},\n  \
+         \"spmm_scalar_ms\": {:.3},\n  \"spmm_simd_ms\": {:.3},\n  \
+         \"spmm_simd_speedup\": {:.3},\n  \
          \"parse_csr_ms\": {:.3},\n  \"parse_dense_ms\": {:.3},\n  {schema}\n}}\n",
         dense.sparsity(),
+        be.name(),
         s_dense.median.as_secs_f64() * 1e3,
         s_csr.median.as_secs_f64() * 1e3,
         block_speedup,
         dense.bytes(),
         csr.bytes(),
+        s_sp_scalar.median.as_secs_f64() * 1e3,
+        s_sp_simd.median.as_secs_f64() * 1e3,
+        spmm_simd_speedup,
         s_parse_csr.median.as_secs_f64() * 1e3,
         s_parse_dense.median.as_secs_f64() * 1e3,
     );

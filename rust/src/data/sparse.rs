@@ -16,8 +16,6 @@
 //! construction — they change no dot product, no norm, and no chunk
 //! boundary semantics.
 
-use crate::linalg::gemm::KC;
-
 /// Density at or below which `Format::Auto` (and the serve registry)
 /// choose CSR over dense storage. At 25% stored entries the CSR triplet
 /// (8 bytes/nnz + row pointers) already beats the dense 4 bytes/element,
@@ -111,21 +109,12 @@ pub struct CsrMatrix {
 
 /// Σ v² over one sorted sparse row in `gemm::sum_sq`'s accumulation
 /// order: partials reset at every KC column boundary, partials added to
-/// the total in column order (zero columns are identity adds, so this
-/// equals the dense chunked sum bit for bit).
+/// the total in column order (zero columns are identity adds — under
+/// FMA too, since `fma(0, b, acc) == acc` — so this equals the dense
+/// chunked sum bit for bit). Dispatched to the active SIMD backend so
+/// the stored norms always match the flavor the kernel paths run.
 fn chunked_sum_sq(cols: &[u32], vals: &[f32]) -> f32 {
-    let mut total = 0.0f32;
-    let mut partial = 0.0f32;
-    let mut boundary = KC as u32;
-    for (&c, &v) in cols.iter().zip(vals) {
-        if c >= boundary {
-            total += partial;
-            partial = 0.0;
-            boundary = (c / KC as u32 + 1) * KC as u32;
-        }
-        partial += v * v;
-    }
-    total + partial
+    crate::linalg::simd::active().sparse_sum_sq(cols, vals)
 }
 
 /// Incremental CSR assembly (the streaming libsvm parser appends one
@@ -312,18 +301,7 @@ impl CsrMatrix {
     pub fn row_dot_dense(&self, i: usize, x: &[f32]) -> f32 {
         assert!(x.len() >= self.cols);
         let (cols, vals) = self.row(i);
-        let mut total = 0.0f32;
-        let mut partial = 0.0f32;
-        let mut boundary = KC as u32;
-        for (&c, &v) in cols.iter().zip(vals) {
-            if c >= boundary {
-                total += partial;
-                partial = 0.0;
-                boundary = (c / KC as u32 + 1) * KC as u32;
-            }
-            partial += v * x[c as usize];
-        }
-        total + partial
+        crate::linalg::simd::active().sparse_dot_dense(cols, vals, x)
     }
 }
 

@@ -55,10 +55,12 @@ pub struct Engine {
 
 impl Engine {
     pub fn cpu_seq() -> Engine {
+        crate::linalg::simd::log_once();
         Engine { kind: EngineKind::CpuSeq }
     }
 
     pub fn cpu_par(threads: usize) -> Engine {
+        crate::linalg::simd::log_once();
         Engine { kind: EngineKind::CpuPar { threads: threads.max(1) } }
     }
 

@@ -13,9 +13,11 @@
 //!   layout. Strided packing doubles as free transposition: the masked
 //!   SYRK packs `Aᵀ` directly out of the row-major tile.
 //! * **Register tiling** — an `MR x NR` micro-kernel accumulates a full
-//!   C tile in a fixed-size f32 array the compiler keeps in vector
-//!   registers and auto-vectorizes (the offline registry has no SIMD
-//!   intrinsics crate; unrolled fixed-shape lanes get the same effect).
+//!   C tile in vector registers. The kernel is dispatched through
+//!   [`super::simd`]: explicit AVX2+FMA / NEON flavors on supporting
+//!   CPUs (NR=8 is one f32x8 FMA lane per accumulator row), with the
+//!   original fixed-shape auto-vectorized scalar code as the portable
+//!   fallback (`WU_SVM_FORCE_SCALAR=1` pins it).
 //! * **Cache blocking** — the shared `k` dimension is processed in `KC`
 //!   slabs (packed panels stay L2-resident), and the C plane is tiled
 //!   into `MC x NC` macro-tiles for the 2-D parallel decomposition.
@@ -27,6 +29,7 @@
 //! lets `cpu-par(k)` engines reproduce `cpu-seq` exactly, the same
 //! contract `pool::parallel_reduce` gives the SMO scans.
 
+use super::simd::{self, Backend};
 use crate::pool::{self, SendPtr};
 
 /// Micro-tile rows (A-side panel width).
@@ -45,84 +48,30 @@ pub const NC: usize = 128;
 pub const LANES: usize = 8;
 const _: () = assert!(LANES.is_power_of_two());
 
-/// Combine the lane accumulators in a fixed pairwise tree — derived from
-/// `LANES` (retuning the constant cannot silently drop lanes) and
-/// order-deterministic.
-#[inline]
-fn combine_lanes(acc: [f32; LANES]) -> f32 {
-    let mut tmp = acc;
-    let mut width = LANES / 2;
-    while width > 0 {
-        for l in 0..width {
-            tmp[l] += tmp[l + width];
-        }
-        width /= 2;
-    }
-    tmp[0]
-}
-
 /// f32 dot product accumulated in `LANES` independent lanes combined in
-/// a fixed tree order — auto-vectorizable and deterministic. The f64
-/// scalar [`crate::linalg::dot`] remains for accuracy-critical callers.
+/// a fixed tree order — dispatched to the active SIMD backend
+/// ([`simd::active`]), deterministic per backend. The f64 scalar
+/// [`crate::linalg::dot`] remains for accuracy-critical callers.
 #[inline]
 pub fn dot_lanes(x: &[f32], y: &[f32]) -> f32 {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let chunks = n / LANES;
-    let mut acc = [0.0f32; LANES];
-    for c in 0..chunks {
-        let xb = &x[c * LANES..(c + 1) * LANES];
-        let yb = &y[c * LANES..(c + 1) * LANES];
-        for l in 0..LANES {
-            acc[l] += xb[l] * yb[l];
-        }
-    }
-    let mut s = combine_lanes(acc);
-    for i in chunks * LANES..n {
-        s += x[i] * y[i];
-    }
-    s
+    simd::active().dot(x, y)
 }
 
 /// Squared euclidean distance with the same lane scheme as
-/// [`dot_lanes`]. Exact 0 on identical inputs (no cancellation).
+/// [`dot_lanes`]. Exact 0 on identical inputs (no cancellation) in
+/// every backend flavor.
 #[inline]
 pub fn dist2_lanes(x: &[f32], y: &[f32]) -> f32 {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let chunks = n / LANES;
-    let mut acc = [0.0f32; LANES];
-    for c in 0..chunks {
-        let xb = &x[c * LANES..(c + 1) * LANES];
-        let yb = &y[c * LANES..(c + 1) * LANES];
-        for l in 0..LANES {
-            let d = xb[l] - yb[l];
-            acc[l] += d * d;
-        }
-    }
-    let mut s = combine_lanes(acc);
-    for i in chunks * LANES..n {
-        let d = x[i] - y[i];
-        s += d * d;
-    }
-    s
+    simd::active().dist2(x, y)
 }
 
 /// Σ xᵢ² accumulated sequentially in `KC` slabs — the exact order the
-/// packed GEMM uses for a diagonal element `cᵢᵢ = Σ xₚ·xₚ`. RBF callers
-/// rely on this: `‖x‖² + ‖x‖² - 2·(x·x)` cancels bit-exactly, so kernel
-/// diagonals come out as exactly 1.0.
+/// packed GEMM uses for a diagonal element `cᵢᵢ = Σ xₚ·xₚ` under the
+/// active backend. RBF callers rely on this: `‖x‖² + ‖x‖² - 2·(x·x)`
+/// cancels bit-exactly, so kernel diagonals come out as exactly 1.0.
 #[inline]
 pub fn sum_sq(x: &[f32]) -> f32 {
-    let mut total = 0.0f32;
-    for chunk in x.chunks(KC) {
-        let mut s = 0.0f32;
-        for &v in chunk {
-            s += v * v;
-        }
-        total += s;
-    }
-    total
+    simd::active().sum_sq(x)
 }
 
 /// Pack one `pr`-row micro-panel of a strided operand slab into `dst`
@@ -167,27 +116,6 @@ fn pack_panel(
     }
 }
 
-/// The register-tiled inner kernel: accumulate an `MR x NR` C tile from
-/// two packed panels over `kc` depth steps. Fixed shapes and a local
-/// accumulator array let LLVM keep `acc` in vector registers and
-/// vectorize the `NR`-wide updates.
-#[inline]
-fn microkernel(pa: &[f32], pb: &[f32], kc: usize) -> [f32; MR * NR] {
-    let mut acc = [0.0f32; MR * NR];
-    for p in 0..kc {
-        let a = &pa[p * MR..(p + 1) * MR];
-        let b = &pb[p * NR..(p + 1) * NR];
-        for i in 0..MR {
-            let ai = a[i];
-            let row = &mut acc[i * NR..(i + 1) * NR];
-            for j in 0..NR {
-                row[j] += ai * b[j];
-            }
-        }
-    }
-    acc
-}
-
 /// `C = A · Bᵀ` over strided operand views (the general driver under
 /// [`crate::linalg::gemm_nt`] and [`crate::linalg::syrk_masked`]).
 ///
@@ -198,9 +126,49 @@ fn microkernel(pa: &[f32], pb: &[f32], kc: usize) -> [f32; MR * NR] {
 /// depth `p` of B is scaled by `b_kscale[p]`, which turns the call into
 /// the weighted Gram product `C = A·diag(w)·Bᵀ`.
 ///
-/// Bit-identical output for every `threads` value — see module docs.
+/// The micro-kernel runs on the active SIMD backend
+/// ([`simd::active`]); output is bit-identical for every `threads`
+/// value within a backend — see module docs.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_nt_strided(
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    a_rs: usize,
+    a_cs: usize,
+    b: &[f32],
+    b_rs: usize,
+    b_cs: usize,
+    b_kscale: Option<&[f32]>,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    gemm_nt_strided_with(
+        simd::active(),
+        threads,
+        m,
+        n,
+        k,
+        a,
+        a_rs,
+        a_cs,
+        b,
+        b_rs,
+        b_cs,
+        b_kscale,
+        c,
+        ldc,
+    );
+}
+
+/// [`gemm_nt_strided`] pinned to an explicit backend — how the
+/// property tests and the scalar-vs-SIMD bench columns compare flavors
+/// inside one process.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_strided_with(
+    backend: Backend,
     threads: usize,
     m: usize,
     n: usize,
@@ -278,7 +246,7 @@ pub fn gemm_nt_strided(
                 let mut j = bj * NC;
                 while j < j_end {
                     let panel_b = &pb_ref[(j / NR) * NR * kc..(j / NR + 1) * NR * kc];
-                    let acc = microkernel(panel_a, panel_b, kc);
+                    let acc = backend.microkernel_8x8(panel_a, panel_b, kc);
                     let jw = NR.min(n - j);
                     for ii in 0..ih {
                         // SAFETY: rows [i, i+ih) x cols [j, j+jw) of C
@@ -323,11 +291,12 @@ pub fn gemv_blocked(
     assert_eq!(v.len(), cols);
     assert_eq!(out.len(), rows);
     assert!(lda >= cols);
+    let backend = simd::active();
     let rows_per = ((rows + 63) / 64).max(1);
     pool::parallel_chunks_mut(threads, out, rows_per, |c, slice| {
         for (off, slot) in slice.iter_mut().enumerate() {
             let r = c * rows_per + off;
-            *slot = dot_lanes(&a[r * lda..r * lda + cols], v);
+            *slot = backend.dot(&a[r * lda..r * lda + cols], v);
         }
     });
 }
@@ -351,13 +320,30 @@ pub fn rbf_blocked(
     gamma: f32,
     out: &mut [f32],
 ) {
+    rbf_blocked_with(simd::active(), threads, x, t, xb, b, d, gamma, out);
+}
+
+/// [`rbf_blocked`] pinned to an explicit backend (norms and GEMM run
+/// the same flavor, so the exact-diagonal contract holds per backend).
+#[allow(clippy::too_many_arguments)]
+pub fn rbf_blocked_with(
+    backend: Backend,
+    threads: usize,
+    x: &[f32],
+    t: usize,
+    xb: &[f32],
+    b: usize,
+    d: usize,
+    gamma: f32,
+    out: &mut [f32],
+) {
     assert_eq!(xb.len(), b * d);
     if b == 0 {
         assert_eq!(out.len(), t * b);
         return;
     }
-    let bsq: Vec<f32> = (0..b).map(|j| sum_sq(&xb[j * d..(j + 1) * d])).collect();
-    rbf_blocked_pre(threads, x, t, xb, b, d, gamma, &bsq, out);
+    let bsq: Vec<f32> = (0..b).map(|j| backend.sum_sq(&xb[j * d..(j + 1) * d])).collect();
+    rbf_blocked_pre_with(backend, threads, x, t, xb, b, d, gamma, &bsq, out);
 }
 
 /// [`rbf_blocked`] with the b-side squared norms supplied by the caller.
@@ -379,6 +365,25 @@ pub fn rbf_blocked_pre(
     bsq: &[f32],
     out: &mut [f32],
 ) {
+    rbf_blocked_pre_with(simd::active(), threads, x, t, xb, b, d, gamma, bsq, out);
+}
+
+/// [`rbf_blocked_pre`] pinned to an explicit backend. `bsq` must have
+/// been computed with the same backend's `sum_sq` for the
+/// exact-diagonal contract to survive.
+#[allow(clippy::too_many_arguments)]
+pub fn rbf_blocked_pre_with(
+    backend: Backend,
+    threads: usize,
+    x: &[f32],
+    t: usize,
+    xb: &[f32],
+    b: usize,
+    d: usize,
+    gamma: f32,
+    bsq: &[f32],
+    out: &mut [f32],
+) {
     assert_eq!(x.len(), t * d);
     assert_eq!(xb.len(), b * d);
     assert_eq!(out.len(), t * b);
@@ -386,9 +391,9 @@ pub fn rbf_blocked_pre(
     if b == 0 {
         return;
     }
-    gemm_nt_strided(threads, t, b, d, x, d, 1, xb, d, 1, None, out, b);
+    gemm_nt_strided_with(backend, threads, t, b, d, x, d, 1, xb, d, 1, None, out, b);
     pool::parallel_chunks_mut(threads, out, b, |i, row| {
-        let xsq = sum_sq(&x[i * d..(i + 1) * d]);
+        let xsq = backend.sum_sq(&x[i * d..(i + 1) * d]);
         for (j, slot) in row.iter_mut().enumerate() {
             let d2 = (xsq + bsq[j] - 2.0 * *slot).max(0.0);
             *slot = (-gamma * d2).exp();

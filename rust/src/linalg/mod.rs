@@ -14,6 +14,7 @@ pub mod chol;
 pub mod cg;
 pub mod gemm;
 pub mod lowrank;
+pub mod simd;
 pub mod spmm;
 
 use crate::pool;

@@ -1,0 +1,825 @@
+//! Explicit SIMD backend layer with runtime CPU-feature dispatch
+//! (DESIGN.md §SIMD).
+//!
+//! The paper's implicit methods win because their work collapses into a
+//! few large dense ops executed by *highly optimized* kernels. Until
+//! now the hot inner loops (the 8x8 GEMM micro-kernel, the lane dot /
+//! distance reductions, the SpMM axpy) relied on LLVM auto-vectorizing
+//! fixed-shape scalar code. This module makes that half of the thesis
+//! explicit: hand-written AVX2+FMA (x86-64) and NEON (aarch64)
+//! flavors of every hot primitive, selected **once per process** by
+//! runtime feature detection and overridable with
+//! `WU_SVM_FORCE_SCALAR=1`. The original scalar code remains the
+//! portable fallback and the reference the property tests compare
+//! against.
+//!
+//! **Determinism contract.** Within one backend, every primitive
+//! accumulates each output element in a fixed per-element order — the
+//! SIMD flavors vectorize *across* independent accumulators (the NR=8
+//! columns of a micro-kernel row, the 8 lanes of a dot product, the b
+//! columns of an SpMM panel), never across the sequential depth chain.
+//! So the bit-identical-across-thread-counts contract of the scalar
+//! substrate holds per backend, and every `sum_sq`-vs-GEMM-diagonal
+//! cancellation contract survives (the FMA flavor of `sum_sq` is the
+//! same fused chain the FMA micro-kernel applies to a diagonal
+//! element).
+//!
+//! **Across backends** results agree only to rounding: FMA fuses
+//! multiply and add into one rounding step, so scalar-vs-SIMD is a
+//! tolerance (≤1e-5 relative) contract, not a bit contract. That is why
+//! the backend is resolved once per process: mixing flavors within one
+//! run would silently break the exact-diagonal contracts (e.g. CSR
+//! norms computed under one flavor against cross products from
+//! another).
+
+use super::gemm::{KC, LANES, MR, NR};
+use std::sync::OnceLock;
+
+/// Which compute flavor the process runs on. All variants exist on all
+/// architectures (so tests and benches can name them portably); only
+/// the native ones are ever returned by [`Backend::detect`], and
+/// dispatching a non-native variant falls back to scalar.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The portable scalar/auto-vectorized code paths (the pre-SIMD
+    /// substrate, bit-for-bit).
+    Scalar,
+    /// x86-64 AVX2 + FMA: 8-wide f32 fused multiply-add lanes.
+    Avx2Fma,
+    /// aarch64 NEON: 4-wide f32 fused multiply-add lanes (two per
+    /// 8-wide logical lane group).
+    Neon,
+}
+
+impl Backend {
+    /// Probe the CPU and pick the fastest supported backend.
+    /// `force_scalar` short-circuits to [`Backend::Scalar`] — the pure
+    /// form of the `WU_SVM_FORCE_SCALAR` override, kept separate so it
+    /// is testable without touching the process environment.
+    pub fn detect(force_scalar: bool) -> Backend {
+        if force_scalar {
+            return Backend::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return Backend::Avx2Fma;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Backend::Neon;
+            }
+        }
+        Backend::Scalar
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2Fma => "avx2+fma",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// Accumulate an `MR x NR` C tile from two packed depth-major
+    /// panels over `kc` depth steps — the inner kernel of
+    /// [`super::gemm::gemm_nt_strided`]. Row-major `out[i*NR + j]`.
+    /// Per-element accumulation order is the sequential depth chain in
+    /// every flavor; the SIMD flavors vectorize across the NR columns.
+    #[inline]
+    pub fn microkernel_8x8(self, pa: &[f32], pb: &[f32], kc: usize) -> [f32; MR * NR] {
+        debug_assert!(pa.len() >= kc * MR && pb.len() >= kc * NR);
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx2Fma is only constructed after a successful
+            // runtime probe for avx2+fma (Backend::detect).
+            Backend::Avx2Fma => unsafe { microkernel_avx2(pa, pb, kc) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: Neon is only constructed after a runtime probe.
+            Backend::Neon => unsafe { microkernel_neon(pa, pb, kc) },
+            _ => microkernel_scalar(pa, pb, kc),
+        }
+    }
+
+    /// Lane-accumulated f32 dot product (LANES independent chains
+    /// combined by the fixed pairwise tree). Deterministic per backend.
+    #[inline]
+    pub fn dot(self, x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: variant implies a successful runtime probe.
+            Backend::Avx2Fma => unsafe { dot_avx2(x, y) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: variant implies a successful runtime probe.
+            Backend::Neon => unsafe { dot_neon(x, y) },
+            _ => dot_scalar(x, y),
+        }
+    }
+
+    /// Squared euclidean distance with the same lane scheme as
+    /// [`Backend::dot`]. Exact 0 on identical inputs in every flavor
+    /// (each lane subtracts before squaring — no cancellation).
+    #[inline]
+    pub fn dist2(self, x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: variant implies a successful runtime probe.
+            Backend::Avx2Fma => unsafe { dist2_avx2(x, y) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: variant implies a successful runtime probe.
+            Backend::Neon => unsafe { dist2_neon(x, y) },
+            _ => dist2_scalar(x, y),
+        }
+    }
+
+    /// Σ xᵢ² in KC-chunked sequential order — exactly the chain this
+    /// backend's micro-kernel applies to a diagonal element
+    /// `cᵢᵢ = Σ xₚ·xₚ`. The FMA flavors are deliberately *scalar*
+    /// sequential fused chains: vectorizing the depth dimension would
+    /// change the diagonal accumulation order and break the RBF
+    /// exact-diagonal contract.
+    #[inline]
+    pub fn sum_sq(self, x: &[f32]) -> f32 {
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: variant implies a successful runtime probe.
+            Backend::Avx2Fma => unsafe { sum_sq_fma_x86(x) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => sum_sq_fma_body(x),
+            _ => sum_sq_scalar(x),
+        }
+    }
+
+    /// Σ v² over one sorted sparse row in the same KC-chunk order as
+    /// [`Backend::sum_sq`] (zero columns are identity adds under FMA
+    /// too: `fma(0, b, acc) == acc`), so the sparse norm equals the
+    /// dense one bit for bit within a backend.
+    #[inline]
+    pub fn sparse_sum_sq(self, cols: &[u32], vals: &[f32]) -> f32 {
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: variant implies a successful runtime probe.
+            Backend::Avx2Fma => unsafe { sparse_sum_sq_fma_x86(cols, vals) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => sparse_sum_sq_fma_body(cols, vals),
+            _ => sparse_sum_sq_scalar(cols, vals),
+        }
+    }
+
+    /// Dot of one sorted sparse row with a dense vector, in the same
+    /// KC-chunk order as [`Backend::sparse_sum_sq`] — so a row dotted
+    /// with its own densified copy reproduces the stored norm bitwise.
+    #[inline]
+    pub fn sparse_dot_dense(self, cols: &[u32], vals: &[f32], x: &[f32]) -> f32 {
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: variant implies a successful runtime probe.
+            Backend::Avx2Fma => unsafe { sparse_dot_dense_fma_x86(cols, vals, x) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => sparse_dot_dense_fma_body(cols, vals, x),
+            _ => sparse_dot_dense_scalar(cols, vals, x),
+        }
+    }
+
+    /// `y[j] += a * x[j]` — the SpMM inner loop
+    /// ([`super::spmm::csr_gemm_nt_packed`] calls this once per stored
+    /// entry). Each `y[j]` is an independent accumulator, so
+    /// vectorizing across j preserves the per-element order.
+    #[inline]
+    pub fn axpy(self, a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: variant implies a successful runtime probe.
+            Backend::Avx2Fma => unsafe { axpy_avx2(a, x, y) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: variant implies a successful runtime probe.
+            Backend::Neon => unsafe { axpy_neon(a, x, y) },
+            _ => axpy_scalar(a, x, y),
+        }
+    }
+}
+
+/// `WU_SVM_FORCE_SCALAR` values that mean "yes".
+pub fn parse_force_scalar(v: &str) -> bool {
+    matches!(v.trim(), "1" | "true" | "yes" | "on")
+}
+
+fn force_scalar_env() -> bool {
+    std::env::var("WU_SVM_FORCE_SCALAR").is_ok_and(|v| parse_force_scalar(&v))
+}
+
+/// The process-wide backend: detected once on first use (respecting
+/// `WU_SVM_FORCE_SCALAR`), then immutable. One flavor per process is
+/// what keeps the cross-primitive bit contracts (CSR norms vs GEMM
+/// diagonals, registry norms vs serve-time blocks) intact.
+pub fn active() -> Backend {
+    static ACTIVE: OnceLock<Backend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| Backend::detect(force_scalar_env()))
+}
+
+/// Human-readable summary of what the CPU offers (independent of what
+/// [`active`] picked — `wu-svm info` prints both).
+pub fn detected_features() -> String {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let probes = [
+            ("sse2", is_x86_feature_detected!("sse2")),
+            ("sse4.2", is_x86_feature_detected!("sse4.2")),
+            ("avx", is_x86_feature_detected!("avx")),
+            ("avx2", is_x86_feature_detected!("avx2")),
+            ("fma", is_x86_feature_detected!("fma")),
+            ("avx512f", is_x86_feature_detected!("avx512f")),
+        ];
+        let have: Vec<&str> =
+            probes.iter().filter(|(_, h)| *h).map(|(n, _)| *n).collect();
+        format!("x86_64: {}", if have.is_empty() { "none".into() } else { have.join(" ") })
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        let neon = std::arch::is_aarch64_feature_detected!("neon");
+        format!("aarch64: {}", if neon { "neon" } else { "none" })
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        format!("{}: no explicit SIMD probe", std::env::consts::ARCH)
+    }
+}
+
+/// Log the detected features and chosen backend to stderr, once per
+/// process — called from pool/engine init so every run is attributable
+/// to the hardware path that produced it.
+pub fn log_once() {
+    static LOGGED: OnceLock<()> = OnceLock::new();
+    LOGGED.get_or_init(|| {
+        eprintln!("wu-svm simd: backend={} [{}]", active().name(), detected_features());
+    });
+}
+
+// ---------------------------------------------------------------------
+// scalar flavors — the pre-SIMD substrate, verbatim. These stay the
+// portable fallback and the reference every property test compares the
+// SIMD flavors against.
+// ---------------------------------------------------------------------
+
+/// Combine the lane accumulators in a fixed pairwise tree — derived
+/// from `LANES` (retuning the constant cannot silently drop lanes) and
+/// order-deterministic. Shared by every backend flavor so the lane
+/// layout, not the combine, is the only thing that varies.
+#[inline]
+pub fn combine_lanes(acc: [f32; LANES]) -> f32 {
+    let mut tmp = acc;
+    let mut width = LANES / 2;
+    while width > 0 {
+        for l in 0..width {
+            tmp[l] += tmp[l + width];
+        }
+        width /= 2;
+    }
+    tmp[0]
+}
+
+#[inline]
+fn microkernel_scalar(pa: &[f32], pb: &[f32], kc: usize) -> [f32; MR * NR] {
+    let mut acc = [0.0f32; MR * NR];
+    for p in 0..kc {
+        let a = &pa[p * MR..(p + 1) * MR];
+        let b = &pb[p * NR..(p + 1) * NR];
+        for i in 0..MR {
+            let ai = a[i];
+            let row = &mut acc[i * NR..(i + 1) * NR];
+            for j in 0..NR {
+                row[j] += ai * b[j];
+            }
+        }
+    }
+    acc
+}
+
+#[inline]
+fn dot_scalar(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let xb = &x[c * LANES..(c + 1) * LANES];
+        let yb = &y[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            acc[l] += xb[l] * yb[l];
+        }
+    }
+    let mut s = combine_lanes(acc);
+    for i in chunks * LANES..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+#[inline]
+fn dist2_scalar(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let xb = &x[c * LANES..(c + 1) * LANES];
+        let yb = &y[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            let d = xb[l] - yb[l];
+            acc[l] += d * d;
+        }
+    }
+    let mut s = combine_lanes(acc);
+    for i in chunks * LANES..n {
+        let d = x[i] - y[i];
+        s += d * d;
+    }
+    s
+}
+
+#[inline]
+fn sum_sq_scalar(x: &[f32]) -> f32 {
+    let mut total = 0.0f32;
+    for chunk in x.chunks(KC) {
+        let mut s = 0.0f32;
+        for &v in chunk {
+            s += v * v;
+        }
+        total += s;
+    }
+    total
+}
+
+#[inline]
+fn sparse_sum_sq_scalar(cols: &[u32], vals: &[f32]) -> f32 {
+    let mut total = 0.0f32;
+    let mut partial = 0.0f32;
+    let mut boundary = KC as u32;
+    for (&c, &v) in cols.iter().zip(vals) {
+        if c >= boundary {
+            total += partial;
+            partial = 0.0;
+            boundary = (c / KC as u32 + 1) * KC as u32;
+        }
+        partial += v * v;
+    }
+    total + partial
+}
+
+#[inline]
+fn sparse_dot_dense_scalar(cols: &[u32], vals: &[f32], x: &[f32]) -> f32 {
+    let mut total = 0.0f32;
+    let mut partial = 0.0f32;
+    let mut boundary = KC as u32;
+    for (&c, &v) in cols.iter().zip(vals) {
+        if c >= boundary {
+            total += partial;
+            partial = 0.0;
+            boundary = (c / KC as u32 + 1) * KC as u32;
+        }
+        partial += v * x[c as usize];
+    }
+    total + partial
+}
+
+#[inline]
+fn axpy_scalar(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+// ---------------------------------------------------------------------
+// fused sequential chains shared by the FMA backends. `mul_add` is the
+// IEEE fused operation whatever the codegen (hardware fma inside the
+// `target_feature(fma)` wrappers, libm elsewhere), so the *values* are
+// backend-portable even when the speed is not. These must stay scalar
+// sequential: they mirror the per-element depth chain of the FMA
+// micro-kernels, which is what the exact-diagonal contracts consume.
+// ---------------------------------------------------------------------
+
+#[inline(always)]
+fn sum_sq_fma_body(x: &[f32]) -> f32 {
+    let mut total = 0.0f32;
+    for chunk in x.chunks(KC) {
+        let mut s = 0.0f32;
+        for &v in chunk {
+            s = v.mul_add(v, s);
+        }
+        total += s;
+    }
+    total
+}
+
+#[inline(always)]
+fn sparse_sum_sq_fma_body(cols: &[u32], vals: &[f32]) -> f32 {
+    let mut total = 0.0f32;
+    let mut partial = 0.0f32;
+    let mut boundary = KC as u32;
+    for (&c, &v) in cols.iter().zip(vals) {
+        if c >= boundary {
+            total += partial;
+            partial = 0.0;
+            boundary = (c / KC as u32 + 1) * KC as u32;
+        }
+        partial = v.mul_add(v, partial);
+    }
+    total + partial
+}
+
+#[inline(always)]
+fn sparse_dot_dense_fma_body(cols: &[u32], vals: &[f32], x: &[f32]) -> f32 {
+    let mut total = 0.0f32;
+    let mut partial = 0.0f32;
+    let mut boundary = KC as u32;
+    for (&c, &v) in cols.iter().zip(vals) {
+        if c >= boundary {
+            total += partial;
+            partial = 0.0;
+            boundary = (c / KC as u32 + 1) * KC as u32;
+        }
+        partial = v.mul_add(x[c as usize], partial);
+    }
+    total + partial
+}
+
+// x86 wrappers: compiling the fused chains inside a
+// `target_feature(fma)` function lets `mul_add` lower to vfmadd
+// instead of a per-element libm call.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn sum_sq_fma_x86(x: &[f32]) -> f32 {
+    sum_sq_fma_body(x)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn sparse_sum_sq_fma_x86(cols: &[u32], vals: &[f32]) -> f32 {
+    sparse_sum_sq_fma_body(cols, vals)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn sparse_dot_dense_fma_x86(cols: &[u32], vals: &[f32], x: &[f32]) -> f32 {
+    sparse_dot_dense_fma_body(cols, vals, x)
+}
+
+// ---------------------------------------------------------------------
+// AVX2 + FMA flavors (x86-64). One f32x8 register per logical lane
+// group: a micro-kernel accumulator row is one register, the dot/dist2
+// lane array is one register, an SpMM panel streams in 8-wide strips.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn microkernel_avx2(pa: &[f32], pb: &[f32], kc: usize) -> [f32; MR * NR] {
+    use std::arch::x86_64::*;
+    let mut acc = [_mm256_setzero_ps(); MR];
+    let pa_ptr = pa.as_ptr();
+    let pb_ptr = pb.as_ptr();
+    for p in 0..kc {
+        // one NR=8 column strip of B, reused by all MR rows
+        let b = _mm256_loadu_ps(pb_ptr.add(p * NR));
+        let ap = pa_ptr.add(p * MR);
+        for (i, accv) in acc.iter_mut().enumerate() {
+            let a = _mm256_broadcast_ss(&*ap.add(i));
+            *accv = _mm256_fmadd_ps(a, b, *accv);
+        }
+    }
+    let mut out = [0.0f32; MR * NR];
+    for (i, accv) in acc.iter().enumerate() {
+        _mm256_storeu_ps(out.as_mut_ptr().add(i * NR), *accv);
+    }
+    out
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2(x: &[f32], y: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut accv = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(c * LANES));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(c * LANES));
+        accv = _mm256_fmadd_ps(xv, yv, accv);
+    }
+    let mut acc = [0.0f32; LANES];
+    _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+    let mut s = combine_lanes(acc);
+    for i in chunks * LANES..n {
+        s = x[i].mul_add(y[i], s);
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dist2_avx2(x: &[f32], y: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut accv = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(c * LANES));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(c * LANES));
+        let d = _mm256_sub_ps(xv, yv);
+        accv = _mm256_fmadd_ps(d, d, accv);
+    }
+    let mut acc = [0.0f32; LANES];
+    _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+    let mut s = combine_lanes(acc);
+    for i in chunks * LANES..n {
+        let d = x[i] - y[i];
+        s = d.mul_add(d, s);
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_avx2(a: f32, x: &[f32], y: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let av = _mm256_set1_ps(a);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_fmadd_ps(av, xv, yv));
+        i += 8;
+    }
+    while i < n {
+        y[i] = a.mul_add(x[i], y[i]);
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON flavors (aarch64). f32x4 registers — two per 8-wide logical
+// lane group, combined through the same pairwise tree.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn microkernel_neon(pa: &[f32], pb: &[f32], kc: usize) -> [f32; MR * NR] {
+    use std::arch::aarch64::*;
+    let mut lo = [vdupq_n_f32(0.0); MR];
+    let mut hi = [vdupq_n_f32(0.0); MR];
+    let pa_ptr = pa.as_ptr();
+    let pb_ptr = pb.as_ptr();
+    for p in 0..kc {
+        let b0 = vld1q_f32(pb_ptr.add(p * NR));
+        let b1 = vld1q_f32(pb_ptr.add(p * NR + 4));
+        let ap = pa_ptr.add(p * MR);
+        for i in 0..MR {
+            let a = vdupq_n_f32(*ap.add(i));
+            lo[i] = vfmaq_f32(lo[i], a, b0);
+            hi[i] = vfmaq_f32(hi[i], a, b1);
+        }
+    }
+    let mut out = [0.0f32; MR * NR];
+    for i in 0..MR {
+        vst1q_f32(out.as_mut_ptr().add(i * NR), lo[i]);
+        vst1q_f32(out.as_mut_ptr().add(i * NR + 4), hi[i]);
+    }
+    out
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(x: &[f32], y: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    for c in 0..chunks {
+        let base = c * LANES;
+        acc0 = vfmaq_f32(acc0, vld1q_f32(x.as_ptr().add(base)), vld1q_f32(y.as_ptr().add(base)));
+        acc1 = vfmaq_f32(
+            acc1,
+            vld1q_f32(x.as_ptr().add(base + 4)),
+            vld1q_f32(y.as_ptr().add(base + 4)),
+        );
+    }
+    let mut acc = [0.0f32; LANES];
+    vst1q_f32(acc.as_mut_ptr(), acc0);
+    vst1q_f32(acc.as_mut_ptr().add(4), acc1);
+    let mut s = combine_lanes(acc);
+    for i in chunks * LANES..n {
+        s = x[i].mul_add(y[i], s);
+    }
+    s
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dist2_neon(x: &[f32], y: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    for c in 0..chunks {
+        let base = c * LANES;
+        let d0 = vsubq_f32(vld1q_f32(x.as_ptr().add(base)), vld1q_f32(y.as_ptr().add(base)));
+        let d1 = vsubq_f32(
+            vld1q_f32(x.as_ptr().add(base + 4)),
+            vld1q_f32(y.as_ptr().add(base + 4)),
+        );
+        acc0 = vfmaq_f32(acc0, d0, d0);
+        acc1 = vfmaq_f32(acc1, d1, d1);
+    }
+    let mut acc = [0.0f32; LANES];
+    vst1q_f32(acc.as_mut_ptr(), acc0);
+    vst1q_f32(acc.as_mut_ptr().add(4), acc1);
+    let mut s = combine_lanes(acc);
+    for i in chunks * LANES..n {
+        let d = x[i] - y[i];
+        s = d.mul_add(d, s);
+    }
+    s
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(a: f32, x: &[f32], y: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let n = x.len();
+    let av = vdupq_n_f32(a);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let xv = vld1q_f32(x.as_ptr().add(i));
+        let yv = vld1q_f32(y.as_ptr().add(i));
+        vst1q_f32(y.as_mut_ptr().add(i), vfmaq_f32(yv, av, xv));
+        i += 4;
+    }
+    while i < n {
+        y[i] = a.mul_add(x[i], y[i]);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn native() -> Backend {
+        Backend::detect(false)
+    }
+
+    #[test]
+    fn force_scalar_wins_over_any_cpu() {
+        assert_eq!(Backend::detect(true), Backend::Scalar);
+    }
+
+    #[test]
+    fn force_scalar_env_values_parse() {
+        for v in ["1", "true", "yes", "on", " 1 "] {
+            assert!(parse_force_scalar(v), "{v:?}");
+        }
+        for v in ["0", "false", "", "no", "2"] {
+            assert!(!parse_force_scalar(v), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn active_is_stable_and_named() {
+        let a = active();
+        assert_eq!(a, active());
+        assert!(!a.name().is_empty());
+        assert!(!detected_features().is_empty());
+        log_once();
+        log_once(); // second call must be a no-op
+    }
+
+    #[test]
+    fn simd_dot_agrees_with_scalar() {
+        let mut rng = Rng::new(11);
+        let be = native();
+        for len in [0usize, 1, 7, 8, 9, 64, 257, 1000] {
+            let x: Vec<f32> = (0..len).map(|_| rng.gaussian_f32()).collect();
+            let y: Vec<f32> = (0..len).map(|_| rng.gaussian_f32()).collect();
+            let want = Backend::Scalar.dot(&x, &y);
+            let got = be.dot(&x, &y);
+            let tol = 1e-5 * (len as f32).sqrt().max(1.0);
+            assert!((got - want).abs() <= tol, "len {len}: {got} vs {want}");
+            assert_eq!(be.dist2(&x, &x), 0.0, "self-dist2 must be exact 0");
+            let d_want = Backend::Scalar.dist2(&x, &y);
+            let d_got = be.dist2(&x, &y);
+            assert!((d_got - d_want).abs() <= 4.0 * tol, "len {len}: {d_got} vs {d_want}");
+        }
+    }
+
+    #[test]
+    fn simd_sum_sq_agrees_and_spans_chunks() {
+        let mut rng = Rng::new(12);
+        let be = native();
+        for len in [3usize, 255, 256, 257, 700] {
+            let x: Vec<f32> = (0..len).map(|_| rng.gaussian_f32()).collect();
+            let want = Backend::Scalar.sum_sq(&x);
+            let got = be.sum_sq(&x);
+            assert!((got - want).abs() <= 1e-5 * want.max(1.0), "len {len}");
+        }
+    }
+
+    #[test]
+    fn sparse_flavors_match_dense_flavors_bitwise() {
+        // within ONE backend: sparse norms/dots on a densified row must
+        // reproduce the dense chain bit for bit (zero entries are
+        // identity adds under both `+ a*b` and `fma`)
+        let mut rng = Rng::new(13);
+        for be in [Backend::Scalar, native()] {
+            for cols in [5usize, 256, 300, 700] {
+                let dense: Vec<f32> = (0..cols)
+                    .map(|_| if rng.bernoulli(0.3) { rng.gaussian_f32() } else { 0.0 })
+                    .collect();
+                let (ci, vs): (Vec<u32>, Vec<f32>) = dense
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(c, &v)| (c as u32, v))
+                    .unzip();
+                let want = be.sum_sq(&dense);
+                assert_eq!(
+                    be.sparse_sum_sq(&ci, &vs).to_bits(),
+                    want.to_bits(),
+                    "{} cols={cols}",
+                    be.name()
+                );
+                assert_eq!(
+                    be.sparse_dot_dense(&ci, &vs, &dense).to_bits(),
+                    want.to_bits(),
+                    "{} cols={cols}",
+                    be.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_microkernel_agrees_with_scalar() {
+        let mut rng = Rng::new(14);
+        let be = native();
+        for kc in [1usize, 3, 17, 256] {
+            let pa: Vec<f32> = (0..kc * MR).map(|_| rng.gaussian_f32()).collect();
+            let pb: Vec<f32> = (0..kc * NR).map(|_| rng.gaussian_f32()).collect();
+            let want = Backend::Scalar.microkernel_8x8(&pa, &pb, kc);
+            let got = be.microkernel_8x8(&pa, &pb, kc);
+            let tol = 1e-5 * (kc as f32).sqrt().max(1.0);
+            for (e, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert!((w - g).abs() <= tol, "kc={kc} elem {e}: {w} vs {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_axpy_agrees_with_scalar() {
+        let mut rng = Rng::new(15);
+        let be = native();
+        for len in [0usize, 1, 3, 8, 9, 31, 256] {
+            let x: Vec<f32> = (0..len).map(|_| rng.gaussian_f32()).collect();
+            let mut ys: Vec<f32> = (0..len).map(|_| rng.gaussian_f32()).collect();
+            let mut yv = ys.clone();
+            Backend::Scalar.axpy(0.37, &x, &mut ys);
+            be.axpy(0.37, &x, &mut yv);
+            for (a, b) in ys.iter().zip(&yv) {
+                assert!((a - b).abs() <= 1e-6, "len {len}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn microkernel_diagonal_matches_sum_sq_per_backend() {
+        // the RBF exact-diagonal contract at the primitive level: pack x
+        // on both sides, the (i,i) element must equal this backend's
+        // sum_sq of x, bit for bit (kc <= KC here; the cross-slab case
+        // is covered by the gemm-level tests)
+        let mut rng = Rng::new(16);
+        for be in [Backend::Scalar, native()] {
+            for kc in [1usize, 7, 64, 256] {
+                let x: Vec<f32> = (0..kc).map(|_| rng.gaussian_f32()).collect();
+                // depth-major panels holding x in row/col 0
+                let mut pa = vec![0.0f32; kc * MR];
+                let mut pb = vec![0.0f32; kc * NR];
+                for p in 0..kc {
+                    pa[p * MR] = x[p];
+                    pb[p * NR] = x[p];
+                }
+                let acc = be.microkernel_8x8(&pa, &pb, kc);
+                assert_eq!(
+                    acc[0].to_bits(),
+                    be.sum_sq(&x).to_bits(),
+                    "{} kc={kc}",
+                    be.name()
+                );
+            }
+        }
+    }
+}

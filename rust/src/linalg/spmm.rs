@@ -7,7 +7,8 @@
 //! vectors, candidates, query batch). B is repacked once per call into
 //! its transpose `Bᵀ[d x b]`, so the inner loop is a pure axpy: for each
 //! stored `(col, v)` of a CSR row, `acc[0..b] += v * Bᵀ[col][0..b]` —
-//! contiguous, vectorizable, and O(nnz · b) instead of O(t · d · b).
+//! contiguous, dispatched to the active SIMD backend
+//! ([`crate::linalg::simd`]), and O(nnz · b) instead of O(t · d · b).
 //!
 //! **Determinism.** Parallelism is over row blocks: every output row is
 //! owned by exactly one task and accumulated sequentially in stored
@@ -24,6 +25,7 @@
 
 use crate::data::sparse::CsrMatrix;
 use crate::linalg::gemm::{self, KC};
+use crate::linalg::simd::{self, Backend};
 use crate::pool;
 
 /// Rows of C owned by one parallel task.
@@ -45,8 +47,25 @@ fn pack_bt(threads: usize, bm: &[f32], b: usize, d: usize) -> Vec<f32> {
 
 /// `C[t x b] = A[row0..row0+t] · Bᵀ` with A in CSR and B dense row-major
 /// `b x d` (`d = a.cols`). Rows at or past `a.rows` are treated as empty
-/// (all-zero tile padding). Bit-identical for every `threads` value.
+/// (all-zero tile padding). The axpy inner loop runs on the active SIMD
+/// backend; bit-identical for every `threads` value within a backend.
 pub fn csr_gemm_nt(
+    threads: usize,
+    a: &CsrMatrix,
+    row0: usize,
+    t: usize,
+    bm: &[f32],
+    b: usize,
+    out: &mut [f32],
+) {
+    csr_gemm_nt_with(simd::active(), threads, a, row0, t, bm, b, out);
+}
+
+/// [`csr_gemm_nt`] pinned to an explicit backend — how the property
+/// tests and the scalar-vs-SIMD bench column compare flavors.
+#[allow(clippy::too_many_arguments)]
+pub fn csr_gemm_nt_with(
+    backend: Backend,
     threads: usize,
     a: &CsrMatrix,
     row0: usize,
@@ -61,12 +80,27 @@ pub fn csr_gemm_nt(
     }
     assert_eq!(bm.len(), b * a.cols);
     let bt = pack_bt(threads, bm, b, a.cols);
-    csr_gemm_nt_packed(threads, a, row0, t, &bt, b, out);
+    csr_gemm_nt_packed_with(backend, threads, a, row0, t, &bt, b, out);
 }
 
 /// [`csr_gemm_nt`] over an already-transposed `d x b` B block (callers
 /// that reuse one B across several A tiles pack it once).
 pub fn csr_gemm_nt_packed(
+    threads: usize,
+    a: &CsrMatrix,
+    row0: usize,
+    t: usize,
+    bt: &[f32],
+    b: usize,
+    out: &mut [f32],
+) {
+    csr_gemm_nt_packed_with(simd::active(), threads, a, row0, t, bt, b, out);
+}
+
+/// [`csr_gemm_nt_packed`] pinned to an explicit backend.
+#[allow(clippy::too_many_arguments)]
+pub fn csr_gemm_nt_packed_with(
+    backend: Backend,
     threads: usize,
     a: &CsrMatrix,
     row0: usize,
@@ -105,9 +139,7 @@ pub fn csr_gemm_nt_packed(
                     boundary = (c / KC as u32 + 1) * KC as u32;
                 }
                 let panel = &bt[c as usize * b..(c as usize + 1) * b];
-                for (pv, bv) in partial.iter_mut().zip(panel) {
-                    *pv += v * bv;
-                }
+                backend.axpy(v, panel, &mut partial);
                 dirty = true;
             }
             if dirty {

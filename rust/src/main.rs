@@ -335,6 +335,8 @@ fn cmd_info() -> Result<()> {
         env!("CARGO_PKG_VERSION"),
         pool::default_threads()
     );
+    println!("simd backend: {}", wu_svm::linalg::simd::active().name());
+    println!("cpu features: {}", wu_svm::linalg::simd::detected_features());
     match coordinator::shared_runtime() {
         Ok(rt) => {
             println!("artifacts: tile_t = {}, s_cand = {}", rt.tile_t(), rt.s_cand());

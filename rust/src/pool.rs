@@ -105,6 +105,7 @@ impl Pool {
     fn global() -> &'static Pool {
         static POOL: OnceLock<&'static Pool> = OnceLock::new();
         *POOL.get_or_init(|| {
+            crate::linalg::simd::log_once();
             let pool: &'static Pool = Box::leak(Box::new(Pool {
                 state: Mutex::new(PoolState::default()),
                 work_cv: Condvar::new(),

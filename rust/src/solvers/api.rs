@@ -352,11 +352,11 @@ impl<'a> BudgetMeter<'a> {
             self.stop = Some(StopReason::Iters);
             return false;
         }
-        if self.wall.map_or(false, |w| elapsed >= w) {
+        if self.wall.is_some_and(|w| elapsed >= w) {
             self.stop = Some(StopReason::Wall);
             return false;
         }
-        if self.target.map_or(false, |t| objective <= t) {
+        if self.target.is_some_and(|t| objective <= t) {
             self.stop = Some(StopReason::Target);
             return false;
         }
@@ -562,6 +562,7 @@ impl Trainer {
         let driver = self.spec.driver();
         let mut res = driver.train(&ctx)?;
         res.note("family", driver.family().as_str().to_string());
+        res.note("simd_backend", crate::linalg::simd::active().name().to_string());
         Ok(res)
     }
 }

@@ -1,0 +1,246 @@
+//! Property tests for the runtime-dispatched SIMD backend layer
+//! (`linalg::simd` — DESIGN.md §SIMD).
+//!
+//! The contracts, from strongest to weakest:
+//! * **within one backend**: bit-identical across thread counts, and
+//!   every `sum_sq`-vs-GEMM-diagonal / sparse-vs-dense cancellation is
+//!   exact (diagonals exactly 1.0);
+//! * **across backends** (forced scalar vs detected SIMD): agreement to
+//!   ≤1e-5-grade tolerances only — FMA fuses multiply+add into one
+//!   rounding, so scalar-vs-SIMD is a tolerance contract, not a bit
+//!   contract;
+//! * the `WU_SVM_FORCE_SCALAR` override pins the scalar flavor (the CI
+//!   matrix runs this whole suite under both settings).
+
+use wu_svm::data::sparse::CsrMatrix;
+use wu_svm::linalg::gemm::{self, rbf_blocked_with, sum_sq};
+use wu_svm::linalg::simd::{self, Backend};
+use wu_svm::linalg::spmm;
+use wu_svm::rng::Rng;
+
+fn native() -> Backend {
+    Backend::detect(false)
+}
+
+/// The two flavors every cross-backend test compares (identical on
+/// scalar-only hosts, where the comparison degenerates harmlessly).
+fn both() -> [Backend; 2] {
+    [Backend::Scalar, native()]
+}
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian_f32()).collect()
+}
+
+fn gemm_with(
+    be: Backend,
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    gemm::gemm_nt_strided_with(be, threads, m, n, k, a, k, 1, b, k, 1, None, &mut c, n);
+    c
+}
+
+#[test]
+fn force_scalar_flag_always_wins() {
+    assert_eq!(Backend::detect(true), Backend::Scalar);
+}
+
+#[test]
+fn env_override_is_honored_by_active() {
+    // the CI matrix runs this suite with WU_SVM_FORCE_SCALAR=0 and =1;
+    // when the override is set, the process-wide backend must be scalar
+    // (and without it, whatever detect() picked).
+    let forced = std::env::var("WU_SVM_FORCE_SCALAR")
+        .map(|v| simd::parse_force_scalar(&v))
+        .unwrap_or(false);
+    if forced {
+        assert_eq!(simd::active(), Backend::Scalar);
+    } else {
+        assert_eq!(simd::active(), native());
+    }
+}
+
+#[test]
+fn scalar_vs_simd_gemm_agrees_to_tolerance() {
+    let mut rng = Rng::new(900);
+    for &(m, n, k) in &[(1usize, 1usize, 7usize), (31, 29, 23), (64, 40, 300), (130, 70, 257)] {
+        let a = randvec(&mut rng, m * k);
+        let b = randvec(&mut rng, n * k);
+        let want = gemm_with(Backend::Scalar, 4, m, n, k, &a, &b);
+        let got = gemm_with(native(), 4, m, n, k, &a, &b);
+        let tol = 1e-5 * (k as f32).sqrt().max(1.0);
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert!((w - g).abs() <= tol, "({m},{n},{k}) elem {i}: {w} vs {g}");
+        }
+    }
+}
+
+#[test]
+fn scalar_vs_simd_rbf_block_agrees_to_tolerance() {
+    let mut rng = Rng::new(901);
+    let (t, b, d) = (33usize, 16usize, 257usize);
+    let x = randvec(&mut rng, t * d);
+    let xb = randvec(&mut rng, b * d);
+    let mut want = vec![0.0f32; t * b];
+    rbf_blocked_with(Backend::Scalar, 4, &x, t, &xb, b, d, 0.7, &mut want);
+    let mut got = vec![0.0f32; t * b];
+    rbf_blocked_with(native(), 4, &x, t, &xb, b, d, 0.7, &mut got);
+    for (w, g) in want.iter().zip(&got) {
+        // kernel values live in (0, 1]; exp contracts the GEMM error
+        assert!((w - g).abs() <= 1e-5, "{w} vs {g}");
+    }
+}
+
+#[test]
+fn rbf_diagonal_is_exactly_one_per_backend() {
+    let mut rng = Rng::new(902);
+    for be in both() {
+        for &(n, d) in &[(9usize, 64usize), (17, 300), (8, 700)] {
+            let x = randvec(&mut rng, n * d);
+            let mut k = vec![0.0f32; n * n];
+            rbf_blocked_with(be, 3, &x, n, &x, n, d, 0.5, &mut k);
+            for i in 0..n {
+                assert_eq!(k[i * n + i], 1.0, "{} ({n},{d}) diag {i}", be.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn sum_sq_matches_gemm_diagonal_bitwise_per_backend() {
+    // the exact panel-order contract, including across KC slab
+    // boundaries: a 1-row self-GEMM's single element is ‖x‖² in the
+    // backend's own accumulation order
+    let mut rng = Rng::new(903);
+    for be in both() {
+        for d in [3usize, 8, 255, 256, 257, 700] {
+            let x = randvec(&mut rng, d);
+            let c = gemm_with(be, 1, 1, 1, d, &x, &x);
+            assert_eq!(
+                c[0].to_bits(),
+                be.sum_sq(&x).to_bits(),
+                "{} d={d}",
+                be.name()
+            );
+        }
+    }
+    // and the public sum_sq entry point is the active flavor
+    let x = randvec(&mut rng, 300);
+    assert_eq!(sum_sq(&x).to_bits(), simd::active().sum_sq(&x).to_bits());
+}
+
+#[test]
+fn gemm_bit_identical_across_thread_counts_per_backend() {
+    let mut rng = Rng::new(904);
+    for be in both() {
+        for &(m, n, k) in &[(257usize, 129usize, 300usize), (40, 40, 17)] {
+            let a = randvec(&mut rng, m * k);
+            let b = randvec(&mut rng, n * k);
+            let base = gemm_with(be, 1, m, n, k, &a, &b);
+            for threads in [2usize, 8] {
+                let got = gemm_with(be, threads, m, n, k, &a, &b);
+                for (w, g) in base.iter().zip(&got) {
+                    assert_eq!(
+                        w.to_bits(),
+                        g.to_bits(),
+                        "{} ({m},{n},{k}) threads={threads}",
+                        be.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn spmm_bit_identical_across_thread_counts_per_backend() {
+    let mut rng = Rng::new(905);
+    let (t, b, d) = (300usize, 24usize, 520usize);
+    let dense: Vec<f32> = (0..t * d)
+        .map(|_| if rng.bernoulli(0.1) { rng.gaussian_f32() } else { 0.0 })
+        .collect();
+    let csr = CsrMatrix::from_dense(t, d, &dense);
+    let bm = randvec(&mut rng, b * d);
+    for be in both() {
+        let mut base = vec![0.0f32; t * b];
+        spmm::csr_gemm_nt_with(be, 1, &csr, 0, t, &bm, b, &mut base);
+        for threads in [2usize, 8] {
+            let mut got = vec![0.0f32; t * b];
+            spmm::csr_gemm_nt_with(be, threads, &csr, 0, t, &bm, b, &mut got);
+            for (w, g) in base.iter().zip(&got) {
+                assert_eq!(w.to_bits(), g.to_bits(), "{} threads={threads}", be.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn spmm_matches_dense_gemm_bitwise_per_backend() {
+    // PR 5's sparse-equals-dense bit contract must survive FMA: stored
+    // entries accumulate in the same per-element order, and skipped
+    // zeros are identity adds under fma too
+    let mut rng = Rng::new(906);
+    for be in both() {
+        for &(t, b, d) in &[(13usize, 7usize, 300usize), (40, 9, 257)] {
+            let dense: Vec<f32> = (0..t * d)
+                .map(|_| if rng.bernoulli(0.2) { rng.gaussian_f32() } else { 0.0 })
+                .collect();
+            let csr = CsrMatrix::from_dense(t, d, &dense);
+            let bm = randvec(&mut rng, b * d);
+            let mut sp = vec![0.0f32; t * b];
+            spmm::csr_gemm_nt_with(be, 4, &csr, 0, t, &bm, b, &mut sp);
+            let dn = gemm_with(be, 4, t, b, d, &dense, &bm);
+            for (i, (s, w)) in sp.iter().zip(&dn).enumerate() {
+                assert_eq!(s.to_bits(), w.to_bits(), "{} ({t},{b},{d}) elem {i}", be.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn scalar_vs_simd_spmm_agrees_to_tolerance() {
+    let mut rng = Rng::new(907);
+    let (t, b, d) = (50usize, 8usize, 400usize);
+    let dense: Vec<f32> = (0..t * d)
+        .map(|_| if rng.bernoulli(0.15) { rng.gaussian_f32() } else { 0.0 })
+        .collect();
+    let csr = CsrMatrix::from_dense(t, d, &dense);
+    let bm = randvec(&mut rng, b * d);
+    let mut want = vec![0.0f32; t * b];
+    spmm::csr_gemm_nt_with(Backend::Scalar, 2, &csr, 0, t, &bm, b, &mut want);
+    let mut got = vec![0.0f32; t * b];
+    spmm::csr_gemm_nt_with(native(), 2, &csr, 0, t, &bm, b, &mut got);
+    let tol = 1e-5 * (d as f32).sqrt().max(1.0);
+    for (w, g) in want.iter().zip(&got) {
+        assert!((w - g).abs() <= tol, "{w} vs {g}");
+    }
+}
+
+#[test]
+fn csr_norms_follow_the_active_backend() {
+    // CsrMatrix construction computes norms through the active flavor,
+    // so row_dot_dense on the densified row reproduces them bitwise —
+    // under whichever backend this process runs
+    let mut rng = Rng::new(908);
+    let d = 700usize;
+    let dense: Vec<f32> = (0..4 * d)
+        .map(|_| if rng.bernoulli(0.25) { rng.gaussian_f32() } else { 0.0 })
+        .collect();
+    let csr = CsrMatrix::from_dense(4, d, &dense);
+    let mut buf = vec![0.0f32; d];
+    for i in 0..4 {
+        csr.densify_row_into(i, &mut buf);
+        assert_eq!(csr.row_dot_dense(i, &buf).to_bits(), csr.sum_sq[i].to_bits(), "row {i}");
+        assert_eq!(
+            csr.sum_sq[i].to_bits(),
+            simd::active().sum_sq(&dense[i * d..(i + 1) * d]).to_bits(),
+            "row {i} vs dense sum_sq"
+        );
+    }
+}
