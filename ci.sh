@@ -1,5 +1,5 @@
 #!/bin/sh
-# CI entry point. Usage: ./ci.sh [tier1|benchcheck|benchsmoke|benchmeasure|docs|lint|all]
+# CI entry point. Usage: ./ci.sh [tier1|benchcheck|benchsmoke|benchmeasure|tracesmoke|docs|lint|all]
 # tier1 is the repository's canonical verification (see ROADMAP.md).
 # benchcheck compiles the bench targets without running them.
 # benchsmoke validates the checked-in BENCH_*.json records against their
@@ -10,6 +10,9 @@
 # which overwrite BENCH_*.json with measured records, then holds those
 # records to the ratio floors in ci/check_bench_json.py — the measured
 # regression gate (rust/EXPERIMENTS.md §SIMD).
+# tracesmoke runs a seconds-sized traced training (--profile
+# --trace-json) and validates the emitted Chrome trace with
+# ci/check_trace_json.py, so the observability exporters stay honest.
 # docs builds the public API docs with warnings denied, so the rustdoc
 # surface (intra-doc links, examples) can't rot either.
 # lint (rustfmt + clippy -D warnings) is part of the blocking gate.
@@ -36,6 +39,15 @@ benchmeasure() {
     python3 ci/check_bench_json.py BENCH_*.json
 }
 
+tracesmoke() {
+    cargo build --release
+    trace_out="$(mktemp -t wu_svm_trace.XXXXXX)"
+    ./target/release/wu-svm train --dataset adult --scale 0.01 --solver smo \
+        --max-iters 500 --profile --trace-json "$trace_out"
+    python3 ci/check_trace_json.py "$trace_out"
+    rm -f "$trace_out"
+}
+
 docs() {
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 }
@@ -50,6 +62,7 @@ case "$mode" in
     benchcheck) benchcheck ;;
     benchsmoke) benchsmoke ;;
     benchmeasure) benchmeasure ;;
+    tracesmoke) tracesmoke ;;
     docs) docs ;;
     lint) lint ;;
     all)
@@ -58,11 +71,12 @@ case "$mode" in
         # the separate full-workload gate — minutes, not part of `all`
         tier1
         benchsmoke
+        tracesmoke
         docs
         lint
         ;;
     *)
-        echo "usage: ./ci.sh [tier1|benchcheck|benchsmoke|benchmeasure|docs|lint|all]" >&2
+        echo "usage: ./ci.sh [tier1|benchcheck|benchsmoke|benchmeasure|tracesmoke|docs|lint|all]" >&2
         exit 2
         ;;
 esac

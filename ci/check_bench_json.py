@@ -18,11 +18,34 @@ says the process ran on the scalar backend — a scalar-only host can't
 demonstrate a SIMD speedup and must not fake one. Measured records must
 name their backend so the ratios are interpretable.
 
+Measured records may also carry a "counters" object — the trace layer's
+runtime-counter snapshot (TraceReport::counters_json). When present its
+keys must come from the known counter set, values must be non-negative
+integers, and the cache identity hits + misses == lookups must hold.
+
 Usage: check_bench_json.py BENCH_a.json [BENCH_b.json ...]
 """
 import json
 import os
 import sys
+
+# rust/src/trace/counters.rs COUNTER_NAMES, kept in sync by the
+# counters-section smoke in benchsmoke (an unknown key fails here)
+COUNTER_NAMES = {
+    "cache_lookups",
+    "cache_hits",
+    "cache_misses",
+    "cache_evicted_bytes",
+    "kernel_rows_computed",
+    "pool_jobs",
+    "pool_helper_joins",
+    "gemm_flops",
+    "gemm_bytes",
+    "spmm_flops",
+    "spmm_bytes",
+    "engine_fallbacks",
+    "events_dropped",
+}
 
 # basename -> list of (dotted field path, floor, needs_simd_backend)
 RATIO_RULES = {
@@ -76,6 +99,10 @@ def check(path: str) -> list:
         errors.append(f"{path}: measurement must name its 'backend' (scalar | avx2+fma | neon)")
         backend = "scalar"  # treat as scalar so only unconditional floors apply
 
+    counters = doc.get("counters")
+    if counters is not None:
+        errors.extend(check_counters(path, counters))
+
     for dotted, floor, needs_simd in RATIO_RULES.get(os.path.basename(path), []):
         if needs_simd and backend == "scalar":
             print(f"note: {path}: {dotted} floor skipped (scalar backend)")
@@ -87,6 +114,28 @@ def check(path: str) -> list:
             errors.append(
                 f"{path}: {dotted} = {value:.3f} is below the {floor:.2f}x floor "
                 f"(backend {backend}) — performance regression or a broken fast path"
+            )
+    return errors
+
+
+def check_counters(path: str, counters) -> list:
+    """Validate an embedded trace-counter snapshot."""
+    if not isinstance(counters, dict):
+        return [f"{path}: 'counters' must be an object"]
+    errors = []
+    for key, value in counters.items():
+        if key not in COUNTER_NAMES:
+            errors.append(f"{path}: counters has unknown key '{key}'")
+        if not isinstance(value, int) or isinstance(value, bool) or value < 0:
+            errors.append(f"{path}: counters.{key} must be a non-negative integer")
+    lookups = counters.get("cache_lookups")
+    hits = counters.get("cache_hits")
+    misses = counters.get("cache_misses")
+    if all(isinstance(v, int) for v in (lookups, hits, misses)):
+        if hits + misses != lookups:
+            errors.append(
+                f"{path}: counter identity broken: cache_hits ({hits}) + "
+                f"cache_misses ({misses}) != cache_lookups ({lookups})"
             )
     return errors
 

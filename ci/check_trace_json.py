@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file emitted by `--trace-json`.
+
+The exporter (rust/src/trace/chrome.rs) walks each thread's span forest
+depth-first, so a well-formed file satisfies checkable invariants beyond
+"parses as JSON":
+
+  * the document is a JSON array of event objects;
+  * every event has ph/pid/tid/name, and B/E events a numeric ts;
+  * per tid, the B/E stream is balanced: every E closes the most recent
+    open B of the same name, and nothing stays open at the end;
+  * per tid, timestamps are non-decreasing in stream order (depth-first
+    emission of a nesting forest never goes backwards in time);
+  * at least one duration event exists — an empty trace from a traced
+    training run means the instrumentation fell off.
+
+Usage: check_trace_json.py trace.json [more.json ...]
+"""
+import json
+import sys
+
+
+def check(path: str) -> list:
+    try:
+        with open(path, encoding="utf-8") as f:
+            events = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable or invalid JSON: {e}"]
+    if not isinstance(events, list):
+        return [f"{path}: top level must be a JSON array of trace events"]
+
+    errors = []
+    open_stacks = {}  # tid -> stack of open B names
+    last_ts = {}  # tid -> last timestamp seen
+    durations = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"{path}: event {i} is not an object")
+            continue
+        ph = ev.get("ph")
+        tid = ev.get("tid")
+        name = ev.get("name")
+        if ph not in ("B", "E", "M"):
+            errors.append(f"{path}: event {i} has unsupported ph {ph!r}")
+            continue
+        if ev.get("pid") != 1 or not isinstance(tid, int) or not isinstance(name, str):
+            errors.append(f"{path}: event {i} is missing pid/tid/name")
+            continue
+        if ph == "M":
+            continue
+        durations += 1
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            errors.append(f"{path}: event {i} ({ph} {name}) has no numeric ts")
+            continue
+        if ts < last_ts.get(tid, 0.0):
+            errors.append(
+                f"{path}: event {i} ({ph} {name}) goes back in time on tid {tid} "
+                f"({ts} < {last_ts[tid]})"
+            )
+        last_ts[tid] = ts
+        stack = open_stacks.setdefault(tid, [])
+        if ph == "B":
+            stack.append(name)
+        elif not stack:
+            errors.append(f"{path}: event {i} closes '{name}' but tid {tid} has no open span")
+        elif stack[-1] != name:
+            errors.append(
+                f"{path}: event {i} closes '{name}' but tid {tid}'s innermost open "
+                f"span is '{stack[-1]}' (not properly nested)"
+            )
+        else:
+            stack.pop()
+
+    for tid, stack in open_stacks.items():
+        if stack:
+            errors.append(f"{path}: tid {tid} ends with unclosed span(s): {stack}")
+    if durations == 0:
+        errors.append(f"{path}: no B/E duration events at all — empty trace")
+    return errors
+
+
+def main(argv: list) -> int:
+    if not argv:
+        print("usage: check_trace_json.py trace.json [more.json ...]", file=sys.stderr)
+        return 2
+    failures = []
+    for path in argv:
+        failures.extend(check(path))
+    for msg in failures:
+        print(f"error: {msg}", file=sys.stderr)
+    if not failures:
+        print(f"trace json ok: {len(argv)} file(s) validated (balanced, nested, ordered)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -146,12 +146,21 @@ fn main() -> anyhow::Result<()> {
                 let margins = r.model.decision_batch(&test, threads);
                 let (metric_name, test_metric) = metric_of(&margins);
                 eprintln!("{:.2}% in {train_time:?}", test_metric * 100.0);
-                let capped = r
-                    .notes
-                    .iter()
-                    .find(|(k, _)| k == "capped")
-                    .map(|(_, v)| format!(" capped={v}"))
-                    .unwrap_or_default();
+                let note = |key: &str, tag: &str| {
+                    r.notes
+                        .iter()
+                        .find(|(k, _)| k == key)
+                        .map(|(_, v)| format!(" {tag}={v}"))
+                        .unwrap_or_default()
+                };
+                let capped = note("capped", "capped");
+                // explicit solvers report shared-row-cache pressure;
+                // implicit solvers have no cache and show nothing here
+                let cache = format!(
+                    "{}{}",
+                    note("cache_hit_rate", "hit"),
+                    note("cache_evicted_bytes", "evB")
+                );
                 rows.push(Row {
                     dataset: dataset.clone(),
                     arch: arch.into(),
@@ -160,7 +169,7 @@ fn main() -> anyhow::Result<()> {
                     test_metric,
                     train_time,
                     speedup: 1.0,
-                    notes: format!("m={}{capped}", r.model.num_vectors()),
+                    notes: format!("m={}{capped}{cache}", r.model.num_vectors()),
                 });
             }
             Err(e) => {

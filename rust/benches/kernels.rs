@@ -107,6 +107,9 @@ fn main() {
     {
         use wu_svm::linalg::{gemm_nt, gemm_nt_naive, Matrix};
         let threads = pool::default_threads();
+        // trace the measured section so the json record carries the
+        // runtime-counter snapshot (flop/byte tallies, pool activity)
+        let trace_session = wu_svm::trace::Session::start();
         let (m, k, n) = smoke_or((400usize, 64usize, 64usize), (4000, 64, 512));
         let a = Matrix::from_vec(m, k, rand_vec(&mut rng, m * k));
         let b = Matrix::from_vec(n, k, rand_vec(&mut rng, n * k));
@@ -200,6 +203,8 @@ fn main() {
             be.name()
         );
 
+        let counters = trace_session.finish().counters_json();
+
         // embedded schema required by ci/check_bench_json.py (validates
         // the checked-in copy of this file on every CI run)
         let schema = "\"schema\": {\n    \
@@ -213,7 +218,8 @@ fn main() {
              \"blocked_gflops\": \"2*m*n*k / median time\",\n    \
              \"speedup_vs_seed\": \"seed_dot_loop_ms / blocked_ms\",\n    \
              \"rbf_tile\": \"same comparison for a large rbf_block tile\",\n    \
-             \"simd_microkernel\": \"forced-scalar vs detected-backend 8x8 micro-kernel on identical packed panels\"\n  }";
+             \"simd_microkernel\": \"forced-scalar vs detected-backend 8x8 micro-kernel on identical packed panels\",\n    \
+             \"counters\": \"trace-layer runtime counter snapshot over the measured section (ci cross-checks the cache identity)\"\n  }";
         let json = format!(
             "{{\n  \"workload\": {{\"m\": {m}, \"k\": {k}, \"n\": {n}}},\n  \
              \"threads\": {threads},\n  \
@@ -224,7 +230,8 @@ fn main() {
              \"rbf_tile\": {{\"t\": {rt}, \"d\": {rd}, \"b\": {rb}, \
              \"seed_ms\": {:.3}, \"blocked_ms\": {:.3}, \"speedup\": {:.3}}},\n  \
              \"simd_microkernel\": {{\"kc\": {kc}, \"calls\": {calls}, \
-             \"scalar_ms\": {:.3}, \"simd_ms\": {:.3}, \"speedup\": {:.3}}},\n  {schema}\n}}\n",
+             \"scalar_ms\": {:.3}, \"simd_ms\": {:.3}, \"speedup\": {:.3}}},\n  \
+             \"counters\": {counters},\n  {schema}\n}}\n",
             be.name(),
             s_naive.median.as_secs_f64() * 1e3,
             gflops(s_naive.median),

@@ -37,6 +37,10 @@ fn main() {
     let kind = KernelKind::Rbf { gamma: 0.5 };
     println!("workload: n={n} d={d} rank={rank} ({threads} threads)");
 
+    // trace the whole bench so the json record carries the
+    // runtime-counter snapshot (flop/byte tallies, pool activity)
+    let trace_session = wu_svm::trace::Session::start();
+
     // ---- factorization: the one-off cost of the rank-r operator ----
     header(&format!("pivoted ICF build (n={n}, r={rank})"));
     let s_build = bench(&format!("icf build [{threads}t]"), 1, runs, || {
@@ -117,6 +121,7 @@ fn main() {
     });
     println!("{}", s_ls_exact.row());
 
+    let counters = trace_session.finish().counters_json();
     if smoke() {
         println!("BENCH_SMOKE=1: skipping BENCH_lowrank.json (not a measurement)");
         return;
@@ -139,7 +144,8 @@ fn main() {
          \"bytes_ratio\": \"op_bytes / exact_bytes\",\n    \
          \"residual_frac\": \"kernel trace fraction the factorization left unexplained\",\n    \
          \"lssvm_lowrank_ms\": \"median LS-SVM train time on the rank-r operator\",\n    \
-         \"lssvm_exact_ms\": \"median LS-SVM train time on the exact kernel\"\n  }";
+         \"lssvm_exact_ms\": \"median LS-SVM train time on the exact kernel\",\n    \
+         \"counters\": \"trace-layer runtime counter snapshot over the bench (ci cross-checks the cache identity)\"\n  }";
     let json = format!(
         "{{\n  \"workload\": {{\"n\": {n}, \"d\": {d}, \"rank\": {rank}}},\n  \
          \"threads\": {threads},\n  \
@@ -151,7 +157,8 @@ fn main() {
          \"dot_simd_speedup\": {:.3},\n  \
          \"op_bytes\": {},\n  \"exact_bytes\": {exact_bytes},\n  \
          \"bytes_ratio\": {bytes_ratio:.5},\n  \"residual_frac\": {:e},\n  \
-         \"lssvm_lowrank_ms\": {:.3},\n  \"lssvm_exact_ms\": {:.3},\n  {schema}\n}}\n",
+         \"lssvm_lowrank_ms\": {:.3},\n  \"lssvm_exact_ms\": {:.3},\n  \
+         \"counters\": {counters},\n  {schema}\n}}\n",
         be.name(),
         s_build.median.as_secs_f64() * 1e3,
         s_low.median.as_secs_f64() * 1e3,

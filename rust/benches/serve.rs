@@ -58,6 +58,10 @@ fn main() {
     let per_client = smoke_or(60, 1500);
     let total_req = (clients * per_client) as f64;
 
+    // trace the whole bench so the json record carries the
+    // runtime-counter snapshot (compile spans, flop tallies, fallbacks)
+    let trace_session = wu_svm::trace::Session::start();
+
     header(&format!(
         "serve throughput — binary b=256 d={d}, {clients} closed-loop clients x {per_client} reqs"
     ));
@@ -170,6 +174,8 @@ fn main() {
         snap.fallbacks
     );
 
+    let counters = trace_session.finish().counters_json();
+
     // embedded schema required by ci/check_bench_json.py (validates the
     // checked-in copy of this file on every CI run)
     let schema = "\"schema\": {\n    \
@@ -177,14 +183,15 @@ fn main() {
          \"threads\": \"pool worker threads\",\n    \
          \"backend\": \"SIMD backend the measured process dispatched to (scalar | avx2+fma | neon)\",\n    \
          \"cases\": \"per (shards, batch): throughput, p50/p99 upper bounds (us), occupancy, fallbacks\",\n    \
-         \"ovo\": \"45-pair ensemble served off one deduplicated union block\"\n  }";
+         \"ovo\": \"45-pair ensemble served off one deduplicated union block\",\n    \
+         \"counters\": \"trace-layer runtime counter snapshot over the bench (ci cross-checks the cache identity)\"\n  }";
     let json = format!(
         "{{\n  \"workload\": {{\"binary_b\": 256, \"d\": {d}, \"clients\": {clients}, \
          \"per_client\": {per_client}}},\n  \"threads\": {threads},\n  \
          \"backend\": \"{}\",\n  \"cases\": [\n{json_cases}\n  ],\n  \
          \"ovo\": {{\"classes\": {classes}, \"pairs\": 45, \"raw_vectors\": {ovo_raw}, \
          \"union_vectors\": {ovo_union}, \"req_per_s\": {ovo_rps:.0}, \
-         \"p50_us\": {}, \"p99_us\": {}}},\n  {schema}\n}}\n",
+         \"p50_us\": {}, \"p99_us\": {}}},\n  \"counters\": {counters},\n  {schema}\n}}\n",
         wu_svm::linalg::simd::active().name(),
         snap.p50.as_micros(),
         snap.p99.as_micros(),

@@ -46,6 +46,10 @@ fn main() {
         dense.bytes() as f64 / csr.bytes().max(1) as f64
     );
 
+    // trace the whole bench so the json record carries the
+    // runtime-counter snapshot (spmm flop/byte tallies, pool activity)
+    let trace_session = wu_svm::trace::Session::start();
+
     // ---- the tentpole comparison: one rbf kernel block K[n x b] of the
     // whole training set against a working-set-sized basis, densified
     // packed-GEMM route vs CSR SpMM route ----
@@ -126,6 +130,7 @@ fn main() {
     println!("{}", s_parse_dense.row());
     std::fs::remove_file(&path).ok();
 
+    let counters = trace_session.finish().counters_json();
     if smoke() {
         println!("BENCH_SMOKE=1: skipping BENCH_sparse.json (not a measurement)");
         return;
@@ -146,7 +151,8 @@ fn main() {
          \"spmm_simd_ms\": \"median raw SpMM time on the detected backend\",\n    \
          \"spmm_simd_speedup\": \"spmm_scalar_ms / spmm_simd_ms (1.0 on scalar-only hosts)\",\n    \
          \"parse_csr_ms\": \"median libsvm parse time building CSR directly\",\n    \
-         \"parse_dense_ms\": \"median libsvm parse time densifying on load\"\n  }";
+         \"parse_dense_ms\": \"median libsvm parse time densifying on load\",\n    \
+         \"counters\": \"trace-layer runtime counter snapshot over the bench (ci cross-checks the cache identity)\"\n  }";
     let json = format!(
         "{{\n  \"workload\": {{\"n\": {n}, \"d\": {d}, \"b\": {b}, \"sparsity\": {:.3}}},\n  \
          \"threads\": {threads},\n  \
@@ -156,7 +162,8 @@ fn main() {
          \"dense_bytes\": {},\n  \"csr_bytes\": {},\n  \
          \"spmm_scalar_ms\": {:.3},\n  \"spmm_simd_ms\": {:.3},\n  \
          \"spmm_simd_speedup\": {:.3},\n  \
-         \"parse_csr_ms\": {:.3},\n  \"parse_dense_ms\": {:.3},\n  {schema}\n}}\n",
+         \"parse_csr_ms\": {:.3},\n  \"parse_dense_ms\": {:.3},\n  \
+         \"counters\": {counters},\n  {schema}\n}}\n",
         dense.sparsity(),
         be.name(),
         s_dense.median.as_secs_f64() * 1e3,

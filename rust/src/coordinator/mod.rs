@@ -140,8 +140,8 @@ impl Default for TrainJob {
 }
 
 /// CLI keys [`TrainJob::from_config`] understands (plus the generic
-/// `config`/`save` keys) — the `check_known` allowlist for `wu-svm
-/// train`.
+/// `config`/`save` keys and the `profile`/`trace-json` trace exporters
+/// handled in `main`) — the `check_known` allowlist for `wu-svm train`.
 pub const TRAIN_KEYS: &[&str] = &[
     "dataset",
     "scale",
@@ -165,6 +165,8 @@ pub const TRAIN_KEYS: &[&str] = &[
     "format",
     "config",
     "save",
+    "profile",
+    "trace-json",
 ];
 
 impl TrainJob {

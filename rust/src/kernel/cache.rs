@@ -136,22 +136,28 @@ impl Shard {
         Some(self.entries[idx].row.clone())
     }
 
-    fn remove_at(&mut self, idx: usize) {
+    /// Drop the entry at `idx`; returns the bytes it freed.
+    fn remove_at(&mut self, idx: usize) -> usize {
         let e = self.entries.swap_remove(idx);
         self.map.remove(&e.key);
-        self.bytes -= e.row.len() * 4;
+        let freed = e.row.len() * 4;
+        self.bytes -= freed;
         if idx < self.entries.len() {
             let moved = self.entries[idx].key;
             self.map.insert(moved, idx);
         }
+        freed
     }
 
-    fn insert(&mut self, key: (u64, usize), row: Arc<Vec<f32>>, budget: usize) {
+    /// Insert `row`, evicting LRU entries to stay inside `budget`.
+    /// Returns the total bytes evicted (0 on a raced duplicate key).
+    fn insert(&mut self, key: (u64, usize), row: Arc<Vec<f32>>, budget: usize) -> usize {
         if self.map.contains_key(&key) {
             // another thread raced the same miss; keep its row
-            return;
+            return 0;
         }
         let sz = row.len() * 4;
+        let mut evicted = 0usize;
         // Evict LRU rows until the new one fits. An oversized row still
         // lands after the shard empties (progress over strictness).
         while self.bytes + sz > budget && !self.entries.is_empty() {
@@ -161,12 +167,13 @@ impl Shard {
                 .enumerate()
                 .min_by_key(|(_, e)| e.tick)
                 .expect("entries nonempty");
-            self.remove_at(victim);
+            evicted += self.remove_at(victim);
         }
         self.clock += 1;
         self.map.insert(key, self.entries.len());
         self.bytes += sz;
         self.entries.push(Entry { key, row, tick: self.clock });
+        evicted
     }
 }
 
@@ -181,6 +188,7 @@ pub struct SharedRowCache {
     bytes_per_shard: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    evicted_bytes: AtomicU64,
 }
 
 impl SharedRowCache {
@@ -193,6 +201,7 @@ impl SharedRowCache {
             shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evicted_bytes: AtomicU64::new(0),
         }
     }
 
@@ -235,16 +244,24 @@ impl SharedRowCache {
         let shard = self.shard_of(key);
         if let Some(row) = shard.lock().unwrap().lookup(key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            crate::trace::count(crate::trace::Counter::CacheLookups, 1);
+            crate::trace::count(crate::trace::Counter::CacheHits, 1);
             return Ok(row);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        crate::trace::count(crate::trace::Counter::CacheLookups, 1);
+        crate::trace::count(crate::trace::Counter::CacheMisses, 1);
         let mut buf = vec![0.0f32; row_len];
         fill(&mut buf)?;
         let row = Arc::new(buf);
-        shard
+        let evicted = shard
             .lock()
             .unwrap()
             .insert(key, row.clone(), self.bytes_per_shard);
+        if evicted > 0 {
+            self.evicted_bytes.fetch_add(evicted as u64, Ordering::Relaxed);
+            crate::trace::count(crate::trace::Counter::CacheEvictedBytes, evicted as u64);
+        }
         Ok(row)
     }
 
@@ -260,6 +277,12 @@ impl SharedRowCache {
 
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes evicted to stay inside the budget — the capacity-
+    /// pressure signal (0 means the working set fit).
+    pub fn evicted_bytes(&self) -> u64 {
+        self.evicted_bytes.load(Ordering::Relaxed)
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -407,6 +430,9 @@ mod tests {
         }
         assert_eq!(held.to_vec(), vec![7.0; 4], "Arc row mutated by eviction");
         assert!(c.used_bytes() <= c.budget_bytes().max(64));
+        // 10 rows of 16 bytes pushed through a 2-row budget: at least 8
+        // rows' worth of evictions must have been tallied
+        assert!(c.evicted_bytes() >= 8 * 16, "evicted {} bytes", c.evicted_bytes());
     }
 
     #[test]

@@ -87,6 +87,7 @@ impl ExactDense {
         threads: usize,
         max_bytes: usize,
     ) -> Result<Self> {
+        let _sp = crate::trace::span("operator/exact-dense");
         let k = full_kernel(kind, ds, threads, max_bytes).map_err(|e| anyhow!(e))?;
         Ok(ExactDense { k, threads })
     }

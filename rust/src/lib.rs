@@ -35,3 +35,4 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod solvers;
+pub mod trace;

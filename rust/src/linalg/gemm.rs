@@ -199,6 +199,14 @@ pub fn gemm_nt_strided_with(
     if let Some(s) = b_kscale {
         assert!(s.len() >= k, "kscale shorter than k");
     }
+    crate::trace::count(
+        crate::trace::Counter::GemmFlops,
+        2 * (m as u64) * (n as u64) * (k as u64),
+    );
+    crate::trace::count(
+        crate::trace::Counter::GemmBytes,
+        4 * ((m as u64) * (k as u64) + (n as u64) * (k as u64) + (m as u64) * (n as u64)),
+    );
     let mpan = (m + MR - 1) / MR;
     let npan = (n + NR - 1) / NR;
     let slab = KC.min(k);
@@ -291,6 +299,11 @@ pub fn gemv_blocked(
     assert_eq!(v.len(), cols);
     assert_eq!(out.len(), rows);
     assert!(lda >= cols);
+    crate::trace::count(crate::trace::Counter::GemmFlops, 2 * (rows as u64) * (cols as u64));
+    crate::trace::count(
+        crate::trace::Counter::GemmBytes,
+        4 * ((rows as u64) * (cols as u64) + (cols as u64) + (rows as u64)),
+    );
     let backend = simd::active();
     let rows_per = ((rows + 63) / 64).max(1);
     pool::parallel_chunks_mut(threads, out, rows_per, |c, slice| {

@@ -77,6 +77,7 @@ pub fn icf(
     tol: f64,
     mut column: impl FnMut(usize, &mut [f32]),
 ) -> LowRankFactor {
+    let _sp = crate::trace::span("operator/icf");
     let n = diag.len();
     let rank = rank.min(n).max(1);
     let mut d: Vec<f64> = diag.iter().map(|&v| v as f64).collect();
@@ -141,6 +142,7 @@ pub fn nystrom(
     jitter: f32,
     pivots: Vec<usize>,
 ) -> Result<LowRankFactor, chol::CholError> {
+    let _sp = crate::trace::span("operator/nystrom");
     let n = c.rows;
     let m = c.cols;
     assert_eq!(w.rows, m);

@@ -114,6 +114,12 @@ pub fn csr_gemm_nt_packed_with(
         return;
     }
     assert_eq!(bt.len(), a.cols * b);
+    let nnz_range = (a.row_ptr[(row0 + t).min(a.rows)] - a.row_ptr[row0.min(a.rows)]) as u64;
+    crate::trace::count(crate::trace::Counter::SpmmFlops, 2 * (b as u64) * nnz_range);
+    crate::trace::count(
+        crate::trace::Counter::SpmmBytes,
+        4 * (2 * nnz_range + (a.cols as u64) * (b as u64) + (t as u64) * (b as u64)),
+    );
     pool::parallel_chunks_mut(threads, out, RB * b, |blk, slice| {
         let mut partial = vec![0.0f32; b];
         let rows_here = slice.len() / b;

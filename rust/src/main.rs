@@ -33,6 +33,9 @@ COMMANDS
             --landmarks M  (Nystrom landmarks instead of ICF)
             --time-budget-secs T --max-iters N  (training budget)
             --save model.txt  (unknown --keys are rejected)
+            --profile  (per-phase wall breakdown + runtime counters)
+            --trace-json trace.json  (Chrome trace-event export; open
+              in chrome://tracing or ui.perfetto.dev)
   predict   --model model.txt --input data.libsvm [--threads N]
             [--format dense|csr|auto]
   datagen   --dataset KEY --scale S --out file.libsvm [--test-out f]
@@ -43,6 +46,7 @@ COMMANDS
             sparse: --dataset kdd99 --scale S --solver spsvm  (csr vs dense)
             rank-curve: --dataset KEY --scale S --ranks 16,32,64,128,256
               (lssvm accuracy/memory vs ICF rank, exact baseline at rank 0)
+            bench also honors --profile and --trace-json (see train)
   serve     --dataset KEY --scale S [--engine E] [--requests N] [--batch N]
             [--shards K] [--queue-cap N]  (multiclass datasets serve OvO)
   info      artifact manifest + runtime info
@@ -66,10 +70,10 @@ fn dispatch(args: &[String]) -> Result<()> {
     };
     let cfg = Config::from_args(&args[1..])?;
     match cmd.as_str() {
-        "train" => cmd_train(&cfg),
+        "train" => run_traced(&cfg, || cmd_train(&cfg)),
         "predict" => cmd_predict(&cfg),
         "datagen" => cmd_datagen(&cfg),
-        "bench" => cmd_bench(&cfg),
+        "bench" => run_traced(&cfg, || cmd_bench(&cfg)),
         "serve" => cmd_serve(&cfg),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -78,6 +82,32 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
+}
+
+/// Run `f` under a trace session when `--profile`/`--trace-json` ask
+/// for one; otherwise stay on the permanently-disabled fast path.
+fn run_traced(cfg: &Config, f: impl FnOnce() -> Result<()>) -> Result<()> {
+    let profile = cfg.bool_or("profile", false)?;
+    let trace_json = cfg.get("trace-json").map(PathBuf::from);
+    if !profile && trace_json.is_none() {
+        return f();
+    }
+    let session = wu_svm::trace::Session::start();
+    if !session.is_active() {
+        println!("note: WU_SVM_TRACE=0 set, tracing disabled");
+    }
+    let out = f();
+    let report = session.finish();
+    if out.is_ok() {
+        if profile {
+            print!("{}", report.render_profile());
+        }
+        if let Some(path) = &trace_json {
+            wu_svm::trace::chrome::write_chrome_json(&report, path)?;
+            println!("wrote chrome trace to {}", path.display());
+        }
+    }
+    out
 }
 
 fn cmd_train(cfg: &Config) -> Result<()> {

@@ -54,7 +54,9 @@ pub fn multiclass_error(pred: &[usize], truth: &[usize]) -> f64 {
     errs as f64 / pred.len() as f64
 }
 
-/// Simple stopwatch with named laps (used by solvers for phase breakdown).
+/// Simple stopwatch with named laps. Solver phase breakdowns moved to
+/// the process-wide trace layer ([`crate::trace::phases`]); this stays
+/// for ad-hoc local timing (e.g. OvO accumulated train seconds).
 #[derive(Debug)]
 pub struct Stopwatch {
     start: Instant,

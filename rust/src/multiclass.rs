@@ -104,6 +104,7 @@ impl OvoModel {
                 if view.n == 0 {
                     return Ok(None);
                 }
+                let _sp = crate::trace::span("ovo/pair");
                 let t0 = std::time::Instant::now();
                 let model = train_pair(&view, a, b)?;
                 Ok(Some((a, b, model, t0.elapsed().as_secs_f64())))

@@ -130,6 +130,7 @@ impl Pool {
             });
             if let Some(entry) = pick {
                 entry.helpers_in += 1;
+                crate::trace::count(crate::trace::Counter::PoolHelperJoins, 1);
                 let id = entry.id;
                 let job = entry.job;
                 drop(guard);
@@ -171,6 +172,7 @@ impl Pool {
             });
             id
         };
+        crate::trace::count(crate::trace::Counter::PoolJobs, 1);
         self.work_cv.notify_all();
         // The completion guard runs even if the submitter's own drain
         // panics: it bars new helpers, waits out the ones inside the

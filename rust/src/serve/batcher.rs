@@ -328,7 +328,7 @@ impl Server {
             let _ = req
                 .reply
                 .send(Response { id: req.id, version: model.version, output: out });
-            self.metrics.on_answer(lat);
+            self.metrics.on_answer(lat, model.version);
         }
         self.snapshot()
     }
@@ -379,7 +379,7 @@ fn process_batch(
             // engine failed (e.g. an xla runtime went away): degrade to
             // scalar scoring, but never silently — the counter is
             // asserted zero by every happy-path test
-            metrics.on_fallback(t);
+            metrics.on_fallback(t, model.version);
             batch.iter().map(|r| model.score_scalar(&r.features)).collect()
         }
     };
@@ -388,7 +388,7 @@ fn process_batch(
         let _ = r
             .reply
             .send(Response { id: r.id, version: model.version, output: out });
-        metrics.on_answer(lat);
+        metrics.on_answer(lat, model.version);
     }
 }
 

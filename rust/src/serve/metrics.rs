@@ -4,9 +4,16 @@
 //! Everything is a relaxed atomic — recording sits on the batcher hot
 //! path and must cost a handful of nanoseconds, not a lock. The
 //! histogram buckets latency at power-of-two microsecond boundaries
-//! (bucket `i` covers `[2^i, 2^{i+1})` µs), so quantiles read from it
-//! are *upper bounds* that overestimate by at most 2x — the honest
-//! trade for a fixed-size, allocation-free histogram.
+//! (bucket `i` covers `[2^i, 2^{i+1})` µs). Quantiles interpolate the
+//! target rank linearly *within* its bucket and clamp against the exact
+//! maximum observed latency, so p50/p99/p999 are estimates with at most
+//! one-bucket (2x) error instead of the old hard upper bounds.
+//!
+//! Answers and fallbacks are additionally attributed to the model
+//! version that served them, in a small fixed table of CAS-claimed
+//! slots (registry versions start at 1, so 0 is the free sentinel);
+//! versions beyond the table spill into an overflow counter rather
+//! than being dropped silently.
 
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -15,6 +22,19 @@ use std::time::Duration;
 /// Histogram bucket count: bucket `i` covers `[2^i, 2^{i+1})` µs, the
 /// last bucket absorbs the tail (2^31 µs ≈ 36 minutes).
 const BUCKETS: usize = 32;
+
+/// Per-version attribution slots. A rollout touches a handful of
+/// versions; 16 covers any sane serve lifetime, and the overflow
+/// counter keeps the accounting honest past that.
+const VERSION_SLOTS: usize = 16;
+
+/// One CAS-claimed per-model-version counter row. `version == 0` marks
+/// a free slot (registry versions start at 1).
+struct VersionSlot {
+    version: AtomicU64,
+    requests: AtomicU64,
+    errors: AtomicU64,
+}
 
 /// Shared, thread-safe serve counters. One instance per [`super::Server`];
 /// clients record submissions/rejections, batcher shards record batches,
@@ -28,7 +48,12 @@ pub struct ServeMetrics {
     panics: AtomicU64,
     max_batch: AtomicU64,
     depth_peak: AtomicU64,
+    /// Exact maximum latency observed (µs) — clamps the interpolated
+    /// quantile estimates so no estimate exceeds a real observation.
+    max_us: AtomicU64,
     latency: [AtomicU64; BUCKETS],
+    versions: [VersionSlot; VERSION_SLOTS],
+    version_overflow: AtomicU64,
 }
 
 impl Default for ServeMetrics {
@@ -41,6 +66,12 @@ impl ServeMetrics {
     pub fn new() -> ServeMetrics {
         #[allow(clippy::declare_interior_mutable_const)]
         const ZERO: AtomicU64 = AtomicU64::new(0);
+        #[allow(clippy::declare_interior_mutable_const)]
+        const FREE: VersionSlot = VersionSlot {
+            version: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        };
         ServeMetrics {
             submitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -50,7 +81,10 @@ impl ServeMetrics {
             panics: AtomicU64::new(0),
             max_batch: AtomicU64::new(0),
             depth_peak: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
             latency: [ZERO; BUCKETS],
+            versions: [FREE; VERSION_SLOTS],
+            version_overflow: AtomicU64::new(0),
         }
     }
 
@@ -71,9 +105,19 @@ impl ServeMetrics {
         self.max_batch.fetch_max(size as u64, Ordering::Relaxed);
     }
 
-    /// `n` requests fell back to scalar scoring after an engine error.
-    pub(crate) fn on_fallback(&self, n: usize) {
+    /// `n` requests fell back to scalar scoring after an engine error,
+    /// attributed to the model `version` that failed.
+    pub(crate) fn on_fallback(&self, n: usize, version: u64) {
         self.fallbacks.fetch_add(n as u64, Ordering::Relaxed);
+        crate::trace::count(crate::trace::Counter::EngineFallbacks, n as u64);
+        match self.version_slot(version) {
+            Some(s) => {
+                s.errors.fetch_add(n as u64, Ordering::Relaxed);
+            }
+            None => {
+                self.version_overflow.fetch_add(n as u64, Ordering::Relaxed);
+            }
+        }
     }
 
     /// A batch panicked while scoring (its waiters were notified by the
@@ -82,11 +126,48 @@ impl ServeMetrics {
         self.panics.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// A response was sent `latency` after its request was enqueued.
-    pub(crate) fn on_answer(&self, latency: Duration) {
+    /// A response was sent `latency` after its request was enqueued, by
+    /// model `version`.
+    pub(crate) fn on_answer(&self, latency: Duration, version: u64) {
         self.answered.fetch_add(1, Ordering::Relaxed);
         let us = latency.as_micros().min(u64::MAX as u128) as u64;
         self.latency[bucket(us)].fetch_add(1, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+        match self.version_slot(version) {
+            Some(s) => {
+                s.requests.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                self.version_overflow.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Find or CAS-claim the slot for `version`; `None` when the table
+    /// is full (or `version` is the free sentinel 0).
+    fn version_slot(&self, version: u64) -> Option<&VersionSlot> {
+        if version == 0 {
+            return None;
+        }
+        for s in &self.versions {
+            let v = s.version.load(Ordering::Relaxed);
+            if v == version {
+                return Some(s);
+            }
+            if v == 0 {
+                if s.version
+                    .compare_exchange(0, version, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    return Some(s);
+                }
+                // lost the race: the winner may have claimed our version
+                if s.version.load(Ordering::Relaxed) == version {
+                    return Some(s);
+                }
+            }
+        }
+        None
     }
 
     /// Engine-error fallback count so far (asserted zero by happy-path
@@ -105,6 +186,22 @@ impl ServeMetrics {
         let total: u64 = counts.iter().sum();
         let answered = self.answered.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
+        let max_us = self.max_us.load(Ordering::Relaxed);
+        let q = |q: f64| {
+            let est = quantile_est_us(&counts, total, q).min(max_us as f64);
+            Duration::from_nanos((est * 1e3).round() as u64)
+        };
+        let mut per_version: Vec<VersionCounts> = self
+            .versions
+            .iter()
+            .filter(|s| s.version.load(Ordering::Relaxed) != 0)
+            .map(|s| VersionCounts {
+                version: s.version.load(Ordering::Relaxed),
+                requests: s.requests.load(Ordering::Relaxed),
+                errors: s.errors.load(Ordering::Relaxed),
+            })
+            .collect();
+        per_version.sort_by_key(|v| v.version);
         Snapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -117,8 +214,12 @@ impl ServeMetrics {
             queue_depth,
             queue_depth_peak: self.depth_peak.load(Ordering::Relaxed) as usize,
             model_version,
-            p50: Duration::from_micros(quantile_us(&counts, total, 0.50)),
-            p99: Duration::from_micros(quantile_us(&counts, total, 0.99)),
+            p50: q(0.50),
+            p99: q(0.99),
+            p999: q(0.999),
+            max_latency: Duration::from_micros(max_us),
+            per_version,
+            version_overflow: self.version_overflow.load(Ordering::Relaxed),
         }
     }
 }
@@ -129,20 +230,40 @@ fn bucket(us: u64) -> usize {
     b.min(BUCKETS - 1)
 }
 
-/// Upper bound (µs) of the bucket holding the `q`-quantile observation.
-fn quantile_us(counts: &[u64; BUCKETS], total: u64, q: f64) -> u64 {
+/// Estimated µs of the `q`-quantile observation: find the bucket holding
+/// the target rank and interpolate linearly between its bounds by the
+/// rank's position among the bucket's observations. Monotone in `q` by
+/// construction (cumulative rank, monotone bucket bounds).
+fn quantile_est_us(counts: &[u64; BUCKETS], total: u64, q: f64) -> f64 {
     if total == 0 {
-        return 0;
+        return 0.0;
     }
-    let target = ((total as f64) * q).ceil().max(1.0) as u64;
+    let target = ((total as f64) * q).ceil().max(1.0);
     let mut cum = 0u64;
     for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let before = cum as f64;
         cum += c;
-        if cum >= target {
-            return 1u64 << (i + 1);
+        if cum as f64 >= target {
+            let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+            let hi = (1u64 << (i + 1)) as f64;
+            let frac = (target - before) / c as f64;
+            return lo + frac * (hi - lo);
         }
     }
-    1u64 << BUCKETS
+    (1u64 << (BUCKETS - 1)) as f64 * 2.0
+}
+
+/// Per-model-version request/error attribution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VersionCounts {
+    pub version: u64,
+    /// Requests answered by this version.
+    pub requests: u64,
+    /// Requests this version fell back to scalar scoring on.
+    pub errors: u64,
 }
 
 /// Immutable copy of the serve counters at one instant.
@@ -172,10 +293,17 @@ pub struct Snapshot {
     pub queue_depth_peak: usize,
     /// Registry version serving when the snapshot was taken.
     pub model_version: u64,
-    /// Latency quantiles from the log-bucketed histogram — bucket upper
-    /// bounds, i.e. overestimates by at most 2x.
+    /// Latency quantiles: within-bucket linear interpolation over the
+    /// log₂ histogram, clamped to the exact observed maximum.
     pub p50: Duration,
     pub p99: Duration,
+    pub p999: Duration,
+    /// Exact maximum latency observed.
+    pub max_latency: Duration,
+    /// Per-model-version answer/error counts, ascending by version.
+    pub per_version: Vec<VersionCounts>,
+    /// Events whose version missed the fixed slot table (0 normally).
+    pub version_overflow: u64,
 }
 
 impl fmt::Display for Snapshot {
@@ -183,8 +311,8 @@ impl fmt::Display for Snapshot {
         write!(
             f,
             "serve: {} answered / {} submitted ({} rejected), {} batches \
-             (mean {:.1}, max {}), {} fallbacks, {} panics, p50 <= {:?}, \
-             p99 <= {:?}, queue {} (peak {}), model v{}",
+             (mean {:.1}, max {}), {} fallbacks, {} panics, p50 ~{:?}, \
+             p99 ~{:?}, p999 ~{:?}, max {:?}, queue {} (peak {}), model v{}",
             self.requests,
             self.submitted,
             self.rejected,
@@ -195,10 +323,16 @@ impl fmt::Display for Snapshot {
             self.panics,
             self.p50,
             self.p99,
+            self.p999,
+            self.max_latency,
             self.queue_depth,
             self.queue_depth_peak,
             self.model_version
-        )
+        )?;
+        for v in &self.per_version {
+            write!(f, ", v{}: {} req {} err", v.version, v.requests, v.errors)?;
+        }
+        Ok(())
     }
 }
 
@@ -219,22 +353,41 @@ mod tests {
     }
 
     #[test]
-    fn quantiles_read_bucket_upper_bounds() {
+    fn quantiles_interpolate_within_buckets() {
         let m = ServeMetrics::new();
-        // 99 fast answers (1µs bucket 0) and 1 slow (1000µs bucket 9)
+        // 99 fast answers (1µs, bucket 0 = [0,2)) and 1 slow (1000µs)
         for _ in 0..99 {
-            m.on_answer(Duration::from_micros(1));
+            m.on_answer(Duration::from_micros(1), 1);
         }
-        m.on_answer(Duration::from_micros(1000));
+        m.on_answer(Duration::from_micros(1000), 1);
         let s = m.snapshot(0, 1);
         assert_eq!(s.requests, 100);
-        assert_eq!(s.p50, Duration::from_micros(2));
-        // p99 target is the 99th observation — still in the fast bucket;
-        // the slow one is the 100th
-        assert_eq!(s.p99, Duration::from_micros(2));
-        m.on_answer(Duration::from_micros(1000));
+        // p50 = rank 50 of 99 in [0,2): ~1.0µs, far below the old 2µs
+        // bucket upper bound
+        assert!(s.p50 > Duration::from_nanos(500) && s.p50 < Duration::from_micros(2), "{:?}", s.p50);
+        // p999 hits the slow observation's bucket [512,1024) but clamps
+        // at the exact max 1000µs
+        assert!(s.p999 <= Duration::from_micros(1000), "{:?}", s.p999);
+        assert!(s.p999 >= Duration::from_micros(512), "{:?}", s.p999);
+        assert_eq!(s.max_latency, Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_capped_by_max() {
+        let m = ServeMetrics::new();
+        let mut state = 0x243f_6a88_85a3_08d3u64;
+        for _ in 0..5000 {
+            // deterministic xorshift latencies spanning several buckets
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            m.on_answer(Duration::from_micros(1 + state % 8192), 1);
+        }
         let s = m.snapshot(0, 1);
-        assert_eq!(s.p99, Duration::from_micros(1024));
+        assert!(s.p50 <= s.p99, "p50 {:?} p99 {:?}", s.p50, s.p99);
+        assert!(s.p99 <= s.p999, "p99 {:?} p999 {:?}", s.p99, s.p999);
+        assert!(s.p999 <= s.max_latency, "p999 {:?} max {:?}", s.p999, s.max_latency);
+        assert!(s.max_latency <= Duration::from_micros(8192));
     }
 
     #[test]
@@ -243,9 +396,11 @@ mod tests {
         let s = m.snapshot(3, 7);
         assert_eq!(s.requests, 0);
         assert_eq!(s.p50, Duration::ZERO);
+        assert_eq!(s.p999, Duration::ZERO);
         assert_eq!(s.mean_batch, 0.0);
         assert_eq!(s.queue_depth, 3);
         assert_eq!(s.model_version, 7);
+        assert!(s.per_version.is_empty());
     }
 
     #[test]
@@ -256,7 +411,7 @@ mod tests {
         m.on_reject();
         m.on_batch(4);
         m.on_batch(9);
-        m.on_fallback(3);
+        m.on_fallback(3, 1);
         m.on_panic();
         let s = m.snapshot(0, 1);
         assert_eq!(s.submitted, 2);
@@ -268,5 +423,30 @@ mod tests {
         assert_eq!(s.queue_depth_peak, 5);
         let line = s.to_string();
         assert!(line.contains("rejected") && line.contains("fallbacks"));
+    }
+
+    #[test]
+    fn per_version_attribution_and_overflow() {
+        let m = ServeMetrics::new();
+        m.on_answer(Duration::from_micros(5), 1);
+        m.on_answer(Duration::from_micros(5), 2);
+        m.on_answer(Duration::from_micros(5), 2);
+        m.on_fallback(4, 2);
+        let s = m.snapshot(0, 2);
+        assert_eq!(
+            s.per_version,
+            vec![
+                VersionCounts { version: 1, requests: 1, errors: 0 },
+                VersionCounts { version: 2, requests: 2, errors: 4 },
+            ]
+        );
+        assert_eq!(s.version_overflow, 0);
+        // exhaust the slot table: the spill lands in the overflow counter
+        for v in 3..=(VERSION_SLOTS as u64 + 2) {
+            m.on_answer(Duration::from_micros(5), v);
+        }
+        assert_eq!(m.snapshot(0, 2).version_overflow, 2);
+        let line = m.snapshot(0, 2).to_string();
+        assert!(line.contains("v2: 2 req 4 err"), "{line}");
     }
 }

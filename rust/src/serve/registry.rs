@@ -98,6 +98,7 @@ impl ModelRegistry {
     /// stamped just before the swap, so concurrent publishes always
     /// leave the highest version live (swap order == version order).
     pub fn publish(&self, model: &dyn Servable) -> Result<u64> {
+        let _sp = crate::trace::span("serve/publish");
         if model.input_dim() != self.d {
             bail!(
                 "model input dim {} != registry dim {}",
@@ -292,6 +293,7 @@ fn store_norms(store: &[f32], rows: usize, d: usize) -> Vec<f32> {
 }
 
 fn compile_binary(m: &SvmModel, version: u64) -> CompiledModel {
+    let _sp = crate::trace::span("serve/compile");
     let kind = match m.kernel {
         KernelKind::Rbf { gamma } if m.num_vectors() > 0 && m.d > 0 => {
             let mut dedup: HashMap<Vec<u32>, usize> = HashMap::new();
@@ -319,6 +321,7 @@ fn compile_binary(m: &SvmModel, version: u64) -> CompiledModel {
 }
 
 fn compile_ovo(m: &OvoModel, version: u64) -> CompiledModel {
+    let _sp = crate::trace::span("serve/compile");
     let d = m.models.first().map_or(0, |sm| sm.d);
     // the shared-block fast path needs every pair on one RBF kernel
     let mut uniform = m.models.first().and_then(|sm| match sm.kernel {

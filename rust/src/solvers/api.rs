@@ -560,6 +560,16 @@ impl Trainer {
             observer,
         };
         let driver = self.spec.driver();
+        // root span: one "train/<solver>" interval covering the whole
+        // call, under which the solver's phase laps nest
+        let _sp = crate::trace::span(match &self.spec {
+            SolverSpec::Smo(_) => "train/smo",
+            SolverSpec::Wss(_) => "train/wss",
+            SolverSpec::Mu(_) => "train/mu",
+            SolverSpec::Primal(_) => "train/primal",
+            SolverSpec::SpSvm(_) => "train/spsvm",
+            SolverSpec::LsSvm(_) => "train/lssvm",
+        });
         let mut res = driver.train(&ctx)?;
         res.note("family", driver.family().as_str().to_string());
         res.note("simd_backend", crate::linalg::simd::active().name().to_string());
@@ -603,7 +613,6 @@ mod tests {
             },
             iterations: 3,
             objective: 0.0,
-            stopwatch: crate::metrics::Stopwatch::new(),
             notes: vec![],
         };
         m.annotate(&mut res);

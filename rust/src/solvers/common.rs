@@ -270,6 +270,7 @@ impl KernelRows {
         })?;
         if computed {
             self.rows_computed += 1;
+            crate::trace::count(crate::trace::Counter::KernelRowsComputed, 1);
         }
         Ok(row)
     }
@@ -299,6 +300,7 @@ impl KernelRows {
                 }
                 for ((slot, i), buf) in misses.into_iter().zip(bufs) {
                     self.rows_computed += 1;
+                    crate::trace::count(crate::trace::Counter::KernelRowsComputed, 1);
                     let row = self.cache.get_or_try_compute(self.group, i, self.row_len, |out| {
                         out.copy_from_slice(&buf);
                         Ok(())
@@ -319,6 +321,22 @@ impl KernelRows {
 
     pub fn hit_rate(&self) -> f64 {
         self.cache.hit_rate()
+    }
+
+    /// Bytes the backing cache evicted so far — nonzero means the
+    /// working set did not fit the byte budget (capacity pressure).
+    pub fn cache_evicted_bytes(&self) -> u64 {
+        self.cache.evicted_bytes()
+    }
+
+    /// Bytes currently resident in the backing cache.
+    pub fn cache_used_bytes(&self) -> usize {
+        self.cache.used_bytes()
+    }
+
+    /// The backing cache's total byte budget.
+    pub fn cache_budget_bytes(&self) -> usize {
+        self.cache.budget_bytes()
     }
 }
 

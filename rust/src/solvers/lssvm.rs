@@ -30,7 +30,6 @@ use crate::engine::Engine;
 use crate::kernel::operator::{build as build_operator, ExactDense, KernelOperator, LowRankConfig};
 use crate::kernel::KernelKind;
 use crate::linalg::{cg, dot};
-use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 
 use super::api::{Family, SolverDriver, SolverSpec, TrainCtx, Trainer};
@@ -93,7 +92,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &LsSvmParams) -> Result<TrainResult> {
     let kind = ctx.kind;
     let threads = ctx.engine.threads();
     ensure!(params.c > 0.0, "lssvm needs C > 0 (got {})", params.c);
-    let mut sw = Stopwatch::new();
+    let mut ph = crate::trace::phases();
     let n = ds.n;
     // budget unit = CG iterations of the main (ν) solve; the wall clock
     // starts before the factorization, which dominates at low rank.
@@ -103,7 +102,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &LsSvmParams) -> Result<TrainResult> {
         Some(cfg) => build_operator(&kind, ds, threads, Some(cfg))?,
     };
     let op = op.as_ref();
-    sw.lap("operator");
+    ph.lap("lssvm/operator");
 
     let reg = 1.0 / params.c;
     // η = A⁻¹ 1 — the bias-elimination solve, off the iteration budget
@@ -152,7 +151,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &LsSvmParams) -> Result<TrainResult> {
         }
     }
     let nu = x;
-    sw.lap("solve");
+    ph.lap("lssvm/solve");
 
     // b = (1ᵀν)/(1ᵀη), α = ν − b η (f64 sums for the ratio)
     let sum_nu: f64 = nu.iter().map(|&v| v as f64).sum();
@@ -164,7 +163,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &LsSvmParams) -> Result<TrainResult> {
     let sv: Vec<usize> = (0..n).filter(|&i| alpha[i].abs() > 1e-8).collect();
     let vectors = ds.gather_rows(&sv);
     let coef: Vec<f32> = sv.iter().map(|&i| alpha[i]).collect();
-    sw.lap("finalize");
+    ph.lap("lssvm/finalize");
 
     let model = SvmModel {
         kernel: kind,
@@ -178,11 +177,11 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &LsSvmParams) -> Result<TrainResult> {
         model,
         iterations: iters.max(eta.iters),
         objective: obj,
-        stopwatch: sw,
         notes: vec![],
     };
     meter.annotate(&mut res);
     if ctx.engine.is_xla() {
+        crate::trace::count(crate::trace::Counter::EngineFallbacks, 1);
         res.note("engine_fallback", "cpu (lssvm has no accelerator path)".to_string());
     }
     res.note("n_sv", sv.len().to_string());

@@ -33,10 +33,11 @@ pub use api::{
     TraceObserver, TrainCtx, TrainObserver, Trainer,
 };
 
-use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 
-/// Common training outcome.
+/// Common training outcome. Phase timings live in the process-wide
+/// trace layer ([`crate::trace`]) — wrap the call in a
+/// [`crate::trace::Session`] to collect them.
 #[derive(Debug)]
 pub struct TrainResult {
     pub model: SvmModel,
@@ -44,8 +45,6 @@ pub struct TrainResult {
     pub iterations: usize,
     /// Final objective value (solver-specific convention).
     pub objective: f64,
-    /// Phase timing breakdown.
-    pub stopwatch: Stopwatch,
     /// Solver-specific notes for reports (cache hit rate etc.).
     pub notes: Vec<(String, String)>,
 }

@@ -25,7 +25,6 @@ use crate::engine::Engine;
 use crate::kernel::operator::{build as build_operator, ExactDense, KernelOperator, LowRankConfig};
 use crate::kernel::KernelKind;
 use crate::linalg::{gemv, Matrix};
-use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 
 use super::api::{Family, SolverDriver, SolverSpec, TrainCtx, Trainer};
@@ -92,7 +91,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &MuParams) -> Result<TrainResult> {
     let ds = ctx.ds;
     let kind = ctx.kind;
     let threads = ctx.engine.threads();
-    let mut sw = Stopwatch::new();
+    let mut ph = crate::trace::phases();
     let n = ds.n;
     // wall clock starts before the O(n^2) kernel build — MU's dominant
     // cost — so wall budgets and IterEvent.elapsed cover all of it
@@ -152,7 +151,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &MuParams) -> Result<TrainResult> {
         }
     }
     drop(op);
-    sw.lap("kernel");
+    ph.lap("mu/kernel");
 
     let c = params.c;
     let mut a = vec![0.5f32 * c.min(1.0); n];
@@ -179,12 +178,12 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &MuParams) -> Result<TrainResult> {
             break;
         }
     }
-    sw.lap("iterate");
+    ph.lap("mu/iterate");
 
     let sv: Vec<usize> = (0..n).filter(|&i| a[i] > 1e-8).collect();
     let vectors = ds.gather_rows(&sv);
     let coef: Vec<f32> = sv.iter().map(|&i| a[i] * ds.y[i]).collect();
-    sw.lap("finalize");
+    ph.lap("mu/finalize");
 
     let model = SvmModel {
         kernel: kind,
@@ -198,11 +197,11 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &MuParams) -> Result<TrainResult> {
         model,
         iterations: meter.iterations(),
         objective: last_obj,
-        stopwatch: sw,
         notes: vec![],
     };
     meter.annotate(&mut res);
     if ctx.engine.is_xla() {
+        crate::trace::count(crate::trace::Counter::EngineFallbacks, 1);
         res.note("engine_fallback", "cpu (mu has no accelerator path)".to_string());
     }
     res.note("n_sv", sv.len().to_string());

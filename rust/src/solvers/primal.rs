@@ -21,7 +21,6 @@ use crate::engine::Engine;
 use crate::kernel::operator::{build as build_operator, ExactDense, KernelOperator, LowRankConfig};
 use crate::kernel::KernelKind;
 use crate::linalg::dot;
-use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 
 use super::api::{Family, SolverDriver, SolverSpec, TrainCtx, Trainer};
@@ -125,7 +124,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &PrimalParams) -> Result<TrainResult> {
     let ds = ctx.ds;
     let kind = ctx.kind;
     let threads = ctx.engine.threads();
-    let mut sw = Stopwatch::new();
+    let mut ph = crate::trace::phases();
     let n = ds.n;
     let c = params.c;
     // wall clock starts before the O(n^2) kernel build so wall budgets
@@ -138,7 +137,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &PrimalParams) -> Result<TrainResult> {
         Some(cfg) => build_operator(&kind, ds, threads, Some(cfg))?,
     };
     let op = op.as_ref();
-    sw.lap("kernel");
+    ph.lap("primal/kernel");
 
     let y = &ds.y;
     let mut beta = vec![0.0f32; n];
@@ -244,12 +243,12 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &PrimalParams) -> Result<TrainResult> {
             break;
         }
     }
-    sw.lap("newton");
+    ph.lap("primal/newton");
 
     let sv: Vec<usize> = (0..n).filter(|&i| beta[i].abs() > 1e-7).collect();
     let vectors = ds.gather_rows(&sv);
     let coef: Vec<f32> = sv.iter().map(|&i| beta[i]).collect();
-    sw.lap("finalize");
+    ph.lap("primal/finalize");
 
     let model = SvmModel {
         kernel: kind,
@@ -263,11 +262,11 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &PrimalParams) -> Result<TrainResult> {
         model,
         iterations: meter.iterations(),
         objective: state.loss,
-        stopwatch: sw,
         notes: vec![],
     };
     meter.annotate(&mut res);
     if ctx.engine.is_xla() {
+        crate::trace::count(crate::trace::Counter::EngineFallbacks, 1);
         res.note("engine_fallback", "cpu (full-kernel primal has no accelerator path)".to_string());
     }
     res.note("n_sv", sv.len().to_string());

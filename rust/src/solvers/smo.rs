@@ -34,7 +34,6 @@ use crate::data::Dataset;
 use crate::engine::Engine;
 use crate::kernel::cache::SharedRowCache;
 use crate::kernel::KernelKind;
-use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 use crate::pool::{self, SendPtr};
 
@@ -379,7 +378,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
     let ds = ctx.ds;
     let kind = ctx.kind;
     let engine = ctx.engine;
-    let mut sw = Stopwatch::new();
+    let mut ph = crate::trace::phases();
     let n = ds.n;
     let c = params.c as f64;
     // the meter's wall clock starts before any setup work so budgets
@@ -391,7 +390,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
     } else {
         engine.threads()
     };
-    sw.lap("setup");
+    ph.lap("smo/setup");
 
     let y: Vec<f64> = ds.y.iter().map(|&v| v as f64).collect();
     let mut alpha = vec![0.0f64; n];
@@ -420,7 +419,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
                 unshrunk_once = true;
                 reconstruct_gradient(&mut rows, ds, &active, &y, &alpha, &mut grad, scan_threads)?;
                 active = (0..n).collect();
-                sw.lap("reconstruct");
+                ph.lap("smo/reconstruct");
             }
             let before = active.len();
             active.retain(|&t| !be_shrunk(t, &y, &alpha, &grad, c, gmax1, gmax2));
@@ -432,7 +431,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
                 shrink_events += 1;
             }
             sel = None;
-            sw.lap("shrink");
+            ph.lap("smo/shrink");
         }
 
         // --- working-set selection (WSS2 of Fan, Chen & Lin) ---
@@ -446,18 +445,18 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
                 reconstruct_gradient(&mut rows, ds, &active, &y, &alpha, &mut grad, scan_threads)?;
                 active = (0..n).collect();
                 since_shrink = 0;
-                sw.lap("reconstruct");
+                ph.lap("smo/reconstruct");
                 continue;
             }
             break;
         }
         let ki = rows.get(ds, i_sel)?;
         let yi = y[i_sel];
-        sw.lap("kernel");
+        ph.lap("smo/kernel");
 
         let (gmax2, j_sel) =
             select_j(&active, &y, &alpha, &grad, &diag, c, gmax, i_sel, yi, &ki, scan_threads);
-        sw.lap("select");
+        ph.lap("smo/select");
         if gmax + gmax2 < params.eps || j_sel == usize::MAX {
             if active.len() < n {
                 // converged on the shrunk set only: restore and re-check
@@ -465,14 +464,14 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
                 active = (0..n).collect();
                 sel = None;
                 since_shrink = 0;
-                sw.lap("reconstruct");
+                ph.lap("smo/reconstruct");
                 continue;
             }
             break;
         }
 
         let kj = rows.get(ds, j_sel)?;
-        sw.lap("kernel");
+        ph.lap("smo/kernel");
         let yj = y[j_sel];
         let (i, j) = (i_sel, j_sel);
         let old_ai = alpha[i];
@@ -536,7 +535,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
         sel = Some(update_grad_select_i(
             &active, &y, &alpha, &mut grad, &ki, &kj, yi, yj, dai, daj, c, scan_threads,
         ));
-        sw.lap("update");
+        ph.lap("smo/update");
 
         since_shrink += 1;
         if !meter.tick(|| (dual_objective(&alpha, &grad), active.len())) {
@@ -547,7 +546,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
     // shrunk gradients are stale; the bias and objective need all of them
     if active.len() < n {
         reconstruct_gradient(&mut rows, ds, &active, &y, &alpha, &mut grad, scan_threads)?;
-        sw.lap("reconstruct");
+        ph.lap("smo/reconstruct");
     }
 
     // --- bias: average y_i G_i over free vectors (LibSVM calc_rho) ---
@@ -581,7 +580,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
     let sv_idx: Vec<usize> = (0..n).filter(|&t| alpha[t] > 0.0).collect();
     let vectors = ds.gather_rows(&sv_idx);
     let coef: Vec<f32> = sv_idx.iter().map(|&t| (alpha[t] * y[t]) as f32).collect();
-    sw.lap("finalize");
+    ph.lap("smo/finalize");
 
     let model = SvmModel {
         kernel: kind,
@@ -595,12 +594,16 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
         model,
         iterations: meter.iterations(),
         objective,
-        stopwatch: sw,
         notes: vec![],
     };
     meter.annotate(&mut res);
     res.note("n_sv", sv_idx.len().to_string());
     res.note("cache_hit_rate", format!("{:.3}", rows.hit_rate()));
+    res.note("cache_evicted_bytes", rows.cache_evicted_bytes().to_string());
+    res.note(
+        "cache_fill",
+        format!("{:.3}", rows.cache_used_bytes() as f64 / rows.cache_budget_bytes().max(1) as f64),
+    );
     res.note("rows_computed", rows.rows_computed.to_string());
     res.note("shrink_events", shrink_events.to_string());
     res.note("final_active", active.len().to_string());

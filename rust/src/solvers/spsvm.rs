@@ -33,7 +33,6 @@ use crate::data::Dataset;
 use crate::engine::Engine;
 use crate::kernel::operator::{build as build_operator, KernelOperator, LowRankConfig};
 use crate::kernel::KernelKind;
-use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 use crate::rng::Rng;
 
@@ -304,7 +303,7 @@ fn reoptimize(
     st: &mut SpState,
     engine: &Engine,
     params: &SpSvmParams,
-    sw: &mut Stopwatch,
+    ph: &mut crate::trace::PhaseGuard,
 ) -> Result<usize> {
     let b = st.b;
     let t = st.tiled.t;
@@ -329,7 +328,7 @@ fn reoptimize(
             crate::linalg::axpy(1.0, &stats.grad, &mut grad);
             crate::linalg::axpy(1.0, &stats.hess, &mut hess);
         }
-        sw.lap("reopt/stats");
+        ph.lap("spsvm/reopt/stats");
         // regularizer: g += K_JJ beta, H += K_JJ
         for i in 0..b {
             if st.bmask[i] == 0.0 {
@@ -357,7 +356,7 @@ fn reoptimize(
 
         let neg_grad: Vec<f32> = grad.iter().map(|v| -v).collect();
         let delta = engine.cg_solve(&hess, b, &neg_grad, &st.bmask, reg)?;
-        sw.lap("reopt/solve");
+        ph.lap("spsvm/reopt/solve");
 
         // line search on cached margin updates: f_new = f + step * K delta
         let mut fdelta: Vec<Vec<f32>> = Vec::with_capacity(st.tiled.n_tiles);
@@ -394,7 +393,7 @@ fn reoptimize(
             st.margins = saved_margins;
             step *= 0.5;
         }
-        sw.lap("reopt/linesearch");
+        ph.lap("spsvm/reopt/linesearch");
         if !accepted {
             break;
         }
@@ -445,7 +444,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SpSvmParams) -> Result<TrainResult> {
         KernelKind::Rbf { gamma } => gamma,
         other => anyhow::bail!("spsvm supports the RBF kernel only (got {})", other.name()),
     };
-    let mut sw = Stopwatch::new();
+    let mut ph = crate::trace::phases();
     // budget unit = selection+reopt rounds, counted by the meter; every
     // round grows the basis by at least one vector, so max_basis + 1
     // bounds the natural round count (the +1 keeps an uncapped run that
@@ -475,7 +474,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SpSvmParams) -> Result<TrainResult> {
     let t = st.tiled.t;
     let d_pad = st.tiled.d_pad;
     let n = ds.n;
-    sw.lap("setup");
+    ph.lap("spsvm/setup");
 
     refresh_margins(&mut st, engine)?; // beta = 0 -> margins 0
     let (_, mut last_err) = loss_and_err(&st, params.c);
@@ -545,7 +544,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SpSvmParams) -> Result<TrainResult> {
                 }
                 kc_tiles.push(kc);
             }
-            sw.lap("select/score");
+            ph.lap("spsvm/select/score");
             // Keerthi score: one-dim Newton decrease (2C g)^2 / (k_jj + 2C h)
             let c2 = 2.0 * params.c as f64;
             let mut scored: Vec<(f64, usize)> = (0..cand.len())
@@ -610,15 +609,15 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SpSvmParams) -> Result<TrainResult> {
             st.bmask[slot] = 1.0;
             st.basis_idx.push(i);
             added_this_phase += 1;
-            sw.lap("select/add");
+            ph.lap("spsvm/select/add");
         }
         if added_this_phase == 0 {
             break;
         }
         // ---- re-optimization stage ----
-        newton_total += reoptimize(&mut st, engine, params, &mut sw)?;
+        newton_total += reoptimize(&mut st, engine, params, &mut ph)?;
         refresh_margins(&mut st, engine)?;
-        sw.lap("reopt/margins");
+        ph.lap("spsvm/reopt/margins");
         let (loss, err) = loss_and_err(&st, params.c);
         if !meter.tick(|| (loss, st.n_basis())) {
             break;
@@ -640,7 +639,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SpSvmParams) -> Result<TrainResult> {
         vectors.extend_from_slice(&st.xb[slot * d_pad..slot * d_pad + ds.d]);
         coef.push(st.beta[slot]);
     }
-    sw.lap("finalize");
+    ph.lap("spsvm/finalize");
     let model = SvmModel {
         kernel: kind,
         vectors,
@@ -656,7 +655,6 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SpSvmParams) -> Result<TrainResult> {
         model,
         iterations: meter.iterations(),
         objective: final_loss,
-        stopwatch: sw,
         notes: vec![],
     };
     meter.annotate(&mut res);

@@ -19,7 +19,6 @@ use crate::data::Dataset;
 use crate::engine::Engine;
 use crate::kernel::cache::SharedRowCache;
 use crate::kernel::KernelKind;
-use crate::metrics::Stopwatch;
 use crate::model::SvmModel;
 use crate::pool::{self, SendPtr};
 
@@ -111,7 +110,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
     let kind = ctx.kind;
     let engine = ctx.engine;
     assert!(params.s >= 2);
-    let mut sw = Stopwatch::new();
+    let mut ph = crate::trace::phases();
     let n = ds.n;
     let c = params.c as f64;
     let s_max = params.s.min(n);
@@ -119,7 +118,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
     let mut meter = ctx.meter("wss", Budget::wss_default_iters(n));
     let mut rows = ctx.kernel_rows(params.cache_mb)?;
     let scan_threads = engine.threads();
-    sw.lap("setup");
+    ph.lap("wss/setup");
 
     let y: Vec<f64> = ds.y.iter().map(|&v| v as f64).collect();
     let diag: Vec<f64> = rows.diag.iter().map(|&v| v as f64).collect();
@@ -182,11 +181,11 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
                 ws.push(t);
             }
         }
-        sw.lap("select");
+        ph.lap("wss/select");
 
         // --- batched kernel rows for the working set ---
         let krows = rows.get_batch(ds, &ws)?;
-        sw.lap("kernel");
+        ph.lap("wss/kernel");
 
         // --- inner solver on the S-variable subproblem ---
         // local gradient over ws, Q_ws_ws from the fetched rows
@@ -299,7 +298,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
                 g_loc[p] += q(p, i) * dai + q(p, j) * daj;
             }
         }
-        sw.lap("inner");
+        ph.lap("wss/inner");
 
         // --- apply aggregate update to global state: one threaded sweep
         // over t accumulates every changed row's contribution ---
@@ -325,7 +324,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
                 unsafe { *grad_ptr.get().add(t) += y_ref[t] * acc };
             });
         }
-        sw.lap("update");
+        ph.lap("wss/update");
         let cont = meter.tick(|| {
             let nsv = alpha.iter().filter(|&&a| a > 0.0).count();
             (dual_objective(&alpha, &grad), nsv)
@@ -363,7 +362,7 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
     let sv_idx: Vec<usize> = (0..n).filter(|&t| alpha[t] > 0.0).collect();
     let vectors = ds.gather_rows(&sv_idx);
     let coef: Vec<f32> = sv_idx.iter().map(|&t| (alpha[t] * y[t]) as f32).collect();
-    sw.lap("finalize");
+    ph.lap("wss/finalize");
 
     let model = SvmModel {
         kernel: kind,
@@ -377,12 +376,16 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
         model,
         iterations: meter.iterations(),
         objective,
-        stopwatch: sw,
         notes: vec![],
     };
     meter.annotate(&mut res);
     res.note("n_sv", sv_idx.len().to_string());
     res.note("cache_hit_rate", format!("{:.3}", rows.hit_rate()));
+    res.note("cache_evicted_bytes", rows.cache_evicted_bytes().to_string());
+    res.note(
+        "cache_fill",
+        format!("{:.3}", rows.cache_used_bytes() as f64 / rows.cache_budget_bytes().max(1) as f64),
+    );
     res.note("rows_computed", rows.rows_computed.to_string());
     Ok(res)
 }

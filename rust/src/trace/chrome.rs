@@ -1,0 +1,136 @@
+//! Chrome trace-event export: load the file in `chrome://tracing` or
+//! <https://ui.perfetto.dev> to see the span forest on a timeline.
+//!
+//! The emitter walks each thread's nesting forest depth-first, writing
+//! duration events (`ph:"B"`/`ph:"E"`) per tid with microsecond
+//! timestamps. Because the forest is strictly nested and visited in
+//! start order, every thread's B/E stream is balanced and its
+//! timestamps are non-decreasing — the exact property
+//! `ci/check_trace_json.py` validates in CI.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use super::report::{Span, TraceReport};
+
+/// Serialize `report` as a Chrome trace-event JSON array.
+pub fn render(report: &TraceReport) -> String {
+    let mut out = String::from("[\n");
+    let mut first = true;
+    push_event(
+        &mut out,
+        &mut first,
+        "{\"ph\":\"M\",\"pid\":1,\"tid\":0,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"wu-svm\"}}",
+    );
+    for t in &report.threads {
+        push_event(
+            &mut out,
+            &mut first,
+            &format!(
+                "{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"trace-thread-{}\"}}}}",
+                t.tid, t.tid
+            ),
+        );
+        for root in &t.roots {
+            emit_span(&mut out, &mut first, t.tid, root);
+        }
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Render and write `report` to `path`.
+pub fn write_chrome_json(report: &TraceReport, path: &Path) -> std::io::Result<()> {
+    std::fs::write(path, render(report))
+}
+
+fn emit_span(out: &mut String, first: &mut bool, tid: u32, span: &Span) {
+    let mut b = String::new();
+    let _ = write!(
+        b,
+        "{{\"ph\":\"B\",\"pid\":1,\"tid\":{},\"ts\":{:.3},\"name\":\"{}\"}}",
+        tid,
+        span.t0_ns as f64 / 1e3,
+        escape(span.name)
+    );
+    push_event(out, first, &b);
+    for child in &span.children {
+        emit_span(out, first, tid, child);
+    }
+    let mut e = String::new();
+    let _ = write!(
+        e,
+        "{{\"ph\":\"E\",\"pid\":1,\"tid\":{},\"ts\":{:.3},\"name\":\"{}\"}}",
+        tid,
+        span.t1_ns as f64 / 1e3,
+        escape(span.name)
+    );
+    push_event(out, first, &e);
+}
+
+fn push_event(out: &mut String, first: &mut bool, event: &str) {
+    if !*first {
+        out.push_str(",\n");
+    }
+    *first = false;
+    out.push_str(event);
+}
+
+/// Span names are static identifiers, but escape the JSON specials
+/// anyway so a future name can't corrupt the file.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Event, NUM_COUNTERS};
+    use std::time::Duration;
+
+    #[test]
+    fn render_is_balanced_and_ordered() {
+        let events = vec![
+            Event { name: "outer", begin: true, ts_ns: 1_000 },
+            Event { name: "inner", begin: true, ts_ns: 2_000 },
+            Event { name: "inner", begin: false, ts_ns: 3_000 },
+            Event { name: "outer", begin: false, ts_ns: 4_000 },
+        ];
+        let report = TraceReport::build(
+            Duration::from_micros(4),
+            [0; NUM_COUNTERS],
+            vec![(3, events)],
+        );
+        let json = render(&report);
+        assert!(json.trim_start().starts_with('['));
+        assert!(json.trim_end().ends_with(']'));
+        assert_eq!(json.matches("\"ph\":\"B\"").count(), 2);
+        assert_eq!(json.matches("\"ph\":\"E\"").count(), 2);
+        // depth-first order: B outer, B inner, E inner, E outer
+        let b_outer = json.find("\"ts\":1.000,\"name\":\"outer\"").unwrap();
+        let b_inner = json.find("\"ts\":2.000,\"name\":\"inner\"").unwrap();
+        let e_inner = json.find("\"ts\":3.000,\"name\":\"inner\"").unwrap();
+        let e_outer = json.find("\"ts\":4.000,\"name\":\"outer\"").unwrap();
+        assert!(b_outer < b_inner && b_inner < e_inner && e_inner < e_outer);
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape("plain/name"), "plain/name");
+        assert_eq!(escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(escape("x\ny"), "x\\u000ay");
+    }
+}

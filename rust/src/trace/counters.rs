@@ -1,0 +1,142 @@
+//! Process-wide runtime counters: one relaxed atomic per [`Counter`].
+//!
+//! Counting is gated on [`crate::trace::enabled`], so a disabled process
+//! pays one predictable branch per site and no atomic traffic. Relaxed
+//! ordering is deliberate: each counter is an independent monotone tally
+//! (no cross-counter ordering is ever read back mid-run), and a
+//! [`crate::trace::Session`] reads them only after `finish()` has
+//! disabled recording and every worker has left the traced region — the
+//! session's own synchronization (pool joins, the drained buffers)
+//! orders the final loads after all increments. Within a traced run the
+//! *deterministic* counters (cache, kernel rows, flop/byte tallies) are
+//! exact and thread-count invariant; the pool counters describe
+//! scheduling and legitimately vary with the worker count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Everything the runtime tallies. Discriminants index [`COUNTERS`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// `SharedRowCache` lookups (hits + misses, cross-checked in CI).
+    CacheLookups = 0,
+    /// Lookups served from a cached row.
+    CacheHits = 1,
+    /// Lookups that had to compute the row.
+    CacheMisses = 2,
+    /// Bytes evicted to stay inside the cache byte budget.
+    CacheEvictedBytes = 3,
+    /// Kernel rows computed by the explicit solvers (cache misses that
+    /// reached the row builder, including batch fills).
+    KernelRowsComputed = 4,
+    /// Jobs submitted to the worker pool.
+    PoolJobs = 5,
+    /// Times an idle pool worker joined a running job as a helper.
+    PoolHelperJoins = 6,
+    /// Floating-point operations issued through the blocked GEMM/GEMV
+    /// entry points (2·m·n·k per call).
+    GemmFlops = 7,
+    /// Bytes the GEMM/GEMV entry points logically touch (A + B + C).
+    GemmBytes = 8,
+    /// Floating-point operations through the CSR SpMM (2·b per stored
+    /// nonzero).
+    SpmmFlops = 9,
+    /// Bytes the SpMM logically touches (CSR range + packed B + C).
+    SpmmBytes = 10,
+    /// Engine degradations: an implicit solver or the serve path fell
+    /// back from the requested engine to the cpu route.
+    EngineFallbacks = 11,
+    /// Trace events discarded because a thread buffer hit its cap.
+    EventsDropped = 12,
+}
+
+/// Number of [`Counter`] variants.
+pub const NUM_COUNTERS: usize = 13;
+
+/// Snapshot/report key for each counter, by discriminant.
+pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
+    "cache_lookups",
+    "cache_hits",
+    "cache_misses",
+    "cache_evicted_bytes",
+    "kernel_rows_computed",
+    "pool_jobs",
+    "pool_helper_joins",
+    "gemm_flops",
+    "gemm_bytes",
+    "spmm_flops",
+    "spmm_bytes",
+    "engine_fallbacks",
+    "events_dropped",
+];
+
+// `static [AtomicU64; N]` needs a const repeat seed; the interior
+// mutability is the point (same idiom as serve/metrics.rs).
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static COUNTERS: [AtomicU64; NUM_COUNTERS] = [ZERO; NUM_COUNTERS];
+
+/// Add `n` to `c` if tracing is enabled. The disabled path is a single
+/// relaxed load + branch — cheap enough for GEMM-entry call sites.
+#[inline]
+pub fn count(c: Counter, n: u64) {
+    if crate::trace::enabled() {
+        COUNTERS[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Current value of one counter (test/report helper).
+pub fn value(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+/// Zero every counter (session start).
+pub(crate) fn reset() {
+    for c in &COUNTERS {
+        c.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Read every counter, by discriminant (session finish).
+pub(crate) fn snapshot() -> [u64; NUM_COUNTERS] {
+    std::array::from_fn(|i| COUNTERS[i].load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_cover_every_variant() {
+        assert_eq!(COUNTER_NAMES.len(), NUM_COUNTERS);
+        // discriminants must be dense and in name order
+        for (i, c) in [
+            Counter::CacheLookups,
+            Counter::CacheHits,
+            Counter::CacheMisses,
+            Counter::CacheEvictedBytes,
+            Counter::KernelRowsComputed,
+            Counter::PoolJobs,
+            Counter::PoolHelperJoins,
+            Counter::GemmFlops,
+            Counter::GemmBytes,
+            Counter::SpmmFlops,
+            Counter::SpmmBytes,
+            Counter::EngineFallbacks,
+            Counter::EventsDropped,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            assert_eq!(c as usize, i);
+        }
+    }
+
+    #[test]
+    fn disabled_count_is_a_no_op() {
+        // unit tests never hold a Session here, so tracing is off and
+        // count() must not touch the atomics
+        let before = value(Counter::GemmFlops);
+        count(Counter::GemmFlops, 1_000);
+        assert_eq!(value(Counter::GemmFlops), before);
+    }
+}

@@ -1,0 +1,316 @@
+//! Unified tracing: scoped spans, phase laps, and runtime counters.
+//!
+//! The paper's explicit-vs-implicit argument is an argument about
+//! *where wall-time goes* (WSS scans vs gradient updates vs big GEMMs),
+//! so every layer of this crate reports into one process-wide trace:
+//! solvers emit phase laps ([`phases`]), operators/serve emit RAII
+//! spans ([`span`]), and the pool/cache/GEMM/SpMM feed the relaxed
+//! counter registry ([`counters`]). A [`Session`] brackets one traced
+//! workload and drains everything into a [`TraceReport`] — the human
+//! `--profile` table, the Chrome-trace `--trace-json` export
+//! ([`chrome`]), and the `counters` section of BENCH_*.json records all
+//! render from it.
+//!
+//! Contracts (property-tested in `rust/tests/trace_props.rs`):
+//!
+//! * **Disabled = one branch.** Every instrumentation site guards on
+//!   [`enabled`] — a single relaxed `AtomicBool` load. No session, no
+//!   atomics, no clock reads, no allocation.
+//! * **Observation doesn't perturb.** Recording only appends to
+//!   per-thread buffers and bumps counters; no traced code path makes a
+//!   different decision because tracing is on. Traced runs are
+//!   bit-identical to untraced runs.
+//! * **Sessions serialize.** The registries are process-global, so
+//!   [`Session::start`] holds a process-wide lock until `finish()`;
+//!   concurrent would-be sessions queue instead of mixing events.
+//!   `WU_SVM_TRACE=0` is the kill switch: sessions become inert and
+//!   the process stays on the disabled path.
+
+pub mod chrome;
+pub mod counters;
+pub mod report;
+
+pub use counters::{count, Counter, COUNTER_NAMES, NUM_COUNTERS};
+pub use report::{PhaseRow, Span, ThreadTrace, TraceReport};
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// The one global switch every instrumentation site branches on.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is a trace session recording right now?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Per-thread buffers stop growing past this many events; overflow is
+/// tallied in [`Counter::EventsDropped`] instead of reallocating forever.
+const MAX_EVENTS_PER_THREAD: usize = 1 << 20;
+
+/// One raw begin/end record. Per-thread *push order* is always balanced
+/// (span guards push B before E, laps push adjacent B/E pairs), which is
+/// what [`report`] pairs on — timestamps only order the nesting forest.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub name: &'static str,
+    pub begin: bool,
+    pub ts_ns: u64,
+}
+
+/// A thread's event buffer. Only the owning thread locks it on the hot
+/// path (uncontended); the session drains it at start/finish.
+struct ThreadBuf {
+    tid: u32,
+    events: Mutex<Vec<Event>>,
+}
+
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+static REGISTRY: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL: Arc<ThreadBuf> = register_thread();
+}
+
+fn register_thread() -> Arc<ThreadBuf> {
+    let buf = Arc::new(ThreadBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        events: Mutex::new(Vec::new()),
+    });
+    REGISTRY
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .push(buf.clone());
+    buf
+}
+
+/// Monotonic nanoseconds since the process's first trace timestamp.
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+#[inline]
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Append one event to this thread's buffer (tracing already checked).
+fn push(ev: Event) {
+    LOCAL.with(|buf| {
+        let mut events = buf.events.lock().unwrap_or_else(|p| p.into_inner());
+        if events.len() >= MAX_EVENTS_PER_THREAD {
+            counters::count(Counter::EventsDropped, 1);
+            return;
+        }
+        events.push(ev);
+    });
+}
+
+/// Append a retroactive begin/end pair in one lock acquisition, so the
+/// pair stays adjacent in push order.
+fn push_pair(name: &'static str, t0_ns: u64, t1_ns: u64) {
+    LOCAL.with(|buf| {
+        let mut events = buf.events.lock().unwrap_or_else(|p| p.into_inner());
+        if events.len() + 2 > MAX_EVENTS_PER_THREAD {
+            counters::count(Counter::EventsDropped, 2);
+            return;
+        }
+        events.push(Event { name, begin: true, ts_ns: t0_ns });
+        events.push(Event { name, begin: false, ts_ns: t1_ns });
+    });
+}
+
+/// Open a named RAII span on the current thread; the span closes when
+/// the guard drops. Free when tracing is off.
+#[must_use = "the span ends when the guard drops"]
+pub fn span(name: &'static str) -> SpanGuard {
+    let armed = enabled();
+    if armed {
+        push(Event { name, begin: true, ts_ns: now_ns() });
+    }
+    SpanGuard { name, armed }
+}
+
+/// Guard returned by [`span`]. Records the matching end event on drop.
+pub struct SpanGuard {
+    name: &'static str,
+    armed: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        // both checks: never emit an E without its B (armed), and never
+        // write into a buffer after the session disabled recording
+        if self.armed && enabled() {
+            push(Event { name: self.name, begin: false, ts_ns: now_ns() });
+        }
+    }
+}
+
+/// Sequential phase timing, drop-in for the old `Stopwatch::lap` style:
+/// each [`PhaseGuard::lap`] closes the interval since the previous
+/// boundary under the given name (retroactive begin/end pair).
+pub fn phases() -> PhaseGuard {
+    PhaseGuard { last_ns: if enabled() { now_ns() } else { 0 } }
+}
+
+/// Guard returned by [`phases`].
+pub struct PhaseGuard {
+    last_ns: u64,
+}
+
+impl PhaseGuard {
+    /// Close the phase that just ran as `name`; the next phase starts now.
+    #[inline]
+    pub fn lap(&mut self, name: &'static str) {
+        if enabled() {
+            let now = now_ns();
+            push_pair(name, self.last_ns.min(now), now);
+            self.last_ns = now;
+        }
+    }
+}
+
+/// Process-wide serialization of sessions (the buffers and counters are
+/// global). Held from [`Session::start`] until `finish()`/drop.
+static SESSION_LOCK: Mutex<()> = Mutex::new(());
+
+/// One traced workload: `start()` → run the code under test →
+/// `finish()` → [`TraceReport`]. Inert (records nothing, holds no lock)
+/// when `WU_SVM_TRACE=0`.
+pub struct Session {
+    active: bool,
+    started: Option<Instant>,
+    _guard: Option<MutexGuard<'static, ()>>,
+}
+
+impl Session {
+    /// Begin recording: zero the counters, clear every thread buffer,
+    /// flip the global switch. Blocks until any other session finishes.
+    pub fn start() -> Session {
+        let killed = std::env::var("WU_SVM_TRACE").map(|v| v == "0").unwrap_or(false);
+        if killed {
+            return Session { active: false, started: None, _guard: None };
+        }
+        let guard = SESSION_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        counters::reset();
+        for buf in REGISTRY.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+            buf.events.lock().unwrap_or_else(|p| p.into_inner()).clear();
+        }
+        ENABLED.store(true, Ordering::SeqCst);
+        Session { active: true, started: Some(Instant::now()), _guard: Some(guard) }
+    }
+
+    /// Did this session actually record (false under `WU_SVM_TRACE=0`)?
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Stop recording and drain everything into a [`TraceReport`].
+    pub fn finish(mut self) -> TraceReport {
+        if !self.active {
+            return TraceReport::empty();
+        }
+        ENABLED.store(false, Ordering::SeqCst);
+        self.active = false;
+        let wall = self.started.take().map(|t| t.elapsed()).unwrap_or_default();
+        let counters = counters::snapshot();
+        let mut raw: Vec<(u32, Vec<Event>)> = Vec::new();
+        for buf in REGISTRY.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+            let mut events = buf.events.lock().unwrap_or_else(|p| p.into_inner());
+            if !events.is_empty() {
+                raw.push((buf.tid, std::mem::take(&mut *events)));
+            }
+        }
+        raw.sort_by_key(|(tid, _)| *tid);
+        TraceReport::build(wall, counters, raw)
+        // the session lock releases when `_guard` drops here
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // safety net: a session abandoned without finish() (e.g. a panic
+        // in the traced workload) must not leave recording enabled
+        if self.active {
+            ENABLED.store(false, Ordering::SeqCst);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Sessions serialize on SESSION_LOCK, so these tests are safe under
+    // the parallel test harness; the kill-switch test lives in
+    // rust/tests/trace_props.rs (env vars are process-global).
+
+    #[test]
+    fn disabled_records_nothing() {
+        // hold the session lock so no concurrently running test can have
+        // tracing enabled while this one asserts the disabled path
+        let _bar = SESSION_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        assert!(!enabled());
+        {
+            let _s = span("never");
+            let mut ph = phases();
+            ph.lap("never");
+        }
+        let snapshot = LOCAL.with(|b| b.events.lock().unwrap().len());
+        assert_eq!(snapshot, 0);
+    }
+
+    #[test]
+    fn session_captures_spans_and_laps() {
+        let session = Session::start();
+        if !session.is_active() {
+            return; // WU_SVM_TRACE=0 in the environment
+        }
+        {
+            let _root = span("root");
+            let _inner = span("inner");
+        }
+        let mut ph = phases();
+        std::hint::black_box(0u64);
+        ph.lap("phase-a");
+        count(Counter::CacheHits, 3);
+        let report = session.finish();
+        assert!(!enabled());
+        assert_eq!(report.counter(Counter::CacheHits), 3);
+        let names: Vec<&str> = report.phase_rows().iter().map(|r| r.name).collect();
+        assert!(names.contains(&"root"), "{names:?}");
+        assert!(names.contains(&"phase-a"), "{names:?}");
+        // `inner` nests under `root` in the forest
+        let this_thread: Vec<&ThreadTrace> = report
+            .threads
+            .iter()
+            .filter(|t| t.roots.iter().any(|s| s.name == "root"))
+            .collect();
+        assert_eq!(this_thread.len(), 1);
+        let root = this_thread[0].roots.iter().find(|s| s.name == "root").unwrap();
+        assert_eq!(root.children.len(), 1);
+        assert_eq!(root.children[0].name, "inner");
+        assert!(root.t0_ns <= root.children[0].t0_ns);
+        assert!(root.children[0].t1_ns <= root.t1_ns);
+    }
+
+    #[test]
+    fn sessions_reset_counters_and_buffers() {
+        let s1 = Session::start();
+        if !s1.is_active() {
+            return;
+        }
+        count(Counter::PoolJobs, 7);
+        let _ = span("left-over");
+        let r1 = s1.finish();
+        assert_eq!(r1.counter(Counter::PoolJobs), 7);
+        let s2 = Session::start();
+        let r2 = s2.finish();
+        assert_eq!(r2.counter(Counter::PoolJobs), 0);
+        assert!(r2.threads.is_empty(), "second session must start clean");
+    }
+}

@@ -1,0 +1,383 @@
+//! Drained trace data: the span forest per thread, the counter
+//! snapshot, and the renderers (`--profile` table, counters JSON).
+
+use std::time::Duration;
+
+use super::counters::{Counter, COUNTER_NAMES, NUM_COUNTERS};
+use super::Event;
+
+/// One completed span, nested by time containment.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: &'static str,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    pub children: Vec<Span>,
+}
+
+impl Span {
+    pub fn duration_ns(&self) -> u64 {
+        self.t1_ns.saturating_sub(self.t0_ns)
+    }
+
+    /// Duration minus the time spent inside child spans.
+    pub fn self_ns(&self) -> u64 {
+        let inner: u64 = self.children.iter().map(Span::duration_ns).sum();
+        self.duration_ns().saturating_sub(inner)
+    }
+}
+
+/// Every root span recorded by one thread.
+#[derive(Debug, Clone)]
+pub struct ThreadTrace {
+    pub tid: u32,
+    pub roots: Vec<Span>,
+}
+
+/// Aggregated wall time for one span name across the whole trace.
+#[derive(Debug, Clone)]
+pub struct PhaseRow {
+    pub name: &'static str,
+    /// Summed span durations (children included).
+    pub total_ns: u64,
+    /// Summed self time (children excluded) — what the phase itself cost.
+    pub self_ns: u64,
+    pub count: u64,
+}
+
+/// Everything a finished [`super::Session`] observed.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    /// Wall clock of the session, start() to finish().
+    pub wall: Duration,
+    counters: [u64; NUM_COUNTERS],
+    pub threads: Vec<ThreadTrace>,
+}
+
+impl TraceReport {
+    pub(super) fn empty() -> TraceReport {
+        TraceReport { wall: Duration::ZERO, counters: [0; NUM_COUNTERS], threads: Vec::new() }
+    }
+
+    /// Pair each thread's raw events and nest them into a forest.
+    pub(super) fn build(
+        wall: Duration,
+        counters: [u64; NUM_COUNTERS],
+        raw: Vec<(u32, Vec<Event>)>,
+    ) -> TraceReport {
+        let threads = raw
+            .into_iter()
+            .map(|(tid, events)| ThreadTrace { tid, roots: nest(pair(&events)) })
+            .collect();
+        TraceReport { wall, counters, threads }
+    }
+
+    /// Final value of one runtime counter.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    /// The raw counter snapshot, indexed like [`COUNTER_NAMES`].
+    pub fn counters(&self) -> &[u64; NUM_COUNTERS] {
+        &self.counters
+    }
+
+    /// Cache hit rate over the session, if any lookups happened.
+    pub fn cache_hit_rate(&self) -> Option<f64> {
+        let lookups = self.counter(Counter::CacheLookups);
+        (lookups > 0).then(|| self.counter(Counter::CacheHits) as f64 / lookups as f64)
+    }
+
+    /// Effective GFLOP/s over the session wall (GEMM + SpMM tallies).
+    pub fn gflops(&self) -> f64 {
+        let flops = self.counter(Counter::GemmFlops) + self.counter(Counter::SpmmFlops);
+        flops as f64 / self.wall.as_secs_f64().max(1e-12) / 1e9
+    }
+
+    /// Per-name aggregation over every span in the trace, widest self
+    /// time first.
+    pub fn phase_rows(&self) -> Vec<PhaseRow> {
+        let mut rows: Vec<PhaseRow> = Vec::new();
+        fn walk(spans: &[Span], rows: &mut Vec<PhaseRow>) {
+            for s in spans {
+                match rows.iter_mut().find(|r| r.name == s.name) {
+                    Some(r) => {
+                        r.total_ns += s.duration_ns();
+                        r.self_ns += s.self_ns();
+                        r.count += 1;
+                    }
+                    None => rows.push(PhaseRow {
+                        name: s.name,
+                        total_ns: s.duration_ns(),
+                        self_ns: s.self_ns(),
+                        count: 1,
+                    }),
+                }
+                walk(&s.children, rows);
+            }
+        }
+        for t in &self.threads {
+            walk(&t.roots, &mut rows);
+        }
+        rows.sort_by(|a, b| b.self_ns.cmp(&a.self_ns).then(a.name.cmp(b.name)));
+        rows
+    }
+
+    /// Fraction of the session wall covered by root spans (max over
+    /// threads — the primary thread's top-level phases should tile the
+    /// traced workload).
+    pub fn coverage(&self) -> f64 {
+        let wall_ns = self.wall.as_nanos().max(1) as u64;
+        self.threads
+            .iter()
+            .map(|t| {
+                let ns: u64 = t.roots.iter().map(Span::duration_ns).sum();
+                ns as f64 / wall_ns as f64
+            })
+            .fold(0.0, f64::max)
+            .min(1.0)
+    }
+
+    /// The human `--profile` table: per-phase wall breakdown, then the
+    /// counter digest (cache hit rate, flop throughput, pool activity).
+    pub fn render_profile(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let wall_s = self.wall.as_secs_f64();
+        let _ = writeln!(
+            out,
+            "-- profile: wall {:.3}s, {} thread(s) recorded, coverage {:.0}%",
+            wall_s,
+            self.threads.len(),
+            self.coverage() * 100.0
+        );
+        let rows = self.phase_rows();
+        if rows.is_empty() {
+            let _ = writeln!(out, "   (no spans recorded)");
+        } else {
+            let _ = writeln!(
+                out,
+                "   {:<26} {:>10} {:>10} {:>7} {:>7}",
+                "phase", "self", "total", "self%", "calls"
+            );
+            let wall_ns = self.wall.as_nanos().max(1) as f64;
+            for r in &rows {
+                let _ = writeln!(
+                    out,
+                    "   {:<26} {:>10} {:>10} {:>6.1}% {:>7}",
+                    r.name,
+                    fmt_ns(r.self_ns),
+                    fmt_ns(r.total_ns),
+                    r.self_ns as f64 / wall_ns * 100.0,
+                    r.count
+                );
+            }
+        }
+        match self.cache_hit_rate() {
+            Some(rate) => {
+                let _ = writeln!(
+                    out,
+                    "   cache: {:.1}% hit rate ({} lookups, {} rows computed, {} evicted)",
+                    rate * 100.0,
+                    self.counter(Counter::CacheLookups),
+                    self.counter(Counter::KernelRowsComputed),
+                    fmt_bytes(self.counter(Counter::CacheEvictedBytes)),
+                );
+            }
+            None => {
+                let _ = writeln!(out, "   cache: no lookups (implicit path or no shared cache)");
+            }
+        }
+        let _ = writeln!(
+            out,
+            "   compute: {:.2} GFLOP/s effective ({} gemm + {} spmm flops, {} backend)",
+            self.gflops(),
+            self.counter(Counter::GemmFlops),
+            self.counter(Counter::SpmmFlops),
+            crate::linalg::simd::active().name(),
+        );
+        let _ = writeln!(
+            out,
+            "   pool: {} jobs, {} helper joins; engine fallbacks: {}; events dropped: {}",
+            self.counter(Counter::PoolJobs),
+            self.counter(Counter::PoolHelperJoins),
+            self.counter(Counter::EngineFallbacks),
+            self.counter(Counter::EventsDropped),
+        );
+        out
+    }
+
+    /// The `counters` object embedded in BENCH_*.json records (validated
+    /// by `ci/check_bench_json.py`: hits + misses must equal lookups).
+    pub fn counters_json(&self) -> String {
+        let fields: Vec<String> = COUNTER_NAMES
+            .iter()
+            .zip(self.counters.iter())
+            .map(|(name, v)| format!("\"{name}\": {v}"))
+            .collect();
+        format!("{{{}}}", fields.join(", "))
+    }
+}
+
+/// Pair raw events into flat `(name, t0, t1)` spans by *push order*: a
+/// begin opens, the next end closes the innermost open span. Push order
+/// is balanced by construction (guards, adjacent lap pairs); leftovers
+/// from a workload that outlived the session are closed at the last
+/// timestamp seen so the report stays well-formed.
+fn pair(events: &[Event]) -> Vec<Span> {
+    let mut open: Vec<(&'static str, u64)> = Vec::new();
+    let mut spans: Vec<Span> = Vec::new();
+    let mut last_ts = 0u64;
+    for ev in events {
+        last_ts = last_ts.max(ev.ts_ns);
+        if ev.begin {
+            open.push((ev.name, ev.ts_ns));
+        } else if let Some((name, t0)) = open.pop() {
+            spans.push(Span { name, t0_ns: t0, t1_ns: ev.ts_ns.max(t0), children: Vec::new() });
+        }
+        // an end without a begin means the begin was dropped at the
+        // buffer cap — skip it rather than inventing a span
+    }
+    for (name, t0) in open.into_iter().rev() {
+        spans.push(Span { name, t0_ns: t0, t1_ns: last_ts.max(t0), children: Vec::new() });
+    }
+    spans
+}
+
+/// Nest flat spans into a containment forest. Sorting by (start asc,
+/// end desc) visits every parent before its children, so a simple stack
+/// walk rebuilds the hierarchy; Chrome B/E export then emits it
+/// depth-first with non-decreasing timestamps.
+fn nest(mut flat: Vec<Span>) -> Vec<Span> {
+    flat.sort_by(|a, b| a.t0_ns.cmp(&b.t0_ns).then(b.t1_ns.cmp(&a.t1_ns)));
+    let mut roots: Vec<Span> = Vec::new();
+    // stack of open ancestors; the top owns whatever comes next inside it
+    let mut stack: Vec<Span> = Vec::new();
+    for mut s in flat {
+        while let Some(top) = stack.last() {
+            if s.t0_ns >= top.t1_ns {
+                let done = stack.pop().unwrap();
+                attach(&mut stack, &mut roots, done);
+            } else {
+                // retroactive lap pairs can graze an open RAII span;
+                // clamp so the forest stays strictly nested
+                if s.t1_ns > top.t1_ns {
+                    s.t1_ns = top.t1_ns;
+                }
+                break;
+            }
+        }
+        stack.push(s);
+    }
+    while let Some(done) = stack.pop() {
+        attach(&mut stack, &mut roots, done);
+    }
+    roots
+}
+
+fn attach(stack: &mut [Span], roots: &mut Vec<Span>, done: Span) {
+    match stack.last_mut() {
+        Some(parent) => parent.children.push(done),
+        None => roots.push(done),
+    }
+}
+
+fn fmt_ns(ns: u64) -> String {
+    let s = ns as f64 / 1e9;
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+fn fmt_bytes(b: u64) -> String {
+    if b < 1024 {
+        format!("{b}B")
+    } else if b < 1024 * 1024 {
+        format!("{:.1}KiB", b as f64 / 1024.0)
+    } else {
+        format!("{:.1}MiB", b as f64 / (1024.0 * 1024.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, begin: bool, ts: u64) -> Event {
+        Event { name, begin, ts_ns: ts }
+    }
+
+    #[test]
+    fn pairing_follows_push_order() {
+        // span(a){ span(b){} } then a lap pair (c) — push order a,b,b,a,c,c
+        let events = vec![
+            ev("a", true, 0),
+            ev("b", true, 10),
+            ev("b", false, 20),
+            ev("a", false, 30),
+            ev("c", true, 30),
+            ev("c", false, 40),
+        ];
+        let roots = nest(pair(&events));
+        assert_eq!(roots.len(), 2);
+        assert_eq!(roots[0].name, "a");
+        assert_eq!(roots[0].children.len(), 1);
+        assert_eq!(roots[0].children[0].name, "b");
+        assert_eq!(roots[1].name, "c");
+    }
+
+    #[test]
+    fn retroactive_pairs_nest_under_covering_interval() {
+        // an operator span pushed first, then the phase lap that covers
+        // it temporally: the forest must put the span inside the phase
+        let events = vec![
+            ev("operator/icf", true, 10),
+            ev("operator/icf", false, 40),
+            ev("solver/setup", true, 0),
+            ev("solver/setup", false, 50),
+        ];
+        let roots = nest(pair(&events));
+        assert_eq!(roots.len(), 1);
+        assert_eq!(roots[0].name, "solver/setup");
+        assert_eq!(roots[0].children.len(), 1);
+        assert_eq!(roots[0].children[0].name, "operator/icf");
+        assert_eq!(roots[0].self_ns(), 20);
+    }
+
+    #[test]
+    fn unmatched_begin_is_closed_at_last_ts() {
+        let events = vec![ev("a", true, 5), ev("b", true, 10), ev("b", false, 20)];
+        let spans = pair(&events);
+        assert_eq!(spans.len(), 2);
+        let a = spans.iter().find(|s| s.name == "a").unwrap();
+        assert_eq!((a.t0_ns, a.t1_ns), (5, 20));
+    }
+
+    #[test]
+    fn phase_rows_aggregate_by_name() {
+        let events = vec![
+            ev("k", true, 0),
+            ev("k", false, 10),
+            ev("k", true, 10),
+            ev("k", false, 30),
+            ev("u", true, 30),
+            ev("u", false, 35),
+        ];
+        let report =
+            TraceReport::build(Duration::from_nanos(35), [0; NUM_COUNTERS], vec![(0, events)]);
+        let rows = report.phase_rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].name, "k");
+        assert_eq!(rows[0].total_ns, 30);
+        assert_eq!(rows[0].count, 2);
+        assert_eq!(rows[1].name, "u");
+        assert!(report.coverage() > 0.99);
+        let json = report.counters_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"cache_lookups\": 0"));
+    }
+}

@@ -1,0 +1,224 @@
+//! Property tests for the unified trace layer (`wu_svm::trace`):
+//!
+//! * **Observation doesn't perturb.** For every solver, a run traced
+//!   under a `Session` is bit-identical (model, objective, iterations)
+//!   to the same run untraced.
+//! * **Counters are consistent.** `cache_hits + cache_misses ==
+//!   cache_lookups`, no events are dropped at test scale, and the span
+//!   forest is well-nested (every child inside its parent).
+//! * **Deterministic counters are thread-count invariant.** The cache /
+//!   kernel-row / flop tallies match across cpu-par worker counts; only
+//!   the pool scheduling counters may differ.
+//! * **`WU_SVM_TRACE=0` is a kill switch.** Sessions become inert and
+//!   nothing is recorded.
+//!
+//! Sessions serialize on a process-global lock, but the kill-switch test
+//! mutates the environment, so every test here takes a file-local lock
+//! to keep env reads and sessions from interleaving.
+
+use std::sync::Mutex;
+
+use wu_svm::data::Dataset;
+use wu_svm::engine::Engine;
+use wu_svm::kernel::operator::LowRankConfig;
+use wu_svm::kernel::KernelKind;
+use wu_svm::solvers::lssvm::LsSvmParams;
+use wu_svm::solvers::mu::MuParams;
+use wu_svm::solvers::primal::PrimalParams;
+use wu_svm::solvers::smo::SmoParams;
+use wu_svm::solvers::spsvm::SpSvmParams;
+use wu_svm::solvers::wss::WssParams;
+use wu_svm::solvers::{SolverSpec, TrainResult, Trainer};
+use wu_svm::trace::{self, Counter, Span, TraceReport, COUNTER_NAMES};
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn xor_dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = wu_svm::rng::Rng::new(seed);
+    let mut x = Vec::with_capacity(n * 2);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let a = rng.uniform_f32();
+        let b = rng.uniform_f32();
+        x.push(a);
+        x.push(b);
+        y.push(if (a > 0.5) ^ (b > 0.5) { 1.0 } else { -1.0 });
+    }
+    Dataset::new_binary("xor", 2, x, y)
+}
+
+fn solver_cases() -> Vec<(SolverSpec, &'static str)> {
+    vec![
+        (SolverSpec::Smo(SmoParams { c: 10.0, ..Default::default() }), "train/smo"),
+        (SolverSpec::Wss(WssParams { c: 10.0, ..Default::default() }), "train/wss"),
+        (SolverSpec::Mu(MuParams { c: 1.0, max_iters: 200, ..Default::default() }), "train/mu"),
+        (SolverSpec::Primal(PrimalParams { c: 5.0, ..Default::default() }), "train/primal"),
+        (
+            SolverSpec::SpSvm(SpSvmParams { c: 10.0, max_basis: 31, ..Default::default() }),
+            "train/spsvm",
+        ),
+        (
+            SolverSpec::LsSvm(LsSvmParams {
+                c: 1.0,
+                lowrank: Some(LowRankConfig::icf(32)),
+                ..Default::default()
+            }),
+            "train/lssvm",
+        ),
+    ]
+}
+
+fn train(spec: SolverSpec, threads: usize, ds: &Dataset) -> TrainResult {
+    // always cpu-par so only the worker count varies, never the engine path
+    Trainer::new(spec)
+        .kernel(KernelKind::Rbf { gamma: 8.0 })
+        .engine(Engine::cpu_par(threads))
+        .train(ds)
+        .unwrap()
+}
+
+fn assert_bit_identical(a: &TrainResult, b: &TrainResult, who: &str) {
+    assert_eq!(a.iterations, b.iterations, "{who}: iteration counts differ");
+    assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{who}: objectives differ");
+    assert_eq!(a.model.bias.to_bits(), b.model.bias.to_bits(), "{who}: biases differ");
+    assert_eq!(a.model.coef.len(), b.model.coef.len(), "{who}: coef counts differ");
+    for (i, (x, y)) in a.model.coef.iter().zip(&b.model.coef).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{who}: coef[{i}] differs");
+    }
+    assert_eq!(a.model.vectors.len(), b.model.vectors.len(), "{who}: vector counts differ");
+    for (i, (x, y)) in a.model.vectors.iter().zip(&b.model.vectors).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{who}: vectors[{i}] differs");
+    }
+}
+
+/// Every span closes after it opens and contains all of its children.
+fn assert_well_nested(spans: &[Span], lo: u64, hi: u64) {
+    for s in spans {
+        assert!(s.t0_ns <= s.t1_ns, "{}: t0 > t1", s.name);
+        assert!(lo <= s.t0_ns && s.t1_ns <= hi, "{}: escapes parent [{lo}, {hi}]", s.name);
+        assert_well_nested(&s.children, s.t0_ns, s.t1_ns);
+    }
+}
+
+fn span_names(spans: &[Span], out: &mut Vec<&'static str>) {
+    for s in spans {
+        out.push(s.name);
+        span_names(&s.children, out);
+    }
+}
+
+fn all_span_names(report: &TraceReport) -> Vec<&'static str> {
+    let mut names = Vec::new();
+    for t in &report.threads {
+        span_names(&t.roots, &mut names);
+    }
+    names
+}
+
+#[test]
+fn traced_run_is_bit_identical_to_untraced() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let ds = xor_dataset(250, 1);
+    for (spec, root) in solver_cases() {
+        let untraced = train(spec.clone(), 2, &ds);
+        let session = trace::Session::start();
+        assert!(session.is_active(), "tracing unexpectedly killed via env");
+        let traced = train(spec, 2, &ds);
+        let report = session.finish();
+        assert_bit_identical(&untraced, &traced, root);
+        let names = all_span_names(&report);
+        assert!(names.contains(&root), "missing root span {root} in {names:?}");
+    }
+}
+
+#[test]
+fn counters_are_consistent_and_report_is_well_nested() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let ds = xor_dataset(300, 7);
+    let session = trace::Session::start();
+    assert!(session.is_active());
+    let _ = train(SolverSpec::Smo(SmoParams { c: 10.0, ..Default::default() }), 2, &ds);
+    let report = session.finish();
+
+    // cache identity the CI gate also cross-checks on BENCH json
+    let lookups = report.counter(Counter::CacheLookups);
+    let hits = report.counter(Counter::CacheHits);
+    let misses = report.counter(Counter::CacheMisses);
+    assert!(lookups > 0, "smo never touched the row cache");
+    assert_eq!(hits + misses, lookups, "hits + misses != lookups");
+    assert!(report.counter(Counter::KernelRowsComputed) > 0);
+    assert_eq!(report.counter(Counter::EventsDropped), 0);
+    if let Some(rate) = report.cache_hit_rate() {
+        assert!((0.0..=1.0).contains(&rate));
+    }
+
+    // spans: balanced by construction (pairing never leaves an open
+    // begin once the session is drained), strictly nested by containment
+    assert!(!report.threads.is_empty(), "no thread recorded any spans");
+    for t in &report.threads {
+        assert_well_nested(&t.roots, 0, u64::MAX);
+    }
+    assert!(report.coverage() <= 1.0);
+    let names = all_span_names(&report);
+    assert!(names.contains(&"smo/kernel"), "missing solver phase laps: {names:?}");
+}
+
+#[test]
+fn deterministic_counters_are_thread_invariant() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let ds = xor_dataset(220, 13);
+    // pool scheduling legitimately varies with the worker count; the
+    // event-drop tally is a buffer property, everything else is exact
+    let scheduling = ["pool_jobs", "pool_helper_joins", "events_dropped"];
+    for (spec, root) in solver_cases() {
+        let mut baseline: Option<[u64; trace::NUM_COUNTERS]> = None;
+        for k in [1usize, 2, 8] {
+            let session = trace::Session::start();
+            assert!(session.is_active());
+            let _ = train(spec.clone(), k, &ds);
+            let report = session.finish();
+            let counters = *report.counters();
+            match &baseline {
+                None => baseline = Some(counters),
+                Some(base) => {
+                    for (i, name) in COUNTER_NAMES.iter().enumerate() {
+                        if scheduling.contains(name) {
+                            continue;
+                        }
+                        assert_eq!(
+                            base[i], counters[i],
+                            "{root}: counter {name} differs between k=1 and k={k}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn wu_svm_trace_0_is_a_kill_switch() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    std::env::set_var("WU_SVM_TRACE", "0");
+    let session = trace::Session::start();
+    assert!(!session.is_active(), "kill switch ignored");
+    assert!(!trace::enabled(), "kill-switch session enabled recording");
+    {
+        let _sp = trace::span("never");
+        trace::count(Counter::CacheHits, 99);
+    }
+    let report = session.finish();
+    std::env::remove_var("WU_SVM_TRACE");
+    assert!(report.threads.is_empty(), "inert session recorded spans");
+    assert_eq!(report.counter(Counter::CacheHits), 0);
+    assert_eq!(report.wall, std::time::Duration::ZERO);
+
+    // and the switch is re-read per session: tracing works again now
+    let session = trace::Session::start();
+    assert!(session.is_active());
+    {
+        let _sp = trace::span("alive");
+    }
+    let report = session.finish();
+    assert!(all_span_names(&report).contains(&"alive"));
+}
