@@ -1,5 +1,5 @@
 #!/bin/sh
-# CI entry point. Usage: ./ci.sh [tier1|benchcheck|benchsmoke|benchmeasure|tracesmoke|docs|lint|all]
+# CI entry point. Usage: ./ci.sh [tier1|benchcheck|benchsmoke|benchmeasure|tracesmoke|cascadesmoke|docs|lint|all]
 # tier1 is the repository's canonical verification (see ROADMAP.md).
 # benchcheck compiles the bench targets without running them.
 # benchsmoke validates the checked-in BENCH_*.json records against their
@@ -13,12 +13,17 @@
 # tracesmoke runs a seconds-sized traced training (--profile
 # --trace-json) and validates the emitted Chrome trace with
 # ci/check_trace_json.py, so the observability exporters stay honest.
+# cascadesmoke runs a seconds-sized 2-shard cascade training through the
+# CLI and checks the report carries the cascade notes (shard count and a
+# global-KKT verdict), so the sharded path executes end to end in CI.
 # docs builds the public API docs with warnings denied, so the rustdoc
 # surface (intra-doc links, examples) can't rot either.
 # lint (rustfmt + clippy -D warnings) is part of the blocking gate.
 set -eu
 
 mode="${1:-all}"
+# usage string kept in sync with the case arms below
+usage="usage: ./ci.sh [tier1|benchcheck|benchsmoke|benchmeasure|tracesmoke|cascadesmoke|docs|lint|all]"
 
 tier1() {
     cargo build --release
@@ -48,6 +53,21 @@ tracesmoke() {
     rm -f "$trace_out"
 }
 
+cascadesmoke() {
+    cargo build --release
+    out="$(BENCH_SMOKE=1 ./target/release/wu-svm train --dataset adult --scale 0.01 \
+        --solver smo --cascade-shards 2 --cascade-kkt-tol 0.01)"
+    echo "$out"
+    echo "$out" | grep -q "cascade_shards = 2" || {
+        echo "cascadesmoke: report is missing 'cascade_shards = 2'" >&2
+        exit 1
+    }
+    echo "$out" | grep -q "cascade_kkt = " || {
+        echo "cascadesmoke: report carries no global-KKT verdict" >&2
+        exit 1
+    }
+}
+
 docs() {
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 }
@@ -63,6 +83,7 @@ case "$mode" in
     benchsmoke) benchsmoke ;;
     benchmeasure) benchmeasure ;;
     tracesmoke) tracesmoke ;;
+    cascadesmoke) cascadesmoke ;;
     docs) docs ;;
     lint) lint ;;
     all)
@@ -72,11 +93,12 @@ case "$mode" in
         tier1
         benchsmoke
         tracesmoke
+        cascadesmoke
         docs
         lint
         ;;
     *)
-        echo "usage: ./ci.sh [tier1|benchcheck|benchsmoke|benchmeasure|tracesmoke|docs|lint|all]" >&2
+        echo "$usage" >&2
         exit 2
         ;;
 esac

@@ -45,6 +45,9 @@ COUNTER_NAMES = {
     "spmm_bytes",
     "engine_fallbacks",
     "events_dropped",
+    "cascade_shards_trained",
+    "cascade_svs_merged",
+    "cascade_kkt_violations",
 }
 
 # basename -> list of (dotted field path, floor, needs_simd_backend)

@@ -1,0 +1,149 @@
+//! Cascade sharded-training benchmarks: direct SMO versus the cascade
+//! meta-solver at increasing layer-0 shard counts, on one synthetic
+//! workload. The cascade trades a global KKT verification sweep (plus
+//! any feedback retrains) for embarrassingly parallel sub-trainings on
+//! n/S-row subproblems — the quadratic-solver term shrinks by ~S^2 per
+//! shard while the merge layers re-pay part of it on the SV union
+//! (rust/EXPERIMENTS.md §CASCADE). Emits `BENCH_cascade.json`.
+//!
+//! Run: `cargo bench --bench cascade [-- --n 12000 --d 32]`
+
+use wu_svm::bench_util::{bench, header, smoke, smoke_or};
+use wu_svm::cascade::CascadeParams;
+use wu_svm::config::Config;
+use wu_svm::data::synth::{generate, SynthSpec};
+use wu_svm::engine::Engine;
+use wu_svm::kernel::KernelKind;
+use wu_svm::pool;
+use wu_svm::solvers::smo::SmoParams;
+use wu_svm::solvers::{SolverSpec, Trainer};
+
+fn spec_for(shards: usize) -> SolverSpec {
+    let inner = SolverSpec::Smo(SmoParams { c: 10.0, ..Default::default() });
+    if shards <= 1 {
+        inner
+    } else {
+        SolverSpec::Cascade(CascadeParams {
+            shards,
+            inner: Box::new(inner),
+            ..Default::default()
+        })
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let cfg = Config::from_args(&args).unwrap();
+    let n = cfg.usize_or("n", smoke_or(600, 12_000)).unwrap();
+    let d = cfg.usize_or("d", 32).unwrap();
+    let threads = pool::default_threads();
+    let runs = smoke_or(1, 3);
+    let shard_counts = [1usize, 2, 4, 8];
+
+    let spec = SynthSpec {
+        d,
+        classes: 2,
+        clusters: 8,
+        sigma: 0.25,
+        flip: 0.02,
+        sparsity: 0.0,
+        pos_frac: 0.5,
+    };
+    let train = generate(&spec, n, 42, "cascade-bench-train");
+    let test = generate(&spec, (n / 4).max(100), 4242, "cascade-bench-test");
+    let kind = KernelKind::Rbf { gamma: 0.5 };
+    println!("workload: n={n} d={d} ({threads} threads)");
+
+    let trace_session = wu_svm::trace::Session::start();
+
+    header("smo direct vs cascade (S shards, hierarchical merge + KKT sweep)");
+    let mut times_ms = Vec::new();
+    let mut errs = Vec::new();
+    let mut svs = Vec::new();
+    let mut feedback = Vec::new();
+    for &s in &shard_counts {
+        let summary = bench(&format!("S={s} [{threads}t]"), 1, runs, || {
+            Trainer::new(spec_for(s))
+                .kernel(kind)
+                .engine(Engine::cpu_par(threads))
+                .train(&train)
+                .unwrap();
+        });
+        println!("{}", summary.row());
+        let r = Trainer::new(spec_for(s))
+            .kernel(kind)
+            .engine(Engine::cpu_par(threads))
+            .train(&train)
+            .unwrap();
+        let margins = r.model.decision_batch(&test, threads);
+        let wrong = margins
+            .iter()
+            .zip(&test.y)
+            .filter(|(m, y)| (**m > 0.0) != (**y > 0.0))
+            .count();
+        let err = wrong as f64 / test.n as f64;
+        let fb: usize = r
+            .notes
+            .iter()
+            .find(|(k, _)| k == "cascade_kkt_violations")
+            .and_then(|(_, v)| v.parse().ok())
+            .unwrap_or(0);
+        println!(
+            "  S={s}: test err {err:.4}  n_sv {}  kkt feedback rows {fb}",
+            r.model.coef.len()
+        );
+        times_ms.push(summary.median.as_secs_f64() * 1e3);
+        errs.push(err);
+        svs.push(r.model.coef.len());
+        feedback.push(fb);
+    }
+    let speedup_s4 = times_ms[0] / times_ms[2].max(1e-9);
+    println!("cascade S=4 vs direct: {speedup_s4:.2}x");
+
+    let counters = trace_session.finish().counters_json();
+    if smoke() {
+        println!("BENCH_SMOKE=1: skipping BENCH_cascade.json (not a measurement)");
+        return;
+    }
+    let list = |v: &[f64]| {
+        v.iter().map(|x| format!("{x:.4}")).collect::<Vec<_>>().join(", ")
+    };
+    let ilist = |v: &[usize]| {
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
+    };
+    // the embedded schema is required by ci/check_bench_json.py, which
+    // validates the checked-in copy of this file on every CI run
+    let schema = "\"schema\": {\n    \
+         \"workload\": \"n training rows, d features; test split is n/4 fresh rows\",\n    \
+         \"threads\": \"worker threads shared by every configuration\",\n    \
+         \"backend\": \"SIMD backend the measured process dispatched to (scalar | avx2+fma | neon)\",\n    \
+         \"shards\": \"layer-0 shard counts measured, in order (1 = direct smo, no cascade)\",\n    \
+         \"train_ms\": \"median end-to-end train wall time per shard count\",\n    \
+         \"test_err\": \"held-out error rate per shard count\",\n    \
+         \"n_sv\": \"support vectors in the final model per shard count\",\n    \
+         \"kkt_feedback_rows\": \"violators fed back by the global KKT sweep per shard count\",\n    \
+         \"speedup_s4\": \"train_ms[S=1] / train_ms[S=4]\",\n    \
+         \"counters\": \"trace-layer runtime counter snapshot over the bench (ci cross-checks the cache identity)\"\n  }";
+    let json = format!(
+        "{{\n  \"workload\": {{\"n\": {n}, \"d\": {d}}},\n  \
+         \"threads\": {threads},\n  \
+         \"backend\": \"{}\",\n  \
+         \"shards\": [{}],\n  \
+         \"train_ms\": [{}],\n  \
+         \"test_err\": [{}],\n  \
+         \"n_sv\": [{}],\n  \
+         \"kkt_feedback_rows\": [{}],\n  \
+         \"speedup_s4\": {speedup_s4:.3},\n  \
+         \"counters\": {counters},\n  {schema}\n}}\n",
+        wu_svm::linalg::simd::active().name(),
+        ilist(&shard_counts),
+        list(&times_ms),
+        list(&errs),
+        ilist(&svs),
+        ilist(&feedback),
+    );
+    match std::fs::write("BENCH_cascade.json", &json) {
+        Ok(()) => println!("wrote BENCH_cascade.json:\n{json}"),
+        Err(e) => eprintln!("could not write BENCH_cascade.json: {e}"),
+    }
+}

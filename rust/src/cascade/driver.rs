@@ -1,0 +1,468 @@
+//! The cascade meta-solver: [`CascadeParams`] implements
+//! [`SolverDriver`], so `SolverSpec::Cascade` runs through the same
+//! [`Trainer`] front door as every other solver.
+//!
+//! One training proceeds in three phases (see the module docs on
+//! [`crate::cascade`]):
+//!
+//! 1. **Layer 0** — [`partition`] the rows, fan the shard trainings
+//!    across the worker pool. Shard-level workers split the engine's
+//!    thread budget exactly like `OvoModel::train_with` splits it over
+//!    class pairs, and every sub-training shares one
+//!    [`SharedRowCache`] byte budget (unique group id per subproblem,
+//!    so views never alias).
+//! 2. **Merge layers** — groups of `merge_width` fits are merged
+//!    ([`merge::merge_group`]) and retrained warm-started until one
+//!    fit remains. A `layers` cap (or an expired wall budget)
+//!    collapses all remaining fits into a single final merge.
+//! 3. **KKT feedback** — up to `max_outer` global sweeps stream kernel
+//!    blocks through the [`KernelOperator`] built over the full
+//!    dataset, feed violating rows back into a warm-started retrain,
+//!    and stop as soon as a sweep finds none.
+//!
+//! Budget semantics: `max_iters` applies per sub-training (each
+//! subproblem is its own optimization); the wall clock is global — each
+//! sub-training receives only the time remaining until the cascade's
+//! deadline, and an expired deadline short-circuits the remaining
+//! layers (`capped = wall`). `target_objective` is not forwarded
+//! (sub-objectives are not comparable to the global one).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::Dataset;
+use crate::engine::Engine;
+use crate::kernel::cache::SharedRowCache;
+use crate::kernel::operator::{self, KernelOperator};
+use crate::pool;
+use crate::solvers::api::{Budget, Family, SolverDriver, SolverSpec, TrainCtx, Trainer};
+use crate::solvers::common::cache_shards;
+use crate::solvers::smo::SmoParams;
+use crate::solvers::TrainResult;
+use crate::trace::{self, Counter};
+
+use super::merge::{self, SubFit};
+use super::partition::{partition, PartitionStrategy};
+
+/// Hyperparameters of the cascade meta-solver. `inner` is the dual
+/// decomposition solver every subproblem runs (SMO or WSS — the
+/// cascade needs box-constrained duals to merge; implicit solvers are
+/// rejected at train time).
+#[derive(Debug, Clone)]
+pub struct CascadeParams {
+    /// Layer-0 shard count (1 delegates straight to `inner`).
+    pub shards: usize,
+    /// Merge-layer cap; `None` = auto (merge until one fit remains).
+    /// Reaching the cap collapses all remaining fits into one final
+    /// merge-all retrain.
+    pub layers: Option<usize>,
+    /// Fits merged per group per layer (>= 2).
+    pub merge_width: usize,
+    /// How rows are assigned to layer-0 shards.
+    pub partition: PartitionStrategy,
+    /// Seed for the seeded-shuffle partition.
+    pub seed: u64,
+    /// Cross-shard adaptive shrinking: drop a merge candidate when all
+    /// partner models give it margin `> 1 + slack`. `f64::INFINITY`
+    /// disables the filter.
+    pub slack: f64,
+    /// Tolerance of the global KKT verification sweep.
+    pub kkt_tol: f64,
+    /// Maximum KKT feedback rounds after the last merge layer.
+    pub max_outer: usize,
+    /// Byte budget (MB) of the shared kernel-row cache all concurrent
+    /// sub-trainings draw from.
+    pub cache_mb: usize,
+    /// The solver every subproblem runs.
+    pub inner: Box<SolverSpec>,
+}
+
+impl Default for CascadeParams {
+    fn default() -> Self {
+        CascadeParams {
+            shards: 4,
+            layers: None,
+            merge_width: 2,
+            partition: PartitionStrategy::SeededShuffle,
+            seed: 42,
+            slack: 1.0,
+            kkt_tol: 1e-3,
+            max_outer: 5,
+            cache_mb: 512,
+            inner: Box::new(SolverSpec::Smo(SmoParams::default())),
+        }
+    }
+}
+
+impl SolverDriver for CascadeParams {
+    fn name(&self) -> &str {
+        "cascade"
+    }
+
+    fn family(&self) -> Family {
+        self.inner.family()
+    }
+
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<TrainResult> {
+        train_ctx(ctx, self)
+    }
+}
+
+/// The inner solver's box constraint, doubling as the dual-solver
+/// check: only SMO and WSS expose the alphas merging needs.
+fn inner_c(spec: &SolverSpec) -> Result<f64> {
+    match spec {
+        SolverSpec::Smo(p) => Ok(p.c as f64),
+        SolverSpec::Wss(p) => Ok(p.c as f64),
+        SolverSpec::Cascade(_) => bail!("cascade cannot nest another cascade"),
+        other => bail!(
+            "cascade requires a dual decomposition inner solver (smo or wss), got '{}'",
+            other.name()
+        ),
+    }
+}
+
+fn single_class(ds: &Dataset, rows: &[usize]) -> bool {
+    let (mut pos, mut neg) = (false, false);
+    for &r in rows {
+        if ds.y[r] > 0.0 {
+            pos = true;
+        } else {
+            neg = true;
+        }
+        if pos && neg {
+            return false;
+        }
+    }
+    true
+}
+
+/// Everything a sub-training needs besides its row set.
+struct SubCfg<'a> {
+    ds: &'a Dataset,
+    inner: &'a SolverSpec,
+    ctx: &'a TrainCtx<'a>,
+    cache: &'a Arc<SharedRowCache>,
+    deadline: Option<Instant>,
+}
+
+impl SubCfg<'_> {
+    /// Per-subproblem budget: `max_iters` passes through, the wall is
+    /// whatever remains until the cascade's global deadline.
+    fn budget(&self) -> Budget {
+        Budget {
+            max_iters: self.ctx.budget.max_iters,
+            wall: self.deadline.map(|d| d.saturating_duration_since(Instant::now())),
+            target_objective: None,
+        }
+    }
+
+    /// Train one subproblem over `rows` (ascending global ids) with
+    /// `threads` scan workers, optionally warm-started. Returns the fit
+    /// and the iterations it spent.
+    fn train(
+        &self,
+        rows: &[usize],
+        warm: Option<Vec<f32>>,
+        group: u64,
+        threads: usize,
+    ) -> Result<(SubFit, usize)> {
+        let _sp = trace::span("cascade/shard-train");
+        let view = self.ds.select(rows);
+        let mut t = Trainer::new(self.inner.clone())
+            .kernel(self.ctx.kind)
+            .engine(Engine::cpu_par(threads))
+            .budget(self.budget())
+            .shared_cache(self.cache.clone(), group);
+        if let Some(w) = warm {
+            t = t.initial_alpha(w);
+        }
+        let res = t.train(&view)?;
+        trace::count(Counter::CascadeShardsTrained, 1);
+        let alpha = res
+            .alpha
+            .ok_or_else(|| anyhow!("inner solver '{}' returned no duals", self.inner.name()))?;
+        let fit = SubFit {
+            rows: rows.to_vec(),
+            alpha: alpha.iter().map(|&a| a as f64).collect(),
+            model: Some(res.model),
+            objective: res.objective,
+        };
+        Ok((fit, res.iterations))
+    }
+}
+
+fn train_ctx(ctx: &TrainCtx<'_>, p: &CascadeParams) -> Result<TrainResult> {
+    let c = inner_c(&p.inner)?;
+    let ds = ctx.ds;
+    let n = ds.n;
+    if p.shards <= 1 || n < 2 * p.shards {
+        // degenerate cascade: delegate to the inner solver with the
+        // caller's ctx untouched — bit-identical to not cascading
+        let mut res = p.inner.driver().train(ctx)?;
+        res.note("cascade_shards", "1".to_string());
+        return Ok(res);
+    }
+
+    let start = Instant::now();
+    let deadline = ctx.budget.wall.map(|w| start + w);
+    let threads = ctx.engine.threads().max(1);
+    let cache =
+        Arc::new(SharedRowCache::new(p.cache_mb * 1024 * 1024, cache_shards(threads)));
+    let cfg = SubCfg { ds, inner: &p.inner, ctx, cache: &cache, deadline };
+
+    // ---- layer 0: independent shard trainings -----------------------
+    let shards_idx = partition(n, p.shards, p.partition, p.seed);
+    let n_shards = shards_idx.len();
+    let workers = threads.min(n_shards).max(1);
+    let per = (threads / workers).max(1);
+    let results: Vec<Result<(SubFit, usize)>> =
+        pool::parallel_map(workers, n_shards, |k| {
+            let rows = &shards_idx[k];
+            if single_class(ds, rows) {
+                // untrainable shard (class-sorted file + contiguous
+                // partition): carry its rows into the merge with zero
+                // duals instead of failing
+                return Ok((SubFit::carrier(rows.clone()), 0));
+            }
+            cfg.train(rows, None, k as u64, per)
+        });
+    let mut fits = Vec::with_capacity(n_shards);
+    let mut total_iters = 0usize;
+    for r in results {
+        let (f, it) = r?;
+        total_iters += it;
+        fits.push(f);
+    }
+
+    // ---- merge layers ------------------------------------------------
+    let mut layer_no = 0u64;
+    let mut layers_run = 0usize;
+    let mut capped_wall = false;
+    while fits.len() > 1 {
+        layer_no += 1;
+        let expired = deadline.is_some_and(|d| Instant::now() >= d);
+        capped_wall |= expired;
+        let width = match p.layers {
+            // reached the layer cap: one final merge-all
+            Some(cap) if layers_run + 1 >= cap => fits.len(),
+            // wall budget spent: collapse now, sub-budgets are ~zero
+            _ if expired => fits.len(),
+            _ => p.merge_width.max(2),
+        };
+        let old = std::mem::take(&mut fits);
+        let mut groups: Vec<Vec<SubFit>> = Vec::new();
+        let mut cur: Vec<SubFit> = Vec::new();
+        for f in old {
+            cur.push(f);
+            if cur.len() == width {
+                groups.push(std::mem::take(&mut cur));
+            }
+        }
+        if !cur.is_empty() {
+            groups.push(cur);
+        }
+        let gw = threads.min(groups.len()).max(1);
+        let per = (threads / gw).max(1);
+        let results: Vec<Result<(SubFit, usize)>> =
+            pool::parallel_map(gw, groups.len(), |g| {
+                let group = &groups[g];
+                if group.len() == 1 {
+                    return Ok((group[0].clone(), 0));
+                }
+                let _sp = trace::span("cascade/merge");
+                let merged = merge::merge_group(ds, group, p.slack, per);
+                trace::count(Counter::CascadeSvsMerged, merged.n_sv as u64);
+                if merged.rows.is_empty() || single_class(ds, &merged.rows) {
+                    return Ok((SubFit::carrier(merged.rows), 0));
+                }
+                let warm: Vec<f32> = merged.alpha.iter().map(|&a| a as f32).collect();
+                cfg.train(&merged.rows, Some(warm), (layer_no << 32) | g as u64, per)
+            });
+        for r in results {
+            let (f, it) = r?;
+            total_iters += it;
+            fits.push(f);
+        }
+        layers_run += 1;
+    }
+    let mut fina = fits.pop().expect("cascade always keeps at least one fit");
+    if fina.model.is_none() {
+        bail!("cascade: the merged problem never contained both classes");
+    }
+
+    // ---- global KKT verification + feedback --------------------------
+    let op = operator::build(&ctx.kind, ds, threads, None)?;
+    let mut outer_rounds = 0usize;
+    let mut total_violations = 0usize;
+    let mut converged = false;
+    for _round in 0..p.max_outer.max(1) {
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            capped_wall = true;
+            break;
+        }
+        let viol = {
+            let _sp = trace::span("cascade/kkt-sweep");
+            kkt_violators(ds, op.as_ref(), &fina, c, p.kkt_tol)
+        };
+        outer_rounds += 1;
+        if viol.is_empty() {
+            converged = true;
+            break;
+        }
+        trace::count(Counter::CascadeKktViolations, viol.len() as u64);
+        total_violations += viol.len();
+        layer_no += 1;
+        let group = [fina, SubFit::carrier(viol)];
+        let merged = merge::merge_group(ds, &group, p.slack, threads);
+        trace::count(Counter::CascadeSvsMerged, merged.n_sv as u64);
+        let warm: Vec<f32> = merged.alpha.iter().map(|&a| a as f32).collect();
+        let (nf, it) = cfg.train(&merged.rows, Some(warm), layer_no << 32, threads)?;
+        total_iters += it;
+        fina = nf;
+    }
+
+    // ---- assemble the global result ----------------------------------
+    let n_sv = fina.n_sv();
+    let mut alpha_full = vec![0.0f32; n];
+    for (&r, &a) in fina.rows.iter().zip(&fina.alpha) {
+        alpha_full[r] = a as f32;
+    }
+    let mut model = fina.model.take().expect("checked above");
+    model.solver = format!("cascade({})", p.inner.name());
+    let mut res = TrainResult {
+        model,
+        iterations: total_iters,
+        objective: fina.objective,
+        alpha: Some(alpha_full),
+        notes: vec![],
+    };
+    res.note("n_sv", n_sv.to_string());
+    res.note("cascade_shards", n_shards.to_string());
+    res.note("cascade_layers", layers_run.to_string());
+    res.note("cascade_partition", p.partition.as_str().to_string());
+    res.note("cascade_outer_rounds", outer_rounds.to_string());
+    res.note("cascade_kkt_violations", total_violations.to_string());
+    let kkt_verdict = if converged {
+        "converged"
+    } else if capped_wall {
+        "wall"
+    } else {
+        "max-outer"
+    };
+    res.note("cascade_kkt", kkt_verdict.to_string());
+    if ctx.initial_alpha.is_some() {
+        res.note("warm_start", "rejected (cascade seeds its own layers)".to_string());
+    }
+    if capped_wall {
+        res.note("capped", "wall".to_string());
+    }
+    Ok(res)
+}
+
+/// Rows outside the fit's training set that violate the global KKT
+/// conditions at tolerance `tol`, in ascending order. Kernel values
+/// stream through [`KernelOperator::block`] in fixed-size row chunks;
+/// decision values accumulate in f64 in support-vector order, so the
+/// sweep is deterministic for every thread count.
+fn kkt_violators(
+    ds: &Dataset,
+    op: &dyn KernelOperator,
+    fit: &SubFit,
+    c: f64,
+    tol: f64,
+) -> Vec<usize> {
+    let mut sv = Vec::new();
+    let mut coef = Vec::new();
+    for (&r, &a) in fit.rows.iter().zip(&fit.alpha) {
+        if a > 0.0 {
+            sv.push(r);
+            coef.push(a * ds.y[r] as f64);
+        }
+    }
+    if sv.is_empty() {
+        return Vec::new();
+    }
+    let bias = fit.model.as_ref().map_or(0.0, |m| m.bias as f64);
+    const CHUNK: usize = 256;
+    let mut buf = vec![0.0f32; CHUNK.min(ds.n) * sv.len()];
+    let mut out = Vec::new();
+    let mut startr = 0;
+    while startr < ds.n {
+        let endr = (startr + CHUNK).min(ds.n);
+        let rows_chunk: Vec<usize> = (startr..endr).collect();
+        let b = &mut buf[..rows_chunk.len() * sv.len()];
+        op.block(&rows_chunk, &sv, b);
+        for (q, &r) in rows_chunk.iter().enumerate() {
+            let mut f = bias;
+            for (j, &cf) in coef.iter().enumerate() {
+                f += cf * b[q * sv.len() + j] as f64;
+            }
+            let margin = ds.y[r] as f64 * f;
+            // alpha of r: rows are sorted, so binary search
+            let a = match fit.rows.binary_search(&r) {
+                Ok(i) => fit.alpha[i],
+                Err(_) => 0.0,
+            };
+            let violates = if a <= 0.0 {
+                margin < 1.0 - tol
+            } else if a >= c {
+                margin > 1.0 + tol
+            } else {
+                (margin - 1.0).abs() > tol
+            };
+            // only rows the subproblem has never seen are fed back:
+            // in-set rows already satisfy KKT to the inner solver's eps,
+            // and excluding them makes the feedback set strictly new,
+            // so the outer loop terminates
+            if violates && fit.rows.binary_search(&r).is_err() {
+                out.push(r);
+            }
+        }
+        startr = endr;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{self, SynthSpec};
+
+    #[test]
+    fn inner_c_accepts_dual_solvers_only() {
+        assert_eq!(inner_c(&SolverSpec::Smo(Default::default())).unwrap(), 1.0);
+        assert_eq!(inner_c(&SolverSpec::Wss(Default::default())).unwrap(), 1.0);
+        assert!(inner_c(&SolverSpec::Mu(Default::default())).is_err());
+        assert!(inner_c(&SolverSpec::Cascade(Default::default())).is_err());
+    }
+
+    #[test]
+    fn default_params_are_sane() {
+        let p = CascadeParams::default();
+        assert_eq!(p.name(), "cascade");
+        assert_eq!(p.family(), Family::Explicit);
+        assert!(p.shards >= 2 && p.merge_width >= 2 && p.max_outer >= 1);
+        assert!(p.kkt_tol > 0.0 && p.slack > 0.0);
+    }
+
+    #[test]
+    fn single_class_detection() {
+        let ds = synth::generate(&SynthSpec { d: 3, ..Default::default() }, 50, 11, "t");
+        let pos: Vec<usize> = (0..ds.n).filter(|&i| ds.y[i] > 0.0).collect();
+        assert!(single_class(&ds, &pos));
+        assert!(single_class(&ds, &[]));
+        assert!(!single_class(&ds, &(0..ds.n).collect::<Vec<_>>()));
+    }
+
+    #[test]
+    fn kkt_violators_empty_without_svs() {
+        let ds = synth::generate(&SynthSpec { d: 3, ..Default::default() }, 30, 2, "t");
+        let op = operator::build(&crate::kernel::KernelKind::Rbf { gamma: 0.5 }, &ds, 1, None)
+            .unwrap();
+        let fit = SubFit::carrier((0..ds.n).collect());
+        assert!(kkt_violators(&ds, op.as_ref(), &fit, 1.0, 1e-3).is_empty());
+    }
+}

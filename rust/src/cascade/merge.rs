@@ -1,0 +1,238 @@
+//! SV-union merging with cross-shard adaptive shrinking and dual
+//! feasibility repair.
+//!
+//! A merge takes a group of sub-fits (trained shard models plus their
+//! dual variables, or untrained carriers), forms the union of their
+//! support vectors, filters rows every *partner* model already
+//! classifies with margin `> 1 + slack` (arXiv 1406.5161: such rows
+//! almost never re-enter the solution, so resolving them in the merged
+//! problem is wasted work), and repairs the dual equality constraint
+//! Σ αᵢyᵢ = 0 that filtering can break. The output is the merged
+//! problem's row set and warm-start alphas.
+//!
+//! Everything here is deterministic: candidates are collected in fit
+//! order, the filter verdict per row is a pure function of the models,
+//! the union is sorted by global row id, and the feasibility repair
+//! walks rows in ascending index order.
+
+use crate::data::Dataset;
+use crate::model::SvmModel;
+use crate::pool;
+
+/// One sub-problem's outcome flowing through the cascade: the global
+/// row ids it owns (ascending), its dual variables (aligned with
+/// `rows`; all zero for carriers) and its model (`None` for untrained
+/// carriers — single-class shards and KKT-violator feedback sets).
+#[derive(Debug, Clone)]
+pub struct SubFit {
+    pub rows: Vec<usize>,
+    pub alpha: Vec<f64>,
+    pub model: Option<SvmModel>,
+    /// Final objective of the sub-training (0 for carriers).
+    pub objective: f64,
+}
+
+impl SubFit {
+    /// An untrained carrier: rows enter the next merge with zero duals.
+    pub fn carrier(rows: Vec<usize>) -> SubFit {
+        let n = rows.len();
+        SubFit { rows, alpha: vec![0.0; n], model: None, objective: 0.0 }
+    }
+
+    /// Number of support vectors (rows with nonzero dual).
+    pub fn n_sv(&self) -> usize {
+        self.alpha.iter().filter(|&&a| a > 0.0).count()
+    }
+}
+
+/// A merged subproblem ready for a warm-started retrain.
+#[derive(Debug, Clone)]
+pub struct Merged {
+    /// Global row ids, ascending.
+    pub rows: Vec<usize>,
+    /// Warm-start duals aligned with `rows` (feasible: Σ αᵢyᵢ = 0).
+    pub alpha: Vec<f64>,
+    /// Rows the adaptive-shrinking filter removed.
+    pub dropped: usize,
+    /// Rows entering the retrain with nonzero dual.
+    pub n_sv: usize,
+}
+
+/// Merge a group of sub-fits into one warm-started subproblem.
+///
+/// Candidate rows are each trained fit's support vectors plus every row
+/// of each untrained carrier. A candidate is dropped when **all**
+/// partner models (the group's models minus the candidate's own)
+/// classify it with margin `y · f > 1 + slack`; rows with no partner
+/// models are always kept. If filtering would leave the merged problem
+/// single-class (untrainable), it is disabled for this merge. Duplicate
+/// rows keep their largest dual.
+pub fn merge_group(ds: &Dataset, group: &[SubFit], slack: f64, threads: usize) -> Merged {
+    // (row, alpha, owning fit) in fit order — deterministic
+    let mut cands: Vec<(usize, f64, usize)> = Vec::new();
+    for (k, fit) in group.iter().enumerate() {
+        for (&r, &a) in fit.rows.iter().zip(&fit.alpha) {
+            if fit.model.is_none() || a > 0.0 {
+                cands.push((r, a, k));
+            }
+        }
+    }
+
+    // partner models per owning fit
+    let partners: Vec<Vec<&SvmModel>> = (0..group.len())
+        .map(|k| {
+            group
+                .iter()
+                .enumerate()
+                .filter(|&(j, f)| j != k && f.model.is_some())
+                .map(|(_, f)| f.model.as_ref().unwrap())
+                .collect()
+        })
+        .collect();
+
+    let any_partner = partners.iter().any(|p| !p.is_empty());
+    let keep: Vec<bool> = if any_partner && slack.is_finite() {
+        pool::parallel_map(threads, cands.len(), |i| {
+            let (r, _, k) = cands[i];
+            let ps = &partners[k];
+            if ps.is_empty() {
+                return true;
+            }
+            let mut buf = vec![0.0f32; ds.d];
+            ds.row_into(r, &mut buf);
+            let y = ds.y[r] as f64;
+            // keep unless every partner clears the slack margin
+            !ps.iter().all(|m| y * m.decision(&buf) as f64 > 1.0 + slack)
+        })
+    } else {
+        vec![true; cands.len()]
+    };
+
+    let mut kept: Vec<(usize, f64)> = cands
+        .iter()
+        .zip(&keep)
+        .filter(|&(_, &k)| k)
+        .map(|(&(r, a, _), _)| (r, a))
+        .collect();
+    // filtering must not produce an untrainable single-class problem
+    if !class_balanced(ds, &kept) {
+        kept = cands.iter().map(|&(r, a, _)| (r, a)).collect();
+    }
+    let dropped = cands.len() - kept.len();
+
+    kept.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(b.1.total_cmp(&a.1)));
+    kept.dedup_by_key(|p| p.0); // keeps the first = largest-alpha copy
+
+    let rows: Vec<usize> = kept.iter().map(|p| p.0).collect();
+    let mut alpha: Vec<f64> = kept.iter().map(|p| p.1).collect();
+    repair_balance(ds, &rows, &mut alpha);
+    let n_sv = alpha.iter().filter(|&&a| a > 0.0).count();
+    Merged { rows, alpha, dropped, n_sv }
+}
+
+fn class_balanced(ds: &Dataset, rows: &[(usize, f64)]) -> bool {
+    let pos = rows.iter().any(|&(r, _)| ds.y[r] > 0.0);
+    let neg = rows.iter().any(|&(r, _)| ds.y[r] < 0.0);
+    pos && neg
+}
+
+/// Restore the dual equality constraint Σ αᵢyᵢ = 0 after rows were
+/// dropped. The surplus side's alphas are reduced toward zero in
+/// ascending row order — a deterministic projection that keeps every
+/// alpha inside its box (reduction never leaves `[0, C]`). SMO/WSS
+/// preserve the constraint pairwise, so a warm start that violates it
+/// could never be repaired by the solver itself.
+pub fn repair_balance(ds: &Dataset, rows: &[usize], alpha: &mut [f64]) {
+    let mut s = 0.0f64;
+    for (&r, &a) in rows.iter().zip(alpha.iter()) {
+        s += a * ds.y[r] as f64;
+    }
+    if s == 0.0 {
+        return;
+    }
+    let surplus_sign = if s > 0.0 { 1.0f32 } else { -1.0f32 };
+    let mut excess = s.abs();
+    for (&r, a) in rows.iter().zip(alpha.iter_mut()) {
+        if excess <= 0.0 {
+            break;
+        }
+        if ds.y[r] == surplus_sign && *a > 0.0 {
+            let cut = a.min(excess);
+            *a -= cut;
+            excess -= cut;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{self, SynthSpec};
+
+    fn blob(n: usize, d: usize, seed: u64) -> Dataset {
+        synth::generate(&SynthSpec { d, ..Default::default() }, n, seed, "merge-test")
+    }
+
+    fn two_fits(ds: &Dataset) -> (SubFit, SubFit) {
+        let n = ds.n;
+        let a: Vec<usize> = (0..n / 2).collect();
+        let b: Vec<usize> = (n / 2..n).collect();
+        let fa = SubFit {
+            alpha: a.iter().map(|&r| if r % 3 == 0 { 0.5 } else { 0.0 }).collect(),
+            rows: a,
+            model: None,
+            objective: 0.0,
+        };
+        let fb = SubFit::carrier(b);
+        (fa, fb)
+    }
+
+    #[test]
+    fn union_is_sorted_and_feasible() {
+        let ds = blob(60, 4, 9);
+        let (fa, fb) = two_fits(&ds);
+        let m = merge_group(&ds, &[fa, fb], 1.0, 2);
+        assert!(m.rows.windows(2).all(|w| w[0] < w[1]));
+        let s: f64 = m.rows.iter().zip(&m.alpha).map(|(&r, &a)| a * ds.y[r] as f64).sum();
+        assert!(s.abs() < 1e-9, "repair left imbalance {s}");
+        assert_eq!(m.dropped, 0, "no models in group, nothing may be filtered");
+    }
+
+    #[test]
+    fn carrier_keeps_all_rows_with_zero_alpha() {
+        let ds = blob(40, 3, 3);
+        let rows: Vec<usize> = (0..ds.n).collect();
+        let f = SubFit::carrier(rows.clone());
+        assert_eq!(f.n_sv(), 0);
+        let m = merge_group(&ds, &[f], 1.0, 1);
+        assert_eq!(m.rows, rows);
+        assert!(m.alpha.iter().all(|&a| a == 0.0));
+    }
+
+    #[test]
+    fn repair_reduces_surplus_side_only() {
+        let ds = blob(10, 2, 5);
+        // rows 0 and 1 with whatever labels they carry; force imbalance
+        let rows = vec![0usize, 1];
+        let y0 = ds.y[0];
+        // pick alphas so the y0 side carries 1.0 excess
+        let mut alpha = if ds.y[1] == y0 { vec![1.0, 0.0] } else { vec![1.5, 0.5] };
+        repair_balance(&ds, &rows, &mut alpha);
+        let s: f64 = rows.iter().zip(&alpha).map(|(&r, &a)| a * ds.y[r] as f64).sum();
+        assert!(s.abs() < 1e-12);
+        assert!(alpha.iter().all(|&a| a >= 0.0));
+    }
+
+    #[test]
+    fn duplicate_rows_keep_largest_alpha() {
+        let ds = blob(20, 2, 7);
+        let fa = SubFit { rows: vec![0, 1], alpha: vec![0.2, 0.4], model: None, objective: 0.0 };
+        let fb = SubFit { rows: vec![1, 2], alpha: vec![0.9, 0.0], model: None, objective: 0.0 };
+        let m = merge_group(&ds, &[fa, fb], f64::INFINITY, 1);
+        let i = m.rows.iter().position(|&r| r == 1).unwrap();
+        // 0.9 survives dedup (before the feasibility repair possibly
+        // reduces it, which only ever lowers values)
+        assert!(m.alpha[i] <= 0.9 + 1e-12);
+        assert_eq!(m.rows, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,46 @@
+//! Cascade sharded training: the Graf et al. (NIPS 2004) cascade SVM as
+//! a meta-solver over the unified [`crate::solvers`] API.
+//!
+//! The paper's explicit solvers parallelize *inside* one optimization
+//! (threaded working-set scans, threaded kernel-row fills). The cascade
+//! parallelizes *across* optimizations: partition the rows into S
+//! shards, train each shard independently on the worker pool, then
+//! hierarchically merge pairs (or k-way groups) of sub-models by taking
+//! the union of their support vectors and retraining — warm-started
+//! from the concatenated dual variables — until one model remains.
+//! Because non-support rows have zero dual weight, each merge works on
+//! a set far smaller than its inputs' row counts, and layer 0 (the only
+//! layer that touches all n rows) is embarrassingly parallel.
+//!
+//! Three refinements over the textbook cascade:
+//!
+//! * **Cross-shard adaptive shrinking** (arXiv 1406.5161): before a
+//!   merged retrain, candidate rows whose margin against every partner
+//!   model already clears `1 + slack` are dropped — they are confidently
+//!   classified by the other side's model and almost never return as
+//!   support vectors. Dropping a row with nonzero alpha would break the
+//!   dual equality constraint Σ αᵢyᵢ = 0, so the merge repairs the sum
+//!   deterministically (see [`merge`]).
+//! * **Warm-started layers** (cf. Glasmachers, arXiv 2207.01016): merged
+//!   subproblems start from the clipped concatenation of their inputs'
+//!   alphas via [`crate::solvers::api::TrainCtx::initial_alpha`], so
+//!   upper layers pay a gradient rebuild instead of a full resolve.
+//! * **Global KKT verification**: a cascade pass is a heuristic — a row
+//!   discarded at layer 0 can be a support vector of the global
+//!   problem. After the last merge the driver sweeps all n rows,
+//!   streaming kernel blocks through [`crate::kernel::operator`], and
+//!   feeds violators back into another warm-started retrain (Graf's
+//!   outer feedback loop), bounded by `max_outer` rounds.
+//!
+//! Determinism: partitioning is a pure function of `(n, shards,
+//! strategy, seed)`; sub-trainings run through the deterministic
+//! solvers (chunk-ordered scans); merges and the KKT sweep iterate in
+//! ascending row order. With `shards = 1` the driver delegates directly
+//! to the inner solver — bit-identical to not using the cascade at all.
+
+pub mod driver;
+pub mod merge;
+pub mod partition;
+
+pub use driver::CascadeParams;
+pub use partition::{partition, PartitionStrategy};

@@ -111,6 +111,13 @@ pub struct TrainJob {
     /// generated analogs, so `--dataset kdd99 --format csr` exercises
     /// the sparse path too.
     pub format: Format,
+    /// Cascade sharded training (`--cascade-shards S`): 0/1 = off, S > 1
+    /// wraps the (dual) solver in [`crate::cascade::CascadeParams`].
+    pub cascade_shards: usize,
+    /// Merge-layer cap (`--cascade-layers auto|L`; `None` = auto).
+    pub cascade_layers: Option<usize>,
+    /// Global KKT sweep tolerance (`--cascade-kkt-tol`).
+    pub cascade_kkt_tol: f64,
 }
 
 impl Default for TrainJob {
@@ -135,6 +142,9 @@ impl Default for TrainJob {
             input: None,
             test_input: None,
             format: Format::Dense,
+            cascade_shards: 0,
+            cascade_layers: None,
+            cascade_kkt_tol: 1e-3,
         }
     }
 }
@@ -163,6 +173,9 @@ pub const TRAIN_KEYS: &[&str] = &[
     "input",
     "test-input",
     "format",
+    "cascade-shards",
+    "cascade-layers",
+    "cascade-kkt-tol",
     "config",
     "save",
     "profile",
@@ -211,6 +224,19 @@ impl TrainJob {
         // analogs default to the seed's dense representation
         let fmt_default = if job.input.is_some() { "auto" } else { "dense" };
         job.format = Format::parse(&cfg.str_or("format", fmt_default))?;
+        job.cascade_shards = cfg.usize_or("cascade-shards", job.cascade_shards)?;
+        job.cascade_layers = match cfg.get("cascade-layers") {
+            None | Some("auto") => None,
+            Some(v) => Some(v.parse()?),
+        };
+        job.cascade_kkt_tol = cfg.f64_or("cascade-kkt-tol", job.cascade_kkt_tol)?;
+        if job.cascade_shards > 1 && !matches!(job.solver, Solver::Smo | Solver::Wss) {
+            bail!(
+                "--cascade-shards requires a dual solver whose alphas can be merged \
+                 (--solver smo|wss), got {:?}",
+                job.solver
+            );
+        }
         Ok(job)
     }
 
@@ -240,7 +266,7 @@ impl TrainJob {
     /// (engine, kernel, cache, budget) rides on the [`Trainer`] instead.
     pub fn solver_spec(&self, spec: &paper::PaperSpec) -> SolverSpec {
         let c = self.c.unwrap_or(spec.c);
-        match self.solver {
+        let base = match self.solver {
             Solver::Smo => SolverSpec::Smo(smo::SmoParams {
                 c,
                 eps: self.eps.unwrap_or(1e-3),
@@ -284,7 +310,19 @@ impl TrainJob {
                 },
                 ..Default::default()
             }),
+        };
+        if self.cascade_shards > 1 {
+            return SolverSpec::Cascade(crate::cascade::CascadeParams {
+                shards: self.cascade_shards,
+                layers: self.cascade_layers,
+                kkt_tol: self.cascade_kkt_tol,
+                seed: self.seed,
+                cache_mb: self.cache_mb,
+                inner: Box::new(base),
+                ..Default::default()
+            });
         }
+        base
     }
 
     /// Compile the job into a ready-to-run [`Trainer`] on `engine`.
@@ -512,12 +550,56 @@ mod tests {
         for k in [
             "dataset", "scale", "solver", "engine", "threads", "c", "gamma", "eps",
             "max-basis", "wss-size", "rank", "landmarks", "cache-mb", "seed", "max-train",
-            "time-budget-secs", "max-iters",
+            "time-budget-secs", "max-iters", "cascade-shards", "cascade-layers",
+            "cascade-kkt-tol",
         ] {
             assert!(TRAIN_KEYS.contains(&k), "{k} missing from TRAIN_KEYS");
         }
         let cfg = Config::from_args(&["--oops".into(), "1".into()]).unwrap();
         assert!(cfg.check_known(TRAIN_KEYS).is_err());
+    }
+
+    #[test]
+    fn cascade_keys_from_config() {
+        let cfg = |args: &[&str]| {
+            Config::from_args(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+        };
+        let job = TrainJob::from_config(&cfg(&[
+            "--solver",
+            "smo",
+            "--cascade-shards",
+            "4",
+            "--cascade-layers",
+            "auto",
+            "--cascade-kkt-tol",
+            "0.01",
+        ]))
+        .unwrap();
+        assert_eq!(job.cascade_shards, 4);
+        assert_eq!(job.cascade_layers, None);
+        assert_eq!(job.cascade_kkt_tol, 0.01);
+        match job.solver_spec(&paper::spec("adult").unwrap()) {
+            SolverSpec::Cascade(p) => {
+                assert_eq!(p.shards, 4);
+                assert_eq!(p.kkt_tol, 0.01);
+                assert!(matches!(*p.inner, SolverSpec::Smo(_)));
+            }
+            other => panic!("expected cascade spec, got {}", other.name()),
+        }
+        // explicit layer cap parses as a number
+        let job =
+            TrainJob::from_config(&cfg(&["--solver", "wss", "--cascade-layers", "3"])).unwrap();
+        assert_eq!(job.cascade_layers, Some(3));
+        // a non-dual inner solver is rejected up front
+        let err = TrainJob::from_config(&cfg(&["--solver", "mu", "--cascade-shards", "2"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("dual solver"), "{err}");
+        // shards <= 1 leaves the spec unwrapped
+        let job = TrainJob::from_config(&cfg(&["--solver", "smo"])).unwrap();
+        assert!(matches!(
+            job.solver_spec(&paper::spec("adult").unwrap()),
+            SolverSpec::Smo(_)
+        ));
     }
 
     #[test]

@@ -384,6 +384,54 @@ pub fn run_rank_curve(dataset: &str, scale: f64, ranks: &[usize]) -> Result<Stri
     ))
 }
 
+/// F.cascade — cascade sharded training vs direct: wall time, accuracy,
+/// final SV count and KKT feedback volume per shard count. Shard count 1
+/// is the direct (uncascaded) baseline the speedup column divides by.
+pub fn run_cascade_scaling(dataset: &str, scale: f64, shards: &[usize]) -> Result<String> {
+    let mut points = Vec::new();
+    let mut base = 0.0f64;
+    let mut n_train = 0usize;
+    for (i, &s) in shards.iter().enumerate() {
+        let job = TrainJob {
+            dataset: dataset.into(),
+            scale,
+            solver: Solver::Smo,
+            engine: EngineChoice::CpuPar(pool::default_threads()),
+            cascade_shards: s,
+            ..Default::default()
+        };
+        let rec = run(&job)?;
+        n_train = rec.n_train;
+        let t = rec.train_time.as_secs_f64();
+        if i == 0 {
+            base = t;
+        }
+        let note_num = |key: &str| -> f64 {
+            rec.notes
+                .iter()
+                .find(|(k, _)| k == key)
+                .and_then(|(_, v)| v.parse().ok())
+                .unwrap_or(0.0)
+        };
+        points.push((
+            s as f64,
+            vec![
+                t,
+                base / t,
+                rec.test_metric,
+                note_num("n_sv"),
+                note_num("cascade_kkt_violations"),
+            ],
+        ));
+    }
+    Ok(render_sweep(
+        &format!("F.cascade smo on {dataset} (scale {scale}, n = {n_train}; shards 1 = direct)"),
+        "shards",
+        &["time_s", "speedup", "test_metric", "n_sv", "kkt_fb"],
+        &points,
+    ))
+}
+
 /// F.memory — the memory wall for exact implicit methods: bytes required
 /// vs n for MU (2 n^2), full primal (n^2) and SP-SVM (|J| n), plus
 /// whether each method runs under a 2 GB cap.
@@ -493,6 +541,15 @@ mod tests {
         // one exact row (rank 0) + one sweep row
         assert!(t.lines().any(|l| l.starts_with("0")), "{t}");
         assert!(t.lines().any(|l| l.starts_with("16")), "{t}");
+    }
+
+    #[test]
+    fn cascade_scaling_runs_direct_and_sharded() {
+        let t = run_cascade_scaling("adult", 0.01, &[1, 2]).unwrap();
+        assert!(t.contains("F.cascade smo"), "{t}");
+        assert!(t.contains("speedup"), "{t}");
+        assert!(t.lines().any(|l| l.starts_with("1")), "{t}");
+        assert!(t.lines().any(|l| l.starts_with("2")), "{t}");
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //!   serving subsystem (`serve/`), CLI.
 
 pub mod bench_util;
+pub mod cascade;
 pub mod config;
 pub mod coordinator;
 pub mod data;

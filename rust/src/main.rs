@@ -32,6 +32,12 @@ COMMANDS
               0 = exact; lssvm defaults to 256)
             --landmarks M  (Nystrom landmarks instead of ICF)
             --time-budget-secs T --max-iters N  (training budget)
+            --cascade-shards S  (cascade sharded training, smo|wss only:
+              partition rows, train shards concurrently, merge SV unions
+              warm-started, verify global KKT; 0/1 = off)
+            --cascade-layers auto|L  (merge-layer cap; reaching it
+              collapses the remaining fits in one final merge)
+            --cascade-kkt-tol T  (global KKT sweep tolerance, default 1e-3)
             --save model.txt  (unknown --keys are rejected)
             --profile  (per-phase wall breakdown + runtime counters)
             --trace-json trace.json  (Chrome trace-event export; open
@@ -40,12 +46,14 @@ COMMANDS
             [--format dense|csr|auto]
   datagen   --dataset KEY --scale S --out file.libsvm [--test-out f]
   bench     table1|scaling|basis|wss|epsstop|memory|convergence|sparse|
-            rank-curve
+            rank-curve|cascade
             table1: --dataset KEY|all --scale S --methods a,b --max-basis N
             convergence: --dataset KEY --scale S --solvers smo,spsvm --every K
             sparse: --dataset kdd99 --scale S --solver spsvm  (csr vs dense)
             rank-curve: --dataset KEY --scale S --ranks 16,32,64,128,256
               (lssvm accuracy/memory vs ICF rank, exact baseline at rank 0)
+            cascade: --dataset KEY --scale S --shards 1,2,4,8
+              (cascade wall/accuracy vs direct training per shard count)
             bench also honors --profile and --trace-json (see train)
   serve     --dataset KEY --scale S [--engine E] [--requests N] [--batch N]
             [--shards K] [--queue-cap N]  (multiclass datasets serve OvO)
@@ -287,9 +295,19 @@ fn cmd_bench(cfg: &Config) -> Result<()> {
                 .collect::<std::result::Result<_, _>>()?;
             println!("{}", experiments::run_rank_curve(&ds, scale, &ranks)?);
         }
+        "cascade" => {
+            let ds = cfg.str_or("dataset", "adult");
+            let scale = cfg.f64_or("scale", experiments::default_scale(&ds))?;
+            let shards: Vec<usize> = cfg
+                .str_or("shards", "1,2,4,8")
+                .split(',')
+                .map(|s| s.trim().parse::<usize>())
+                .collect::<std::result::Result<_, _>>()?;
+            println!("{}", experiments::run_cascade_scaling(&ds, scale, &shards)?);
+        }
         other => bail!(
             "unknown bench '{other}' (table1|scaling|basis|wss|epsstop|memory|\
-             convergence|sparse|rank-curve)"
+             convergence|sparse|rank-curve|cascade)"
         ),
     }
     Ok(())

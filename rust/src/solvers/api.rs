@@ -394,6 +394,13 @@ pub struct TrainCtx<'a> {
     pub cache: Option<(&'a Arc<SharedRowCache>, u64)>,
     pub budget: &'a Budget,
     pub observer: &'a dyn TrainObserver,
+    /// Warm-start dual variables, one per dataset row (cascade layers
+    /// pass the previous layer's alphas). Dual decomposition solvers
+    /// (SMO/WSS) clip them to the box and rebuild the gradient from
+    /// scratch; solvers without box-constrained duals ignore the field
+    /// and note `warm_start = rejected` in their result. A zero vector
+    /// is bit-identical to a cold start.
+    pub initial_alpha: Option<&'a [f32]>,
 }
 
 impl<'a> TrainCtx<'a> {
@@ -443,6 +450,10 @@ pub enum SolverSpec {
     Primal(primal::PrimalParams),
     SpSvm(spsvm::SpSvmParams),
     LsSvm(lssvm::LsSvmParams),
+    /// The cascade meta-solver: shard, train the wrapped inner spec per
+    /// shard, hierarchically merge SV unions warm-started from the
+    /// previous layer, verify global KKT (see [`crate::cascade`]).
+    Cascade(crate::cascade::CascadeParams),
 }
 
 impl SolverSpec {
@@ -454,6 +465,7 @@ impl SolverSpec {
             SolverSpec::Primal(p) => p,
             SolverSpec::SpSvm(p) => p,
             SolverSpec::LsSvm(p) => p,
+            SolverSpec::Cascade(p) => p,
         }
     }
 
@@ -483,6 +495,7 @@ pub struct Trainer {
     budget: Budget,
     cache: Option<(Arc<SharedRowCache>, u64)>,
     observer: Option<Arc<dyn TrainObserver>>,
+    initial_alpha: Option<Arc<Vec<f32>>>,
 }
 
 impl Trainer {
@@ -494,6 +507,7 @@ impl Trainer {
             budget: Budget::default(),
             cache: None,
             observer: None,
+            initial_alpha: None,
         }
     }
 
@@ -530,6 +544,14 @@ impl Trainer {
         self
     }
 
+    /// Warm-start the dual solvers from per-row alphas (length must
+    /// equal the training set's row count; see
+    /// [`TrainCtx::initial_alpha`] for solver semantics).
+    pub fn initial_alpha(mut self, alpha: Vec<f32>) -> Trainer {
+        self.initial_alpha = Some(Arc::new(alpha));
+        self
+    }
+
     /// Worker threads the configured engine hand-parallelizes over.
     pub fn threads(&self) -> usize {
         self.engine.threads()
@@ -551,6 +573,14 @@ impl Trainer {
             Some(o) => o.as_ref(),
             None => &NULL_OBSERVER,
         };
+        if let Some(a) = &self.initial_alpha {
+            anyhow::ensure!(
+                a.len() == ds.n,
+                "initial_alpha has {} entries for a {}-row dataset",
+                a.len(),
+                ds.n
+            );
+        }
         let ctx = TrainCtx {
             ds,
             kind: self.kind,
@@ -558,6 +588,7 @@ impl Trainer {
             cache: self.cache.as_ref().map(|(c, g)| (c, *g)),
             budget: &self.budget,
             observer,
+            initial_alpha: self.initial_alpha.as_ref().map(|a| a.as_slice()),
         };
         let driver = self.spec.driver();
         // root span: one "train/<solver>" interval covering the whole
@@ -569,6 +600,7 @@ impl Trainer {
             SolverSpec::Primal(_) => "train/primal",
             SolverSpec::SpSvm(_) => "train/spsvm",
             SolverSpec::LsSvm(_) => "train/lssvm",
+            SolverSpec::Cascade(_) => "train/cascade",
         });
         let mut res = driver.train(&ctx)?;
         res.note("family", driver.family().as_str().to_string());
@@ -613,6 +645,7 @@ mod tests {
             },
             iterations: 3,
             objective: 0.0,
+            alpha: None,
             notes: vec![],
         };
         m.annotate(&mut res);
@@ -693,6 +726,8 @@ mod tests {
             (SolverSpec::Primal(Default::default()), "primal", Family::Implicit),
             (SolverSpec::SpSvm(Default::default()), "spsvm", Family::Implicit),
             (SolverSpec::LsSvm(Default::default()), "lssvm", Family::Implicit),
+            // cascade reports the wrapped solver's family (default smo)
+            (SolverSpec::Cascade(Default::default()), "cascade", Family::Explicit),
         ];
         for (spec, name, family) in specs {
             assert_eq!(spec.name(), name);

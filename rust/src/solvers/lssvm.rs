@@ -177,9 +177,13 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &LsSvmParams) -> Result<TrainResult> {
         model,
         iterations: iters.max(eta.iters),
         objective: obj,
+        alpha: None,
         notes: vec![],
     };
     meter.annotate(&mut res);
+    if ctx.initial_alpha.is_some() {
+        res.note("warm_start", "rejected (lssvm duals are unconstrained)".into());
+    }
     if ctx.engine.is_xla() {
         crate::trace::count(crate::trace::Counter::EngineFallbacks, 1);
         res.note("engine_fallback", "cpu (lssvm has no accelerator path)".to_string());

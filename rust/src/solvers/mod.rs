@@ -22,6 +22,8 @@
 pub mod api;
 pub mod common;
 pub mod lssvm;
+// note: the cascade meta-solver lives in `crate::cascade`, not here — it
+// is a driver *over* these solvers, not a seventh dual/primal algorithm.
 pub mod mu;
 pub mod primal;
 pub mod smo;
@@ -45,6 +47,12 @@ pub struct TrainResult {
     pub iterations: usize,
     /// Final objective value (solver-specific convention).
     pub objective: f64,
+    /// Full-length dual variables (one per training row, `0` for
+    /// non-SVs), exposed by the dual decomposition solvers (SMO/WSS) so
+    /// cascade layers can warm-start merged subproblems
+    /// ([`api::TrainCtx::initial_alpha`]). `None` for solvers whose
+    /// expansion coefficients are not box-constrained duals.
+    pub alpha: Option<Vec<f32>>,
     /// Solver-specific notes for reports (cache hit rate etc.).
     pub notes: Vec<(String, String)>,
 }

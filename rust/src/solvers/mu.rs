@@ -197,9 +197,13 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &MuParams) -> Result<TrainResult> {
         model,
         iterations: meter.iterations(),
         objective: last_obj,
+        alpha: None,
         notes: vec![],
     };
     meter.annotate(&mut res);
+    if ctx.initial_alpha.is_some() {
+        res.note("warm_start", "rejected (mu iterates from a strictly interior point)".into());
+    }
     if ctx.engine.is_xla() {
         crate::trace::count(crate::trace::Counter::EngineFallbacks, 1);
         res.note("engine_fallback", "cpu (mu has no accelerator path)".to_string());

@@ -262,9 +262,13 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &PrimalParams) -> Result<TrainResult> {
         model,
         iterations: meter.iterations(),
         objective: state.loss,
+        alpha: None,
         notes: vec![],
     };
     meter.annotate(&mut res);
+    if ctx.initial_alpha.is_some() {
+        res.note("warm_start", "rejected (primal betas are not box-constrained duals)".into());
+    }
     if ctx.engine.is_xla() {
         crate::trace::count(crate::trace::Counter::EngineFallbacks, 1);
         res.note("engine_fallback", "cpu (full-kernel primal has no accelerator path)".to_string());

@@ -396,6 +396,22 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
     let mut alpha = vec![0.0f64; n];
     // G_i = (Q alpha)_i - 1; alpha = 0 -> G = -1.
     let mut grad = vec![-1.0f64; n];
+    // Warm start (cascade layers): clip the supplied alphas to the box
+    // and rebuild the gradient from scratch — stale g must never leak
+    // in, and the shrink state below starts fresh. A zero vector leaves
+    // alpha = 0 and skips the rebuild, reproducing the cold start
+    // bit-for-bit.
+    let mut warm = false;
+    if let Some(a0) = ctx.initial_alpha {
+        for (t, &a) in a0.iter().enumerate() {
+            alpha[t] = (a as f64).clamp(0.0, c);
+        }
+        warm = alpha.iter().any(|&a| a != 0.0);
+        if warm {
+            reconstruct_gradient(&mut rows, ds, &[], &y, &alpha, &mut grad, scan_threads)?;
+            ph.lap("smo/warmstart");
+        }
+    }
     let diag: Vec<f64> = rows.diag.iter().map(|&v| v as f64).collect();
 
     let mut active: Vec<usize> = (0..n).collect();
@@ -594,9 +610,13 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
         model,
         iterations: meter.iterations(),
         objective,
+        alpha: Some(alpha.iter().map(|&a| a as f32).collect()),
         notes: vec![],
     };
     meter.annotate(&mut res);
+    if ctx.initial_alpha.is_some() {
+        res.note("warm_start", if warm { "accepted" } else { "zero (cold)" }.to_string());
+    }
     res.note("n_sv", sv_idx.len().to_string());
     res.note("cache_hit_rate", format!("{:.3}", rows.hit_rate()));
     res.note("cache_evicted_bytes", rows.cache_evicted_bytes().to_string());

@@ -655,9 +655,13 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SpSvmParams) -> Result<TrainResult> {
         model,
         iterations: meter.iterations(),
         objective: final_loss,
+        alpha: None,
         notes: vec![],
     };
     meter.annotate(&mut res);
+    if ctx.initial_alpha.is_some() {
+        res.note("warm_start", "rejected (spsvm betas are not box-constrained duals)".into());
+    }
     res.note("n_basis", nb.to_string());
     res.note("newton_iters", newton_total.to_string());
     res.note("rounds", rounds.to_string());

@@ -124,6 +124,34 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
     let diag: Vec<f64> = rows.diag.iter().map(|&v| v as f64).collect();
     let mut alpha = vec![0.0f64; n];
     let mut grad = vec![-1.0f64; n];
+    // Warm start (cascade layers): clip to the box and rebuild the
+    // gradient from scratch, G_t = -1 + y_t sum_j a_j y_j K(j, t),
+    // streaming one cached kernel row per nonzero alpha. A zero vector
+    // skips the rebuild and reproduces the cold start bit-for-bit.
+    let mut warm = false;
+    if let Some(a0) = ctx.initial_alpha {
+        for (t, &a) in a0.iter().enumerate() {
+            alpha[t] = (a as f64).clamp(0.0, c);
+        }
+        warm = alpha.iter().any(|&a| a != 0.0);
+        if warm {
+            for j in 0..n {
+                if alpha[j] == 0.0 {
+                    continue;
+                }
+                let kj = rows.get(ds, j)?;
+                let coef = alpha[j] * y[j];
+                let grad_ptr = SendPtr::new(grad.as_mut_ptr());
+                let kj_ref = &kj;
+                let y_ref = &y;
+                pool::parallel_for(scan_threads, n, SCAN_CHUNK, |t| {
+                    // SAFETY: each index t is written by exactly one task.
+                    unsafe { *grad_ptr.get().add(t) += coef * y_ref[t] * kj_ref[t] as f64 };
+                });
+            }
+            ph.lap("wss/warmstart");
+        }
+    }
 
     loop {
         // --- KKT violation scan (chunk-ordered parallel reduction, so the
@@ -376,9 +404,13 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
         model,
         iterations: meter.iterations(),
         objective,
+        alpha: Some(alpha.iter().map(|&a| a as f32).collect()),
         notes: vec![],
     };
     meter.annotate(&mut res);
+    if ctx.initial_alpha.is_some() {
+        res.note("warm_start", if warm { "accepted" } else { "zero (cold)" }.to_string());
+    }
     res.note("n_sv", sv_idx.len().to_string());
     res.note("cache_hit_rate", format!("{:.3}", rows.hit_rate()));
     res.note("cache_evicted_bytes", rows.cache_evicted_bytes().to_string());

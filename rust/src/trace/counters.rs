@@ -47,10 +47,19 @@ pub enum Counter {
     EngineFallbacks = 11,
     /// Trace events discarded because a thread buffer hit its cap.
     EventsDropped = 12,
+    /// Shard sub-problems trained by the cascade driver (all layers,
+    /// including warm-started merge retrains).
+    CascadeShardsTrained = 13,
+    /// Support vectors surviving cascade merge steps (after the
+    /// cross-shard shrinking filter).
+    CascadeSvsMerged = 14,
+    /// KKT violations found by the cascade's global sweeps and fed back
+    /// into the next outer round.
+    CascadeKktViolations = 15,
 }
 
 /// Number of [`Counter`] variants.
-pub const NUM_COUNTERS: usize = 13;
+pub const NUM_COUNTERS: usize = 16;
 
 /// Snapshot/report key for each counter, by discriminant.
 pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
@@ -67,6 +76,9 @@ pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
     "spmm_bytes",
     "engine_fallbacks",
     "events_dropped",
+    "cascade_shards_trained",
+    "cascade_svs_merged",
+    "cascade_kkt_violations",
 ];
 
 // `static [AtomicU64; N]` needs a const repeat seed; the interior
@@ -123,6 +135,9 @@ mod tests {
             Counter::SpmmBytes,
             Counter::EngineFallbacks,
             Counter::EventsDropped,
+            Counter::CascadeShardsTrained,
+            Counter::CascadeSvsMerged,
+            Counter::CascadeKktViolations,
         ]
         .into_iter()
         .enumerate()

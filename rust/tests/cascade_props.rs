@@ -1,0 +1,309 @@
+//! Property tests for the cascade sharded-training subsystem
+//! (`wu_svm::cascade`) and the warm-start plumbing it rides on:
+//!
+//! * `shards = 1` delegates to the inner solver **bit-identically** —
+//!   the cascade must cost nothing when it isn't used.
+//! * Sharded runs (S = 2, 4, 8) agree with direct training: the global
+//!   KKT feedback loop drives both to the same stopping criterion, so
+//!   test-set margins and error rates must match closely.
+//! * The whole pipeline is deterministic for a fixed seed across
+//!   worker-thread counts (partitioning is thread-free, the solvers
+//!   and merges are chunk-order deterministic).
+//! * The KKT feedback loop terminates under wall and iteration budgets.
+//! * Warm start: a zero vector is bit-identical to a cold start
+//!   (SMO and WSS), converged alphas restart cheaply, and solvers
+//!   without box duals reject the field with a note.
+
+use std::time::Duration;
+
+use wu_svm::cascade::{partition, CascadeParams, PartitionStrategy};
+use wu_svm::data::Dataset;
+use wu_svm::engine::Engine;
+use wu_svm::kernel::KernelKind;
+use wu_svm::solvers::mu::MuParams;
+use wu_svm::solvers::smo::SmoParams;
+use wu_svm::solvers::wss::WssParams;
+use wu_svm::solvers::{Budget, SolverSpec, TrainResult, Trainer};
+
+fn xor_dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = wu_svm::rng::Rng::new(seed);
+    let mut x = Vec::with_capacity(n * 2);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let a = rng.uniform_f32();
+        let b = rng.uniform_f32();
+        x.push(a);
+        x.push(b);
+        y.push(if (a > 0.5) ^ (b > 0.5) { 1.0 } else { -1.0 });
+    }
+    Dataset::new_binary("xor", 2, x, y)
+}
+
+const KIND: KernelKind = KernelKind::Rbf { gamma: 8.0 };
+
+fn smo_spec() -> SolverSpec {
+    SolverSpec::Smo(SmoParams { c: 10.0, ..Default::default() })
+}
+
+fn cascade_spec(shards: usize, inner: SolverSpec) -> SolverSpec {
+    SolverSpec::Cascade(CascadeParams {
+        shards,
+        inner: Box::new(inner),
+        ..Default::default()
+    })
+}
+
+fn assert_bit_identical(a: &TrainResult, b: &TrainResult) {
+    assert_eq!(a.iterations, b.iterations, "iteration counts differ");
+    assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "objectives differ");
+    assert_eq!(a.model.bias.to_bits(), b.model.bias.to_bits(), "biases differ");
+    assert_eq!(a.model.coef.len(), b.model.coef.len(), "coef counts differ");
+    for (i, (x, y)) in a.model.coef.iter().zip(&b.model.coef).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "coef[{i}] differs");
+    }
+    assert_eq!(a.model.vectors.len(), b.model.vectors.len());
+    for (i, (x, y)) in a.model.vectors.iter().zip(&b.model.vectors).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "vectors[{i}] differs");
+    }
+}
+
+fn note<'a>(r: &'a TrainResult, key: &str) -> Option<&'a str> {
+    r.notes.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+#[test]
+fn cascade_of_one_shard_is_bit_identical_to_direct() {
+    let ds = xor_dataset(300, 1);
+    let direct = Trainer::new(smo_spec())
+        .kernel(KIND)
+        .engine(Engine::cpu_par(4))
+        .train(&ds)
+        .unwrap();
+    let cascaded = Trainer::new(cascade_spec(1, smo_spec()))
+        .kernel(KIND)
+        .engine(Engine::cpu_par(4))
+        .train(&ds)
+        .unwrap();
+    assert!(direct.iterations > 10, "degenerate run");
+    assert_bit_identical(&direct, &cascaded);
+    // the dual vectors match too (warm-start plumbing end to end)
+    let (da, ca) = (direct.alpha.as_ref().unwrap(), cascaded.alpha.as_ref().unwrap());
+    assert_eq!(da.len(), ca.len());
+    for (i, (x, y)) in da.iter().zip(ca).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "alpha[{i}] differs");
+    }
+}
+
+#[test]
+fn sharded_cascade_agrees_with_direct_training() {
+    let train = xor_dataset(360, 3);
+    let test = xor_dataset(400, 103);
+    let threads = 4;
+    let direct = Trainer::new(smo_spec())
+        .kernel(KIND)
+        .engine(Engine::cpu_par(threads))
+        .train(&train)
+        .unwrap();
+    let dm = direct.model.decision_batch(&test, threads);
+    let derr = err(&dm, &test.y);
+    for shards in [2usize, 4, 8] {
+        let r = Trainer::new(cascade_spec(shards, smo_spec()))
+            .kernel(KIND)
+            .engine(Engine::cpu_par(threads))
+            .train(&train)
+            .unwrap();
+        assert_eq!(note(&r, "cascade_shards"), Some(shards.to_string().as_str()));
+        let cm = r.model.decision_batch(&test, threads);
+        let cerr = err(&cm, &test.y);
+        // both models satisfy the same global KKT criterion, so test
+        // behavior must agree: within one error point (+ one test-row
+        // quantum) and with closely matching margins
+        assert!(
+            (derr - cerr).abs() <= 0.01 + 1.0 / test.n as f64,
+            "S={shards}: direct err {derr:.4} vs cascade err {cerr:.4}"
+        );
+        let agree = dm
+            .iter()
+            .zip(&cm)
+            .filter(|(a, b)| (**a > 0.0) == (**b > 0.0))
+            .count();
+        assert!(
+            agree as f64 >= 0.98 * test.n as f64,
+            "S={shards}: only {agree}/{} prediction agreements",
+            test.n
+        );
+        let mean_diff: f64 = dm
+            .iter()
+            .zip(&cm)
+            .map(|(a, b)| (*a as f64 - *b as f64).abs())
+            .sum::<f64>()
+            / test.n as f64;
+        assert!(mean_diff < 0.05, "S={shards}: mean margin diff {mean_diff:.4}");
+        // the dual vector the cascade reports is box-feasible & balanced
+        let alpha = r.alpha.as_ref().unwrap();
+        assert_eq!(alpha.len(), train.n);
+        assert!(alpha.iter().all(|&a| (0.0f32..=10.0 + 1e-4).contains(&a)));
+        let s: f64 = alpha
+            .iter()
+            .zip(&train.y)
+            .map(|(&a, &y)| a as f64 * y as f64)
+            .sum();
+        assert!(s.abs() < 1e-2, "S={shards}: sum alpha_i y_i = {s}");
+    }
+}
+
+fn err(margins: &[f32], y: &[f32]) -> f64 {
+    let wrong = margins
+        .iter()
+        .zip(y)
+        .filter(|(m, y)| (**m > 0.0) != (**y > 0.0))
+        .count();
+    wrong as f64 / y.len() as f64
+}
+
+#[test]
+fn cascade_is_deterministic_across_thread_counts() {
+    // partitioning is a pure function of (n, shards, strategy, seed)...
+    for strat in [
+        PartitionStrategy::Contiguous,
+        PartitionStrategy::RoundRobin,
+        PartitionStrategy::SeededShuffle,
+    ] {
+        assert_eq!(partition(500, 8, strat, 7), partition(500, 8, strat, 7));
+    }
+    // ...and the whole training is chunk-order deterministic, so the
+    // final model is bit-identical for every worker count
+    let ds = xor_dataset(320, 5);
+    let mut baseline: Option<TrainResult> = None;
+    for threads in [1usize, 2, 8] {
+        let r = Trainer::new(cascade_spec(4, smo_spec()))
+            .kernel(KIND)
+            .engine(Engine::cpu_par(threads))
+            .train(&ds)
+            .unwrap();
+        match &baseline {
+            None => baseline = Some(r),
+            Some(base) => assert_bit_identical(base, &r),
+        }
+    }
+}
+
+#[test]
+fn kkt_feedback_loop_terminates_under_budgets() {
+    let ds = xor_dataset(300, 9);
+    // zero wall budget: every sub-training stops after one iteration,
+    // the outer loop short-circuits, and the run still returns a model
+    let r = Trainer::new(cascade_spec(4, smo_spec()))
+        .kernel(KIND)
+        .budget(Budget::wall(Duration::ZERO))
+        .engine(Engine::cpu_par(4))
+        .train(&ds)
+        .unwrap();
+    assert_eq!(note(&r, "capped"), Some("wall"), "notes {:?}", r.notes);
+    assert!(!r.model.coef.is_empty() || r.model.vectors.is_empty());
+    // a tiny iteration budget bounds every subproblem; the outer loop
+    // is bounded by max_outer regardless of convergence
+    let r = Trainer::new(cascade_spec(4, smo_spec()))
+        .kernel(KIND)
+        .budget(Budget::iters(3))
+        .engine(Engine::cpu_par(4))
+        .train(&ds)
+        .unwrap();
+    let rounds: usize = note(&r, "cascade_outer_rounds").unwrap().parse().unwrap();
+    assert!(rounds <= CascadeParams::default().max_outer, "rounds {rounds}");
+}
+
+#[test]
+fn cascade_runs_with_wss_inner() {
+    let ds = xor_dataset(240, 11);
+    let inner = SolverSpec::Wss(WssParams { c: 10.0, ..Default::default() });
+    let r = Trainer::new(cascade_spec(2, inner))
+        .kernel(KIND)
+        .engine(Engine::cpu_par(2))
+        .train(&ds)
+        .unwrap();
+    assert_eq!(r.model.solver, "cascade(wss)");
+    assert!(note(&r, "cascade_kkt").is_some());
+}
+
+#[test]
+fn cascade_rejects_non_dual_inner_solvers() {
+    let ds = xor_dataset(100, 13);
+    let inner = SolverSpec::Mu(MuParams::default());
+    let e = Trainer::new(cascade_spec(2, inner)).kernel(KIND).train(&ds).unwrap_err();
+    assert!(e.to_string().contains("dual decomposition"), "{e}");
+    let nested = cascade_spec(2, cascade_spec(2, smo_spec()));
+    let e = Trainer::new(nested).kernel(KIND).train(&ds).unwrap_err();
+    assert!(e.to_string().contains("nest"), "{e}");
+}
+
+// ---- warm-start plumbing (the satellite the cascade rides on) --------
+
+#[test]
+fn zero_warm_start_is_bit_identical_to_cold_start() {
+    let ds = xor_dataset(250, 21);
+    for spec in [
+        smo_spec(),
+        SolverSpec::Wss(WssParams { c: 10.0, ..Default::default() }),
+    ] {
+        let name = spec.name().to_string();
+        let cold = Trainer::new(spec.clone()).kernel(KIND).train(&ds).unwrap();
+        let warm = Trainer::new(spec)
+            .kernel(KIND)
+            .initial_alpha(vec![0.0; ds.n])
+            .train(&ds)
+            .unwrap();
+        assert_bit_identical(&cold, &warm);
+        assert_eq!(note(&warm, "warm_start"), Some("zero (cold)"), "{name}");
+        assert_eq!(note(&cold, "warm_start"), None, "{name}");
+    }
+}
+
+#[test]
+fn warm_start_from_converged_alphas_restarts_cheaply() {
+    let ds = xor_dataset(300, 23);
+    let cold = Trainer::new(smo_spec()).kernel(KIND).train(&ds).unwrap();
+    let alpha = cold.alpha.clone().unwrap();
+    assert_eq!(alpha.len(), ds.n);
+    let warm = Trainer::new(smo_spec())
+        .kernel(KIND)
+        .initial_alpha(alpha)
+        .train(&ds)
+        .unwrap();
+    assert_eq!(note(&warm, "warm_start"), Some("accepted"));
+    assert!(
+        warm.iterations < cold.iterations,
+        "warm restart took {} iters vs {} cold",
+        warm.iterations,
+        cold.iterations
+    );
+    // the restart lands on (essentially) the same solution
+    assert!((warm.objective - cold.objective).abs() <= 1e-3 * cold.objective.abs() + 1e-6);
+}
+
+#[test]
+fn initial_alpha_length_is_validated() {
+    let ds = xor_dataset(100, 25);
+    let e = Trainer::new(smo_spec())
+        .kernel(KIND)
+        .initial_alpha(vec![0.0; 7])
+        .train(&ds)
+        .unwrap_err();
+    assert!(e.to_string().contains("initial_alpha"), "{e}");
+}
+
+#[test]
+fn solvers_without_box_duals_reject_warm_start_with_a_note() {
+    let ds = xor_dataset(120, 27);
+    let r = Trainer::new(SolverSpec::Mu(MuParams { c: 1.0, ..Default::default() }))
+        .kernel(KIND)
+        .initial_alpha(vec![0.0; ds.n])
+        .train(&ds)
+        .unwrap();
+    assert!(
+        note(&r, "warm_start").is_some_and(|v| v.starts_with("rejected")),
+        "notes {:?}",
+        r.notes
+    );
+    assert!(r.alpha.is_none(), "mu has no box-constrained duals to report");
+}
