@@ -1,0 +1,142 @@
+//! Out-of-core benchmarks: SMO over an mmap-backed packed design at a
+//! sweep of kernel-row cache budgets (hit rate vs wall time), plus a
+//! polish on/off comparison at the tightest budget (error delta and
+//! objective movement). The mmap path is bit-identical to in-memory
+//! training (rust/tests/ooc_props.rs), so what this bench measures is
+//! purely the cache economics of streaming rows off disk
+//! (rust/EXPERIMENTS.md §OOC). Emits `BENCH_ooc.json`.
+//!
+//! Run: `cargo bench --bench ooc [-- --n 8000 --d 48]`
+
+use wu_svm::bench_util::{bench, header, smoke, smoke_or};
+use wu_svm::config::Config;
+use wu_svm::data::synth::{generate, SynthSpec};
+use wu_svm::data::{pack, Dataset};
+use wu_svm::engine::Engine;
+use wu_svm::kernel::KernelKind;
+use wu_svm::pool;
+use wu_svm::solvers::smo::{self, SmoParams};
+
+fn note_f64(r: &wu_svm::solvers::TrainResult, key: &str) -> f64 {
+    r.notes
+        .iter()
+        .find(|(k, _)| k == key)
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap_or(f64::NAN)
+}
+
+fn err_rate(model: &wu_svm::model::SvmModel, test: &Dataset, threads: usize) -> f64 {
+    let margins = model.decision_batch(test, threads);
+    wu_svm::metrics::error_rate(&margins, &test.y)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let cfg = Config::from_args(&args).unwrap();
+    let n = cfg.usize_or("n", smoke_or(500, 8_000)).unwrap();
+    let d = cfg.usize_or("d", 48).unwrap();
+    let threads = pool::default_threads();
+    let runs = smoke_or(1, 3);
+    let budgets_mb = [1usize, 4, 16, 64];
+
+    let spec = SynthSpec {
+        d,
+        classes: 2,
+        clusters: 8,
+        sigma: 0.25,
+        flip: 0.02,
+        sparsity: 0.0,
+        pos_frac: 0.5,
+    };
+    let train_mem = generate(&spec, n, 42, "ooc-bench-train");
+    let test = generate(&spec, (n / 4).max(100), 4242, "ooc-bench-test");
+    let packed = std::env::temp_dir().join("wu_svm_ooc_bench.wup");
+    pack::write_packed(&train_mem, &packed).unwrap();
+    let train = pack::load_packed(&packed).unwrap();
+    assert!(train.design.is_mmap());
+    let kind = KernelKind::Rbf { gamma: 0.5 };
+    let engine = Engine::cpu_par(threads);
+    println!("workload: n={n} d={d} mmap-backed ({threads} threads)");
+
+    let trace_session = wu_svm::trace::Session::start();
+
+    header("smo over the mmap design: cache budget vs hit rate / wall time");
+    let mut times_ms = Vec::new();
+    let mut hit_rates = Vec::new();
+    for &mb in &budgets_mb {
+        let params = SmoParams { c: 10.0, cache_mb: mb, ..Default::default() };
+        let summary = bench(&format!("cache {mb:>3} MB [{threads}t]"), 1, runs, || {
+            smo::train(&train, kind, &params, &engine).unwrap();
+        });
+        println!("{}", summary.row());
+        let r = smo::train(&train, kind, &params, &engine).unwrap();
+        let rate = note_f64(&r, "cache_hit_rate");
+        println!("  {mb} MB: hit rate {rate:.3}  n_sv {}", r.model.coef.len());
+        times_ms.push(summary.median.as_secs_f64() * 1e3);
+        hit_rates.push(rate);
+    }
+
+    header("polish on/off at the tightest budget");
+    let tight = SmoParams { c: 10.0, cache_mb: budgets_mb[0], ..Default::default() };
+    let off = smo::train(&train, kind, &tight, &engine).unwrap();
+    let on = smo::train(
+        &train,
+        kind,
+        &SmoParams { polish: true, cache_slack: 0.5, ..tight.clone() },
+        &engine,
+    )
+    .unwrap();
+    let err_off = err_rate(&off.model, &test, threads);
+    let err_on = err_rate(&on.model, &test, threads);
+    let polish_err_delta = err_off - err_on;
+    println!(
+        "polish off: err {err_off:.4} obj {:.6}   polish on: err {err_on:.4} obj {:.6} \
+         (delta {polish_err_delta:+.4}, {} steps)",
+        off.objective,
+        on.objective,
+        note_f64(&on, "polish_steps"),
+    );
+
+    let counters = trace_session.finish().counters_json();
+    std::fs::remove_file(&packed).ok();
+    if smoke() {
+        println!("BENCH_SMOKE=1: skipping BENCH_ooc.json (not a measurement)");
+        return;
+    }
+    let list = |v: &[f64]| {
+        v.iter().map(|x| format!("{x:.4}")).collect::<Vec<_>>().join(", ")
+    };
+    let ilist = |v: &[usize]| {
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
+    };
+    // the embedded schema is required by ci/check_bench_json.py, which
+    // also cross-checks the sweep coherence (hit_rate in [0,1], rising
+    // with the budget) and the polish_err_delta presence
+    let schema = "\"schema\": {\n    \
+         \"workload\": \"n training rows, d features; the design is trained from an mmap-backed packed file\",\n    \
+         \"threads\": \"worker threads shared by every configuration\",\n    \
+         \"backend\": \"SIMD backend the measured process dispatched to (scalar | avx2+fma | neon)\",\n    \
+         \"cache_mb\": \"kernel-row cache budgets swept, in MB, strictly increasing\",\n    \
+         \"train_ms\": \"median end-to-end train wall time per budget\",\n    \
+         \"hit_rate\": \"kernel-row cache hit rate per budget (should rise with the budget)\",\n    \
+         \"polish_err_delta\": \"test error (polish off) - test error (polish on) at the tightest budget\",\n    \
+         \"counters\": \"trace-layer runtime counter snapshot over the bench (ci cross-checks the cache identity)\"\n  }";
+    let json = format!(
+        "{{\n  \"workload\": {{\"n\": {n}, \"d\": {d}}},\n  \
+         \"threads\": {threads},\n  \
+         \"backend\": \"{}\",\n  \
+         \"cache_mb\": [{}],\n  \
+         \"train_ms\": [{}],\n  \
+         \"hit_rate\": [{}],\n  \
+         \"polish_err_delta\": {polish_err_delta:.4},\n  \
+         \"counters\": {counters},\n  {schema}\n}}\n",
+        wu_svm::linalg::simd::active().name(),
+        ilist(&budgets_mb),
+        list(&times_ms),
+        list(&hit_rates),
+    );
+    match std::fs::write("BENCH_ooc.json", &json) {
+        Ok(()) => println!("wrote BENCH_ooc.json:\n{json}"),
+        Err(e) => eprintln!("could not write BENCH_ooc.json: {e}"),
+    }
+}

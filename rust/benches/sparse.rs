@@ -89,7 +89,7 @@ fn main() {
     header(&format!("raw SpMM C[{n} x {b}] — scalar vs {}", be.name()));
     let csr_mat = match &csr.design {
         Design::Sparse(m) => m,
-        Design::Dense(_) => unreachable!("csr dataset is CSR by construction"),
+        _ => unreachable!("csr dataset is CSR by construction"),
     };
     let bm: Vec<f32> = {
         let mut v = vec![0.0f32; b * d];

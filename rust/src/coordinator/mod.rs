@@ -12,8 +12,9 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::config::Config;
-use crate::data::{libsvm, paper, Dataset, Format};
+use crate::data::{libsvm, pack, paper, Dataset, Format};
 use crate::engine::Engine;
+use crate::kernel::cache::CacheBudget;
 use crate::kernel::KernelKind;
 use crate::metrics::{auc, error_rate, multiclass_error};
 use crate::multiclass::OvoModel;
@@ -92,7 +93,17 @@ pub struct TrainJob {
     pub rank: Option<usize>,
     /// Nyström landmark count (`--landmarks`; excludes `--rank`).
     pub landmarks: Option<usize>,
+    /// Resolved kernel-row cache size in MB (from `--cache-mb N|auto`).
     pub cache_mb: usize,
+    /// What the user asked for (`auto` resolves via available RAM at
+    /// [`TrainJob::from_config`] time; kept for reporting).
+    pub cache_budget: CacheBudget,
+    /// Cache-aware WSS slack (`--cache-slack`, 0 = off). Explicit dual
+    /// solvers only.
+    pub cache_slack: f64,
+    /// Polishing phase after convergence (`--polish`). Explicit dual
+    /// solvers only.
+    pub polish: bool,
     pub seed: u64,
     /// Cap on training rows (0 = spec size * scale).
     pub max_train: usize,
@@ -135,6 +146,9 @@ impl Default for TrainJob {
             rank: None,
             landmarks: None,
             cache_mb: 512,
+            cache_budget: CacheBudget::Mb(512),
+            cache_slack: 0.0,
+            polish: false,
             seed: 1,
             max_train: 0,
             time_budget_secs: None,
@@ -166,6 +180,8 @@ pub const TRAIN_KEYS: &[&str] = &[
     "rank",
     "landmarks",
     "cache-mb",
+    "cache-slack",
+    "polish",
     "seed",
     "max-train",
     "time-budget-secs",
@@ -213,7 +229,22 @@ impl TrainJob {
                 job.solver
             );
         }
-        job.cache_mb = cfg.usize_or("cache-mb", job.cache_mb)?;
+        job.cache_budget = CacheBudget::parse(&cfg.str_or("cache-mb", "512"))?;
+        job.cache_mb = job.cache_budget.resolve_mb();
+        job.cache_slack = cfg.f64_or("cache-slack", 0.0)?;
+        job.polish = cfg.bool_or("polish", false)?;
+        if (job.polish || job.cache_slack != 0.0)
+            && !matches!(job.solver, Solver::Smo | Solver::Wss)
+        {
+            bail!(
+                "--polish/--cache-slack apply to the explicit dual solvers \
+                 (--solver smo|wss), got {:?}",
+                job.solver
+            );
+        }
+        if !(0.0..1.0).contains(&job.cache_slack) {
+            bail!("--cache-slack must be in [0, 1), got {}", job.cache_slack);
+        }
         job.seed = cfg.u64_or("seed", job.seed)?;
         job.max_train = cfg.usize_or("max-train", 0)?;
         job.time_budget_secs = cfg.get("time-budget-secs").map(|v| v.parse()).transpose()?;
@@ -271,6 +302,8 @@ impl TrainJob {
                 c,
                 eps: self.eps.unwrap_or(1e-3),
                 cache_mb: self.cache_mb,
+                cache_slack: self.cache_slack,
+                polish: self.polish,
                 ..Default::default()
             }),
             Solver::Wss => SolverSpec::Wss(wss::WssParams {
@@ -278,6 +311,8 @@ impl TrainJob {
                 s: self.wss_size,
                 eps: self.eps.unwrap_or(1e-3),
                 cache_mb: self.cache_mb,
+                cache_slack: self.cache_slack,
+                polish: self.polish,
                 ..Default::default()
             }),
             Solver::Mu => SolverSpec::Mu(mu::MuParams {
@@ -369,16 +404,31 @@ pub fn build_engine(choice: EngineChoice) -> Result<Engine> {
     })
 }
 
-/// Load the job's dataset pair: a libsvm file when `input` is set (test
-/// from `test_input`, else an 80/20 split), a generated paper analog
+/// Load the job's dataset pair: a libsvm or `wu-svm pack`ed file when
+/// `input` is set (sniffed by magic, no flag needed; test from
+/// `test_input`, else an 80/20 split), a generated paper analog
 /// otherwise. Either source lands in the job's requested storage
-/// [`Format`] before any solver sees it.
+/// [`Format`] before any solver sees it — except packed inputs under
+/// `--format auto`, which stay mmap-backed (the out-of-core path; note
+/// that splitting or subsampling a packed input materializes the
+/// selection in memory, so pass `--test-input` to keep the whole
+/// training design on disk).
 pub fn load_data(job: &TrainJob) -> Result<(Dataset, Dataset, paper::PaperSpec)> {
+    let read_any = |path: &str, d_hint: usize| -> Result<Dataset> {
+        let p = std::path::Path::new(path);
+        if pack::is_packed_file(p) {
+            // Auto keeps the design mmap-backed; an explicit dense/csr
+            // request materializes it in memory
+            Ok(pack::load_packed(p)?.with_format(job.format))
+        } else {
+            libsvm::read_file_with(p, d_hint, job.format)
+        }
+    };
     if let Some(path) = &job.input {
-        let full = libsvm::read_file_with(std::path::Path::new(path), 0, job.format)?;
+        let full = read_any(path, 0)?;
         let (mut tr, te) = match &job.test_input {
             Some(tp) => {
-                let te = libsvm::read_file_with(std::path::Path::new(tp), full.d, job.format)?;
+                let te = read_any(tp, full.d)?;
                 (full, te)
             }
             None => full.split(0.8, job.seed),
@@ -430,12 +480,16 @@ pub fn run(job: &TrainJob) -> Result<RunRecord> {
             notes: vec![
                 ("pairs".into(), ovo.pairs.len().to_string()),
                 ("wall_secs".into(), format!("{:.3}", wall.as_secs_f64())),
+                ("storage".into(), train_ds.design.storage().into()),
+                ("cache_budget_mb".into(), job.cache_mb.to_string()),
             ],
         });
     }
 
     let r = trainer.train(&train_ds)?;
-    let (model, notes) = (r.model, r.notes);
+    let (model, mut notes) = (r.model, r.notes);
+    notes.push(("storage".into(), train_ds.design.storage().into()));
+    notes.push(("cache_budget_mb".into(), job.cache_mb.to_string()));
     let train_time = t0.elapsed();
     let margins = model.decision_batch(&test_ds, eval_threads);
     let (metric_name, metric) = match spec.metric {
@@ -549,7 +603,8 @@ mod tests {
         // every key from_config reads must be in the check_known allowlist
         for k in [
             "dataset", "scale", "solver", "engine", "threads", "c", "gamma", "eps",
-            "max-basis", "wss-size", "rank", "landmarks", "cache-mb", "seed", "max-train",
+            "max-basis", "wss-size", "rank", "landmarks", "cache-mb", "cache-slack",
+            "polish", "seed", "max-train",
             "time-budget-secs", "max-iters", "cascade-shards", "cascade-layers",
             "cascade-kkt-tol",
         ] {

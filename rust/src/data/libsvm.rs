@@ -230,9 +230,8 @@ pub fn write_file(ds: &Dataset, path: &Path) -> Result<()> {
         } else {
             write!(w, "{}", if ds.y[i] > 0.0 { "+1" } else { "-1" })?;
         }
-        match ds.csr() {
-            Some(c) => {
-                let (cols, vals) = c.row(i);
+        match ds.sparse_row(i) {
+            Some((cols, vals)) => {
                 for (&j, &v) in cols.iter().zip(vals) {
                     write!(w, " {}:{}", j as usize + 1, v)?;
                 }

@@ -1,0 +1,381 @@
+//! Memory-mapped design storage — the out-of-core half of the
+//! [`Design`](super::Design) substrate (DESIGN.md §OOC).
+//!
+//! A packed file (written by [`super::pack`]) holds the design matrix in
+//! exactly the byte layout the in-memory types use: row-major f32 for
+//! dense, row-ptr / `u32` col-idx / f32 values / stored KC-chunk-order
+//! norms for CSR. [`MmapMatrix`] and [`MmapCsr`] expose those sections
+//! as borrowed slices straight out of the mapping, so `Dataset::row_into`
+//! / `gather_rows` / `kernel_block` stream rows off disk through the OS
+//! page cache without ever materializing the design — the file can be
+//! 10x larger than RAM and training still runs (rust/EXPERIMENTS.md
+//! §OOC).
+//!
+//! **Bit contract.** A mapped read returns the same bytes the packer
+//! wrote from the in-memory design, and every kernel path consumes those
+//! bytes through the same SIMD primitives and accumulation orders as the
+//! in-memory variants — so an mmap-backed dataset trains bit-identically
+//! to its dense/CSR equivalent (`rust/tests/ooc_props.rs`). CSR norms
+//! are *stored*, not recomputed at load, so they carry the packing
+//! process's backend flavor (pack and train under the same
+//! `WU_SVM_FORCE_SCALAR` setting for cross-flavor runs).
+//!
+//! The mapping itself uses `mmap(2)` through a local `extern "C"`
+//! declaration on unix (std already links libc; no new dependency); on
+//! other targets a read-into-memory fallback presents the same
+//! interface, keeping the types portable at the cost of residency.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+#[cfg(unix)]
+mod sys {
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    /// A read-only private file mapping. The pointer is page-aligned by
+    /// the kernel, which is what makes the typed slice views in
+    /// [`super::MmapFile`] sound.
+    pub struct Map {
+        ptr: *mut u8,
+        len: usize,
+    }
+
+    // The mapping is read-only shared memory; the raw pointer is only a
+    // capability to read immutable bytes.
+    unsafe impl Send for Map {}
+    unsafe impl Sync for Map {}
+
+    impl Map {
+        pub fn of_file(f: &File, len: usize) -> io::Result<Map> {
+            if len == 0 {
+                return Ok(Map { ptr: std::ptr::null_mut(), len: 0 });
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, f.as_raw_fd(), 0)
+            };
+            if ptr.is_null() || ptr as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Map { ptr, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            if self.len == 0 {
+                &[]
+            } else {
+                unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+            }
+        }
+    }
+
+    impl Drop for Map {
+        fn drop(&mut self) {
+            if !self.ptr.is_null() && self.len > 0 {
+                unsafe {
+                    munmap(self.ptr, self.len);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    use std::fs::File;
+    use std::io::{self, Read};
+
+    /// Portable fallback: the whole file read into an 8-byte-aligned
+    /// buffer (`Vec<u64>` backing). Same interface, full residency.
+    pub struct Map {
+        buf: Vec<u64>,
+        len: usize,
+    }
+
+    impl Map {
+        pub fn of_file(f: &File, len: usize) -> io::Result<Map> {
+            let mut buf = vec![0u64; len.div_ceil(8)];
+            if len > 0 {
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len)
+                };
+                let mut r = io::BufReader::new(f);
+                r.read_exact(dst)?;
+            }
+            Ok(Map { buf, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.buf.as_ptr() as *const u8, self.len) }
+        }
+    }
+}
+
+/// A read-only mapped file with typed section views. Sections are laid
+/// out 8-byte-aligned by the packer, and the mapping base is at least
+/// 8-byte-aligned (page-aligned on unix, `u64`-backed in the fallback),
+/// so reinterpreting an aligned byte range as `[f32]`/`[u32]`/`[u64]`
+/// is well-defined.
+pub struct MmapFile {
+    map: sys::Map,
+    len: usize,
+}
+
+impl MmapFile {
+    pub fn open(path: &Path) -> Result<MmapFile> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open packed file {}", path.display()))?;
+        let len = f
+            .metadata()
+            .with_context(|| format!("stat packed file {}", path.display()))?
+            .len() as usize;
+        let map = sys::Map::of_file(&f, len)
+            .with_context(|| format!("map packed file {}", path.display()))?;
+        Ok(MmapFile { map, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        self.map.bytes()
+    }
+
+    fn typed<T>(&self, off: usize, len: usize) -> &[T] {
+        let size = std::mem::size_of::<T>();
+        assert!(off % size == 0, "section offset {off} unaligned for {size}-byte elements");
+        assert!(
+            off + len * size <= self.len,
+            "section [{off}, +{len}x{size}] outside {}-byte mapping",
+            self.len
+        );
+        if len == 0 {
+            return &[];
+        }
+        unsafe {
+            std::slice::from_raw_parts(self.bytes().as_ptr().add(off) as *const T, len)
+        }
+    }
+
+    /// `len` f32 values starting at byte offset `off`.
+    pub fn f32s(&self, off: usize, len: usize) -> &[f32] {
+        self.typed::<f32>(off, len)
+    }
+
+    /// `len` u32 values starting at byte offset `off`.
+    pub fn u32s(&self, off: usize, len: usize) -> &[u32] {
+        self.typed::<u32>(off, len)
+    }
+
+    /// `len` u64 values starting at byte offset `off`.
+    pub fn u64s(&self, off: usize, len: usize) -> &[u64] {
+        self.typed::<u64>(off, len)
+    }
+}
+
+impl std::fmt::Debug for MmapFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MmapFile({} bytes)", self.len)
+    }
+}
+
+/// A dense row-major `rows x cols` f32 matrix served from a mapping.
+/// Byte-for-byte the same layout as [`crate::linalg::Matrix::data`], so
+/// the dense kernel paths consume it unchanged.
+#[derive(Debug, Clone)]
+pub struct MmapMatrix {
+    map: Arc<MmapFile>,
+    pub rows: usize,
+    pub cols: usize,
+    x_off: usize,
+}
+
+impl MmapMatrix {
+    pub fn new(map: Arc<MmapFile>, rows: usize, cols: usize, x_off: usize) -> MmapMatrix {
+        // bounds + alignment checked once here; row views are then plain
+        // subslices of this section
+        let _ = map.f32s(x_off, rows * cols);
+        MmapMatrix { map, rows, cols, x_off }
+    }
+
+    /// The full row-major feature block (a borrowed view of the file).
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        self.map.f32s(self.x_off, self.rows * self.cols)
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data()[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+impl PartialEq for MmapMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows && self.cols == other.cols && self.data() == other.data()
+    }
+}
+
+/// A CSR `rows x cols` matrix served from a mapping: stored norms,
+/// `u64` row pointers, `u32` column indices, f32 values — the same
+/// triplet-plus-norms shape as [`CsrMatrix`], with identical per-row
+/// semantics (`row`, `densify_row_into`, `row_dot_dense` all mirror the
+/// in-memory methods and dispatch through the same SIMD primitives).
+#[derive(Debug, Clone)]
+pub struct MmapCsr {
+    map: Arc<MmapFile>,
+    pub rows: usize,
+    pub cols: usize,
+    nnz: usize,
+    sum_sq_off: usize,
+    row_ptr_off: usize,
+    col_idx_off: usize,
+    vals_off: usize,
+}
+
+use super::sparse::CsrMatrix;
+
+impl MmapCsr {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        map: Arc<MmapFile>,
+        rows: usize,
+        cols: usize,
+        nnz: usize,
+        sum_sq_off: usize,
+        row_ptr_off: usize,
+        col_idx_off: usize,
+        vals_off: usize,
+    ) -> Result<MmapCsr> {
+        let mc = MmapCsr { map, rows, cols, nnz, sum_sq_off, row_ptr_off, col_idx_off, vals_off };
+        // validate bounds/alignment once, plus the row-pointer monotone
+        // invariant every row view depends on
+        let _ = mc.sum_sq();
+        let _ = mc.map.u32s(mc.col_idx_off, mc.nnz);
+        let _ = mc.map.f32s(mc.vals_off, mc.nnz);
+        let rp = mc.row_ptrs();
+        anyhow::ensure!(rp.len() == rows + 1, "row_ptr section has {} entries", rp.len());
+        anyhow::ensure!(
+            rp[0] == 0 && rp[rows] == nnz as u64 && rp.windows(2).all(|w| w[0] <= w[1]),
+            "packed CSR row pointers are not monotone over [0, nnz]"
+        );
+        Ok(mc)
+    }
+
+    #[inline]
+    fn row_ptrs(&self) -> &[u64] {
+        self.map.u64s(self.row_ptr_off, self.rows + 1)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Per-row Σ v², stored at pack time in the KC-chunk order of
+    /// [`crate::linalg::gemm::sum_sq`] (module docs: the exact-diagonal
+    /// contract travels with the file).
+    #[inline]
+    pub fn sum_sq(&self) -> &[f32] {
+        self.map.f32s(self.sum_sq_off, self.rows)
+    }
+
+    /// Row i's `(columns, values)` slices — mirrors [`CsrMatrix::row`].
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let rp = self.row_ptrs();
+        let (lo, hi) = (rp[i] as usize, rp[i + 1] as usize);
+        let cols = &self.map.u32s(self.col_idx_off, self.nnz)[lo..hi];
+        let vals = &self.map.f32s(self.vals_off, self.nnz)[lo..hi];
+        (cols, vals)
+    }
+
+    /// Scatter row i into a dense buffer — mirrors
+    /// [`CsrMatrix::densify_row_into`].
+    pub fn densify_row_into(&self, i: usize, out: &mut [f32]) {
+        assert!(out.len() >= self.cols);
+        for v in out.iter_mut() {
+            *v = 0.0;
+        }
+        let (cols, vals) = self.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            out[c as usize] = v;
+        }
+    }
+
+    /// Dot of row i with a dense vector in the shared KC-chunk order —
+    /// mirrors [`CsrMatrix::row_dot_dense`].
+    pub fn row_dot_dense(&self, i: usize, x: &[f32]) -> f32 {
+        assert!(x.len() >= self.cols);
+        let (cols, vals) = self.row(i);
+        crate::linalg::simd::active().sparse_dot_dense(cols, vals, x)
+    }
+
+    /// Materialize the whole matrix in memory. Norms are copied, not
+    /// recomputed, so the result equals the CSR that was packed bit for
+    /// bit.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let rp = self.row_ptrs();
+        CsrMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr: rp.iter().map(|&p| p as usize).collect(),
+            col_idx: self.map.u32s(self.col_idx_off, self.nnz).to_vec(),
+            vals: self.map.f32s(self.vals_off, self.nnz).to_vec(),
+            sum_sq: self.sum_sq().to_vec(),
+        }
+    }
+
+    /// Gather the given rows into an in-memory CSR (row order = `idx`
+    /// order, norms copied) — mirrors [`CsrMatrix::select`].
+    pub fn select_csr(&self, idx: &[usize]) -> CsrMatrix {
+        let nnz: usize = idx.iter().map(|&i| self.row(i).1.len()).sum();
+        let mut row_ptr = Vec::with_capacity(idx.len() + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        let mut sum_sq = Vec::with_capacity(idx.len());
+        row_ptr.push(0);
+        for &i in idx {
+            let (c, v) = self.row(i);
+            col_idx.extend_from_slice(c);
+            vals.extend_from_slice(v);
+            row_ptr.push(col_idx.len());
+            sum_sq.push(self.sum_sq()[i]);
+        }
+        CsrMatrix { rows: idx.len(), cols: self.cols, row_ptr, col_idx, vals, sum_sq }
+    }
+}
+
+impl PartialEq for MmapCsr {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.row_ptrs() == other.row_ptrs()
+            && self.map.u32s(self.col_idx_off, self.nnz)
+                == other.map.u32s(other.col_idx_off, other.nnz)
+            && self.map.f32s(self.vals_off, self.nnz)
+                == other.map.f32s(other.vals_off, other.nnz)
+    }
+}

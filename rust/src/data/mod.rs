@@ -5,12 +5,17 @@
 //! *sources* are dominated by sparse libsvm files (adult, web, rcv1 at
 //! d ≈ 47k) that cannot densify at full n. A [`Dataset`] therefore
 //! carries a [`Design`]: `Dense(Matrix)` (the seed representation, the
-//! packed-GEMM fast path) or `Sparse(CsrMatrix)` (never densified; the
-//! SpMM fast path — see `rust/DESIGN.md` §SPARSE). Kernel evaluation,
-//! tiling, prediction and serving all dispatch on the design; solvers
-//! are unaware of the distinction.
+//! packed-GEMM fast path), `Sparse(CsrMatrix)` (never densified; the
+//! SpMM fast path — see `rust/DESIGN.md` §SPARSE), or the mmap-backed
+//! variants `MmapDense`/`MmapCsr` served straight from a packed file
+//! written by `wu-svm pack` (`rust/DESIGN.md` §OOC) — the out-of-core
+//! path for sources bigger than RAM. Kernel evaluation, tiling,
+//! prediction and serving all dispatch on the design; solvers are
+//! unaware of the distinction.
 
 pub mod libsvm;
+pub mod mmap;
+pub mod pack;
 pub mod paper;
 pub mod sparse;
 pub mod synth;
@@ -18,6 +23,7 @@ pub mod synth;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 
+pub use mmap::{MmapCsr, MmapMatrix};
 pub use sparse::{CsrMatrix, Design, Format, AUTO_SPARSE_THRESHOLD};
 
 /// A labeled dataset. `labels` are {-1,+1} for binary tasks; multiclass
@@ -71,22 +77,38 @@ impl Dataset {
         self.design.is_sparse()
     }
 
-    /// The CSR design, if this dataset is sparse.
+    /// The in-memory CSR design, if there is one. An mmap CSR design
+    /// returns `None` — its callers dispatch on the design directly
+    /// (or use [`Dataset::sparse_row`]).
     pub fn csr(&self) -> Option<&CsrMatrix> {
         match &self.design {
             Design::Sparse(c) => Some(c),
-            Design::Dense(_) => None,
+            Design::Dense(_) | Design::MmapDense(_) | Design::MmapCsr(_) => None,
         }
     }
 
-    /// The dense row-major feature block. Panics on sparse datasets —
-    /// callers that must handle both use [`Dataset::row_into`] /
-    /// [`Dataset::gather_rows`] or dispatch on [`Dataset::csr`].
+    /// Row i's `(columns, values)` slices for either sparse storage
+    /// (in-memory CSR or mapped CSR); `None` on dense designs.
+    pub fn sparse_row(&self, i: usize) -> Option<(&[u32], &[f32])> {
+        match &self.design {
+            Design::Sparse(c) => Some(c.row(i)),
+            Design::MmapCsr(mc) => Some(mc.row(i)),
+            Design::Dense(_) | Design::MmapDense(_) => None,
+        }
+    }
+
+    /// The dense row-major feature block (in-memory or mapped). Panics
+    /// on sparse datasets — callers that must handle both use
+    /// [`Dataset::row_into`] / [`Dataset::gather_rows`] or dispatch on
+    /// [`Dataset::csr`].
     #[inline]
     pub fn dense_x(&self) -> &[f32] {
         match &self.design {
             Design::Dense(m) => &m.data,
-            Design::Sparse(_) => panic!("dense feature access on sparse dataset '{}'", self.name),
+            Design::MmapDense(m) => m.data(),
+            Design::Sparse(_) | Design::MmapCsr(_) => {
+                panic!("dense feature access on sparse dataset '{}'", self.name)
+            }
         }
     }
 
@@ -109,7 +131,14 @@ impl Dataset {
                     *v = 0.0;
                 }
             }
+            Design::MmapDense(m) => {
+                out[..self.d].copy_from_slice(m.row(i));
+                for v in out[self.d..].iter_mut() {
+                    *v = 0.0;
+                }
+            }
             Design::Sparse(c) => c.densify_row_into(i, out),
+            Design::MmapCsr(mc) => mc.densify_row_into(i, out),
         }
     }
 
@@ -124,9 +153,19 @@ impl Dataset {
                     out[q * d..(q + 1) * d].copy_from_slice(m.row(i));
                 }
             }
+            Design::MmapDense(m) => {
+                for (q, &i) in idx.iter().enumerate() {
+                    out[q * d..(q + 1) * d].copy_from_slice(m.row(i));
+                }
+            }
             Design::Sparse(c) => {
                 for (q, &i) in idx.iter().enumerate() {
                     c.densify_row_into(i, &mut out[q * d..(q + 1) * d]);
+                }
+            }
+            Design::MmapCsr(mc) => {
+                for (q, &i) in idx.iter().enumerate() {
+                    mc.densify_row_into(i, &mut out[q * d..(q + 1) * d]);
                 }
             }
         }
@@ -134,20 +173,34 @@ impl Dataset {
     }
 
     /// Convert to the requested [`Format`] (no-op when already there;
-    /// `Auto` applies the [`AUTO_SPARSE_THRESHOLD`] density rule).
+    /// `Auto` applies the [`AUTO_SPARSE_THRESHOLD`] density rule, and
+    /// leaves mmap-backed designs mapped). An explicit `Dense`/`Csr`
+    /// request on an mmap design materializes it in memory.
     pub fn with_format(mut self, format: Format) -> Dataset {
+        if self.design.is_mmap() && format == Format::Auto {
+            return self;
+        }
         let sparse = self.is_sparse();
         match format {
             Format::Dense if sparse => {
                 let m = match &self.design {
                     Design::Sparse(c) => c.to_dense(),
-                    Design::Dense(_) => unreachable!(),
+                    Design::MmapCsr(mc) => mc.to_csr().to_dense(),
+                    Design::Dense(_) | Design::MmapDense(_) => unreachable!(),
                 };
+                self.design = Design::Dense(m);
+            }
+            Format::Dense if self.design.is_mmap() => {
+                let m = Matrix::from_vec(self.n, self.d, self.dense_x().to_vec());
                 self.design = Design::Dense(m);
             }
             Format::Csr if !sparse => {
                 let csr = CsrMatrix::from_dense(self.n, self.d, self.dense_x());
                 self.design = Design::Sparse(csr);
+            }
+            Format::Csr if matches!(self.design, Design::MmapCsr(_)) => {
+                let Design::MmapCsr(mc) = &self.design else { unreachable!() };
+                self.design = Design::Sparse(mc.to_csr());
             }
             Format::Auto if !sparse && self.sparsity() >= 1.0 - AUTO_SPARSE_THRESHOLD => {
                 let csr = CsrMatrix::from_dense(self.n, self.d, self.dense_x());
@@ -209,7 +262,9 @@ impl Dataset {
         self.select(&idx)
     }
 
-    /// Row-index selection (format-preserving).
+    /// Row-index selection (format-preserving for in-memory designs;
+    /// a selection from an mmap design materializes in memory — the
+    /// subset is expected to be small relative to the mapped file).
     pub fn select(&self, idx: &[usize]) -> Dataset {
         let design = match &self.design {
             Design::Dense(m) => {
@@ -219,7 +274,15 @@ impl Dataset {
                 }
                 Design::Dense(Matrix::from_vec(idx.len(), self.d, x))
             }
+            Design::MmapDense(m) => {
+                let mut x = Vec::with_capacity(idx.len() * self.d);
+                for &i in idx {
+                    x.extend_from_slice(m.row(i));
+                }
+                Design::Dense(Matrix::from_vec(idx.len(), self.d, x))
+            }
             Design::Sparse(c) => Design::Sparse(c.select(idx)),
+            Design::MmapCsr(mc) => Design::Sparse(mc.select_csr(idx)),
         };
         let mut y = Vec::with_capacity(idx.len());
         let mut cls = Vec::new();
@@ -256,8 +319,10 @@ impl Dataset {
         let total = self.n * self.d;
         let nonzero = match &self.design {
             Design::Dense(m) => m.data.iter().filter(|&&v| v != 0.0).count(),
+            Design::MmapDense(m) => m.data().iter().filter(|&&v| v != 0.0).count(),
             // stored values are nonzero by construction
             Design::Sparse(c) => c.nnz(),
+            Design::MmapCsr(mc) => mc.nnz(),
         };
         (total - nonzero) as f64 / total as f64
     }

@@ -1,0 +1,347 @@
+//! The packed on-disk dataset format behind the out-of-core path
+//! (DESIGN.md §OOC).
+//!
+//! `wu-svm pack` converts a libsvm text file once into this binary
+//! layout; [`load_packed`] then memory-maps it and hands back a
+//! [`Dataset`] whose design is [`Design::MmapDense`] or
+//! [`Design::MmapCsr`] — labels are small and copied, the design matrix
+//! stays on disk.
+//!
+//! Layout (all integers and floats native-endian, each section padded
+//! to an 8-byte boundary):
+//!
+//! ```text
+//! header (64 bytes):
+//!   magic    b"WUSVPACK"          8 bytes
+//!   version  u32 = 1
+//!   endian   u32 = 0x01020304     (reads back swapped on the wrong arch)
+//!   kind     u32                  0 = dense, 1 = csr
+//!   flags    u32                  bit 0 = multiclass
+//!   n        u64                  rows
+//!   d        u64                  features
+//!   nnz      u64                  stored values (0 for dense)
+//!   reserved 16 zero bytes
+//! sections:
+//!   y          f32 x n            {-1,+1} labels (multiclass: -1 fill)
+//!   class_ids  u32 x n            only when the multiclass flag is set
+//!   dense kind: x          f32 x (n*d)     row-major design
+//!   csr   kind: sum_sq     f32 x n         stored KC-chunk-order norms
+//!               row_ptr    u64 x (n+1)
+//!               col_idx    u32 x nnz
+//!               vals       f32 x nnz
+//! ```
+//!
+//! The sections are byte-for-byte the in-memory representations (norms
+//! included — stored at pack time, never recomputed at load), which is
+//! the whole bit-identity argument: mapping the file recovers exactly
+//! the arrays the packing process trained from.
+
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::mmap::{MmapCsr, MmapFile, MmapMatrix};
+use super::sparse::Format;
+use super::{Dataset, Design};
+
+pub const MAGIC: &[u8; 8] = b"WUSVPACK";
+pub const VERSION: u32 = 1;
+/// Written native-endian; a cross-endian reader sees the bytes swapped.
+pub const ENDIAN_TAG: u32 = 0x0102_0304;
+const KIND_DENSE: u32 = 0;
+const KIND_CSR: u32 = 1;
+const FLAG_MULTICLASS: u32 = 1;
+const HEADER_BYTES: usize = 64;
+
+fn align8(off: usize) -> usize {
+    (off + 7) & !7
+}
+
+/// Byte offsets of every section for a given header, shared by the
+/// writer and the loader so the two can never disagree.
+struct Layout {
+    y_off: usize,
+    cls_off: usize,
+    x_off: usize,
+    sum_sq_off: usize,
+    row_ptr_off: usize,
+    col_idx_off: usize,
+    vals_off: usize,
+    total: usize,
+}
+
+fn layout(kind: u32, multiclass: bool, n: usize, d: usize, nnz: usize) -> Layout {
+    let y_off = HEADER_BYTES;
+    let cls_off = align8(y_off + 4 * n);
+    let mut off = if multiclass { align8(cls_off + 4 * n) } else { cls_off };
+    let (x_off, sum_sq_off);
+    let (mut row_ptr_off, mut col_idx_off, mut vals_off) = (off, off, off);
+    if kind == KIND_DENSE {
+        x_off = off;
+        sum_sq_off = off;
+        off = align8(off + 4 * n * d);
+    } else {
+        x_off = off;
+        sum_sq_off = off;
+        off = align8(off + 4 * n);
+        row_ptr_off = off;
+        off = align8(off + 8 * (n + 1));
+        col_idx_off = off;
+        off = align8(off + 4 * nnz);
+        vals_off = off;
+        off = align8(off + 4 * nnz);
+    }
+    Layout { y_off, cls_off, x_off, sum_sq_off, row_ptr_off, col_idx_off, vals_off, total: off }
+}
+
+/// View any plain scalar slice as native-endian bytes.
+fn raw_bytes<T: Copy>(v: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+    }
+}
+
+/// Advance the writer to `off` with zero padding, then emit `bytes`.
+fn put<W: Write>(w: &mut W, pos: &mut usize, off: usize, bytes: &[u8]) -> Result<()> {
+    assert!(off >= *pos, "section write out of order");
+    const ZEROS: [u8; 8] = [0; 8];
+    w.write_all(&ZEROS[..off - *pos])?;
+    w.write_all(bytes)?;
+    *pos = off + bytes.len();
+    Ok(())
+}
+
+/// Whether `path` starts with the packed-file magic (the coordinator
+/// sniffs this so `--input file.wup` needs no format flag).
+pub fn is_packed_file(path: &Path) -> bool {
+    let mut head = [0u8; 8];
+    match std::fs::File::open(path) {
+        Ok(mut f) => f.read_exact(&mut head).is_ok() && &head == MAGIC,
+        Err(_) => false,
+    }
+}
+
+/// Write a dataset's in-memory design to the packed layout. Refuses
+/// mmap-backed designs — they already live in a packed file.
+pub fn write_packed(ds: &Dataset, path: &Path) -> Result<()> {
+    let (kind, nnz) = match &ds.design {
+        Design::Dense(_) => (KIND_DENSE, 0),
+        Design::Sparse(c) => (KIND_CSR, c.nnz()),
+        Design::MmapDense(_) | Design::MmapCsr(_) => {
+            bail!("dataset '{}' is already mmap-backed; copy the packed file instead", ds.name)
+        }
+    };
+    let multiclass = ds.is_multiclass();
+    let lay = layout(kind, multiclass, ds.n, ds.d, nnz);
+
+    let mut header = [0u8; HEADER_BYTES];
+    header[..8].copy_from_slice(MAGIC);
+    header[8..12].copy_from_slice(&VERSION.to_ne_bytes());
+    header[12..16].copy_from_slice(&ENDIAN_TAG.to_ne_bytes());
+    header[16..20].copy_from_slice(&kind.to_ne_bytes());
+    let flags: u32 = if multiclass { FLAG_MULTICLASS } else { 0 };
+    header[20..24].copy_from_slice(&flags.to_ne_bytes());
+    header[24..32].copy_from_slice(&(ds.n as u64).to_ne_bytes());
+    header[32..40].copy_from_slice(&(ds.d as u64).to_ne_bytes());
+    header[40..48].copy_from_slice(&(nnz as u64).to_ne_bytes());
+
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create packed file {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    let mut pos = 0usize;
+    put(&mut w, &mut pos, 0, &header)?;
+    put(&mut w, &mut pos, lay.y_off, raw_bytes(&ds.y))?;
+    if multiclass {
+        let cls: Vec<u32> = ds.class_ids.iter().map(|&c| c as u32).collect();
+        put(&mut w, &mut pos, lay.cls_off, raw_bytes(&cls))?;
+    }
+    match &ds.design {
+        Design::Dense(m) => put(&mut w, &mut pos, lay.x_off, raw_bytes(&m.data))?,
+        Design::Sparse(c) => {
+            put(&mut w, &mut pos, lay.sum_sq_off, raw_bytes(&c.sum_sq))?;
+            let rp: Vec<u64> = c.row_ptr.iter().map(|&p| p as u64).collect();
+            put(&mut w, &mut pos, lay.row_ptr_off, raw_bytes(&rp))?;
+            put(&mut w, &mut pos, lay.col_idx_off, raw_bytes(&c.col_idx))?;
+            put(&mut w, &mut pos, lay.vals_off, raw_bytes(&c.vals))?;
+        }
+        Design::MmapDense(_) | Design::MmapCsr(_) => unreachable!(),
+    }
+    put(&mut w, &mut pos, lay.total, &[])?;
+    w.flush().with_context(|| format!("write packed file {}", path.display()))?;
+    Ok(())
+}
+
+fn header_u32(bytes: &[u8], off: usize) -> u32 {
+    u32::from_ne_bytes(bytes[off..off + 4].try_into().unwrap())
+}
+
+fn header_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_ne_bytes(bytes[off..off + 8].try_into().unwrap())
+}
+
+/// Memory-map a packed file into a [`Dataset`]: labels copied (small),
+/// design served from the mapping.
+pub fn load_packed(path: &Path) -> Result<Dataset> {
+    let map = Arc::new(MmapFile::open(path)?);
+    let bytes = map.bytes();
+    if bytes.len() < HEADER_BYTES || &bytes[..8] != MAGIC {
+        bail!("{} is not a wu-svm packed file (bad magic)", path.display());
+    }
+    let version = header_u32(bytes, 8);
+    if version != VERSION {
+        bail!("{}: packed format v{version}, this build reads v{VERSION}", path.display());
+    }
+    let endian = header_u32(bytes, 12);
+    if endian != ENDIAN_TAG {
+        if endian == ENDIAN_TAG.swap_bytes() {
+            bail!(
+                "{} was packed on a machine with the opposite endianness; repack it here",
+                path.display()
+            );
+        }
+        bail!("{}: corrupt endianness tag {endian:#010x}", path.display());
+    }
+    let kind = header_u32(bytes, 16);
+    let flags = header_u32(bytes, 20);
+    let n = header_u64(bytes, 24) as usize;
+    let d = header_u64(bytes, 32) as usize;
+    let nnz = header_u64(bytes, 40) as usize;
+    let multiclass = flags & FLAG_MULTICLASS != 0;
+    if kind != KIND_DENSE && kind != KIND_CSR {
+        bail!("{}: unknown design kind {kind}", path.display());
+    }
+    let lay = layout(kind, multiclass, n, d, nnz);
+    if lay.total != bytes.len() {
+        bail!(
+            "{}: header promises {} bytes, file has {} (truncated or corrupt)",
+            path.display(),
+            lay.total,
+            bytes.len()
+        );
+    }
+    let y = map.f32s(lay.y_off, n).to_vec();
+    let class_ids: Vec<usize> = if multiclass {
+        map.u32s(lay.cls_off, n).iter().map(|&c| c as usize).collect()
+    } else {
+        Vec::new()
+    };
+    let design = if kind == KIND_DENSE {
+        Design::MmapDense(MmapMatrix::new(map, n, d, lay.x_off))
+    } else {
+        Design::MmapCsr(MmapCsr::new(
+            map,
+            n,
+            d,
+            nnz,
+            lay.sum_sq_off,
+            lay.row_ptr_off,
+            lay.col_idx_off,
+            lay.vals_off,
+        )?)
+    };
+    let name = path.file_stem().map_or_else(|| "packed".into(), |s| s.to_string_lossy());
+    Ok(Dataset { n, d, design, y, class_ids, name: name.into_owned() })
+}
+
+/// The one-shot converter behind `wu-svm pack`: parse a libsvm text
+/// file (honoring the usual `--format` choice, `Auto` applies the
+/// density rule) and write the packed layout. Returns `(rows, features,
+/// storage-kind-name)` for the report.
+pub fn pack_file(
+    input: &Path,
+    output: &Path,
+    d_hint: usize,
+    format: Format,
+) -> Result<(usize, usize, &'static str)> {
+    let ds = super::libsvm::read_file_with(input, d_hint, format)?;
+    write_packed(&ds, output)?;
+    let kind = if ds.is_sparse() { "csr" } else { "dense" };
+    Ok((ds.n, ds.d, kind))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("wu_svm_pack_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn dense_ds() -> Dataset {
+        Dataset::new_binary(
+            "t",
+            3,
+            vec![1.0, 0.0, 2.5, -1.0, 0.5, 0.0, 0.0, 0.0, 4.0],
+            vec![1.0, -1.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn dense_round_trip_is_bit_exact() {
+        let ds = dense_ds();
+        let path = tmp("dense.wup");
+        write_packed(&ds, &path).unwrap();
+        assert!(is_packed_file(&path));
+        let back = load_packed(&path).unwrap();
+        assert_eq!(back.n, ds.n);
+        assert_eq!(back.d, ds.d);
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.dense_x(), ds.dense_x());
+        assert!(matches!(back.design, Design::MmapDense(_)));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csr_round_trip_preserves_triplet_and_norms() {
+        let ds = dense_ds().with_format(Format::Csr);
+        let path = tmp("csr.wup");
+        write_packed(&ds, &path).unwrap();
+        let back = load_packed(&path).unwrap();
+        let want = ds.csr().unwrap();
+        let Design::MmapCsr(mc) = &back.design else { panic!("expected mmap csr") };
+        assert_eq!(mc.to_csr(), *want);
+        for i in 0..ds.n {
+            let (wc, wv) = want.row(i);
+            assert_eq!(mc.row(i), (wc, wv));
+            assert_eq!(mc.sum_sq()[i].to_bits(), want.sum_sq[i].to_bits());
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn multiclass_labels_survive() {
+        let ds = Dataset::new_multiclass("m", 2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0], vec![0, 2, 1]);
+        let path = tmp("multi.wup");
+        write_packed(&ds, &path).unwrap();
+        let back = load_packed(&path).unwrap();
+        assert_eq!(back.class_ids, ds.class_ids);
+        assert!(back.is_multiclass());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn loader_rejects_corruption() {
+        let ds = dense_ds();
+        let path = tmp("corrupt.wup");
+        write_packed(&ds, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flipped endianness tag must be diagnosed, not misread
+        bytes[12..16].copy_from_slice(&ENDIAN_TAG.swap_bytes().to_ne_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_packed(&path).unwrap_err().to_string();
+        assert!(err.contains("endian"), "{err}");
+        // truncation must be diagnosed too
+        bytes[12..16].copy_from_slice(&ENDIAN_TAG.to_ne_bytes());
+        bytes.truncate(bytes.len() - 4);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_packed(&path).is_err());
+        std::fs::write(&path, b"short").unwrap();
+        assert!(load_packed(&path).is_err());
+        assert!(!is_packed_file(&path));
+        std::fs::remove_file(path).ok();
+    }
+}

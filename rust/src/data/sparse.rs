@@ -30,6 +30,11 @@ pub enum Design {
     Dense(crate::linalg::Matrix),
     /// CSR, for sparse sources that must never densify on load.
     Sparse(CsrMatrix),
+    /// Dense rows memory-mapped from a packed file — the out-of-core
+    /// path (DESIGN.md §OOC); byte-identical to `Dense` row data.
+    MmapDense(crate::data::mmap::MmapMatrix),
+    /// CSR memory-mapped from a packed file (stored norms included).
+    MmapCsr(crate::data::mmap::MmapCsr),
 }
 
 impl Design {
@@ -37,6 +42,8 @@ impl Design {
         match self {
             Design::Dense(m) => m.rows,
             Design::Sparse(c) => c.rows,
+            Design::MmapDense(m) => m.rows,
+            Design::MmapCsr(c) => c.rows,
         }
     }
 
@@ -44,18 +51,37 @@ impl Design {
         match self {
             Design::Dense(m) => m.cols,
             Design::Sparse(c) => c.cols,
+            Design::MmapDense(m) => m.cols,
+            Design::MmapCsr(c) => c.cols,
         }
     }
 
     pub fn is_sparse(&self) -> bool {
-        matches!(self, Design::Sparse(_))
+        matches!(self, Design::Sparse(_) | Design::MmapCsr(_))
     }
 
-    /// Approximate in-memory footprint in bytes.
+    /// Whether the design is served from a mapped file (out of core).
+    pub fn is_mmap(&self) -> bool {
+        matches!(self, Design::MmapDense(_) | Design::MmapCsr(_))
+    }
+
+    /// Stable storage-kind name for reports (`storage = ...` note).
+    pub fn storage(&self) -> &'static str {
+        match self {
+            Design::Dense(_) => "dense",
+            Design::Sparse(_) => "csr",
+            Design::MmapDense(_) => "mmap-dense",
+            Design::MmapCsr(_) => "mmap-csr",
+        }
+    }
+
+    /// Approximate in-memory footprint in bytes. Mapped designs report
+    /// 0 — their pages live in the OS page cache, not the heap.
     pub fn bytes(&self) -> usize {
         match self {
             Design::Dense(m) => m.data.len() * 4,
             Design::Sparse(c) => c.bytes(),
+            Design::MmapDense(_) | Design::MmapCsr(_) => 0,
         }
     }
 }

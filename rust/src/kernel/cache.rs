@@ -20,7 +20,76 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+/// How many megabytes of kernel rows the shared cache may hold: a fixed
+/// figure, or `Auto` — sized from the machine's available RAM at train
+/// time (the out-of-core recipe: give the cache most of what the mapped
+/// design is *not* using, see DESIGN.md §OOC). `--cache-mb auto` on the
+/// CLI parses to `Auto`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheBudget {
+    Mb(usize),
+    Auto,
+}
+
+/// Fraction of detected available RAM handed to the row cache under
+/// `Auto`. Leaves headroom for solver state, staging buffers, and the
+/// page cache holding the mapped design itself.
+const AUTO_RAM_FRACTION: f64 = 0.5;
+
+/// Fallback budget when available RAM cannot be detected (non-Linux, or
+/// an unreadable `/proc/meminfo`).
+const AUTO_FALLBACK_MB: usize = 1024;
+
+impl CacheBudget {
+    /// Parse a `--cache-mb` value: `"auto"` or a megabyte count.
+    pub fn parse(s: &str) -> Result<CacheBudget> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(CacheBudget::Auto);
+        }
+        match s.parse::<usize>() {
+            Ok(mb) => Ok(CacheBudget::Mb(mb)),
+            Err(_) => bail!("cache-mb must be a megabyte count or 'auto', got '{s}'"),
+        }
+    }
+
+    /// Resolve to a concrete megabyte figure. `Auto` takes
+    /// [`AUTO_RAM_FRACTION`] of `MemAvailable` from `/proc/meminfo`
+    /// (the kernel's own estimate of reclaimable memory), falling back
+    /// to [`AUTO_FALLBACK_MB`] when that is unreadable.
+    pub fn resolve_mb(self) -> usize {
+        match self {
+            CacheBudget::Mb(mb) => mb,
+            CacheBudget::Auto => match available_ram_mb() {
+                Some(avail) => ((avail as f64 * AUTO_RAM_FRACTION) as usize).max(1),
+                None => AUTO_FALLBACK_MB,
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for CacheBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheBudget::Mb(mb) => write!(f, "{mb}"),
+            CacheBudget::Auto => write!(f, "auto"),
+        }
+    }
+}
+
+/// `MemAvailable` from `/proc/meminfo` in megabytes, `None` off-Linux
+/// or on any parse surprise.
+fn available_ram_mb() -> Option<usize> {
+    let text = std::fs::read_to_string("/proc/meminfo").ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("MemAvailable:") {
+            let kb: usize = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb / 1024);
+        }
+    }
+    None
+}
 
 /// Byte-bounded LRU cache of f32 kernel rows.
 pub struct RowCache {
@@ -298,6 +367,29 @@ impl SharedRowCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cache_budget_parses_fixed_and_auto() {
+        assert_eq!(CacheBudget::parse("256").unwrap(), CacheBudget::Mb(256));
+        assert_eq!(CacheBudget::parse("auto").unwrap(), CacheBudget::Auto);
+        assert_eq!(CacheBudget::parse("AUTO").unwrap(), CacheBudget::Auto);
+        assert!(CacheBudget::parse("lots").is_err());
+        assert!(CacheBudget::parse("-3").is_err());
+    }
+
+    #[test]
+    fn cache_budget_resolves_to_positive_mb() {
+        assert_eq!(CacheBudget::Mb(64).resolve_mb(), 64);
+        // Auto must yield something usable whether or not /proc/meminfo
+        // exists on the test machine.
+        assert!(CacheBudget::Auto.resolve_mb() >= 1);
+    }
+
+    #[test]
+    fn cache_budget_displays_cli_form() {
+        assert_eq!(CacheBudget::Mb(128).to_string(), "128");
+        assert_eq!(CacheBudget::Auto.to_string(), "auto");
+    }
 
     fn fill_const(v: f32) -> impl FnOnce(&mut [f32]) {
         move |row| row.iter_mut().for_each(|x| *x = v)

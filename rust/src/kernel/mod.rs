@@ -17,10 +17,51 @@
 pub mod cache;
 pub mod operator;
 
-use crate::data::{CsrMatrix, Dataset, Design};
+use crate::data::{CsrMatrix, Dataset, Design, MmapCsr};
 use crate::linalg::{gemm, spmm};
 use crate::pool;
 use crate::pool::SendPtr;
+
+/// Either sparse storage (in-memory CSR or mapped CSR from a packed
+/// file) behind one row interface, so the sparse kernel paths are
+/// written once. Both variants dispatch to the same SIMD primitives on
+/// the same bytes, which is what keeps mmap-backed training
+/// bit-identical to in-memory CSR (DESIGN.md §OOC).
+enum SparseSrc<'a> {
+    Mem(&'a CsrMatrix),
+    Map(&'a MmapCsr),
+}
+
+impl SparseSrc<'_> {
+    fn densify_row_into(&self, i: usize, out: &mut [f32]) {
+        match self {
+            SparseSrc::Mem(c) => c.densify_row_into(i, out),
+            SparseSrc::Map(c) => c.densify_row_into(i, out),
+        }
+    }
+
+    fn sum_sq(&self, i: usize) -> f32 {
+        match self {
+            SparseSrc::Mem(c) => c.sum_sq[i],
+            SparseSrc::Map(c) => c.sum_sq()[i],
+        }
+    }
+
+    fn row_dot_dense(&self, i: usize, x: &[f32]) -> f32 {
+        match self {
+            SparseSrc::Mem(c) => c.row_dot_dense(i, x),
+            SparseSrc::Map(c) => c.row_dot_dense(i, x),
+        }
+    }
+}
+
+fn sparse_src(ds: &Dataset) -> Option<SparseSrc<'_>> {
+    match &ds.design {
+        Design::Sparse(c) => Some(SparseSrc::Mem(c)),
+        Design::MmapCsr(c) => Some(SparseSrc::Map(c)),
+        Design::Dense(_) | Design::MmapDense(_) => None,
+    }
+}
 
 /// Kernel function family. The paper evaluates RBF throughout; linear and
 /// polynomial are provided for completeness of the public API.
@@ -72,17 +113,18 @@ impl KernelKind {
 /// deterministic for every thread count like the dense path.
 pub fn kernel_row(kind: &KernelKind, ds: &Dataset, i: usize, threads: usize, out: &mut [f32]) {
     assert_eq!(out.len(), ds.n);
-    if let Design::Sparse(csr) = &ds.design {
+    if let Some(src) = sparse_src(ds) {
         let mut xi = vec![0.0f32; ds.d];
-        csr.densify_row_into(i, &mut xi);
-        let xi_sq = csr.sum_sq[i];
+        src.densify_row_into(i, &mut xi);
+        let xi_sq = src.sum_sq(i);
+        let src = &src;
         pool::parallel_chunks_mut(threads, out, 256, |c, slice| {
             for (off, slot) in slice.iter_mut().enumerate() {
                 let j = c * 256 + off;
-                let dot = csr.row_dot_dense(j, &xi);
+                let dot = src.row_dot_dense(j, &xi);
                 *slot = match *kind {
                     KernelKind::Rbf { gamma } => {
-                        let d2 = (xi_sq + csr.sum_sq[j] - 2.0 * dot).max(0.0);
+                        let d2 = (xi_sq + src.sum_sq(j) - 2.0 * dot).max(0.0);
                         (-gamma * d2).exp()
                     }
                     KernelKind::Linear => dot,
@@ -128,13 +170,24 @@ pub fn kernel_block(
         return;
     }
     let is_prefix = |idx: &[usize]| idx.iter().enumerate().all(|(q, &i)| q == i);
-    if let Design::Sparse(csr) = &ds.design {
+    if let Some(src) = sparse_src(ds) {
         let sub_store;
-        let acsr: &CsrMatrix = if is_prefix(ri) {
-            csr
-        } else {
-            sub_store = csr.select(ri);
-            &sub_store
+        let acsr: &CsrMatrix = match &ds.design {
+            Design::Sparse(csr) if is_prefix(ri) => csr,
+            Design::Sparse(csr) => {
+                sub_store = csr.select(ri);
+                &sub_store
+            }
+            // The SpMM row side needs an in-memory CSR, so a mapped
+            // design materializes just the `ri` rows — bounded by the
+            // caller's tile height (operators stream ~32 MB tiles), not
+            // by n. Row data and stored norms copy bit-for-bit, so the
+            // block equals the in-memory result exactly.
+            Design::MmapCsr(mc) => {
+                sub_store = mc.select_csr(ri);
+                &sub_store
+            }
+            Design::Dense(_) | Design::MmapDense(_) => unreachable!(),
         };
         // Densify the ci side in column blocks: with ci = all rows of a
         // wide sparse dataset (the `full_kernel` case, rcv1-class d), a
@@ -144,7 +197,7 @@ pub fn kernel_block(
         // change no per-element accumulation, so values stay
         // bit-identical to the unblocked call.
         let bw = n.min(((32 << 20) / (4 * d.max(1))).max(16));
-        kernel_block_csr(kind, acsr, m, csr, ci, threads, bw, out);
+        kernel_block_csr(kind, acsr, m, &src, ci, threads, bw, out);
         return;
     }
     let gather = |idx: &[usize]| -> Vec<f32> {
@@ -192,7 +245,7 @@ fn kernel_block_csr(
     kind: &KernelKind,
     acsr: &CsrMatrix,
     m: usize,
-    src: &CsrMatrix,
+    src: &SparseSrc,
     ci: &[usize],
     threads: usize,
     bw: usize,
@@ -442,10 +495,10 @@ mod tests {
             KernelKind::Poly { degree: 2, gamma: 0.4, coef0: 0.5 },
         ] {
             let mut whole = vec![0.0; 40 * ci.len()];
-            kernel_block_csr(&kind, csr, 40, csr, &ci, 4, ci.len(), &mut whole);
+            kernel_block_csr(&kind, csr, 40, &SparseSrc::Mem(csr), &ci, 4, ci.len(), &mut whole);
             for bw in [1usize, 2, 4] {
                 let mut blocked = vec![0.0; 40 * ci.len()];
-                kernel_block_csr(&kind, csr, 40, csr, &ci, 4, bw, &mut blocked);
+                kernel_block_csr(&kind, csr, 40, &SparseSrc::Mem(csr), &ci, 4, bw, &mut blocked);
                 assert_eq!(whole, blocked, "{} bw={bw}", kind.name());
             }
         }

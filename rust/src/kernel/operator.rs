@@ -48,20 +48,27 @@ pub trait KernelOperator: Send + Sync {
 pub fn kernel_diag(kind: &KernelKind, ds: &Dataset, out: &mut [f32]) {
     assert_eq!(out.len(), ds.n);
     match &ds.design {
-        Design::Dense(_) => {
+        Design::Dense(_) | Design::MmapDense(_) => {
             for i in 0..ds.n {
                 out[i] = kind.self_eval(ds.row(i));
             }
         }
-        Design::Sparse(csr) => match *kind {
-            KernelKind::Rbf { .. } => out.fill(1.0),
-            KernelKind::Linear => out.copy_from_slice(&csr.sum_sq),
-            KernelKind::Poly { degree, gamma, coef0 } => {
-                for i in 0..ds.n {
-                    out[i] = (gamma * csr.sum_sq[i] + coef0).powi(degree);
+        Design::Sparse(_) | Design::MmapCsr(_) => {
+            let sum_sq: &[f32] = match &ds.design {
+                Design::Sparse(csr) => &csr.sum_sq,
+                Design::MmapCsr(mc) => mc.sum_sq(),
+                _ => unreachable!(),
+            };
+            match *kind {
+                KernelKind::Rbf { .. } => out.fill(1.0),
+                KernelKind::Linear => out.copy_from_slice(sum_sq),
+                KernelKind::Poly { degree, gamma, coef0 } => {
+                    for i in 0..ds.n {
+                        out[i] = (gamma * sum_sq[i] + coef0).powi(degree);
+                    }
                 }
             }
-        },
+        }
     }
 }
 

@@ -38,10 +38,22 @@ COMMANDS
             --cascade-layers auto|L  (merge-layer cap; reaching it
               collapses the remaining fits in one final merge)
             --cascade-kkt-tol T  (global KKT sweep tolerance, default 1e-3)
+            --cache-mb N|auto  (kernel row cache budget; auto sizes to
+              half of available RAM from /proc/meminfo)
+            --cache-slack F  (smo|wss: among rows within F*eps of the
+              max violation, prefer one already in the cache; 0 = off,
+              bit-identical; F in [0, 1))
+            --polish  (smo|wss: after converging with shrinking,
+              re-optimize the full unshrunk problem until KKT-clean;
+              report notes polish = clean|capped|stalled)
             --save model.txt  (unknown --keys are rejected)
             --profile  (per-phase wall breakdown + runtime counters)
             --trace-json trace.json  (Chrome trace-event export; open
               in chrome://tracing or ui.perfetto.dev)
+  pack      --input data.libsvm --out data.wusvm [--format dense|csr|auto]
+            [--d N]  (one-shot convert to the packed mmap layout; train
+            then streams rows off disk: --input data.wusvm is sniffed
+            by magic and memory-mapped instead of parsed)
   predict   --model model.txt --input data.libsvm [--threads N]
             [--format dense|csr|auto]
   datagen   --dataset KEY --scale S --out file.libsvm [--test-out f]
@@ -80,6 +92,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "train" => run_traced(&cfg, || cmd_train(&cfg)),
         "predict" => cmd_predict(&cfg),
+        "pack" => cmd_pack(&cfg),
         "datagen" => cmd_datagen(&cfg),
         "bench" => run_traced(&cfg, || cmd_bench(&cfg)),
         "serve" => cmd_serve(&cfg),
@@ -177,6 +190,25 @@ fn cmd_predict(cfg: &Config) -> Result<()> {
         fmt_duration(dt),
         ds.n as f64 / dt.as_secs_f64(),
         err * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_pack(cfg: &Config) -> Result<()> {
+    cfg.check_known(&["input", "out", "format", "d"])?;
+    let input = cfg.get("input").ok_or_else(|| anyhow::anyhow!("--input required"))?;
+    let out = cfg
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(input).with_extension("wusvm"));
+    let d_hint = cfg.usize_or("d", 0)?;
+    let format = wu_svm::data::Format::parse(&cfg.str_or("format", "auto"))?;
+    let t0 = std::time::Instant::now();
+    let (n, d, kind) = wu_svm::data::pack::pack_file(Path::new(input), &out, d_hint, format)?;
+    println!(
+        "packed {n} rows (d = {d}, {kind}) to {} in {}",
+        out.display(),
+        fmt_duration(t0.elapsed())
     );
     Ok(())
 }

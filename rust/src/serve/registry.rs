@@ -233,6 +233,9 @@ fn store_rbf_block(
             spmm::rbf_dense_csr_pre(threads, x, t, csr, gamma, &mut k);
             Ok(k)
         }
+        Design::MmapDense(_) | Design::MmapCsr(_) => {
+            unreachable!("serve stores are packed in-memory by the compiler")
+        }
     }
 }
 
@@ -242,6 +245,9 @@ fn store_dist2(store: &Design, d: usize, j: usize, x: &[f32], xsq: f32) -> f32 {
         Design::Dense(m) => gemm::dist2_lanes(x, &m.data[j * d..(j + 1) * d]),
         Design::Sparse(csr) => {
             (xsq + csr.sum_sq[j] - 2.0 * csr.row_dot_dense(j, x)).max(0.0)
+        }
+        Design::MmapDense(_) | Design::MmapCsr(_) => {
+            unreachable!("serve stores are packed in-memory by the compiler")
         }
     }
 }

@@ -49,11 +49,25 @@ impl TiledData {
     /// datasets stay in CSR (requires `d_pad == ds.d` — the cpu engines'
     /// convention; the xla path uses [`TiledData::densified`]).
     pub fn new(ds: &Dataset, t: usize, d_pad: usize) -> TiledData {
-        if let Some(csr) = ds.csr() {
+        if ds.is_sparse() {
             assert_eq!(
                 d_pad, ds.d,
                 "sparse tiles take no feature padding (use TiledData::densified)"
             );
+            // Mapped CSR materializes (same triplets, same stored norms)
+            // so tile solvers run the identical SpMM substrate and stay
+            // bit-identical to the in-memory equivalent.
+            let owned;
+            let csr = match ds.csr() {
+                Some(c) => c,
+                None => {
+                    let crate::data::Design::MmapCsr(mc) = &ds.design else {
+                        unreachable!("sparse design is CSR or mapped CSR")
+                    };
+                    owned = mc.to_csr();
+                    &owned
+                }
+            };
             let n_tiles = (ds.n + t - 1) / t;
             let (y, m) = Self::label_tiles(ds, t, n_tiles);
             return TiledData {
@@ -321,6 +335,13 @@ impl KernelRows {
 
     pub fn hit_rate(&self) -> f64 {
         self.cache.hit_rate()
+    }
+
+    /// Whether row `i` is resident in the backing cache right now — the
+    /// cache-aware scheduling probe (`--cache-slack`). Pure peek: no
+    /// fill, no LRU touch, so probing never perturbs eviction order.
+    pub fn is_cached(&self, i: usize) -> bool {
+        self.cache.contains(self.group, i)
     }
 
     /// Bytes the backing cache evicted so far — nonzero means the

@@ -62,6 +62,19 @@ pub struct SmoParams {
     /// from the engine. 1 reproduces the pre-shrinking seed behavior
     /// where only kernel-row fills were threaded.
     pub scan_threads: usize,
+    /// Cache-aware WSS (`--cache-slack`, DESIGN.md §OOC): among I_up
+    /// candidates whose violation is within `cache_slack * eps` of the
+    /// maximum, prefer a row already resident in the kernel cache
+    /// (counted by the `cache_preferred_picks` counter). `0.0` (the
+    /// default) skips the probe entirely and is bit-identical to plain
+    /// WSS2; values are clamped below 1 so a re-pick can never mask an
+    /// unconverged problem.
+    pub cache_slack: f64,
+    /// Polishing phase (`--polish`): after convergence with shrinking,
+    /// re-optimize the unshrunk problem over (mostly cached) rows until
+    /// KKT-clean. Off (the default) is bit-identical to the phase not
+    /// existing.
+    pub polish: bool,
 }
 
 impl Default for SmoParams {
@@ -72,6 +85,8 @@ impl Default for SmoParams {
             cache_mb: 512,
             shrinking: true,
             scan_threads: 0,
+            cache_slack: 0.0,
+            polish: false,
         }
     }
 }
@@ -298,6 +313,112 @@ fn be_shrunk(
     }
 }
 
+/// Cache-aware re-pick of the first working-set variable
+/// (`--cache-slack`): walk the active set in index order and take the
+/// first `I_up` candidate whose violation is within `slack_abs` of the
+/// maximum *and* whose kernel row is already cached. Sequential and
+/// deterministic — the same candidate wins at every thread count. Falls
+/// back to the true argmax when it is itself cached or nothing cheaper
+/// qualifies. Returns the winner and its own violation value (the
+/// second-order formula in [`select_j`] needs the actual `-y_i G_i`).
+#[allow(clippy::too_many_arguments)]
+fn repick_cached_i(
+    active: &[usize],
+    y: &[f64],
+    alpha: &[f64],
+    grad: &[f64],
+    c: f64,
+    gmax: f64,
+    i_sel: usize,
+    slack_abs: f64,
+    rows: &KernelRows,
+) -> (f64, usize) {
+    if rows.is_cached(i_sel) {
+        return (gmax, i_sel);
+    }
+    let thresh = gmax - slack_abs;
+    for &t in active {
+        if t != i_sel && in_i_up(y[t], alpha[t], c) {
+            let v = -y[t] * grad[t];
+            if v >= thresh && rows.is_cached(t) {
+                crate::trace::count(crate::trace::Counter::CachePreferredPicks, 1);
+                return (v, t);
+            }
+        }
+    }
+    (gmax, i_sel)
+}
+
+/// Analytic two-variable update (LibSVM Solver::Solve): move the pair
+/// `(i, j)` along the equality constraint to the unconstrained optimum,
+/// then clip to the box. `kij` is `K(i, j)`. Returns the alpha deltas
+/// `(dai, daj)` for the gradient maintenance pass.
+#[allow(clippy::too_many_arguments)]
+fn pair_update(
+    alpha: &mut [f64],
+    grad: &[f64],
+    diag: &[f64],
+    i: usize,
+    j: usize,
+    yi: f64,
+    yj: f64,
+    kij: f64,
+    c: f64,
+) -> (f64, f64) {
+    let old_ai = alpha[i];
+    let old_aj = alpha[j];
+    if yi != yj {
+        let quad = (diag[i] + diag[j] + 2.0 * kij).max(TAU);
+        let delta = (-grad[i] - grad[j]) / quad;
+        let diff = alpha[i] - alpha[j];
+        alpha[i] += delta;
+        alpha[j] += delta;
+        if diff > 0.0 {
+            if alpha[j] < 0.0 {
+                alpha[j] = 0.0;
+                alpha[i] = diff;
+            }
+        } else if alpha[i] < 0.0 {
+            alpha[i] = 0.0;
+            alpha[j] = -diff;
+        }
+        if diff > 0.0 {
+            if alpha[i] > c {
+                alpha[i] = c;
+                alpha[j] = c - diff;
+            }
+        } else if alpha[j] > c {
+            alpha[j] = c;
+            alpha[i] = c + diff;
+        }
+    } else {
+        let quad = (diag[i] + diag[j] - 2.0 * kij).max(TAU);
+        let delta = (grad[i] - grad[j]) / quad;
+        let sum = alpha[i] + alpha[j];
+        alpha[i] -= delta;
+        alpha[j] += delta;
+        if sum > c {
+            if alpha[i] > c {
+                alpha[i] = c;
+                alpha[j] = sum - c;
+            }
+        } else if alpha[j] < 0.0 {
+            alpha[j] = 0.0;
+            alpha[i] = sum;
+        }
+        if sum > c {
+            if alpha[j] > c {
+                alpha[j] = c;
+                alpha[i] = sum - c;
+            }
+        } else if alpha[i] < 0.0 {
+            alpha[i] = 0.0;
+            alpha[j] = sum;
+        }
+    }
+    (alpha[i] - old_ai, alpha[j] - old_aj)
+}
+
 /// Recompute the gradient of every index *not* in `active` from scratch:
 /// `G_t = -1 + y_t * sum_j alpha_j y_j K(j, t)`, streaming one (usually
 /// cached) kernel row per nonzero alpha — K is symmetric, so row j
@@ -381,6 +502,9 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
     let mut ph = crate::trace::phases();
     let n = ds.n;
     let c = params.c as f64;
+    // slack < 1 guarantees a re-picked i still finds a positive-gain j
+    // whenever the true violation exceeds eps (see repick_cached_i)
+    let cache_slack = params.cache_slack.clamp(0.0, 0.95);
     // the meter's wall clock starts before any setup work so budgets
     // and IterEvent.elapsed cover the whole training call
     let mut meter = ctx.meter("smo", Budget::smo_default_iters(n));
@@ -466,12 +590,22 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
             }
             break;
         }
+        // cache-aware scheduling: trade at most `cache_slack * eps` of
+        // violation for a row that needs no recompute. The convergence
+        // test below still uses the true maximum `gmax`.
+        let (vi, i_sel) = if cache_slack > 0.0 {
+            repick_cached_i(
+                &active, &y, &alpha, &grad, c, gmax, i_sel, cache_slack * params.eps, &rows,
+            )
+        } else {
+            (gmax, i_sel)
+        };
         let ki = rows.get(ds, i_sel)?;
         let yi = y[i_sel];
         ph.lap("smo/kernel");
 
         let (gmax2, j_sel) =
-            select_j(&active, &y, &alpha, &grad, &diag, c, gmax, i_sel, yi, &ki, scan_threads);
+            select_j(&active, &y, &alpha, &grad, &diag, c, vi, i_sel, yi, &ki, scan_threads);
         ph.lap("smo/select");
         if gmax + gmax2 < params.eps || j_sel == usize::MAX {
             if active.len() < n {
@@ -490,64 +624,12 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
         ph.lap("smo/kernel");
         let yj = y[j_sel];
         let (i, j) = (i_sel, j_sel);
-        let old_ai = alpha[i];
-        let old_aj = alpha[j];
 
         // --- analytic two-variable update (LibSVM Solver::Solve) ---
-        if yi != yj {
-            let quad = (diag[i] + diag[j] + 2.0 * ki[j] as f64).max(TAU);
-            let delta = (-grad[i] - grad[j]) / quad;
-            let diff = alpha[i] - alpha[j];
-            alpha[i] += delta;
-            alpha[j] += delta;
-            if diff > 0.0 {
-                if alpha[j] < 0.0 {
-                    alpha[j] = 0.0;
-                    alpha[i] = diff;
-                }
-            } else if alpha[i] < 0.0 {
-                alpha[i] = 0.0;
-                alpha[j] = -diff;
-            }
-            if diff > 0.0 {
-                if alpha[i] > c {
-                    alpha[i] = c;
-                    alpha[j] = c - diff;
-                }
-            } else if alpha[j] > c {
-                alpha[j] = c;
-                alpha[i] = c + diff;
-            }
-        } else {
-            let quad = (diag[i] + diag[j] - 2.0 * ki[j] as f64).max(TAU);
-            let delta = (grad[i] - grad[j]) / quad;
-            let sum = alpha[i] + alpha[j];
-            alpha[i] -= delta;
-            alpha[j] += delta;
-            if sum > c {
-                if alpha[i] > c {
-                    alpha[i] = c;
-                    alpha[j] = sum - c;
-                }
-            } else if alpha[j] < 0.0 {
-                alpha[j] = 0.0;
-                alpha[i] = sum;
-            }
-            if sum > c {
-                if alpha[j] > c {
-                    alpha[j] = c;
-                    alpha[i] = sum - c;
-                }
-            } else if alpha[i] < 0.0 {
-                alpha[i] = 0.0;
-                alpha[j] = sum;
-            }
-        }
+        let (dai, daj) = pair_update(&mut alpha, &grad, &diag, i, j, yi, yj, ki[j] as f64, c);
 
         // --- fused gradient maintenance + next i-selection:
         // G_t += Q_ti dAi + Q_tj dAj over the active set ---
-        let dai = alpha[i] - old_ai;
-        let daj = alpha[j] - old_aj;
         sel = Some(update_grad_select_i(
             &active, &y, &alpha, &mut grad, &ki, &kj, yi, yj, dai, daj, c, scan_threads,
         ));
@@ -563,6 +645,50 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
     if active.len() < n {
         reconstruct_gradient(&mut rows, ds, &active, &y, &alpha, &mut grad, scan_threads)?;
         ph.lap("smo/reconstruct");
+    }
+
+    // --- polishing phase (`--polish`, DESIGN.md §OOC) ---
+    // Shrinking's heuristics can leave sub-eps-but-nonzero violations
+    // parked outside the final active set. With the hot rows still
+    // cached, a strict unshrunk sweep is cheap: run plain WSS2 over all
+    // n rows (no shrinking, no cache-aware re-pick) until the true KKT
+    // gap closes or the budget stops us. Every SMO step decreases the
+    // dual objective, so polish improves-or-equals, never worsens.
+    let mut polish_steps = 0u64;
+    let mut polish_verdict: Option<&'static str> = None;
+    if params.polish {
+        active = (0..n).collect();
+        let mut psel: Option<(f64, usize)> = None;
+        let verdict = loop {
+            let (gmax, i_sel) = match psel.take() {
+                Some(s) => s,
+                None => select_i(&active, &y, &alpha, &grad, c, scan_threads),
+            };
+            if i_sel == usize::MAX {
+                break "clean";
+            }
+            let ki = rows.get(ds, i_sel)?;
+            let yi = y[i_sel];
+            let (gmax2, j_sel) =
+                select_j(&active, &y, &alpha, &grad, &diag, c, gmax, i_sel, yi, &ki, scan_threads);
+            if gmax + gmax2 < params.eps || j_sel == usize::MAX {
+                break "clean";
+            }
+            let kj = rows.get(ds, j_sel)?;
+            let yj = y[j_sel];
+            let (dai, daj) =
+                pair_update(&mut alpha, &grad, &diag, i_sel, j_sel, yi, yj, ki[j_sel] as f64, c);
+            psel = Some(update_grad_select_i(
+                &active, &y, &alpha, &mut grad, &ki, &kj, yi, yj, dai, daj, c, scan_threads,
+            ));
+            polish_steps += 1;
+            crate::trace::count(crate::trace::Counter::PolishSteps, 1);
+            if !meter.tick(|| (dual_objective(&alpha, &grad), active.len())) {
+                break "capped";
+            }
+        };
+        polish_verdict = Some(verdict);
+        ph.lap("smo/polish");
     }
 
     // --- bias: average y_i G_i over free vectors (LibSVM calc_rho) ---
@@ -627,6 +753,10 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &SmoParams) -> Result<TrainResult> {
     res.note("rows_computed", rows.rows_computed.to_string());
     res.note("shrink_events", shrink_events.to_string());
     res.note("final_active", active.len().to_string());
+    if let Some(v) = polish_verdict {
+        res.note("polish", v.to_string());
+        res.note("polish_steps", polish_steps.to_string());
+    }
     Ok(res)
 }
 
@@ -789,6 +919,39 @@ mod tests {
         assert!((a.objective - own.objective).abs() < 1e-12 * own.objective.abs().max(1.0));
         assert!((b.objective - own.objective).abs() < 1e-12 * own.objective.abs().max(1.0));
         assert!(cache.hits() > 0);
+    }
+
+    #[test]
+    fn polish_reports_verdict_and_never_worsens() {
+        let ds = xor_dataset(300, 21);
+        let kind = KernelKind::Rbf { gamma: 8.0 };
+        let base =
+            train(&ds, kind, &SmoParams { c: 10.0, ..Default::default() }, &Engine::cpu_seq())
+                .unwrap();
+        let p = SmoParams { c: 10.0, polish: true, ..Default::default() };
+        let r = train(&ds, kind, &p, &Engine::cpu_seq()).unwrap();
+        // the dual objective is minimized; polish steps only decrease it
+        assert!(r.objective <= base.objective + 1e-12, "{} vs {}", r.objective, base.objective);
+        assert!(r
+            .notes
+            .iter()
+            .any(|(k, v)| k == "polish" && (v == "clean" || v == "capped")));
+        assert!(r.notes.iter().any(|(k, _)| k == "polish_steps"));
+    }
+
+    #[test]
+    fn cache_slack_converges_to_matching_objective() {
+        // the re-pick trades at most slack*eps of violation per step, so
+        // the final objective agrees with plain WSS2 to solver tolerance
+        let ds = xor_dataset(400, 22);
+        let kind = KernelKind::Rbf { gamma: 8.0 };
+        let base =
+            train(&ds, kind, &SmoParams { c: 10.0, ..Default::default() }, &Engine::cpu_seq())
+                .unwrap();
+        let p = SmoParams { c: 10.0, cache_slack: 0.5, ..Default::default() };
+        let r = train(&ds, kind, &p, &Engine::cpu_seq()).unwrap();
+        let rel = (r.objective - base.objective).abs() / base.objective.abs().max(1.0);
+        assert!(rel < 1e-3, "slack {} vs plain {}", r.objective, base.objective);
     }
 
     #[test]

@@ -44,6 +44,17 @@ pub struct WssParams {
     pub max_inner: usize,
     /// Private kernel-row cache size when the ctx supplies none.
     pub cache_mb: usize,
+    /// Cache-aware candidate ordering (`--cache-slack`, DESIGN.md §OOC):
+    /// within the band of violations no more than `cache_slack * eps`
+    /// below the maximum, already-cached rows are picked into the
+    /// working set first. `0.0` (the default) skips the probe and is
+    /// bit-identical to plain selection.
+    pub cache_slack: f64,
+    /// Polishing phase (`--polish`): if the cache-aware ordering stalls
+    /// the outer loop early, finish with strict (reorder-free) rounds
+    /// until the true KKT gap closes; always report a final verdict.
+    /// Off (the default) is bit-identical to the phase not existing.
+    pub polish: bool,
 }
 
 impl Default for WssParams {
@@ -54,6 +65,8 @@ impl Default for WssParams {
             eps: 1e-3,
             max_inner: 300,
             cache_mb: 512,
+            cache_slack: 0.0,
+            polish: false,
         }
     }
 }
@@ -101,6 +114,23 @@ pub fn train_cached(
         .engine(engine.clone())
         .shared_cache(cache, cache_group)
         .train(ds)
+}
+
+/// Cache-aware candidate reorder (`--cache-slack`): `cands` is sorted by
+/// violation descending; within the band no more than `slack_abs` below
+/// the top, stably move rows whose kernel row is already resident ahead
+/// of uncached ones. Sequential, deterministic, and purely an ordering
+/// change — the violation values (and so every convergence check) are
+/// untouched.
+fn reorder_cached(cands: &mut [(f64, usize)], slack_abs: f64, rows: &KernelRows) {
+    let Some(&(top, _)) = cands.first() else { return };
+    let band = cands.partition_point(|&(v, _)| v >= top - slack_abs);
+    let cached = cands[..band].iter().filter(|&&(_, t)| rows.is_cached(t)).count();
+    if cached > 0 && cached < band {
+        // stable: cached candidates keep their relative violation order
+        cands[..band].sort_by_key(|&(_, t)| !rows.is_cached(t));
+        crate::trace::count(crate::trace::Counter::CachePreferredPicks, cached as u64);
+    }
 }
 
 /// Train a binary SVM by S-variable dual decomposition; kernel, engine,
@@ -153,6 +183,12 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
         }
     }
 
+    let cache_slack = params.cache_slack.clamp(0.0, 0.95);
+    // polishing = strict tail rounds (`--polish`): cache-aware reorder
+    // off, run until the true KKT gap closes
+    let mut polishing = false;
+    let mut polish_steps = 0u64;
+    let mut polish_verdict: Option<&'static str> = None;
     loop {
         // --- KKT violation scan (chunk-ordered parallel reduction, so the
         // candidate order matches the sequential scan exactly) ---
@@ -185,7 +221,20 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
         let gmax = ups.first().map_or(f64::NEG_INFINITY, |v| v.0);
         let gmax2 = lows.first().map_or(f64::NEG_INFINITY, |v| v.0);
         if gmax + gmax2 < params.eps {
+            // WSS keeps every gradient entry fresh, so this is the true
+            // KKT gap — a clean verdict needs no extra work
+            if params.polish {
+                polish_verdict = Some("clean");
+            }
             break;
+        }
+        // cache-aware scheduling: within slack of the top violation,
+        // pick resident rows into the working set first (never while
+        // polishing — the tail rounds are strict)
+        if cache_slack > 0.0 && !polishing {
+            let slack_abs = cache_slack * params.eps;
+            reorder_cached(&mut ups, slack_abs, &rows);
+            reorder_cached(&mut lows, slack_abs, &rows);
         }
         // balanced working set: top violators from each side, dedup
         let mut ws: Vec<usize> = Vec::with_capacity(s_max);
@@ -353,11 +402,31 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
             });
         }
         ph.lap("wss/update");
+        if polishing {
+            polish_steps += 1;
+            crate::trace::count(crate::trace::Counter::PolishSteps, 1);
+        }
         let cont = meter.tick(|| {
             let nsv = alpha.iter().filter(|&&a| a > 0.0).count();
             (dual_objective(&alpha, &grad), nsv)
         });
-        if !changed || !cont {
+        if !cont {
+            if params.polish {
+                polish_verdict = Some("capped");
+            }
+            break;
+        }
+        if !changed {
+            // the inner solver made no progress on this working set
+            if params.polish && !polishing && cache_slack > 0.0 {
+                // the cache-preferring order may have starved the true
+                // violators; switch to strict rounds and keep going
+                polishing = true;
+                continue;
+            }
+            if params.polish {
+                polish_verdict = Some("stalled");
+            }
             break;
         }
     }
@@ -419,6 +488,10 @@ fn train_ctx(ctx: &TrainCtx<'_>, params: &WssParams) -> Result<TrainResult> {
         format!("{:.3}", rows.cache_used_bytes() as f64 / rows.cache_budget_bytes().max(1) as f64),
     );
     res.note("rows_computed", rows.rows_computed.to_string());
+    if let Some(v) = polish_verdict {
+        res.note("polish", v.to_string());
+        res.note("polish_steps", polish_steps.to_string());
+    }
     Ok(res)
 }
 
@@ -482,6 +555,24 @@ mod tests {
             "wss {} vs smo {} iterations",
             b.iterations,
             a.iterations
+        );
+    }
+
+    #[test]
+    fn polish_and_slack_report_verdict_and_match_objective() {
+        let ds = xor_dataset(250, 23);
+        let kind = KernelKind::Rbf { gamma: 6.0 };
+        let base =
+            train(&ds, kind, &WssParams { c: 5.0, ..Default::default() }, &Engine::cpu_seq())
+                .unwrap();
+        let p = WssParams { c: 5.0, cache_slack: 0.5, polish: true, ..Default::default() };
+        let r = train(&ds, kind, &p, &Engine::cpu_seq()).unwrap();
+        let rel = (r.objective - base.objective).abs() / base.objective.abs().max(1.0);
+        assert!(rel < 5e-3, "slack+polish {} vs plain {}", r.objective, base.objective);
+        let verdict = r.notes.iter().find(|(k, _)| k == "polish").map(|(_, v)| v.as_str());
+        assert!(
+            matches!(verdict, Some("clean" | "capped" | "stalled")),
+            "verdict {verdict:?}"
         );
     }
 

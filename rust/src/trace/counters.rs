@@ -56,10 +56,16 @@ pub enum Counter {
     /// KKT violations found by the cascade's global sweeps and fed back
     /// into the next outer round.
     CascadeKktViolations = 15,
+    /// Cache-aware WSS picks (`--cache-slack`): times a near-equal,
+    /// already-cached candidate was preferred over the argmax violator.
+    CachePreferredPicks = 16,
+    /// SMO/WSS pair updates taken inside the polishing phase
+    /// (`--polish`).
+    PolishSteps = 17,
 }
 
 /// Number of [`Counter`] variants.
-pub const NUM_COUNTERS: usize = 16;
+pub const NUM_COUNTERS: usize = 18;
 
 /// Snapshot/report key for each counter, by discriminant.
 pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
@@ -79,6 +85,8 @@ pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
     "cascade_shards_trained",
     "cascade_svs_merged",
     "cascade_kkt_violations",
+    "cache_preferred_picks",
+    "polish_steps",
 ];
 
 // `static [AtomicU64; N]` needs a const repeat seed; the interior
@@ -138,6 +146,8 @@ mod tests {
             Counter::CascadeShardsTrained,
             Counter::CascadeSvsMerged,
             Counter::CascadeKktViolations,
+            Counter::CachePreferredPicks,
+            Counter::PolishSteps,
         ]
         .into_iter()
         .enumerate()

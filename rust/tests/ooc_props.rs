@@ -1,0 +1,214 @@
+//! Out-of-core property tests (DESIGN.md §OOC): mmap-backed designs
+//! must train bit-identically to their in-memory equivalents across
+//! both explicit solvers and thread counts, packed files must round
+//! trip the libsvm text path (dense and CSR, with the endianness tag
+//! checked on disk), polishing must never worsen the dual objective,
+//! and a deliberately starved 1 MB cache must still terminate and
+//! report its hit rate.
+
+use std::path::PathBuf;
+
+use wu_svm::data::synth::{generate, SynthSpec};
+use wu_svm::data::{libsvm, pack, Dataset, Design, Format};
+use wu_svm::engine::Engine;
+use wu_svm::kernel::KernelKind;
+use wu_svm::solvers::smo::{self, SmoParams};
+use wu_svm::solvers::wss::{self, WssParams};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("wu_svm_ooc_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn synth_binary(n: usize, d: usize, sparsity: f64, seed: u64) -> Dataset {
+    let spec = SynthSpec {
+        d,
+        classes: 2,
+        clusters: 5,
+        sigma: 0.15,
+        flip: 0.02,
+        sparsity,
+        pos_frac: 0.5,
+    };
+    generate(&spec, n, seed, "ooc-prop")
+}
+
+/// Pack `ds` to a temp file and map it back: the returned dataset holds
+/// the same rows, served from disk.
+fn packed_view(ds: &Dataset, name: &str) -> Dataset {
+    let path = tmp(name);
+    pack::write_packed(ds, &path).unwrap();
+    pack::load_packed(&path).unwrap()
+}
+
+fn note<'a>(r: &'a wu_svm::solvers::TrainResult, key: &str) -> Option<&'a str> {
+    r.notes.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+#[test]
+fn smo_mmap_dense_bit_identical_across_threads() {
+    let dense = synth_binary(320, 32, 0.0, 1);
+    let mapped = packed_view(&dense, "smo_dense.wup");
+    assert!(matches!(mapped.design, Design::MmapDense(_)));
+    let kind = KernelKind::Rbf { gamma: 0.8 };
+    let params = SmoParams { c: 2.0, ..Default::default() };
+    for threads in [1usize, 2, 8] {
+        let engine = Engine::cpu_par(threads);
+        let rm = smo::train(&dense, kind, &params, &engine).unwrap();
+        let rp = smo::train(&mapped, kind, &params, &engine).unwrap();
+        assert_eq!(rm.model.coef, rp.model.coef, "threads {threads}");
+        assert_eq!(rm.model.vectors, rp.model.vectors, "threads {threads}");
+        assert_eq!(rm.model.bias, rp.model.bias, "threads {threads}");
+        assert_eq!(rm.iterations, rp.iterations, "threads {threads}");
+        assert_eq!(rm.objective.to_bits(), rp.objective.to_bits(), "threads {threads}");
+    }
+}
+
+#[test]
+fn smo_mmap_csr_bit_identical_across_threads() {
+    let sparse = synth_binary(320, 64, 0.9, 2).with_format(Format::Csr);
+    assert!(sparse.is_sparse());
+    let mapped = packed_view(&sparse, "smo_csr.wup");
+    assert!(matches!(mapped.design, Design::MmapCsr(_)));
+    let kind = KernelKind::Rbf { gamma: 1.0 };
+    let params = SmoParams { c: 1.0, ..Default::default() };
+    for threads in [1usize, 2, 8] {
+        let engine = Engine::cpu_par(threads);
+        let rm = smo::train(&sparse, kind, &params, &engine).unwrap();
+        let rp = smo::train(&mapped, kind, &params, &engine).unwrap();
+        assert_eq!(rm.model.coef, rp.model.coef, "threads {threads}");
+        assert_eq!(rm.model.vectors, rp.model.vectors, "threads {threads}");
+        assert_eq!(rm.iterations, rp.iterations, "threads {threads}");
+    }
+}
+
+#[test]
+fn wss_mmap_bit_identical_for_both_storages() {
+    let dense = synth_binary(300, 40, 0.0, 3);
+    let sparse = synth_binary(300, 60, 0.9, 4).with_format(Format::Csr);
+    let kind = KernelKind::Rbf { gamma: 0.6 };
+    let params = WssParams { c: 2.0, ..Default::default() };
+    for (mem, name) in [(&dense, "wss_dense.wup"), (&sparse, "wss_csr.wup")] {
+        let mapped = packed_view(mem, name);
+        assert!(mapped.design.is_mmap());
+        for threads in [1usize, 2, 8] {
+            let engine = Engine::cpu_par(threads);
+            let rm = wss::train(mem, kind, &params, &engine).unwrap();
+            let rp = wss::train(&mapped, kind, &params, &engine).unwrap();
+            assert_eq!(rm.model.coef, rp.model.coef, "{name} threads {threads}");
+            assert_eq!(rm.model.vectors, rp.model.vectors, "{name} threads {threads}");
+            assert_eq!(rm.iterations, rp.iterations, "{name} threads {threads}");
+            assert_eq!(
+                rm.objective.to_bits(),
+                rp.objective.to_bits(),
+                "{name} threads {threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pack_file_round_trips_libsvm_text_dense_and_csr() {
+    let ds = synth_binary(60, 24, 0.85, 5);
+    let txt = tmp("round.libsvm");
+    libsvm::write_file(&ds, &txt).unwrap();
+    for fmt in [Format::Dense, Format::Csr] {
+        let packed = tmp(&format!("round_{}.wup", fmt.name()));
+        let (n, d, _) = pack::pack_file(&txt, &packed, 0, fmt).unwrap();
+        let want = libsvm::read_file_with(&txt, 0, fmt).unwrap();
+        assert_eq!((n, d), (want.n, want.d));
+        assert!(pack::is_packed_file(&packed));
+        let back = pack::load_packed(&packed).unwrap();
+        assert!(back.design.is_mmap());
+        assert_eq!(back.y, want.y);
+        let mut wr = vec![0.0f32; want.d];
+        let mut br = vec![0.0f32; want.d];
+        for i in 0..want.n {
+            want.row_into(i, &mut wr);
+            back.row_into(i, &mut br);
+            assert_eq!(wr, br, "format {} row {i}", fmt.name());
+        }
+        // the native-endian tag sits at header offset 12; a swapped tag
+        // must be diagnosed as an endianness mismatch, never misread
+        let mut bytes = std::fs::read(&packed).unwrap();
+        let tag = u32::from_ne_bytes(bytes[12..16].try_into().unwrap());
+        assert_eq!(tag, pack::ENDIAN_TAG);
+        bytes[12..16].copy_from_slice(&pack::ENDIAN_TAG.swap_bytes().to_ne_bytes());
+        std::fs::write(&packed, &bytes).unwrap();
+        let err = pack::load_packed(&packed).unwrap_err().to_string();
+        assert!(err.contains("endian"), "{err}");
+        std::fs::remove_file(packed).ok();
+    }
+    std::fs::remove_file(txt).ok();
+}
+
+#[test]
+fn polish_never_worsens_objective_and_reports_verdict() {
+    let dense = synth_binary(300, 24, 0.0, 6);
+    let mapped = packed_view(&dense, "polish.wup");
+    let kind = KernelKind::Rbf { gamma: 1.0 };
+    let engine = Engine::cpu_par(4);
+    let base =
+        smo::train(&mapped, kind, &SmoParams { c: 4.0, ..Default::default() }, &engine).unwrap();
+    let pol = smo::train(
+        &mapped,
+        kind,
+        &SmoParams { c: 4.0, polish: true, ..Default::default() },
+        &engine,
+    )
+    .unwrap();
+    // each polish step strictly decreases the dual objective, so "on"
+    // can only match or improve the converged value
+    assert!(
+        pol.objective <= base.objective + 1e-12,
+        "polish worsened the objective: {} vs {}",
+        pol.objective,
+        base.objective
+    );
+    let verdict = note(&pol, "polish").expect("polish verdict note");
+    assert!(verdict == "clean" || verdict == "capped", "{verdict}");
+    assert!(note(&pol, "polish_steps").is_some());
+    // the flag off must stay bit-identical to the phase not existing
+    assert_eq!(base.objective.to_bits(), {
+        let again = smo::train(&mapped, kind, &SmoParams { c: 4.0, ..Default::default() }, &engine)
+            .unwrap();
+        again.objective.to_bits()
+    });
+    // wss reports a verdict too and lands on an eps-accurate optimum
+    let wb =
+        wss::train(&mapped, kind, &WssParams { c: 4.0, ..Default::default() }, &engine).unwrap();
+    let wp = wss::train(
+        &mapped,
+        kind,
+        &WssParams { c: 4.0, polish: true, cache_slack: 0.5, ..Default::default() },
+        &engine,
+    )
+    .unwrap();
+    let v = note(&wp, "polish").expect("wss polish verdict note");
+    assert!(v == "clean" || v == "capped" || v == "stalled", "{v}");
+    let rel = (wp.objective - wb.objective).abs() / wb.objective.abs().max(1.0);
+    assert!(rel < 5e-3, "wss polish objective diverged: {} vs {}", wp.objective, wb.objective);
+}
+
+#[test]
+fn tiny_cache_trains_to_completion_and_reports_hit_rate() {
+    // 1 MB holds ~170 of the 1200 kernel rows, so the run must evict
+    // constantly; it still has to terminate and report its hit rate
+    let dense = synth_binary(1200, 48, 0.0, 7);
+    let mapped = packed_view(&dense, "tiny.wup");
+    let kind = KernelKind::Rbf { gamma: 0.5 };
+    let engine = Engine::cpu_par(2);
+    let params = SmoParams {
+        c: 1.0,
+        cache_mb: 1,
+        cache_slack: 0.25,
+        polish: true,
+        ..Default::default()
+    };
+    let r = smo::train(&mapped, kind, &params, &engine).unwrap();
+    assert!(r.model.num_vectors() > 0);
+    let rate: f64 = note(&r, "cache_hit_rate").expect("hit-rate note").parse().unwrap();
+    assert!((0.0..=1.0).contains(&rate), "hit rate {rate} out of range");
+    assert!(note(&r, "polish").is_some());
+}
